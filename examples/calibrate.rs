@@ -1,0 +1,155 @@
+//! Calibration: fit the free 45 nm-class energy constants against the
+//! tokens/joule gains the paper states in §IV-C (Fig. 7), and write the
+//! result to `configs/calibrated_45nm.toml`.
+//!
+//! This mirrors what the authors did implicitly when combining Synopsys
+//! DC numbers (TPU) with MNSIM 2.0 output (PIM): a handful of
+//! technology constants determine every energy figure. We fit five of
+//! them by coordinate descent on the log-ratio error over the paper's
+//! stated anchor points.
+//!
+//! NOTE (see EXPERIMENTS.md §Fig.7): the paper's full anchor set is not
+//! jointly satisfiable by ANY time-invariant component model — the
+//! stated gains grow with context length although both architectures
+//! execute identical attention ops. The fit therefore weights the
+//! model-size crossover points (all at l=128) higher and accepts
+//! residuals on the long-context points.
+//!
+//! Run: `cargo run --release --example calibrate`
+
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, Arch};
+use pim_llm::models;
+
+/// (model, context, paper tokens/J gain of PIM over TPU in %, weight)
+const ANCHORS: &[(&str, usize, f64, f64)] = &[
+    ("GPT2-355M", 128, -25.2, 3.0),
+    ("OPT-1.3B", 128, 0.96, 3.0),
+    ("OPT-6.7B", 128, 12.49, 3.0),
+    ("GPT2-355M", 2048, 17.95, 1.0),
+    ("OPT-6.7B", 2048, 22.79, 1.0),
+    ("GPT2-355M", 4096, 70.58, 1.0),
+    ("OPT-6.7B", 4096, 33.7, 1.0),
+];
+
+/// Absolute-scale anchors from Table III: (model, context, GOPS/W).
+/// Without these the fit is scale-free (Fig. 7 is all ratios) and the
+/// absolute energy axis floats.
+const GOPS_W_ANCHORS: &[(&str, usize, f64)] = &[
+    ("GPT2-Small", 1024, 487.4),
+    ("GPT2-Medium", 4096, 1026.0),
+    ("OPT-6.7B", 1024, 1134.14),
+    ("OPT-6.7B", 4096, 1262.72),
+];
+
+fn loss(arch: &ArchConfig) -> f64 {
+    let mut total = 0.0;
+    for &(name, l, paper_gain, w) in ANCHORS {
+        let m = models::by_name(name).unwrap();
+        let p = coordinator::simulate(arch, &m, l, Arch::PimLlm);
+        let t = coordinator::simulate(arch, &m, l, Arch::TpuLlm);
+        let ratio = t.energy.total_j() / p.energy.total_j();
+        let want = 1.0 + paper_gain / 100.0;
+        let e = (ratio / want).ln();
+        total += w * e * e;
+    }
+    for &(name, l, paper_gpw) in GOPS_W_ANCHORS {
+        let m = models::by_name(name).unwrap();
+        let p = coordinator::simulate(arch, &m, l, Arch::PimLlm);
+        let e = (p.metrics().gops_per_w() / paper_gpw).ln();
+        total += e * e;
+    }
+    total
+}
+
+/// The five fitted knobs, as (name, getter-index) — applied via apply().
+const KNOBS: &[&str] = &[
+    "pim.xbar_mac_energy_j",
+    "pim.fixed_token_energy_j",
+    "peripheral.energy_per_layer_j",
+    "lpddr.energy_per_byte_j",
+    "tpu.static_power_w",
+];
+
+fn get(arch: &ArchConfig, knob: &str) -> f64 {
+    match knob {
+        "pim.xbar_mac_energy_j" => arch.pim.xbar_mac_energy_j,
+        "pim.fixed_token_energy_j" => arch.pim.fixed_token_energy_j,
+        "peripheral.energy_per_layer_j" => arch.peripheral.energy_per_layer_j,
+        "lpddr.energy_per_byte_j" => arch.lpddr.energy_per_byte_j,
+        "tpu.static_power_w" => arch.tpu.static_power_w,
+        _ => unreachable!(),
+    }
+}
+
+fn set(arch: &mut ArchConfig, knob: &str, v: f64) {
+    match knob {
+        "pim.xbar_mac_energy_j" => arch.pim.xbar_mac_energy_j = v,
+        "pim.fixed_token_energy_j" => arch.pim.fixed_token_energy_j = v,
+        "peripheral.energy_per_layer_j" => arch.peripheral.energy_per_layer_j = v,
+        "lpddr.energy_per_byte_j" => arch.lpddr.energy_per_byte_j = v,
+        "tpu.static_power_w" => arch.tpu.static_power_w = v,
+        _ => unreachable!(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut arch = ArchConfig::paper_45nm();
+    let mut best = loss(&arch);
+    println!("initial loss: {best:.4}");
+
+    // Coordinate descent: multiplicative steps, shrinking schedule.
+    let mut step = 1.6f64;
+    for round in 0..60 {
+        let mut improved = false;
+        for knob in KNOBS {
+            let cur = get(&arch, knob);
+            for trial in [cur * step, cur / step] {
+                let mut cand = arch.clone();
+                set(&mut cand, knob, trial);
+                let l = loss(&cand);
+                if l < best {
+                    best = l;
+                    arch = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            step = step.sqrt();
+            if step < 1.005 {
+                println!("converged after {round} rounds");
+                break;
+            }
+        }
+    }
+    println!("final loss: {best:.4}");
+
+    println!("\nfitted constants:");
+    for knob in KNOBS {
+        println!("  {knob:<32} = {:.4e}", get(&arch, knob));
+    }
+
+    println!("\nanchor fit (paper vs calibrated):");
+    for &(name, l, paper_gain, _) in ANCHORS {
+        let m = models::by_name(name).unwrap();
+        let p = coordinator::simulate(&arch, &m, l, Arch::PimLlm);
+        let t = coordinator::simulate(&arch, &m, l, Arch::TpuLlm);
+        let gain = 100.0
+            * (t.energy.total_j() / p.energy.total_j() - 1.0);
+        println!("  {name:<12} l={l:<5} paper {paper_gain:+7.2}%  fitted {gain:+7.2}%");
+    }
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/calibrated_45nm.toml");
+    arch.to_toml_file(&out)?;
+    println!("\nwrote {}", out.display());
+
+    // Sanity: the calibrated config must not break the latency-side
+    // reproduction (Fig. 5 speedups are energy-independent, but assert
+    // anyway so a bad fit cannot silently land in configs/).
+    let s = coordinator::speedup(&arch, &models::by_name("OPT-6.7B").unwrap(), 128);
+    assert!((s - 79.2).abs() / 79.2 < 0.15, "fig5 regression: {s}");
+    println!("fig5 speedup check still OK ({s:.1}x)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Dataflow explorer: interactive-ish tour of the systolic-array
+//! simulator behind paper Fig. 4. For a chosen model/context/array size
+//! it prints per-op-class cycles under OS / WS / IS, validates the
+//! analytical formulas against the cycle-accurate wavefront stepper on
+//! scaled-down shapes, and sweeps array sizes to show where the paper's
+//! 32x32 choice sits.
+//!
+//! Run: `cargo run --release --example dataflow_explorer -- \
+//!        --model OPT-6.7B --context 1024 --rows 32 --cols 32`
+
+use pim_llm::models;
+use pim_llm::systolic::dataflow::{decode_step_cycles, gemm_cycles, Dataflow};
+use pim_llm::systolic::wavefront::simulate_gemm;
+use pim_llm::util::cli::Args;
+use pim_llm::workload::{decode_ops, OpKind};
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let model = models::by_name(&args.str_or("model", "OPT-6.7B"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let l = args.usize_or("context", 1024)?;
+    let rows = args.usize_or("rows", 32)?;
+    let cols = args.usize_or("cols", 32)?;
+
+    println!(
+        "== {} @ l={l} on a {rows}x{cols} systolic array ==\n",
+        model.name
+    );
+
+    // Per-op-class cycle shares under each dataflow.
+    println!("{:<18} {:>14} {:>14} {:>14}", "op class", "OS", "WS", "IS");
+    let ops = decode_ops(&model, l);
+    let mut by_kind: BTreeMap<String, [u64; 3]> = BTreeMap::new();
+    for op in &ops {
+        let e = by_kind
+            .entry(format!("{:?}", op.kind))
+            .or_insert([0, 0, 0]);
+        for (i, df) in Dataflow::ALL.iter().enumerate() {
+            e[i] += gemm_cycles(op.m, op.k, op.n, rows, cols, *df);
+        }
+    }
+    for (kind, [os, ws, is]) in &by_kind {
+        println!("{kind:<18} {os:>14} {ws:>14} {is:>14}");
+    }
+    for df in Dataflow::ALL {
+        let total = decode_step_cycles(&model, l, rows, cols, df);
+        println!(
+            "TOTAL {:<12} {total:>14} cycles = {:.2} ms @100MHz",
+            df.short_name(),
+            total as f64 * 10e-9 * 1e3
+        );
+    }
+
+    // Cross-validate analytical formulas with the wavefront stepper on
+    // scaled-down versions of the real op shapes.
+    println!("\n== wavefront cross-validation (scaled shapes, 8x8 array) ==");
+    let samples = [
+        (OpKind::QkvProjection, 64, 64, 1),
+        (OpKind::AttentionScore, 32, 16, 1),
+        (OpKind::AttentionValue, 16, 32, 1),
+        (OpKind::FfIntermediate, 96, 24, 1),
+    ];
+    for (kind, m, k, n) in samples {
+        for df in Dataflow::ALL {
+            let analytical = gemm_cycles(m, k, n, 8, 8, df);
+            let stepped = simulate_gemm(m, k, n, 8, 8, df);
+            assert_eq!(analytical, stepped.cycles, "{kind:?} {df:?}");
+            assert_eq!(stepped.macs, (m * k * n) as u64);
+        }
+        println!("{kind:?} ({m}x{k}x{n}): analytical == cycle-accurate for OS/WS/IS");
+    }
+
+    // Array-size sweep: where does 32x32 sit?
+    println!("\n== array size sweep (OS dataflow, ms/token @100MHz) ==");
+    for dim in [8usize, 16, 32, 64, 128] {
+        let total = decode_step_cycles(&model, l, dim, dim, Dataflow::OutputStationary);
+        println!(
+            "{dim:>4}x{dim:<4} {:>14} cycles = {:8.2} ms",
+            total,
+            total as f64 * 10e-9 * 1e3
+        );
+    }
+    println!("\n(paper uses 32x32: beyond it, MVM N=1 leaves columns idle and");
+    println!(" the skew overhead grows; below it, the K-dim stream dominates)");
+    Ok(())
+}

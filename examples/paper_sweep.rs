@@ -1,0 +1,66 @@
+//! Paper sweep: regenerate EVERY evaluation artifact of the paper in
+//! one run — Fig. 1b, Fig. 4, Fig. 5, Fig. 6, Fig. 7, Fig. 8 and
+//! Table III — printing measured values next to the numbers the paper
+//! states, exactly like `repro sweep --figure all` but with a summary
+//! of paper-vs-measured deviations at the end.
+//!
+//! Run: `cargo run --release --example paper_sweep`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+
+    report::print_fig1b(&figures::fig1b(&arch));
+    println!();
+    report::print_fig4(&figures::fig4(&arch));
+    println!();
+    let f5 = figures::fig5(&arch);
+    report::print_fig5(&f5);
+    println!();
+    report::print_fig6(&figures::fig6(&arch));
+    println!();
+    let f7 = figures::fig7(&arch);
+    report::print_fig7(&f7);
+    println!();
+    report::print_fig8(&figures::fig8(&arch));
+    println!();
+    let t3 = figures::table3(&arch);
+    report::print_table3(&t3);
+
+    // ------------------------------------------------ deviation summary
+    println!("\n== paper-vs-measured summary ==");
+    for r in &f5 {
+        if let Some(ps) = r.paper_speedup {
+            println!(
+                "fig5  {:<12} l={:<5} speedup {:.2}x vs paper {:.2}x ({:+.1}%)",
+                r.model,
+                r.context,
+                r.speedup,
+                ps,
+                100.0 * (r.speedup / ps - 1.0)
+            );
+        }
+    }
+    for r in &f7 {
+        if let Some(pg) = r.paper_gain_pct {
+            println!(
+                "fig7  {:<12} l={:<5} gain {:+.1}% vs paper {:+.1}%",
+                r.model, r.context, r.gain_pct, pg
+            );
+        }
+    }
+    for r in t3.iter().filter(|r| r.design.contains("ours")) {
+        if let (Some(g), Some(pg)) = (r.gops, r.paper_gops) {
+            println!(
+                "tbl3  {:<12} l={:<5} {:.2} GOPS vs paper {:.2} ({:+.1}%)",
+                r.model,
+                r.context,
+                g,
+                pg,
+                100.0 * (g / pg - 1.0)
+            );
+        }
+    }
+}

@@ -1,0 +1,150 @@
+"""AOT compile path: lower the 1-bit decoder to HLO text + dump weights.
+
+Emits into ``artifacts/``:
+
+  * ``decode_step.hlo.txt`` — one autoregressive step of the tiny 1-bit
+    decoder (all params + caches + token + pos as arguments), as HLO
+    *text*.  Text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto
+    with 64-bit instruction ids which xla_extension 0.5.1 (the version
+    behind the ``xla`` rust crate) rejects; the text parser reassigns ids
+    and round-trips cleanly (see /opt/xla-example/README.md).
+  * ``model.hlo.txt`` — alias of decode_step (the Makefile's stamp file).
+  * ``weights.bin`` — all parameters, f32 little-endian, concatenated in
+    canonical ``model.param_names`` order.
+  * ``manifest.json`` — model config + per-parameter name/shape/offset +
+    argument layout of the HLO entry (so the Rust loader is self-
+    describing).
+  * ``golden.json`` — greedy generation from a fixed prompt + the first
+    logits vector, produced by running the SAME jax graph; the Rust
+    runtime must reproduce these tokens exactly.
+
+Python runs only here, at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import TINY, ModelConfig
+
+GOLDEN_PROMPT = [1, 7, 42, 9]
+GOLDEN_NEW_TOKENS = 12
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode_step(cfg: ModelConfig) -> str:
+    """Lower one decode step with example (shape-only) arguments."""
+    shapes = model.param_shapes(cfg)
+    flat_specs = tuple(
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+        for n in model.param_names(cfg)
+    )
+    cache_spec = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.h, cfg.max_ctx, cfg.d_head), jnp.float32
+    )
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(flat_params, k, v, token_id, pos):
+        return model.decode_step(cfg, flat_params, k, v, token_id, pos)
+
+    lowered = jax.jit(fn).lower(
+        flat_specs, cache_spec, cache_spec, tok_spec, tok_spec
+    )
+    return to_hlo_text(lowered)
+
+
+def dump_weights(cfg: ModelConfig, params, outdir: pathlib.Path) -> dict:
+    """weights.bin + per-parameter manifest entries (offsets in floats)."""
+    entries = []
+    offset = 0
+    blobs = []
+    for name in model.param_names(cfg):
+        arr = np.asarray(params[name], dtype=np.float32)
+        entries.append(
+            {"name": name, "shape": list(arr.shape), "offset": offset,
+             "numel": int(arr.size)}
+        )
+        blobs.append(arr.reshape(-1))
+        offset += int(arr.size)
+    flat = np.concatenate(blobs) if blobs else np.zeros(0, np.float32)
+    (outdir / "weights.bin").write_bytes(flat.astype("<f4").tobytes())
+    return {"params": entries, "total_floats": int(offset)}
+
+
+def dump_golden(cfg: ModelConfig, params, outdir: pathlib.Path) -> None:
+    """Golden greedy generation + first-step logits for Rust validation."""
+    tokens = model.generate(cfg, params, GOLDEN_PROMPT, GOLDEN_NEW_TOKENS)
+    flat = model.flatten_params(cfg, params)
+    k, v = model.empty_caches(cfg)
+    logits, _, _ = model.decode_step(
+        cfg, flat, k, v, jnp.int32(GOLDEN_PROMPT[0]), jnp.int32(0)
+    )
+    golden = {
+        "prompt": GOLDEN_PROMPT,
+        "n_new": GOLDEN_NEW_TOKENS,
+        "tokens": [int(t) for t in tokens],
+        "first_logits_prefix": [float(x) for x in np.asarray(logits)[:8]],
+        "first_logits_l2": float(np.linalg.norm(np.asarray(logits))),
+    }
+    (outdir / "golden.json").write_text(json.dumps(golden, indent=2))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp-file path (Makefile target); artifacts land "
+                         "in its directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    outdir = out.parent
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cfg = TINY
+    params = model.init_params(cfg, seed=args.seed)
+
+    hlo = lower_decode_step(cfg)
+    (outdir / "decode_step.hlo.txt").write_text(hlo)
+    out.write_text(hlo)  # model.hlo.txt alias / make stamp
+    print(f"decode_step HLO: {len(hlo)} chars")
+
+    manifest = {
+        "model": dataclasses.asdict(cfg),
+        "seed": args.seed,
+        "entry": "decode_step",
+        # Argument layout of the lowered entry: params... then caches,
+        # token, pos.  return_tuple=True => single 3-tuple output.
+        "arg_order": model.param_names(cfg)
+        + ["k_caches", "v_caches", "token_id", "pos"],
+        "outputs": ["logits", "new_k_caches", "new_v_caches"],
+    }
+    manifest.update(dump_weights(cfg, params, outdir))
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"weights: {manifest['total_floats']} f32 "
+          f"({manifest['total_floats'] * 4 / 1e6:.1f} MB)")
+
+    dump_golden(cfg, params, outdir)
+    print("golden.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""PIM-LLM L1 Pallas kernels.
+
+``bitlinear`` — W1A8 ternary projection matmul (the PIM-crossbar op).
+``qmatmul``   — W8A8 attention matmul (the systolic-array op).
+``ref``       — pure-jnp correctness oracle for both.
+"""
+
+from . import ref  # noqa: F401
+from .bitlinear import bitlinear, bitlinear_matmul  # noqa: F401
+from .qmatmul import qmatmul, qmatmul_int  # noqa: F401

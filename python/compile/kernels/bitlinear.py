@@ -1,0 +1,131 @@
+"""Pallas W1A8 bitlinear kernel — the projection-layer hot spot.
+
+This is the operation PIM-LLM maps onto analog RRAM crossbars: a ternary
+weight matrix (programmed once into differential memristor pairs) times an
+8-bit-quantized activation vector.  On a TPU we cannot build a crossbar,
+so we express the *same insight* for the MXU:
+
+  * **Weight-stationary schedule.**  The crossbar's defining property is
+    that weights never move.  Our BlockSpec iterates the grid with the
+    output-column axis outermost and the reduction axis innermost, so a
+    ternary weight tile stays resident in VMEM across the activation
+    stream exactly like a crossbar column stays programmed across input
+    vectors.
+  * **Minimal-traffic operands.**  The ternary weights are carried in the
+    narrowest dtype the interchange supports; on real TPU hardware this
+    tile would be int8 (1.58 effective bits after packing), cutting HBM
+    traffic 16x vs bf16 — decode MVMs are bandwidth-bound, so this is the
+    whole speedup, mirroring the paper's "weights live in the crossbar"
+    argument.
+  * **MXU-shaped tiles.**  Default blocks are (128, 512, 128): the
+    128x128 output tile matches the MXU systolic array; the 512-deep
+    reduction amortizes pipeline fill, analogous to the paper's 256-row
+    crossbar amortizing DAC setup.
+
+The kernel computes the *integer* matmul ``acc = x_q @ w_q`` on f32
+carriers (exact; see ref.py).  Activation quantization and the combined
+dequantization scale are applied by the caller (``bitlinear``), matching
+the paper's split: DAC/crossbar/ADC do the integer MVM, the digital
+postprocessing unit applies scales.
+
+Kernels run with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-shaped defaults; shrunk automatically for small operands.
+DEFAULT_BM = 128
+DEFAULT_BK = 512
+DEFAULT_BN = 128
+
+
+def _pad_to(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to (m, n)."""
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _block_sizes(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Clamp block sizes to the (padded) operand sizes."""
+    return min(bm, m), min(bk, k), min(bn, n)
+
+
+def _bitlinear_kernel(x_ref, w_ref, o_ref, *, nsteps_k: int):
+    """Grid = (n_blocks, m_blocks, k_blocks); k innermost (stationary
+    weight tile per (n, m) is revisited only after a full k sweep — the
+    weight-stationary order puts n outermost so each weight column block
+    services the whole activation stream before moving on)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def bitlinear_matmul(
+    x_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Integer matmul ``x_q @ w_q`` via the weight-stationary Pallas kernel.
+
+    ``x_q``: (m, k) int8-valued f32; ``w_q``: (k, n) ternary-valued f32.
+    Operands are zero-padded to block multiples (zeros contribute nothing
+    to the accumulation) and the result is sliced back.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bk, bn = _block_sizes(m, k, n, bm, bk, bn)
+    mp = pl.cdiv(m, bm) * bm
+    kp = pl.cdiv(k, bk) * bk
+    np_ = pl.cdiv(n, bn) * bn
+    x_p = _pad_to(x_q, mp, kp)
+    w_p = _pad_to(w_q, kp, np_)
+    grid = (np_ // bn, mp // bm, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_bitlinear_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ni, mi, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda ni, mi, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda ni, mi, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x_p, w_p)
+    return out[:m, :n]
+
+
+def bitlinear(
+    x: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Full W1A8 projection: absmax-int8 the activations, ternary matmul
+    on the Pallas kernel, then apply the combined dequantization scale.
+
+    Matches ``ref.bitlinear_ref`` exactly (integer path is exact)."""
+    x_q, x_scale = ref.act_quant_int8(x)
+    acc = bitlinear_matmul(x_q, w_q, bm=bm, bk=bk, bn=bn)
+    return acc * (w_scale / x_scale)

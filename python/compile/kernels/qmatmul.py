@@ -1,0 +1,99 @@
+"""Pallas W8A8 quantized matmul kernel — the attention-head hot spot.
+
+This is the operation PIM-LLM keeps OFF the crossbars and on the digital
+32x32 output-stationary systolic array: activation-to-activation matmuls
+(Q.K^T and Score.V) whose *both* operands change every generated token,
+so neither can be programmed into RRAM (write energy + endurance).
+
+The schedule mirrors the paper's output-stationary dataflow choice
+(Fig. 4): the reduction axis is innermost and the partial sum stays
+resident in the output VMEM tile across the whole k sweep — exactly the
+OS systolic array keeping partial sums stationary in the PEs while
+weights and inputs stream past.  Grid order (m, n, k) with k innermost;
+the output tile is touched by consecutive grid steps only.
+
+Integer matmul on f32 carriers; quantization and dequantization scales
+are applied by the caller (``qmatmul``), matching the split between the
+8-bit MAC array and its peripheral scale logic.  ``interpret=True`` —
+see bitlinear.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .bitlinear import _pad_to, _block_sizes
+
+# Attention shapes are (l x d/h) with small d/h; narrower default blocks.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+
+def _qmatmul_kernel(a_ref, b_ref, o_ref):
+    """Grid = (m_blocks, n_blocks, k_blocks); output-stationary: the
+    (m, n) output tile accumulates in place across the innermost k loop."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def qmatmul_int(
+    a_q: jnp.ndarray,
+    b_q: jnp.ndarray,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Integer matmul ``a_q @ b_q`` via the output-stationary Pallas kernel.
+
+    Both operands are int8-valued f32 carriers; exact for k <= 1040
+    (ref.EXACT_F32_K_LIMIT)."""
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bk, bn = _block_sizes(m, k, n, bm, bk, bn)
+    mp = pl.cdiv(m, bm) * bm
+    kp = pl.cdiv(k, bk) * bk
+    np_ = pl.cdiv(n, bn) * bn
+    a_p = _pad_to(a_q, mp, kp)
+    b_p = _pad_to(b_q, kp, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def qmatmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Full W8A8 matmul: int8-quantize both operands, integer matmul on
+    the Pallas kernel, dequantize.  Matches ``ref.qmatmul_ref`` exactly."""
+    a_q, a_scale = ref.act_quant_int8(a)
+    b_q, b_scale = ref.act_quant_int8(b)
+    acc = qmatmul_int(a_q, b_q, bm=bm, bk=bk, bn=bn)
+    return acc / (a_scale * b_scale)

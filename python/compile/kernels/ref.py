@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracle for the PIM-LLM kernels.
+
+This module is the single source of truth for the numerics of the 1-bit
+LLM compute path:
+
+  * ``weight_quant_ternary``  — BitNet-b1.58-style ternary weight
+    quantization (the values that would be programmed into the RRAM
+    crossbar's differential device pairs).
+  * ``act_quant_int8``        — absmax 8-bit activation quantization (the
+    values the crossbar DACs drive / the 8-bit ADCs read back).
+  * ``int_matmul_ref``        — exact integer matmul on f32 carriers; the
+    oracle both Pallas kernels are tested against.
+  * ``bitlinear_ref``         — full W1A8 projection (quantize → matmul →
+    rescale), what one PIM bank computes for a projection layer.
+  * ``qmatmul_ref``           — full W8A8 activation-to-activation matmul,
+    what the systolic array computes inside an attention head.
+
+All quantized integer values are carried in float32.  This is exact for
+|v| < 2**24 and the largest magnitude we ever produce is bounded by
+k_max * 127 * 127 (< 2**24 for k <= 1040 at int8*int8 and far below it
+for ternary weights), so the carrier introduces no rounding.  Where an
+inner dimension could overflow the exact-f32 window we tile the reduction
+(see ``bitlinear.py``) — the tiny AOT model (k <= 1024) is always exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Quantization ranges for W8A8 / W1A8 paths.
+INT8_QMAX = 127.0
+INT8_QMIN = -128.0
+# Inner-dim bound under which int8*int8 accumulation in f32 is exact.
+EXACT_F32_K_LIMIT = 1040
+
+
+def weight_quant_ternary(w: jnp.ndarray, eps: float = 1e-5):
+    """BitNet b1.58 ternary weight quantization.
+
+    scale = mean(|W|); W_q = clip(round(W / scale), -1, 1).
+
+    Returns ``(w_q, scale)`` where ``w_q`` contains exactly {-1, 0, +1}
+    (as f32) and ``w ≈ w_q * scale``.
+    """
+    scale = jnp.mean(jnp.abs(w))
+    scale = jnp.maximum(scale, eps)
+    w_q = jnp.clip(jnp.round(w / scale), -1.0, 1.0)
+    return w_q, scale
+
+
+def act_quant_int8(x: jnp.ndarray, eps: float = 1e-5):
+    """Absmax per-tensor symmetric int8 quantization.
+
+    scale = 127 / max(|x|); x_q = clip(round(x * scale), -128, 127).
+
+    Returns ``(x_q, scale)`` with ``x ≈ x_q / scale``.
+    """
+    absmax = jnp.max(jnp.abs(x))
+    scale = INT8_QMAX / jnp.maximum(absmax, eps)
+    x_q = jnp.clip(jnp.round(x * scale), INT8_QMIN, INT8_QMAX)
+    return x_q, scale
+
+
+def int_matmul_ref(a_q: jnp.ndarray, b_q: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer matmul oracle: (m,k) @ (k,n) on f32 carriers."""
+    return jnp.matmul(a_q, b_q, preferred_element_type=jnp.float32)
+
+
+def bitlinear_ref(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray):
+    """W1A8 projection: y ≈ x @ (w_q * w_scale) with 8-bit activations.
+
+    ``x``: (m, k) float activations; ``w_q``: (k, n) ternary; ``w_scale``:
+    scalar.  Mirrors what the PIM crossbar computes: the DAC drives the
+    int8 activation bit-serially, the crossbar multiplies by the ternary
+    conductance pairs, the ADC digitizes, and the postprocessing unit
+    applies the combined dequantization scale.
+    """
+    x_q, x_scale = act_quant_int8(x)
+    acc = int_matmul_ref(x_q, w_q)
+    return acc * (w_scale / x_scale)
+
+
+def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray):
+    """W8A8 activation-to-activation matmul: y ≈ a @ b, both int8-quantized.
+
+    This is the attention-head operation (Q·Kᵀ and Score·V) that PIM-LLM
+    keeps on the digital systolic array: both operands change every token,
+    so neither can live in RRAM.
+    """
+    a_q, a_scale = act_quant_int8(a)
+    b_q, b_scale = act_quant_int8(b)
+    acc = int_matmul_ref(a_q, b_q)
+    return acc / (a_scale * b_scale)

@@ -1,0 +1,292 @@
+"""L2: functional 1-bit decoder-only LLM (BitNet-b1.58 style) in JAX.
+
+This is the compute graph PIM-LLM accelerates, with the paper's exact
+precision split:
+
+  * **Projection layers** (W_Q, W_K, W_V, W_X, FF in/out, LM head):
+    ternary weights + int8 activations (W1A8) -> ``kernels.bitlinear``
+    (the PIM-crossbar path).
+  * **Attention heads** (Q.K^T and Score.V): both operands int8 (W8A8)
+    -> ``kernels.qmatmul`` (the systolic-array path).
+  * Nonlinearities (RMSNorm, softmax, GELU) stay in f32, mirroring the
+    paper's dedicated nonlinear functional units (ConSmax etc.).
+
+The model is *functional*: parameters and KV caches are explicit inputs,
+updated caches are explicit outputs, so the whole decode step lowers to
+one HLO module the Rust runtime executes via PJRT.  Shapes are static
+(max_ctx); the current position is a traced i32 scalar used for cache
+update and causal masking.
+
+Weights are pre-quantized offline (aot.py): each projection is stored as
+its ternary matrix (f32 carrier holding {-1,0,1}) plus a scalar scale —
+exactly the data that would be programmed into the crossbars.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitlinear, qmatmul
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the decoder (paper Table II shape, tiny scale)."""
+
+    vocab: int = 256
+    d: int = 256          # embedding dim
+    h: int = 4            # attention heads
+    d_ff: int = 1024      # FF intermediate dim
+    n_layers: int = 2     # decoder blocks
+    max_ctx: int = 128    # static KV-cache length
+    eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        return self.d // self.h
+
+
+TINY = ModelConfig()
+
+# Flat parameter ordering (names) for a given config; the AOT manifest and
+# the Rust loader both follow this order exactly.
+_PER_LAYER = [
+    "ln1_gamma",
+    "wq", "wq_scale",
+    "wk", "wk_scale",
+    "wv", "wv_scale",
+    "wx", "wx_scale",
+    "ln2_gamma",
+    "w_in", "w_in_scale",
+    "w_out", "w_out_scale",
+]
+_GLOBAL = ["embedding", "lnf_gamma", "w_head", "w_head_scale"]
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Flat parameter order: per-layer blocks then globals."""
+    names: List[str] = []
+    for i in range(cfg.n_layers):
+        names.extend(f"layer{i}.{n}" for n in _PER_LAYER)
+    names.extend(_GLOBAL)
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Shape of every parameter in ``param_names`` order."""
+    d, dff, v = cfg.d, cfg.d_ff, cfg.vocab
+    per = {
+        "ln1_gamma": (d,),
+        "wq": (d, d), "wq_scale": (),
+        "wk": (d, d), "wk_scale": (),
+        "wv": (d, d), "wv_scale": (),
+        "wx": (d, d), "wx_scale": (),
+        "ln2_gamma": (d,),
+        "w_in": (d, dff), "w_in_scale": (),
+        "w_out": (dff, d), "w_out_scale": (),
+    }
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    for i in range(cfg.n_layers):
+        for n, s in per.items():
+            shapes[f"layer{i}.{n}"] = s
+    shapes["embedding"] = (v, d)
+    shapes["lnf_gamma"] = (d,)
+    shapes["w_head"] = (d, v)
+    shapes["w_head_scale"] = ()
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Random master weights -> pre-quantized inference parameters.
+
+    Projection matrices are stored ternary (+ scale); norms/embedding stay
+    f32, matching a deployed 1-bit checkpoint.
+    """
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params: Dict[str, jnp.ndarray] = {}
+    for name in param_names(cfg):
+        shape = shapes[name]
+        if name.endswith("_scale"):
+            continue  # produced alongside its matrix below
+        base = name.split(".")[-1]
+        key, sub = jax.random.split(key)
+        if base in ("ln1_gamma", "ln2_gamma", "lnf_gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif base == "embedding":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            # Projection: sample a master weight, quantize to ternary.
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            w_q, scale = ref.weight_quant_ternary(w)
+            params[name] = w_q
+            params[name + "_scale"] = jnp.asarray(scale, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]):
+    """Dict -> tuple in canonical order (the AOT argument order)."""
+    return tuple(params[n] for n in param_names(cfg))
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Dict[str, jnp.ndarray]:
+    return dict(zip(param_names(cfg), flat))
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm — the paper's LayerNorm-class op, done in the digital
+    postprocessing units / nonlinear functional unit."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _attention(
+    cfg: ModelConfig,
+    q: jnp.ndarray,        # (1, d)
+    k_cache: jnp.ndarray,  # (h, max_ctx, d_head) — this layer, updated
+    v_cache: jnp.ndarray,  # (h, max_ctx, d_head)
+    pos: jnp.ndarray,      # scalar i32, index of the current token
+) -> jnp.ndarray:
+    """Single-token multi-head attention over the (already updated) cache.
+
+    Both matmuls run through the W8A8 qmatmul kernel — the systolic-array
+    side of the hybrid split.  Causal masking keeps only cache slots
+    [0, pos].
+    """
+    dh, h, t = cfg.d_head, cfg.h, cfg.max_ctx
+    q_heads = q.reshape(h, dh)  # (h, dh)
+    idx = jnp.arange(t)
+    valid = (idx <= pos)[None, :]  # (1, t)
+
+    # The hardware fetches only the l valid K/V rows from LPDDR into the
+    # TPU's weight memory; slots beyond `pos` never reach the systolic
+    # array.  Zeroing them here mirrors that AND keeps the absmax int8
+    # scale independent of stale cache contents (otherwise garbage in
+    # future slots would perturb the quantization of valid entries).
+    k_cache = jnp.where(valid[:, :, None], k_cache, 0.0)
+    v_cache = jnp.where(valid[:, :, None], v_cache, 0.0)
+
+    outs = []
+    for head in range(h):
+        # Score = q . K^T : (1, dh) @ (dh, t)  — W8A8 on the TPU side.
+        scores = qmatmul(q_heads[head][None, :], k_cache[head].T)  # (1, t)
+        scores = scores / jnp.sqrt(jnp.float32(dh))
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        # Out = probs . V : (1, t) @ (t, dh) — W8A8 on the TPU side.
+        outs.append(qmatmul(probs, v_cache[head]))  # (1, dh)
+    return jnp.concatenate(outs, axis=-1)  # (1, d)
+
+
+def _decoder_block(
+    cfg: ModelConfig,
+    p: Dict[str, jnp.ndarray],
+    layer: int,
+    x: jnp.ndarray,        # (1, d)
+    k_cache: jnp.ndarray,  # (h, max_ctx, d_head)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+):
+    """One decoder block: pre-norm attention + pre-norm FF, all
+    projections W1A8 (the PIM side), attention W8A8 (the TPU side)."""
+    L = f"layer{layer}."
+    dh, h = cfg.d_head, cfg.h
+
+    # --- attention sub-block ------------------------------------------
+    xn = rms_norm(x, p[L + "ln1_gamma"], cfg.eps)
+    q = bitlinear(xn, p[L + "wq"], p[L + "wq_scale"])  # (1, d)
+    k = bitlinear(xn, p[L + "wk"], p[L + "wk_scale"])
+    v = bitlinear(xn, p[L + "wv"], p[L + "wv_scale"])
+
+    # Write this token's K/V into the cache at `pos` (LPDDR-side K/V
+    # concat in the paper; never touches RRAM).
+    k_heads = k.reshape(h, 1, dh)
+    v_heads = v.reshape(h, 1, dh)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_heads, (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_heads, (0, pos, 0))
+
+    att = _attention(cfg, q, k_cache, v_cache, pos)
+    att = bitlinear(att, p[L + "wx"], p[L + "wx_scale"])
+    x = x + att
+
+    # --- feed-forward sub-block ---------------------------------------
+    xn = rms_norm(x, p[L + "ln2_gamma"], cfg.eps)
+    ff = bitlinear(xn, p[L + "w_in"], p[L + "w_in_scale"])
+    ff = gelu(ff)
+    ff = bitlinear(ff, p[L + "w_out"], p[L + "w_out_scale"])
+    x = x + ff
+    return x, k_cache, v_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    flat_params: tuple,
+    k_caches: jnp.ndarray,  # (n_layers, h, max_ctx, d_head)
+    v_caches: jnp.ndarray,
+    token_id: jnp.ndarray,  # scalar i32
+    pos: jnp.ndarray,       # scalar i32
+):
+    """One autoregressive step: embed token, run all decoder blocks,
+    return (logits, new_k_caches, new_v_caches).
+
+    This is THE function lowered to ``artifacts/decode_step.hlo.txt`` and
+    executed by the Rust coordinator for every generated token.
+    """
+    p = unflatten_params(cfg, flat_params)
+    x = p["embedding"][token_id][None, :]  # (1, d)
+
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        x, kc, vc = _decoder_block(
+            cfg, p, layer, x, k_caches[layer], v_caches[layer], pos
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+
+    x = rms_norm(x, p["lnf_gamma"], cfg.eps)
+    logits = bitlinear(x, p["w_head"], p["w_head_scale"])  # (1, vocab)
+    return (
+        logits[0],
+        jnp.stack(new_k, axis=0),
+        jnp.stack(new_v, axis=0),
+    )
+
+
+def empty_caches(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.h, cfg.max_ctx, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def generate(
+    cfg: ModelConfig,
+    params: Dict[str, jnp.ndarray],
+    prompt: List[int],
+    n_new: int,
+) -> List[int]:
+    """Pure-python reference generation loop (greedy).  Used to produce
+    the golden token sequence the Rust runtime is validated against."""
+    flat = flatten_params(cfg, params)
+    k, v = empty_caches(cfg)
+    tokens = list(prompt)
+    logits = None
+    for pos, tok in enumerate(tokens):
+        logits, k, v = decode_step(
+            cfg, flat, k, v, jnp.int32(tok), jnp.int32(pos)
+        )
+    for _ in range(n_new):
+        nxt = int(jnp.argmax(logits))
+        tokens.append(nxt)
+        logits, k, v = decode_step(
+            cfg, flat, k, v, jnp.int32(nxt), jnp.int32(len(tokens) - 1)
+        )
+    return tokens

@@ -1,0 +1,116 @@
+# pytest: AOT artifacts — manifest/weights round-trip, HLO text sanity,
+# golden reproducibility. Runs against artifacts/ if present, else
+# regenerates into a tmpdir.
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.model import TINY
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def artifacts_dir(tmp_path_factory):
+    """Use the checked-out artifacts if they exist, otherwise build."""
+    if (ARTIFACTS / "manifest.json").exists():
+        return ARTIFACTS
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out / "model.hlo.txt")],
+        check=True, cwd=REPO / "python",
+    )
+    return out
+
+
+def test_manifest_schema(artifacts_dir):
+    man = json.loads((artifacts_dir / "manifest.json").read_text())
+    assert man["entry"] == "decode_step"
+    assert man["arg_order"][-4:] == ["k_caches", "v_caches", "token_id", "pos"]
+    assert man["outputs"] == ["logits", "new_k_caches", "new_v_caches"]
+    names = [p["name"] for p in man["params"]]
+    assert names == model.param_names(TINY)
+
+
+def test_weights_bin_matches_manifest_offsets(artifacts_dir):
+    man = json.loads((artifacts_dir / "manifest.json").read_text())
+    blob = np.frombuffer((artifacts_dir / "weights.bin").read_bytes(),
+                         dtype="<f4")
+    assert blob.size == man["total_floats"]
+    # offsets are contiguous and sorted
+    end = 0
+    for p in man["params"]:
+        assert p["offset"] == end
+        assert p["numel"] == int(np.prod(p["shape"])) if p["shape"] else 1
+        end = p["offset"] + p["numel"]
+    assert end == blob.size
+
+
+def test_weights_ternary_matrices_in_domain(artifacts_dir):
+    man = json.loads((artifacts_dir / "manifest.json").read_text())
+    blob = np.frombuffer((artifacts_dir / "weights.bin").read_bytes(),
+                         dtype="<f4")
+    for p in man["params"]:
+        base = p["name"].split(".")[-1]
+        if base in ("wq", "wk", "wv", "wx", "w_in", "w_out", "w_head"):
+            vals = blob[p["offset"]: p["offset"] + p["numel"]]
+            assert set(np.unique(vals).tolist()) <= {-1.0, 0.0, 1.0}, p["name"]
+
+
+def test_hlo_text_parses_shape(artifacts_dir):
+    hlo = (artifacts_dir / "decode_step.hlo.txt").read_text()
+    assert "ENTRY" in hlo
+    assert "HloModule" in hlo
+    # return_tuple=True => root is a tuple of 3
+    assert hlo.count("f32[") > 10
+
+
+def test_model_hlo_alias_identical(artifacts_dir):
+    a = (artifacts_dir / "decode_step.hlo.txt").read_text()
+    b = (artifacts_dir / "model.hlo.txt").read_text()
+    assert a == b
+
+
+def test_golden_consistent_with_model(artifacts_dir):
+    """Re-run the jax graph from the dumped weights; the golden tokens
+    must reproduce (this is exactly what the Rust runtime must match)."""
+    man = json.loads((artifacts_dir / "manifest.json").read_text())
+    golden = json.loads((artifacts_dir / "golden.json").read_text())
+    blob = np.frombuffer((artifacts_dir / "weights.bin").read_bytes(),
+                         dtype="<f4")
+    params = {}
+    for p in man["params"]:
+        arr = blob[p["offset"]: p["offset"] + p["numel"]].reshape(p["shape"])
+        params[p["name"]] = jnp.asarray(arr, jnp.float32)
+    tokens = model.generate(TINY, params, golden["prompt"], golden["n_new"])
+    assert tokens == golden["tokens"]
+
+
+def test_golden_first_logits(artifacts_dir):
+    man = json.loads((artifacts_dir / "manifest.json").read_text())
+    golden = json.loads((artifacts_dir / "golden.json").read_text())
+    blob = np.frombuffer((artifacts_dir / "weights.bin").read_bytes(),
+                         dtype="<f4")
+    params = {}
+    for p in man["params"]:
+        arr = blob[p["offset"]: p["offset"] + p["numel"]].reshape(p["shape"])
+        params[p["name"]] = jnp.asarray(arr, jnp.float32)
+    flat = model.flatten_params(TINY, params)
+    k, v = model.empty_caches(TINY)
+    logits, _, _ = model.decode_step(
+        TINY, flat, k, v, jnp.int32(golden["prompt"][0]), jnp.int32(0)
+    )
+    got = np.asarray(logits)
+    np.testing.assert_allclose(
+        got[:8], np.asarray(golden["first_logits_prefix"]), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(np.linalg.norm(got)), golden["first_logits_l2"], rtol=1e-5
+    )

@@ -1,0 +1,172 @@
+# pytest: Pallas kernels vs pure-jnp ref — the CORE correctness signal.
+#
+# hypothesis sweeps shapes (ragged, tiny, block-boundary) and value
+# distributions; every case must match the oracle EXACTLY (the integer
+# path on f32 carriers is exact, see ref.py).
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.bitlinear import bitlinear, bitlinear_matmul
+from compile.kernels.qmatmul import qmatmul, qmatmul_int
+
+# interpret-mode pallas is slow; keep hypothesis examples bounded.
+SETTINGS = hypothesis.settings(
+    max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def _rand(rng, m, n):
+    return jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- bitlinear
+@SETTINGS
+@hypothesis.given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_bitlinear_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x_q = jnp.asarray(rng.integers(-128, 128, size=(m, k)).astype(np.float32))
+    w_q = jnp.asarray(rng.integers(-1, 2, size=(k, n)).astype(np.float32))
+    got = bitlinear_matmul(x_q, w_q)
+    want = ref.int_matmul_ref(x_q, w_q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@SETTINGS
+@hypothesis.given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_bitlinear_full_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    w_q, w_s = ref.weight_quant_ternary(_rand(rng, k, n))
+    got = bitlinear(x, w_q, w_s)
+    want = ref.bitlinear_ref(x, w_q, w_s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("shape", [(1, 256, 256), (1, 256, 1024),
+                                   (2, 128, 128), (1, 1, 1), (128, 128, 128)])
+def test_bitlinear_block_boundary_shapes(shape):
+    """Exactly-at-block and single-element shapes."""
+    m, k, n = shape
+    rng = np.random.default_rng(1)
+    x = _rand(rng, m, k)
+    w_q, w_s = ref.weight_quant_ternary(_rand(rng, k, n))
+    np.testing.assert_array_equal(
+        np.asarray(bitlinear(x, w_q, w_s)),
+        np.asarray(ref.bitlinear_ref(x, w_q, w_s)),
+    )
+
+
+def test_bitlinear_custom_blocks_match():
+    """Block size must not change the result."""
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 4, 200)
+    w_q, w_s = ref.weight_quant_ternary(_rand(rng, 200, 72))
+    base = np.asarray(bitlinear(x, w_q, w_s))
+    for bm, bk, bn in [(2, 64, 32), (4, 200, 72), (1, 16, 8)]:
+        got = np.asarray(bitlinear(x, w_q, w_s, bm=bm, bk=bk, bn=bn))
+        np.testing.assert_array_equal(got, base)
+
+
+def test_bitlinear_zero_input():
+    x = jnp.zeros((3, 64), jnp.float32)
+    w_q, w_s = ref.weight_quant_ternary(jnp.ones((64, 8), jnp.float32))
+    out = np.asarray(bitlinear(x, w_q, w_s))
+    np.testing.assert_array_equal(out, np.zeros((3, 8), np.float32))
+
+
+# ----------------------------------------------------------------- qmatmul
+@SETTINGS
+@hypothesis.given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_qmatmul_int_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-128, 128, size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.integers(-128, 128, size=(k, n)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul_int(a, b)), np.asarray(ref.int_matmul_ref(a, b))
+    )
+
+
+@SETTINGS
+@hypothesis.given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_qmatmul_full_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul(a, b)), np.asarray(ref.qmatmul_ref(a, b))
+    )
+
+
+def test_qmatmul_attention_shapes():
+    """The exact attention-head shapes from paper Table I (scaled down):
+    (1, dh) @ (dh, l) then (1, l) @ (l, dh)."""
+    rng = np.random.default_rng(3)
+    dh, l = 64, 128
+    q = _rand(rng, 1, dh)
+    kT = _rand(rng, dh, l)
+    s = _rand(rng, 1, l)
+    v = _rand(rng, l, dh)
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul(q, kT)), np.asarray(ref.qmatmul_ref(q, kT)))
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul(s, v)), np.asarray(ref.qmatmul_ref(s, v)))
+
+
+def test_qmatmul_quantization_error_bounded():
+    """W8A8 result must stay within the analytic absmax error bound."""
+    rng = np.random.default_rng(4)
+    a, b = _rand(rng, 8, 64), _rand(rng, 64, 8)
+    got = np.asarray(qmatmul(a, b))
+    exact = np.asarray(a) @ np.asarray(b)
+    # per-element quant error <= 0.5/scale on each operand
+    a_step = np.abs(a).max() / 127.0
+    b_step = np.abs(b).max() / 127.0
+    bound = 64 * (
+        a_step / 2 * np.abs(b).max() + b_step / 2 * np.abs(a).max()
+        + a_step * b_step / 4
+    )
+    assert np.max(np.abs(got - exact)) <= bound
+
+
+# ------------------------------------------------------------ quantization
+@SETTINGS
+@hypothesis.given(m=dims, n=dims, seed=st.integers(0, 2**16))
+def test_weight_quant_ternary_domain(m, n, seed):
+    rng = np.random.default_rng(seed)
+    w_q, s = ref.weight_quant_ternary(_rand(rng, m, n))
+    vals = np.unique(np.asarray(w_q))
+    assert set(vals.tolist()) <= {-1.0, 0.0, 1.0}
+    assert float(s) > 0
+
+
+@SETTINGS
+@hypothesis.given(m=dims, n=dims, seed=st.integers(0, 2**16))
+def test_act_quant_int8_domain_and_roundtrip(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, n)
+    x_q, s = ref.act_quant_int8(x)
+    xq = np.asarray(x_q)
+    assert xq.min() >= -128 and xq.max() <= 127
+    assert np.array_equal(xq, np.round(xq))  # integral
+    # round-trip error bounded by half a quantization step
+    np.testing.assert_allclose(
+        xq / float(s), np.asarray(x), atol=0.5 / float(s) + 1e-6
+    )
+
+
+def test_act_quant_saturates_exactly_at_absmax():
+    x = jnp.asarray([[-2.0, 2.0, 1.0]], jnp.float32)
+    x_q, s = ref.act_quant_int8(x)
+    assert float(jnp.max(jnp.abs(x_q))) == 127.0
+
+
+def test_act_quant_zero_input_stable():
+    x_q, s = ref.act_quant_int8(jnp.zeros((4, 4), jnp.float32))
+    assert np.all(np.asarray(x_q) == 0)
+    assert np.isfinite(float(s))

@@ -1,0 +1,166 @@
+# pytest: L2 model — shapes, causal masking, KV-cache semantics,
+# determinism, and quantization plumbing of the 1-bit decoder.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import ModelConfig
+
+# Smaller-than-TINY config so interpret-mode pallas stays fast in CI.
+CFG = ModelConfig(vocab=32, d=32, h=2, d_ff=64, n_layers=2, max_ctx=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def flat(params):
+    return model.flatten_params(CFG, params)
+
+
+def _step(flat, k, v, tok, pos):
+    return model.decode_step(
+        CFG, flat, k, v, jnp.int32(tok), jnp.int32(pos)
+    )
+
+
+# ------------------------------------------------------------- structure
+def test_param_names_order_stable():
+    names = model.param_names(CFG)
+    assert names[0] == "layer0.ln1_gamma"
+    assert names[-1] == "w_head_scale"
+    assert len(names) == CFG.n_layers * 14 + 4
+    assert len(set(names)) == len(names)
+
+
+def test_param_shapes_cover_all_names():
+    names = model.param_names(CFG)
+    shapes = model.param_shapes(CFG)
+    assert set(names) == set(shapes)
+
+
+def test_init_params_projections_are_ternary(params):
+    for name, arr in params.items():
+        base = name.split(".")[-1]
+        if base in ("wq", "wk", "wv", "wx", "w_in", "w_out", "w_head"):
+            vals = set(np.unique(np.asarray(arr)).tolist())
+            assert vals <= {-1.0, 0.0, 1.0}, name
+            # scale exists and is positive
+            s = params[name + "_scale"]
+            assert float(s) > 0
+
+
+def test_flatten_unflatten_roundtrip(params, flat):
+    back = model.unflatten_params(CFG, flat)
+    assert set(back) == set(params)
+    for n in params:
+        np.testing.assert_array_equal(np.asarray(back[n]), np.asarray(params[n]))
+
+
+# ----------------------------------------------------------- decode step
+def test_decode_step_shapes(flat):
+    k, v = model.empty_caches(CFG)
+    logits, nk, nv = _step(flat, k, v, 3, 0)
+    assert logits.shape == (CFG.vocab,)
+    assert nk.shape == (CFG.n_layers, CFG.h, CFG.max_ctx, CFG.d_head)
+    assert nv.shape == nk.shape
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_decode_step_writes_cache_at_pos(flat):
+    k, v = model.empty_caches(CFG)
+    pos = 5
+    _, nk, nv = _step(flat, k, v, 3, pos)
+    nk, nv = np.asarray(nk), np.asarray(nv)
+    # only column `pos` may be non-zero
+    mask = np.zeros(nk.shape, bool)
+    mask[:, :, pos, :] = True
+    assert np.any(nk[mask] != 0)
+    assert np.all(nk[~mask] == 0)
+    assert np.all(nv[~mask] == 0)
+
+
+def test_decode_step_deterministic(flat):
+    k, v = model.empty_caches(CFG)
+    l1, _, _ = _step(flat, k, v, 7, 0)
+    l2, _, _ = _step(flat, k, v, 7, 0)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_causal_mask_future_cache_ignored(flat):
+    """Garbage in cache slots beyond `pos` must not change the logits."""
+    k, v = model.empty_caches(CFG)
+    logits_a, nk, nv = _step(flat, k, v, 3, 0)
+    rng = np.random.default_rng(0)
+    k_dirty = np.asarray(k).copy()
+    v_dirty = np.asarray(v).copy()
+    k_dirty[:, :, 1:, :] = rng.normal(size=k_dirty[:, :, 1:, :].shape)
+    v_dirty[:, :, 1:, :] = rng.normal(size=v_dirty[:, :, 1:, :].shape)
+    logits_b, _, _ = _step(
+        flat, jnp.asarray(k_dirty, jnp.float32),
+        jnp.asarray(v_dirty, jnp.float32), 3, 0
+    )
+    np.testing.assert_array_equal(np.asarray(logits_a), np.asarray(logits_b))
+
+
+def test_past_cache_does_affect_logits(flat):
+    """Conversely, slots <= pos must matter (attention actually reads)."""
+    k, v = model.empty_caches(CFG)
+    _, k1, v1 = _step(flat, k, v, 3, 0)
+    logits_a, _, _ = _step(flat, k1, v1, 5, 1)
+    rng = np.random.default_rng(1)
+    k_dirty = np.asarray(k1).copy()
+    k_dirty[:, :, 0, :] += rng.normal(size=k_dirty[:, :, 0, :].shape)
+    logits_b, _, _ = _step(flat, jnp.asarray(k_dirty, jnp.float32), v1, 5, 1)
+    assert np.any(np.asarray(logits_a) != np.asarray(logits_b))
+
+
+def test_token_identity_changes_logits(flat):
+    k, v = model.empty_caches(CFG)
+    la, _, _ = _step(flat, k, v, 1, 0)
+    lb, _, _ = _step(flat, k, v, 2, 0)
+    assert np.any(np.asarray(la) != np.asarray(lb))
+
+
+# -------------------------------------------------------------- generate
+def test_generate_golden_reproducible(params):
+    t1 = model.generate(CFG, params, [1, 2, 3], 4)
+    t2 = model.generate(CFG, params, [1, 2, 3], 4)
+    assert t1 == t2
+    assert len(t1) == 7
+    assert t1[:3] == [1, 2, 3]
+    assert all(0 <= t < CFG.vocab for t in t1)
+
+
+def test_generate_prefix_property(params):
+    """Generating k then k+1 tokens agrees on the shared prefix (greedy)."""
+    a = model.generate(CFG, params, [4, 5], 2)
+    b = model.generate(CFG, params, [4, 5], 4)
+    assert b[: len(a)] == a
+
+
+# ------------------------------------------------------------ norms/gelu
+def test_rms_norm_unit_scale():
+    x = jnp.asarray([[3.0, -4.0]], jnp.float32)
+    out = np.asarray(model.rms_norm(x, jnp.ones(2), 0.0))
+    rms = np.sqrt((9 + 16) / 2)
+    np.testing.assert_allclose(out, np.asarray(x) / rms, rtol=1e-6)
+
+
+def test_rms_norm_gamma_scales_linearly():
+    x = jnp.asarray([[1.0, 2.0, 3.0]], jnp.float32)
+    g = jnp.asarray([2.0, 2.0, 2.0])
+    out1 = np.asarray(model.rms_norm(x, jnp.ones(3), 1e-6))
+    out2 = np.asarray(model.rms_norm(x, g, 1e-6))
+    np.testing.assert_allclose(out2, 2 * out1, rtol=1e-6)
+
+
+def test_gelu_fixed_points():
+    out = np.asarray(model.gelu(jnp.asarray([0.0, 10.0, -10.0])))
+    np.testing.assert_allclose(out[0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[1], 10.0, rtol=1e-4)
+    np.testing.assert_allclose(out[2], 0.0, atol=1e-3)

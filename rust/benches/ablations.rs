@@ -1,0 +1,115 @@
+//! Ablation benches for the design choices the paper calls out:
+//!
+//! 1. **Attention-on-PIM** (what the paper refuses to do, §III): write
+//!    K/V into crossbars each token -> write latency/energy per token and
+//!    device lifetime at the achieved token rate. Shows why the hybrid
+//!    split exists.
+//! 2. **Crossbar size** (128 / 256 / 512): how the paper's 256x256 choice
+//!    trades communication (more crossbars to collect) against analog
+//!    step granularity.
+//! 3. **ADC sharing ratio** (4 / 8 / 16 columns per ADC): digitization
+//!    throughput vs ADC area/energy.
+//! 4. **Dataflow choice on the attention ops only** (the hybrid's TPU
+//!    side): confirms OS also wins restricted to W8A8 ops.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, Arch};
+use pim_llm::models;
+use pim_llm::pim::writes;
+use pim_llm::systolic::dataflow::Dataflow;
+use pim_llm::systolic::run_op;
+use pim_llm::util::bench::{black_box, Bench};
+use pim_llm::workload;
+
+fn main() {
+    let base = ArchConfig::paper_45nm();
+    let opt = models::by_name("OPT-6.7B").unwrap();
+
+    // ---------------------------------------------- 1. attention-on-PIM
+    println!("== ablation 1: attention-on-PIM (the rejected design) ==");
+    let hybrid = coordinator::simulate(&base, &opt, 128, Arch::PimLlm);
+    let tokens_per_s = 1.0 / hybrid.latency_s();
+    let cost = writes::attention_on_pim(&base.pim, opt.d, opt.n_layers, tokens_per_s);
+    println!(
+        "OPT-6.7B: +{:.3} ms write latency/token (vs {:.3} ms hybrid token), \
+         +{:.3} mJ write energy/token, device lifetime {:.1} days at {:.1} tok/s",
+        1e3 * cost.write_latency_s,
+        1e3 * hybrid.latency_s(),
+        1e3 * cost.write_energy_j,
+        cost.lifetime_s / 86_400.0,
+        tokens_per_s
+    );
+    assert!(
+        cost.lifetime_s < 365.0 * 86_400.0,
+        "endurance death in under a year justifies the hybrid split"
+    );
+
+    // ------------------------------------------------- 2. crossbar size
+    println!("\n== ablation 2: crossbar size (communication vs granularity) ==");
+    for dim in [128usize, 256, 512] {
+        let mut arch = base.clone();
+        arch.pim.crossbar_dim = dim;
+        let r = coordinator::simulate(&arch, &opt, 128, Arch::PimLlm);
+        println!(
+            "dim {dim:>4}: token latency {:.3} ms (comm {:.3} ms = {:.1}%)",
+            1e3 * r.latency_s(),
+            1e3 * r.breakdown.communication_s,
+            100.0 * r.breakdown.communication_s / r.latency_s()
+        );
+    }
+    // Bigger crossbars -> fewer to collect -> less communication.
+    let comm = |dim: usize| {
+        let mut arch = base.clone();
+        arch.pim.crossbar_dim = dim;
+        coordinator::simulate(&arch, &opt, 128, Arch::PimLlm)
+            .breakdown
+            .communication_s
+    };
+    assert!(comm(512) < comm(256) && comm(256) < comm(128));
+
+    // --------------------------------------------------- 3. ADC sharing
+    println!("\n== ablation 3: ADC sharing ratio ==");
+    for share in [4usize, 8, 16] {
+        let mut arch = base.clone();
+        arch.pim.adc_share = share;
+        let r = coordinator::simulate(&arch, &opt, 128, Arch::PimLlm);
+        println!(
+            "share {share:>3}: pim analog {:.3} us/step-chain, token latency {:.3} ms",
+            1e6 * r.breakdown.pim_analog_s(),
+            1e3 * r.latency_s()
+        );
+    }
+
+    // ------------------------------------- 4. dataflow on attention ops
+    println!("\n== ablation 4: dataflow restricted to attention ops ==");
+    let ops = workload::decode_ops(&opt, 1024);
+    for df in Dataflow::ALL {
+        let cycles: u64 = ops
+            .iter()
+            .filter(|o| o.is_attention())
+            .map(|o| run_op(&base.tpu, o, df).cycles)
+            .sum();
+        println!("{}: {} cycles", df.short_name(), cycles);
+    }
+    let att_cycles = |df: Dataflow| -> u64 {
+        ops.iter()
+            .filter(|o| o.is_attention())
+            .map(|o| run_op(&base.tpu, o, df).cycles)
+            .sum()
+    };
+    assert!(att_cycles(Dataflow::OutputStationary) < att_cycles(Dataflow::WeightStationary));
+    assert!(att_cycles(Dataflow::OutputStationary) < att_cycles(Dataflow::InputStationary));
+    println!("\nshape OK: all four ablations support the paper's choices");
+    println!();
+
+    let mut b = Bench::default();
+    b.run("ablations/crossbar_size_sweep", || {
+        for dim in [128usize, 256, 512] {
+            let mut arch = base.clone();
+            arch.pim.crossbar_dim = dim;
+            black_box(coordinator::simulate(&arch, &opt, 128, Arch::PimLlm));
+        }
+    });
+}

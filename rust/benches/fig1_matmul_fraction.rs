@@ -1,0 +1,46 @@
+//! Bench for paper Fig. 1b: percentage of low-precision (W1A8) MatMul
+//! operations across OPT models and context lengths. Prints the figure's
+//! series and times the generator.
+//!
+//! Run: `cargo bench --bench fig1_matmul_fraction`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+
+    let rows = figures::fig1b(&arch);
+    report::print_fig1b(&rows);
+    println!();
+
+    // Shape assertions (the figure's claims).
+    let opt350_4096 = rows
+        .iter()
+        .find(|r| r.model == "OPT-350M" && r.context == 4096)
+        .expect("point exists");
+    assert!(
+        opt350_4096.low_precision_pct < 70.0,
+        "OPT-350M @4096 must be the evenly-distributed case"
+    );
+    for r in rows.iter().filter(|r| r.context == 128) {
+        if r.model != "OPT-350M" {
+            assert!(r.low_precision_pct > 95.0, "{}: {}", r.model, r.low_precision_pct);
+        }
+    }
+    // "more than 99%" holds for the largest model at short context.
+    let opt67_128 = rows
+        .iter()
+        .find(|r| r.model == "OPT-6.7B" && r.context == 128)
+        .unwrap();
+    assert!(opt67_128.low_precision_pct > 99.0);
+    println!(
+        "shape OK: OPT-350M@4096 = {:.1}% (evenly split), OPT-6.7B@128 = {:.2}% (>99%)",
+        opt350_4096.low_precision_pct, opt67_128.low_precision_pct
+    );
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig1b/generate_all_points", || black_box(figures::fig1b(&arch)));
+}

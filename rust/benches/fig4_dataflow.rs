@@ -1,0 +1,42 @@
+//! Bench for paper Fig. 4: total decode-step cycles on the 32x32
+//! systolic array under OS / WS / IS dataflows, for every Table II
+//! model. Prints the figure's bars and asserts OS wins (the paper's
+//! design decision), then times both the analytical model and the
+//! cycle-accurate wavefront stepper.
+//!
+//! Run: `cargo bench --bench fig4_dataflow`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::systolic::dataflow::{gemm_cycles, Dataflow};
+use pim_llm::systolic::wavefront::simulate_gemm;
+use pim_llm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig4(&arch);
+    report::print_fig4(&rows);
+    println!();
+
+    // Shape: OS lowest for every model (why the paper picked OS).
+    for model in rows.iter().map(|r| r.model.clone()).collect::<std::collections::BTreeSet<_>>() {
+        let get = |df: &str| {
+            rows.iter()
+                .find(|r| r.model == model && r.dataflow == df)
+                .unwrap()
+                .cycles
+        };
+        assert!(get("OS") < get("WS") && get("OS") < get("IS"), "{model}");
+    }
+    println!("shape OK: OS < WS and OS < IS for all models");
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig4/analytical_all_models", || black_box(figures::fig4(&arch)));
+    b.run("fig4/analytical_single_gemm", || {
+        black_box(gemm_cycles(4096, 4096, 1, 32, 32, Dataflow::OutputStationary))
+    });
+    b.run("fig4/wavefront_64x64x64", || {
+        black_box(simulate_gemm(64, 64, 64, 32, 32, Dataflow::OutputStationary))
+    });
+}

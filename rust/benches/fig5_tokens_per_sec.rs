@@ -1,0 +1,51 @@
+//! Bench for paper Fig. 5: tokens/second of PIM-LLM vs TPU-LLM across
+//! all Table II models and context lengths 128..4096, with the paper's
+//! stated speedups checked at the four annotated points (11.6x / 79.2x
+//! at l=128; 1.5x / 5.71x at l=4096).
+//!
+//! Run: `cargo bench --bench fig5_tokens_per_sec`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, Arch};
+use pim_llm::models;
+use pim_llm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig5(&arch);
+    report::print_fig5(&rows);
+    println!();
+
+    // Paper-vs-measured at the stated points.
+    let mut worst: f64 = 0.0;
+    for r in &rows {
+        if let Some(ps) = r.paper_speedup {
+            let rel = (r.speedup - ps).abs() / ps;
+            worst = worst.max(rel);
+            println!(
+                "paper point {} l={}: measured {:.2}x vs paper {:.2}x ({:+.1}%)",
+                r.model,
+                r.context,
+                r.speedup,
+                ps,
+                100.0 * (r.speedup / ps - 1.0)
+            );
+        }
+    }
+    assert!(worst < 0.15, "worst paper deviation {:.1}% >= 15%", 100.0 * worst);
+    println!("shape OK: all stated speedups within 15%");
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig5/full_sweep_7models_x6ctx_x2arch", || {
+        black_box(figures::fig5(&arch))
+    });
+    let opt = models::by_name("OPT-6.7B").unwrap();
+    b.run("fig5/single_point_hybrid_opt67b_l128", || {
+        black_box(coordinator::simulate(&arch, &opt, 128, Arch::PimLlm))
+    });
+    b.run("fig5/single_point_baseline_opt67b_l128", || {
+        black_box(coordinator::simulate(&arch, &opt, 128, Arch::TpuLlm))
+    });
+}

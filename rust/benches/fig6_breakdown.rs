@@ -1,0 +1,76 @@
+//! Bench for paper Fig. 6: per-component latency percentage breakdown of
+//! the hybrid PIM-LLM architecture at l=128 and l=4096, checked against
+//! the percentages the paper states in §IV-B (systolic 60% / 73.9% at
+//! l=128, >97% at l=4096; communication 36.3% / 10.7%; buffer 3.5% /
+//! 14.7%; Xbar+DAC+ADC < 1%; peripheral < 0.01%).
+//!
+//! Run: `cargo bench --bench fig6_breakdown`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, Arch};
+use pim_llm::models;
+use pim_llm::util::bench::{black_box, Bench};
+
+fn pct(rows: &[figures::Fig6Row], model: &str, l: usize, comp: &str) -> f64 {
+    rows.iter()
+        .find(|r| r.model == model && r.context == l)
+        .unwrap()
+        .percents
+        .iter()
+        .find(|(k, _)| k == comp)
+        .unwrap()
+        .1
+}
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig6(&arch);
+    report::print_fig6(&rows);
+    println!();
+
+    // Paper-vs-measured on the stated reference points.
+    let checks = [
+        ("OPT-6.7B", 128usize, "systolic", 60.0, 12.0),
+        ("GPT2-355M", 128, "systolic", 73.9, 12.0),
+        ("OPT-6.7B", 128, "communication", 36.3, 12.0),
+        ("GPT2-355M", 128, "communication", 10.7, 6.0),
+        ("GPT2-355M", 128, "buffer", 14.7, 6.0),
+        ("OPT-6.7B", 128, "buffer", 3.5, 3.0),
+    ];
+    for (model, l, comp, paper, tol) in checks {
+        let got = pct(&rows, model, l, comp);
+        println!(
+            "paper point {model} l={l} {comp}: measured {got:.1}% vs paper {paper:.1}%"
+        );
+        assert!(
+            (got - paper).abs() < tol,
+            "{model} l={l} {comp}: {got:.1}% vs paper {paper:.1}% (tol {tol})"
+        );
+    }
+    // At l=4096 the systolic array dominates (> 90%, paper says > 97%).
+    for model in ["GPT2-355M", "OPT-6.7B"] {
+        let got = pct(&rows, model, 4096, "systolic");
+        assert!(got > 90.0, "{model} @4096 systolic {got:.1}%");
+        println!("paper point {model} l=4096 systolic: measured {got:.1}% vs paper >97%");
+    }
+    // PIM analog path (xbar+dac+adc) below 1%, peripheral below 0.01%.
+    for model in ["GPT2-355M", "OPT-6.7B"] {
+        let analog = pct(&rows, model, 128, "xbar")
+            + pct(&rows, model, 128, "dac")
+            + pct(&rows, model, 128, "adc");
+        assert!(analog < 1.0, "{model} analog {analog:.3}%");
+        assert!(pct(&rows, model, 128, "peripheral") < 0.01);
+    }
+    println!("shape OK: all Fig.6 reference points reproduced");
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig6/breakdown_all_models_two_contexts", || {
+        black_box(figures::fig6(&arch))
+    });
+    let m = models::by_name("OPT-6.7B").unwrap();
+    b.run("fig6/single_breakdown_opt67b_l4096", || {
+        black_box(coordinator::simulate(&arch, &m, 4096, Arch::PimLlm))
+    });
+}

@@ -1,0 +1,63 @@
+//! Bench for paper Fig. 7: tokens per joule of PIM-LLM vs TPU-LLM.
+//!
+//! The qualitative shape the paper reports and we check:
+//!   * TPU-LLM is MORE energy-efficient for the smallest model (GPT2-
+//!     355M) at short context (paper: 33.7% lower energy at l=128).
+//!   * PIM-LLM crosses over around OPT-1.3B at l=128 (+0.96%) and the
+//!     gain grows with model size (+12.49% for OPT-6.7B).
+//!
+//! The paper also reports gains *growing* with context length for fixed
+//! small models (+70.58% GPT2-350M @4096). Our component-energy analysis
+//! shows that trend is not derivable from any time-invariant component
+//! model (both architectures execute identical attention ops); see
+//! EXPERIMENTS.md §Fig.7 for the full derivation. We therefore check the
+//! model-size crossover strictly and report the context trend as
+//! paper-vs-measured without asserting it.
+//!
+//! Run: `cargo bench --bench fig7_tokens_per_joule`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::util::bench::{black_box, Bench};
+
+fn gain(rows: &[figures::Fig7Row], model: &str, l: usize) -> f64 {
+    rows.iter()
+        .find(|r| r.model == model && r.context == l)
+        .unwrap()
+        .gain_pct
+}
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig7(&arch);
+    report::print_fig7(&rows);
+    println!();
+
+    // Crossover shape at l=128 (strict checks).
+    let g_gpt = gain(&rows, "GPT2-355M", 128);
+    let g_13 = gain(&rows, "OPT-1.3B", 128);
+    let g_67 = gain(&rows, "OPT-6.7B", 128);
+    println!("l=128 gains: GPT2-355M {g_gpt:+.1}% | OPT-1.3B {g_13:+.1}% | OPT-6.7B {g_67:+.1}%");
+    assert!(g_gpt < 0.0, "TPU-LLM must win on GPT2-355M @128 (paper: by 33.7%)");
+    assert!(g_13 > g_gpt, "gain must grow with model size");
+    assert!(g_67 > g_13, "gain must grow with model size");
+    assert!(g_67 > 0.0, "PIM-LLM must win on OPT-6.7B @128 (paper: +12.49%)");
+
+    // Context-length trend: report paper-vs-measured.
+    for (model, l) in [("GPT2-355M", 2048usize), ("GPT2-355M", 4096), ("OPT-6.7B", 2048), ("OPT-6.7B", 4096)] {
+        let r = rows
+            .iter()
+            .find(|r| r.model == model && r.context == l)
+            .unwrap();
+        println!(
+            "paper point {model} l={l}: measured {:+.1}% vs paper {:+.1}%",
+            r.gain_pct,
+            r.paper_gain_pct.unwrap()
+        );
+    }
+    println!("shape OK: crossover at/above OPT-1.3B, monotone in model size");
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig7/full_energy_sweep", || black_box(figures::fig7(&arch)));
+}

@@ -1,0 +1,56 @@
+//! Bench for paper Fig. 8: Words per Battery Life — tokens obtainable
+//! from a 5 Wh (18,000 J) edge battery at 1.5 tokens/word, for both
+//! architectures across all models/contexts. Paper-stated anchor points
+//! (OPT-6.7B @128: 1.6M vs 1.4M; GPT2-350M @4096: 35M vs 20M; OPT-6.7B
+//! @4096: 1.6M vs 1.2M) are printed as paper-vs-measured.
+//!
+//! Run: `cargo bench --bench fig8_words_battery`
+
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig8(&arch);
+    report::print_fig8(&rows);
+    println!();
+
+    // Internal consistency: Fig. 8 must be a pure transform of Fig. 7.
+    let f7 = figures::fig7(&arch);
+    for (r8, r7) in rows.iter().zip(f7.iter()) {
+        let want = 18_000.0 * r7.pim_llm_tokens_per_j / 1.5;
+        assert!(
+            (r8.pim_llm_words - want).abs() / want < 1e-9,
+            "fig8 inconsistent with fig7 at {} l={}",
+            r8.model,
+            r8.context
+        );
+    }
+
+    // Shape at the paper's anchor points: PIM-LLM ahead on OPT-6.7B @128
+    // and the ordering PIM > TPU wherever fig7 gain is positive.
+    for (r8, r7) in rows.iter().zip(f7.iter()) {
+        if r7.gain_pct > 0.0 {
+            assert!(r8.pim_llm_words > r8.tpu_llm_words);
+        } else {
+            assert!(r8.pim_llm_words <= r8.tpu_llm_words);
+        }
+    }
+    for r in rows.iter().filter(|r| r.paper_pim_words.is_some()) {
+        println!(
+            "paper point {} l={}: measured {:.2}M/{:.2}M words vs paper {:.1}M/{:.1}M (PIM/TPU)",
+            r.model,
+            r.context,
+            r.pim_llm_words / 1e6,
+            r.tpu_llm_words / 1e6,
+            r.paper_pim_words.unwrap() / 1e6,
+            r.paper_tpu_words.unwrap() / 1e6,
+        );
+    }
+    println!("shape OK: fig8 == transform(fig7), winners consistent");
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig8/full_sweep", || black_box(figures::fig8(&arch)));
+}

@@ -1,0 +1,71 @@
+//! Bench for the L3 runtime hot path: PJRT decode-step execution, cache
+//! literal construction, and the serving loop — the targets of the perf
+//! pass (EXPERIMENTS.md §Perf).
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench runtime_hotpath`
+
+use pim_llm::runtime::{artifacts, Artifacts, Engine, TinyDecoder};
+use pim_llm::serving::{Policy, Request, Server};
+use pim_llm::util::bench::{black_box, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+
+    let mut b = Bench::quick();
+
+    // Artifact load + engine compile (cold-start cost).
+    b.run("runtime/artifacts_load", || {
+        black_box(Artifacts::load(&dir).unwrap())
+    });
+    let engine = Engine::load(Artifacts::load(&dir)?)?;
+
+    // Single decode step (the per-token cost on the request path).
+    b.run("runtime/decode_step", || {
+        let caches = engine.empty_caches().unwrap();
+        black_box(engine.decode_step(caches, 1, 0).unwrap().logits.len())
+    });
+
+    // Cache construction (per-session setup).
+    b.run("runtime/empty_caches", || {
+        black_box(engine.empty_caches().unwrap())
+    });
+
+    // Full short generation (prompt 4 + 8 new).
+    b.run("runtime/generate_4p_8n", || {
+        let mut dec = TinyDecoder::new(&engine).unwrap();
+        dec.generate(&[1, 2, 3, 4], 8).unwrap();
+        black_box(dec.tokens.len())
+    });
+
+    // Serving loop, round-robin over 4 sessions.
+    b.run("serving/rr4_8req_4p_4n", || {
+        let reqs: Vec<Request> = (0..8)
+            .map(|id| Request {
+                id,
+                prompt: vec![1, 2, 3, 4],
+                n_new: 4,
+            })
+            .collect();
+        let out = Server::new(&engine, Policy::RoundRobin { max_active: 4 })
+            .serve(reqs)
+            .unwrap();
+        black_box(out.len())
+    });
+
+    // Derived: report tokens/s of the functional path.
+    let m = b
+        .results()
+        .iter()
+        .find(|m| m.name == "runtime/decode_step")
+        .unwrap()
+        .clone();
+    println!(
+        "\nfunctional decode throughput: {:.1} tokens/s per engine",
+        1.0 / m.mean_s
+    );
+    Ok(())
+}

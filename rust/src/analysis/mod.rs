@@ -1,0 +1,10 @@
+//! Figure/table generators: for every evaluation artifact in the paper
+//! (Fig. 1b, Fig. 4, Fig. 5, Fig. 6, Fig. 7, Fig. 8, Table III) this
+//! module produces the same rows/series from the simulator, alongside
+//! the paper's reported values where the text states them, so benches
+//! and the CLI can print paper-vs-measured.
+
+pub mod figures;
+pub mod report;
+
+pub use figures::*;

@@ -1,0 +1,158 @@
+//! Pretty-printing for figure/table rows: fixed-width console tables the
+//! benches and CLI share, always showing paper-reference values next to
+//! measured ones where the paper states them.
+
+use super::figures::*;
+
+fn fmt_si(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else if v >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+pub fn print_fig1b(rows: &[Fig1bRow]) {
+    println!("Fig. 1b — % low-precision (W1A8) MatMul operations");
+    println!("{:<12} {:>8} {:>10}", "model", "context", "low-prec%");
+    for r in rows {
+        println!(
+            "{:<12} {:>8} {:>9.2}%",
+            r.model, r.context, r.low_precision_pct
+        );
+    }
+}
+
+pub fn print_fig4(rows: &[Fig4Row]) {
+    println!(
+        "Fig. 4 — decode-step cycles on 32x32 array (l={FIG4_CONTEXT}), by dataflow"
+    );
+    println!("{:<12} {:>4} {:>16}", "model", "df", "cycles");
+    for r in rows {
+        println!("{:<12} {:>4} {:>16}", r.model, r.dataflow, r.cycles);
+    }
+}
+
+pub fn print_fig5(rows: &[Fig5Row]) {
+    println!("Fig. 5 — tokens/s (PIM-LLM vs TPU-LLM)");
+    println!(
+        "{:<12} {:>7} {:>12} {:>12} {:>9} {:>9}",
+        "model", "l", "PIM tok/s", "TPU tok/s", "speedup", "paper"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>7} {:>12} {:>12} {:>8.2}x {:>9}",
+            r.model,
+            r.context,
+            fmt_si(r.pim_llm_tokens_per_s),
+            fmt_si(r.tpu_llm_tokens_per_s),
+            r.speedup,
+            r.paper_speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+pub fn print_fig6(rows: &[Fig6Row]) {
+    println!("Fig. 6 — latency breakdown (%) of PIM-LLM");
+    for r in rows {
+        let parts: Vec<String> = r
+            .percents
+            .iter()
+            .filter(|(_, v)| *v > 0.005)
+            .map(|(k, v)| format!("{k}={v:.2}%"))
+            .collect();
+        println!("{:<12} l={:<6} {}", r.model, r.context, parts.join(" "));
+    }
+    println!("paper reference points:");
+    for (m, l, comp, pct) in paper_fig6_reference() {
+        println!("  {m} l={l}: {comp} = {pct}%");
+    }
+}
+
+pub fn print_fig7(rows: &[Fig7Row]) {
+    println!("Fig. 7 — tokens/joule (PIM-LLM vs TPU-LLM)");
+    println!(
+        "{:<12} {:>7} {:>12} {:>12} {:>9} {:>9}",
+        "model", "l", "PIM tok/J", "TPU tok/J", "gain%", "paper%"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>7} {:>12} {:>12} {:>8.2}% {:>9}",
+            r.model,
+            r.context,
+            fmt_si(r.pim_llm_tokens_per_j),
+            fmt_si(r.tpu_llm_tokens_per_j),
+            r.gain_pct,
+            r.paper_gain_pct
+                .map(|s| format!("{s:.2}%"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+pub fn print_fig8(rows: &[Fig8Row]) {
+    println!("Fig. 8 — words per battery life (5 Wh, 1.5 tok/word)");
+    println!(
+        "{:<12} {:>7} {:>12} {:>12} {:>11} {:>11}",
+        "model", "l", "PIM words", "TPU words", "paper(PIM)", "paper(TPU)"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>7} {:>12} {:>12} {:>11} {:>11}",
+            r.model,
+            r.context,
+            fmt_si(r.pim_llm_words),
+            fmt_si(r.tpu_llm_words),
+            r.paper_pim_words.map(fmt_si).unwrap_or_else(|| "-".into()),
+            r.paper_tpu_words.map(fmt_si).unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+pub fn print_table3(rows: &[Table3Row]) {
+    println!("Table III — comparison with previous PIM accelerators");
+    println!(
+        "{:<16} {:<12} {:>6} {:>9} {:>9} {:>10} {:>10}",
+        "design", "model", "l", "GOPS", "GOPS/W", "paperGOPS", "paperG/W"
+    );
+    for r in rows {
+        let f = |o: Option<f64>| o.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<16} {:<12} {:>6} {:>9} {:>9} {:>10} {:>10}",
+            r.design,
+            r.model,
+            r.context,
+            f(r.gops),
+            f(r.gops_per_w),
+            f(r.paper_gops),
+            f(r.paper_gops_per_w),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_si_ranges() {
+        assert_eq!(fmt_si(1_600_000.0), "1.60M");
+        assert_eq!(fmt_si(1500.0), "1.50k");
+        assert_eq!(fmt_si(12.345), "12.35");
+        assert_eq!(fmt_si(0.5), "0.5000");
+    }
+
+    #[test]
+    fn printers_do_not_panic() {
+        let arch = crate::config::ArchConfig::paper_45nm();
+        print_fig1b(&fig1b(&arch));
+        print_fig4(&fig4(&arch));
+        print_table3(&table3(&arch));
+    }
+}

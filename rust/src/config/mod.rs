@@ -1,0 +1,441 @@
+//! Architecture configuration: every physical parameter of the hybrid
+//! PIM-LLM accelerator and of the TPU-LLM baseline, with 45 nm-class
+//! defaults matching the paper's experimental setup (Synopsys DC @45 nm
+//! for the TPU, MNSIM 2.0 with 256x256 RRAM crossbars and 45 nm 8-bit
+//! ADCs for the PIM part).
+//!
+//! Everything is TOML-serializable so calibrated constants live in
+//! `configs/calibrated_45nm.toml` and experiments are reproducible from a
+//! checked-in file rather than magic numbers.
+
+use crate::util::toml;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Override helpers: apply a TOML key if present.
+fn ov_f64(doc: &toml::Doc, table: &str, key: &str, slot: &mut f64) -> Result<()> {
+    if let Ok(t) = doc.table(table) {
+        if let Some(v) = t.get(key) {
+            *slot = v.as_f64()?;
+        }
+    }
+    Ok(())
+}
+
+fn ov_usize(doc: &toml::Doc, table: &str, key: &str, slot: &mut usize) -> Result<()> {
+    if let Ok(t) = doc.table(table) {
+        if let Some(v) = t.get(key) {
+            *slot = v.as_usize()?;
+        }
+    }
+    Ok(())
+}
+
+fn ov_bool(doc: &toml::Doc, table: &str, key: &str, slot: &mut bool) -> Result<()> {
+    if let Ok(t) = doc.table(table) {
+        if let Some(v) = t.get(key) {
+            *slot = v.as_bool()?;
+        }
+    }
+    Ok(())
+}
+
+/// Digital LLM-specific TPU (paper §III-A): 32x32 output-stationary
+/// systolic array of 8-bit MACs at 100 MHz, 8 MB SRAM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TpuConfig {
+    /// Systolic array rows (R).
+    pub rows: usize,
+    /// Systolic array columns (C).
+    pub cols: usize,
+    /// Operating frequency in Hz (paper: 100 MHz post-synthesis @45 nm).
+    pub freq_hz: f64,
+    /// On-chip SRAM capacity in bytes (paper: 8 MB, typical edge TPU).
+    pub sram_bytes: usize,
+    /// Energy per 8-bit MAC, joules (45 nm, incl. local register traffic).
+    pub mac_energy_j: f64,
+    /// Static/leakage power of the TPU complex, watts.
+    pub static_power_w: f64,
+    /// SRAM access energy per byte, joules.
+    pub sram_energy_per_byte_j: f64,
+}
+
+impl Default for TpuConfig {
+    fn default() -> Self {
+        Self {
+            rows: 32,
+            cols: 32,
+            freq_hz: 100e6,
+            sram_bytes: 8 * 1024 * 1024,
+            mac_energy_j: 0.53e-12,
+            static_power_w: 0.4e-3,
+            sram_energy_per_byte_j: 0.032e-12,
+        }
+    }
+}
+
+/// Analog PIM bank array (paper §III-B): RRAM crossbars with differential
+/// device pairs, 8-bit DAC-less bit-serial inputs, shared 8-bit ADCs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PimConfig {
+    /// Crossbar physical dimension (paper: 256x256 RRAM devices).
+    pub crossbar_dim: usize,
+    /// Devices per weight. 2 = differential pair encoding of {-1,0,1}
+    /// (paper Fig. 3d), so a 256x256 crossbar stores 256x128 weights.
+    pub devices_per_weight: usize,
+    /// Crossbar analog read (MVM) latency per bit-serial input pulse, s.
+    pub xbar_read_latency_s: f64,
+    /// Input activation bit-width streamed bit-serially by the drivers.
+    pub input_bits: usize,
+    /// ADC resolution in bits (paper: 45 nm 8-bit folding ADC).
+    pub adc_bits: usize,
+    /// ADC conversion latency, seconds (2 GS/s class folding ADC).
+    pub adc_latency_s: f64,
+    /// Columns multiplexed onto one ADC.
+    pub adc_share: usize,
+    /// ADC energy per conversion, joules.
+    pub adc_energy_j: f64,
+    /// Driver (DAC-equivalent) energy per input bit pulse, joules.
+    pub dac_energy_j: f64,
+    /// Crossbar energy per effective MAC (device pair read), joules.
+    pub xbar_mac_energy_j: f64,
+    /// Per-token fixed controller/peripheral energy, joules (PIM
+    /// controller, global buffer, instruction sequencing).
+    pub fixed_token_energy_j: f64,
+    /// PEs per tile (paper Fig. 3c: network of PEs per tile).
+    pub pes_per_tile: usize,
+    /// Crossbars per PE.
+    pub xbars_per_pe: usize,
+    /// RRAM write energy per device, joules (why attention never goes on
+    /// PIM; used by the ablation).
+    pub write_energy_per_device_j: f64,
+    /// RRAM write latency per row, seconds.
+    pub write_latency_per_row_s: f64,
+    /// RRAM endurance, program/erase cycles (ablation: device lifetime if
+    /// K/V were written each token).
+    pub endurance_cycles: f64,
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        Self {
+            crossbar_dim: 256,
+            devices_per_weight: 2,
+            xbar_read_latency_s: 10e-9,
+            input_bits: 8,
+            adc_bits: 8,
+            adc_latency_s: 0.5e-9,
+            adc_share: 8,
+            adc_energy_j: 3.2e-12,
+            dac_energy_j: 0.4e-12,
+            xbar_mac_energy_j: 0.54e-12,
+            fixed_token_energy_j: 124e-6,
+            pes_per_tile: 4,
+            xbars_per_pe: 8,
+            write_energy_per_device_j: 10e-12,
+            write_latency_per_row_s: 100e-9,
+            endurance_cycles: 1e8,
+        }
+    }
+}
+
+/// Network-on-chip connecting PIM tiles to each other and to the TPU
+/// complex (paper Fig. 3b). Calibrated so that partial-sum/activation
+/// routing reproduces the paper's communication fractions (36.3% for
+/// OPT-6.7B @ l=128, 10.7% for GPT2-350M @ l=128).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocConfig {
+    /// Effective serialized time to collect one crossbar's output vector
+    /// over the NoC, seconds. Total comm per token ~= n_crossbars * this.
+    pub per_xbar_collect_s: f64,
+    /// NoC energy per byte moved, joules.
+    pub energy_per_byte_j: f64,
+    /// Bytes of digitized partial sums produced per crossbar per token.
+    pub bytes_per_xbar: usize,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        Self {
+            // 46 ns per crossbar reproduces comm = 9.4 ms/token for
+            // OPT-6.7B (204k crossbars) and 0.50 ms for GPT2-350M.
+            per_xbar_collect_s: 46e-9,
+            energy_per_byte_j: 0.04e-12,
+            bytes_per_xbar: 128,
+        }
+    }
+}
+
+/// PIM tile input/output buffer model (paper Fig. 3c). Calibrated to the
+/// paper's buffer fractions (14.7% GPT2-350M, 3.5% OPT-6.7B @ l=128).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferConfig {
+    /// Fixed buffer fill+drain time per decoder layer per token, seconds.
+    /// Dominated by (de)serialization into tile-local SRAM at fixed port
+    /// width, roughly model-size independent per layer.
+    pub per_layer_s: f64,
+    /// Buffer access energy per byte, joules.
+    pub energy_per_byte_j: f64,
+}
+
+impl Default for BufferConfig {
+    fn default() -> Self {
+        Self {
+            per_layer_s: 28e-6,
+            energy_per_byte_j: 0.02e-12,
+        }
+    }
+}
+
+/// LPDDR memory channel (paper: data preloaded into LPDDR; KV cache and
+/// activations stream through it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LpddrConfig {
+    /// Sustained bandwidth, bytes/second (LPDDR4-3200 x32 class).
+    pub bandwidth_bytes_per_s: f64,
+    /// Access energy per byte, joules (edge LPDDR4 class).
+    pub energy_per_byte_j: f64,
+    /// Whether the TPU-LLM baseline must stream all weights from LPDDR
+    /// every token (true for models larger than SRAM).
+    pub charge_weight_streaming: bool,
+}
+
+impl Default for LpddrConfig {
+    fn default() -> Self {
+        Self {
+            bandwidth_bytes_per_s: 25.6e9,
+            energy_per_byte_j: 0.24e-12,
+            charge_weight_streaming: true,
+        }
+    }
+}
+
+/// Digital peripheral circuitry of the PIM part (decoders, mux trees,
+/// sequencers). The paper reports its latency share as < 0.01%.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeripheralConfig {
+    /// Fixed peripheral latency per decoder layer, seconds.
+    pub per_layer_s: f64,
+    /// Peripheral energy per layer, joules.
+    pub energy_per_layer_j: f64,
+}
+
+impl Default for PeripheralConfig {
+    fn default() -> Self {
+        Self {
+            per_layer_s: 1e-9,
+            energy_per_layer_j: 3.2e-6,
+        }
+    }
+}
+
+/// Complete architecture description used by the coordinator and all
+/// substrates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArchConfig {
+    pub tpu: TpuConfig,
+    pub pim: PimConfig,
+    pub noc: NocConfig,
+    pub buffer: BufferConfig,
+    pub lpddr: LpddrConfig,
+    pub peripheral: PeripheralConfig,
+}
+
+impl ArchConfig {
+    /// The paper's evaluated configuration (45 nm, 32x32 array @100 MHz,
+    /// 256x256 crossbars, 8-bit ADCs).
+    pub fn paper_45nm() -> Self {
+        Self::default()
+    }
+
+    /// Load a calibrated configuration from TOML. Starts from the paper
+    /// defaults and overrides any key present in the file, so calibration
+    /// TOMLs may be partial.
+    pub fn from_toml_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+            format!("reading arch config {}", path.as_ref().display())
+        })?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text (paper defaults + overrides).
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = toml::parse(text).context("parsing arch config TOML")?;
+        let mut c = Self::paper_45nm();
+        {
+            let t = &mut c.tpu;
+            ov_usize(&doc, "tpu", "rows", &mut t.rows)?;
+            ov_usize(&doc, "tpu", "cols", &mut t.cols)?;
+            ov_f64(&doc, "tpu", "freq_hz", &mut t.freq_hz)?;
+            ov_usize(&doc, "tpu", "sram_bytes", &mut t.sram_bytes)?;
+            ov_f64(&doc, "tpu", "mac_energy_j", &mut t.mac_energy_j)?;
+            ov_f64(&doc, "tpu", "static_power_w", &mut t.static_power_w)?;
+            ov_f64(&doc, "tpu", "sram_energy_per_byte_j", &mut t.sram_energy_per_byte_j)?;
+        }
+        {
+            let p = &mut c.pim;
+            ov_usize(&doc, "pim", "crossbar_dim", &mut p.crossbar_dim)?;
+            ov_usize(&doc, "pim", "devices_per_weight", &mut p.devices_per_weight)?;
+            ov_f64(&doc, "pim", "xbar_read_latency_s", &mut p.xbar_read_latency_s)?;
+            ov_usize(&doc, "pim", "input_bits", &mut p.input_bits)?;
+            ov_usize(&doc, "pim", "adc_bits", &mut p.adc_bits)?;
+            ov_f64(&doc, "pim", "adc_latency_s", &mut p.adc_latency_s)?;
+            ov_usize(&doc, "pim", "adc_share", &mut p.adc_share)?;
+            ov_f64(&doc, "pim", "adc_energy_j", &mut p.adc_energy_j)?;
+            ov_f64(&doc, "pim", "dac_energy_j", &mut p.dac_energy_j)?;
+            ov_f64(&doc, "pim", "xbar_mac_energy_j", &mut p.xbar_mac_energy_j)?;
+            ov_f64(&doc, "pim", "fixed_token_energy_j", &mut p.fixed_token_energy_j)?;
+            ov_usize(&doc, "pim", "pes_per_tile", &mut p.pes_per_tile)?;
+            ov_usize(&doc, "pim", "xbars_per_pe", &mut p.xbars_per_pe)?;
+            ov_f64(&doc, "pim", "write_energy_per_device_j", &mut p.write_energy_per_device_j)?;
+            ov_f64(&doc, "pim", "write_latency_per_row_s", &mut p.write_latency_per_row_s)?;
+            ov_f64(&doc, "pim", "endurance_cycles", &mut p.endurance_cycles)?;
+        }
+        {
+            let n = &mut c.noc;
+            ov_f64(&doc, "noc", "per_xbar_collect_s", &mut n.per_xbar_collect_s)?;
+            ov_f64(&doc, "noc", "energy_per_byte_j", &mut n.energy_per_byte_j)?;
+            ov_usize(&doc, "noc", "bytes_per_xbar", &mut n.bytes_per_xbar)?;
+        }
+        {
+            let b = &mut c.buffer;
+            ov_f64(&doc, "buffer", "per_layer_s", &mut b.per_layer_s)?;
+            ov_f64(&doc, "buffer", "energy_per_byte_j", &mut b.energy_per_byte_j)?;
+        }
+        {
+            let l = &mut c.lpddr;
+            ov_f64(&doc, "lpddr", "bandwidth_bytes_per_s", &mut l.bandwidth_bytes_per_s)?;
+            ov_f64(&doc, "lpddr", "energy_per_byte_j", &mut l.energy_per_byte_j)?;
+            ov_bool(&doc, "lpddr", "charge_weight_streaming", &mut l.charge_weight_streaming)?;
+        }
+        {
+            let p = &mut c.peripheral;
+            ov_f64(&doc, "peripheral", "per_layer_s", &mut p.per_layer_s)?;
+            ov_f64(&doc, "peripheral", "energy_per_layer_j", &mut p.energy_per_layer_j)?;
+        }
+        Ok(c)
+    }
+
+    /// Serialize (e.g. after calibration) to TOML.
+    pub fn to_toml_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let text = self.to_toml_string();
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path.as_ref(), text).with_context(|| {
+            format!("writing arch config {}", path.as_ref().display())
+        })?;
+        Ok(())
+    }
+
+    /// TOML text of the full configuration (deterministic key order).
+    pub fn to_toml_string(&self) -> String {
+        use toml::Value::{Bool, Num};
+        let mut d = toml::Doc::default();
+        let t = &self.tpu;
+        d.set("tpu", "rows", Num(t.rows as f64));
+        d.set("tpu", "cols", Num(t.cols as f64));
+        d.set("tpu", "freq_hz", Num(t.freq_hz));
+        d.set("tpu", "sram_bytes", Num(t.sram_bytes as f64));
+        d.set("tpu", "mac_energy_j", Num(t.mac_energy_j));
+        d.set("tpu", "static_power_w", Num(t.static_power_w));
+        d.set("tpu", "sram_energy_per_byte_j", Num(t.sram_energy_per_byte_j));
+        let p = &self.pim;
+        d.set("pim", "crossbar_dim", Num(p.crossbar_dim as f64));
+        d.set("pim", "devices_per_weight", Num(p.devices_per_weight as f64));
+        d.set("pim", "xbar_read_latency_s", Num(p.xbar_read_latency_s));
+        d.set("pim", "input_bits", Num(p.input_bits as f64));
+        d.set("pim", "adc_bits", Num(p.adc_bits as f64));
+        d.set("pim", "adc_latency_s", Num(p.adc_latency_s));
+        d.set("pim", "adc_share", Num(p.adc_share as f64));
+        d.set("pim", "adc_energy_j", Num(p.adc_energy_j));
+        d.set("pim", "dac_energy_j", Num(p.dac_energy_j));
+        d.set("pim", "xbar_mac_energy_j", Num(p.xbar_mac_energy_j));
+        d.set("pim", "fixed_token_energy_j", Num(p.fixed_token_energy_j));
+        d.set("pim", "pes_per_tile", Num(p.pes_per_tile as f64));
+        d.set("pim", "xbars_per_pe", Num(p.xbars_per_pe as f64));
+        d.set("pim", "write_energy_per_device_j", Num(p.write_energy_per_device_j));
+        d.set("pim", "write_latency_per_row_s", Num(p.write_latency_per_row_s));
+        d.set("pim", "endurance_cycles", Num(p.endurance_cycles));
+        let n = &self.noc;
+        d.set("noc", "per_xbar_collect_s", Num(n.per_xbar_collect_s));
+        d.set("noc", "energy_per_byte_j", Num(n.energy_per_byte_j));
+        d.set("noc", "bytes_per_xbar", Num(n.bytes_per_xbar as f64));
+        let b = &self.buffer;
+        d.set("buffer", "per_layer_s", Num(b.per_layer_s));
+        d.set("buffer", "energy_per_byte_j", Num(b.energy_per_byte_j));
+        let l = &self.lpddr;
+        d.set("lpddr", "bandwidth_bytes_per_s", Num(l.bandwidth_bytes_per_s));
+        d.set("lpddr", "energy_per_byte_j", Num(l.energy_per_byte_j));
+        d.set("lpddr", "charge_weight_streaming", Bool(l.charge_weight_streaming));
+        let pe = &self.peripheral;
+        d.set("peripheral", "per_layer_s", Num(pe.per_layer_s));
+        d.set("peripheral", "energy_per_layer_j", Num(pe.energy_per_layer_j));
+        d.to_string()
+    }
+
+    /// Effective weights stored per crossbar (differential pairs halve
+    /// the column count).
+    pub fn weights_per_crossbar(&self) -> usize {
+        self.pim.crossbar_dim * (self.pim.crossbar_dim / self.pim.devices_per_weight)
+    }
+
+    /// Clock period of the TPU, seconds.
+    pub fn tpu_cycle_s(&self) -> f64 {
+        1.0 / self.tpu.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_hardware() {
+        let c = ArchConfig::paper_45nm();
+        assert_eq!(c.tpu.rows, 32);
+        assert_eq!(c.tpu.cols, 32);
+        assert_eq!(c.tpu.freq_hz, 100e6);
+        assert_eq!(c.tpu.sram_bytes, 8 * 1024 * 1024);
+        assert_eq!(c.pim.crossbar_dim, 256);
+        assert_eq!(c.pim.adc_bits, 8);
+    }
+
+    #[test]
+    fn weights_per_crossbar_uses_differential_pairs() {
+        let c = ArchConfig::paper_45nm();
+        // 256 rows x 128 weight columns
+        assert_eq!(c.weights_per_crossbar(), 256 * 128);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = ArchConfig::paper_45nm();
+        let back = ArchConfig::from_toml_str(&c.to_toml_string()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn toml_file_roundtrip_and_partial_override() {
+        let c = ArchConfig::paper_45nm();
+        let path = std::env::temp_dir().join(format!(
+            "pimllm-arch-{}.toml",
+            std::process::id()
+        ));
+        c.to_toml_file(&path).unwrap();
+        let back = ArchConfig::from_toml_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(c, back);
+        // Partial file only overrides the named key.
+        let partial = ArchConfig::from_toml_str("[tpu]\nrows = 64\n").unwrap();
+        assert_eq!(partial.tpu.rows, 64);
+        assert_eq!(partial.tpu.cols, c.tpu.cols);
+        assert_eq!(partial.pim, c.pim);
+    }
+
+    #[test]
+    fn cycle_time_is_10ns_at_100mhz() {
+        let c = ArchConfig::paper_45nm();
+        assert!((c.tpu_cycle_s() - 10e-9).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,148 @@
+//! Latency breakdown in the categories of paper Fig. 6: systolic array,
+//! communication (NoC), buffers, crossbar, DAC, ADC, digital peripheral
+//! — plus the two categories the figure folds away (nonlinear units and
+//! exposed LPDDR time) which we keep explicit for honesty.
+
+
+/// Per-component latency of one decode step, seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// W8A8 MatMuls on the systolic array.
+    pub systolic_s: f64,
+    /// NoC collection/routing of PIM partial sums & activations.
+    pub communication_s: f64,
+    /// Tile input/output buffer fill/drain.
+    pub buffer_s: f64,
+    /// Analog crossbar read time.
+    pub xbar_s: f64,
+    /// Input driver (DAC) time.
+    pub dac_s: f64,
+    /// ADC conversion time not hidden behind the analog reads.
+    pub adc_s: f64,
+    /// Digital peripheral circuitry.
+    pub peripheral_s: f64,
+    /// Nonlinear functional units (softmax/norm/GELU).
+    pub nonlinear_s: f64,
+    /// LPDDR streaming time not hidden under compute.
+    pub lpddr_exposed_s: f64,
+}
+
+/// The same breakdown as fractions of the total (sums to 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fractions {
+    pub systolic: f64,
+    pub communication: f64,
+    pub buffer: f64,
+    pub xbar: f64,
+    pub dac: f64,
+    pub adc: f64,
+    pub peripheral: f64,
+    pub nonlinear: f64,
+    pub lpddr_exposed: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.systolic_s
+            + self.communication_s
+            + self.buffer_s
+            + self.xbar_s
+            + self.dac_s
+            + self.adc_s
+            + self.peripheral_s
+            + self.nonlinear_s
+            + self.lpddr_exposed_s
+    }
+
+    /// Combined PIM analog time (the "PIM" sliver in Fig. 6's zoom).
+    pub fn pim_analog_s(&self) -> f64 {
+        self.xbar_s + self.dac_s + self.adc_s
+    }
+
+    pub fn fractions(&self) -> Fractions {
+        let t = self.total_s().max(f64::MIN_POSITIVE);
+        Fractions {
+            systolic: self.systolic_s / t,
+            communication: self.communication_s / t,
+            buffer: self.buffer_s / t,
+            xbar: self.xbar_s / t,
+            dac: self.dac_s / t,
+            adc: self.adc_s / t,
+            peripheral: self.peripheral_s / t,
+            nonlinear: self.nonlinear_s / t,
+            lpddr_exposed: self.lpddr_exposed_s / t,
+        }
+    }
+
+    /// (label, seconds) pairs in Fig. 6's legend order.
+    pub fn items(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("systolic", self.systolic_s),
+            ("communication", self.communication_s),
+            ("buffer", self.buffer_s),
+            ("xbar", self.xbar_s),
+            ("dac", self.dac_s),
+            ("adc", self.adc_s),
+            ("peripheral", self.peripheral_s),
+            ("nonlinear", self.nonlinear_s),
+            ("lpddr_exposed", self.lpddr_exposed_s),
+        ]
+    }
+}
+
+impl Fractions {
+    pub fn as_vec(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("systolic", self.systolic),
+            ("communication", self.communication),
+            ("buffer", self.buffer),
+            ("xbar", self.xbar),
+            ("dac", self.dac),
+            ("adc", self.adc),
+            ("peripheral", self.peripheral),
+            ("nonlinear", self.nonlinear),
+            ("lpddr_exposed", self.lpddr_exposed),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let bd = LatencyBreakdown {
+            systolic_s: 1.0,
+            communication_s: 0.5,
+            buffer_s: 0.25,
+            xbar_s: 0.1,
+            dac_s: 0.05,
+            adc_s: 0.05,
+            peripheral_s: 0.02,
+            nonlinear_s: 0.02,
+            lpddr_exposed_s: 0.01,
+        };
+        let sum: f64 = bd.fractions().as_vec().iter().map(|(_, v)| v).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_is_item_sum() {
+        let bd = LatencyBreakdown {
+            systolic_s: 2.0,
+            buffer_s: 1.0,
+            ..Default::default()
+        };
+        let item_sum: f64 = bd.items().iter().map(|(_, v)| v).sum();
+        assert!((bd.total_s() - item_sum).abs() < 1e-12);
+        assert!((bd.total_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_breakdown_fractions_finite() {
+        let bd = LatencyBreakdown::default();
+        let f = bd.fractions();
+        assert!(f.systolic.is_finite());
+    }
+}

@@ -1,0 +1,336 @@
+//! The PIM-LLM coordinator — the paper's system contribution.
+//!
+//! Routes every MatMul of a decode step by precision: **W1A8 projections
+//! go to the analog PIM banks** (weight-stationary, programmed once),
+//! **W8A8 attention goes to the digital systolic array**; orchestrates
+//! the per-layer pipeline (buffers, NoC transfers, nonlinear units) and
+//! produces the per-component latency breakdown of paper Fig. 6 and the
+//! energy ledger behind Figs. 7/8.
+//!
+//! The **TPU-LLM baseline** (the paper's comparison point throughout
+//! §IV) runs the identical op list entirely on the systolic array, with
+//! weights streamed from LPDDR each token.
+//!
+//! Submodules:
+//! * [`breakdown`]  — Fig. 6 latency categories and percentage math.
+//! * [`token_loop`] — autoregressive generation latency (context grows
+//!   per position) and request-level accounting.
+
+pub mod breakdown;
+pub mod token_loop;
+
+pub use breakdown::LatencyBreakdown;
+
+use crate::config::ArchConfig;
+use crate::energy::{EnergyLedger, Metrics};
+use crate::memory;
+use crate::models::LlmConfig;
+use crate::nonlinear;
+use crate::pim::mapping;
+use crate::systolic::{self, Dataflow};
+use crate::workload::{self, MatMulOp, Precision};
+
+/// Which architecture to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// The proposed hybrid: PIM projections + systolic attention.
+    PimLlm,
+    /// Baseline LLM-specific TPU: everything on the systolic array.
+    TpuLlm,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::PimLlm => "PIM-LLM",
+            Arch::TpuLlm => "TPU-LLM",
+        }
+    }
+}
+
+/// Complete report for one decode step (one generated token).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepReport {
+    pub arch: Arch,
+    pub model: String,
+    pub context: usize,
+    pub breakdown: LatencyBreakdown,
+    pub energy: EnergyLedger,
+    pub stats: workload::WorkloadStats,
+}
+
+impl StepReport {
+    pub fn latency_s(&self) -> f64 {
+        self.breakdown.total_s()
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        Metrics {
+            token_latency_s: self.latency_s(),
+            token_energy_j: self.energy.total_j(),
+            macs_per_token: self.stats.total_macs,
+        }
+    }
+}
+
+/// Simulate one decode step on the chosen architecture.
+pub fn simulate(arch_cfg: &ArchConfig, model: &LlmConfig, l: usize, arch: Arch) -> StepReport {
+    match arch {
+        Arch::PimLlm => simulate_hybrid(arch_cfg, model, l),
+        Arch::TpuLlm => simulate_tpu_baseline(arch_cfg, model, l),
+    }
+}
+
+/// Attention ops of the step executed on the systolic array (shared by
+/// both architectures). Returns (cycles, macs, sram bytes).
+fn attention_on_systolic(arch: &ArchConfig, ops: &[MatMulOp]) -> (u64, u64, u64) {
+    let mut cycles = 0u64;
+    let mut macs = 0u64;
+    let mut sram = 0u64;
+    for op in ops.iter().filter(|o| o.precision == Precision::W8A8) {
+        let run = systolic::run_op(&arch.tpu, op, Dataflow::OutputStationary);
+        cycles += run.cycles;
+        macs += run.macs;
+        sram += run.sram_read_bytes + run.sram_write_bytes;
+    }
+    (cycles, macs, sram)
+}
+
+/// The hybrid PIM-LLM step.
+///
+/// Dependency structure per decoder block: QKV projections (PIM, the
+/// three fire in parallel on disjoint banks) -> attention (systolic) ->
+/// W_X (PIM) -> FF in -> GELU -> FF out (PIM). Projection latency is one
+/// crossbar MVM per *stage* (all crossbars of a matrix fire together);
+/// partial-sum collection rides the NoC and is the communication term.
+pub fn simulate_hybrid(arch: &ArchConfig, model: &LlmConfig, l: usize) -> StepReport {
+    let ops = workload::decode_ops(model, l);
+    let stats = workload::stats(&ops);
+    let mut bd = LatencyBreakdown::default();
+    let mut en = EnergyLedger::default();
+
+    // --- attention on the dedicated systolic array --------------------
+    let (att_cycles, att_macs, att_sram) = attention_on_systolic(arch, &ops);
+    bd.systolic_s = att_cycles as f64 * arch.tpu_cycle_s();
+    en.systolic_j =
+        att_macs as f64 * arch.tpu.mac_energy_j + memory::sram_energy(&arch.tpu, att_sram);
+
+    // --- projections on PIM -------------------------------------------
+    // Latency: per layer the dependency chain is 4 PIM stages
+    // (QKV in parallel on disjoint banks, then W_X, FF-in, FF-out); all
+    // crossbars of one stage fire simultaneously, so a stage costs one
+    // crossbar MVM. Itemize analog time as DAC setup + the slower of
+    // (analog read stream | ADC conversion stream).
+    let geom = crate::pim::crossbar::XbarGeometry::from_config(&arch.pim);
+    let full = crate::pim::crossbar::run_mvm(&arch.pim, geom.rows, geom.weight_cols);
+    let stages = 4.0 * model.n_layers as f64;
+    bd.dac_s = stages * full.dac_s;
+    if full.xbar_s >= full.adc_s {
+        bd.xbar_s = stages * full.xbar_s;
+        bd.adc_s = 0.0; // fully pipelined behind the analog reads
+    } else {
+        bd.xbar_s = 0.0;
+        bd.adc_s = stages * full.adc_s;
+    }
+
+    // Energy + crossbar census over all projection ops.
+    let full_cap = geom.weights() as f64;
+    let mut total_crossbars = 0u64;
+    for op in ops.iter().filter(|o| o.precision == Precision::W1A8) {
+        let m = mapping::OpMapping::for_op(arch, op);
+        total_crossbars += m.crossbars();
+        let eff = (op.m as u64 * op.k as u64) as f64 / full_cap;
+        en.xbar_j += full.xbar_energy_j * eff;
+        en.dac_j += full.dac_energy_j * eff;
+        en.adc_j += full.adc_energy_j * eff;
+    }
+    en.pim_fixed_j = arch.pim.fixed_token_energy_j;
+
+    // --- communication: NoC collection of digitized partial sums ------
+    bd.communication_s = total_crossbars as f64 * arch.noc.per_xbar_collect_s;
+    let noc_bytes = total_crossbars * arch.noc.bytes_per_xbar as u64;
+    en.noc_j = noc_bytes as f64 * arch.noc.energy_per_byte_j;
+
+    // --- buffers -------------------------------------------------------
+    bd.buffer_s = model.n_layers as f64 * arch.buffer.per_layer_s;
+    // Activations in/out of tile buffers: ~4 d-vectors + 2 dff-vectors
+    // per layer at int8.
+    let buf_bytes = model.n_layers as u64 * (4 * model.d as u64 + 2 * model.d_ff as u64);
+    en.buffer_j = buf_bytes as f64 * arch.buffer.energy_per_byte_j;
+
+    // --- digital peripheral (paper: < 0.01%) ---------------------------
+    bd.peripheral_s = model.n_layers as f64 * arch.peripheral.per_layer_s;
+    en.controller_j = model.n_layers as f64 * arch.peripheral.energy_per_layer_j;
+
+    // --- nonlinear functional units ------------------------------------
+    let nl = nonlinear::decode_step_total(arch, model, l);
+    bd.nonlinear_s = nl.latency_s;
+    en.nonlinear_j = nl.energy_j;
+
+    // --- KV-cache traffic on LPDDR (K and V read once per token; the
+    // new token's K/V written back) -------------------------------------
+    let kv = memory::lpddr_transfer(&arch.lpddr, model.kv_bytes(l));
+    // Streaming overlaps attention compute (double-buffered weight
+    // memory); only exposed if bandwidth-bound.
+    bd.lpddr_exposed_s = (kv.latency_s - bd.systolic_s).max(0.0);
+    en.lpddr_j = kv.energy_j;
+
+    // --- statics --------------------------------------------------------
+    en.tpu_static_j = arch.tpu.static_power_w * bd.total_s();
+
+    StepReport {
+        arch: Arch::PimLlm,
+        model: model.name.clone(),
+        context: l,
+        breakdown: bd,
+        energy: en,
+        stats,
+    }
+}
+
+/// The TPU-LLM baseline step: every op on the systolic array (OS
+/// dataflow), weights streamed from LPDDR each token (they cannot fit in
+/// the 8 MB SRAM for any Table II model).
+pub fn simulate_tpu_baseline(arch: &ArchConfig, model: &LlmConfig, l: usize) -> StepReport {
+    let ops = workload::decode_ops(model, l);
+    let stats = workload::stats(&ops);
+    let mut bd = LatencyBreakdown::default();
+    let mut en = EnergyLedger::default();
+
+    let mut cycles = 0u64;
+    let mut sram = 0u64;
+    for op in &ops {
+        let run = systolic::run_op(&arch.tpu, op, Dataflow::OutputStationary);
+        cycles += run.cycles;
+        sram += run.sram_read_bytes + run.sram_write_bytes;
+    }
+    bd.systolic_s = cycles as f64 * arch.tpu_cycle_s();
+    en.systolic_j =
+        stats.total_macs as f64 * arch.tpu.mac_energy_j + memory::sram_energy(&arch.tpu, sram);
+
+    // Weight + KV streaming from LPDDR, overlapped with compute.
+    let weight_bytes = if arch.lpddr.charge_weight_streaming
+        && !memory::weights_fit_in_sram(&arch.tpu, model.weight_bytes_w8())
+    {
+        model.weight_bytes_w8()
+    } else {
+        0
+    };
+    let stream = memory::lpddr_transfer(&arch.lpddr, weight_bytes + model.kv_bytes(l));
+    bd.lpddr_exposed_s = (stream.latency_s - bd.systolic_s).max(0.0);
+    en.lpddr_j = stream.energy_j;
+
+    let nl = nonlinear::decode_step_total(arch, model, l);
+    bd.nonlinear_s = nl.latency_s;
+    en.nonlinear_j = nl.energy_j;
+
+    // Main controller / dataflow generator sequencing, same per-layer
+    // cost as the hybrid (it schedules the same decoder structure).
+    en.controller_j = model.n_layers as f64 * arch.peripheral.energy_per_layer_j;
+
+    en.tpu_static_j = arch.tpu.static_power_w * bd.total_s();
+
+    StepReport {
+        arch: Arch::TpuLlm,
+        model: model.name.clone(),
+        context: l,
+        breakdown: bd,
+        energy: en,
+        stats,
+    }
+}
+
+/// Speedup of PIM-LLM over TPU-LLM at one evaluation point (Fig. 5
+/// annotation values).
+pub fn speedup(arch_cfg: &ArchConfig, model: &LlmConfig, l: usize) -> f64 {
+    let p = simulate_hybrid(arch_cfg, model, l);
+    let t = simulate_tpu_baseline(arch_cfg, model, l);
+    t.latency_s() / p.latency_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_45nm()
+    }
+
+    /// Fig. 5 headline: GPT2-355M @128 ~ 11.6x, OPT-6.7B @128 ~ 79.2x.
+    #[test]
+    fn fig5_speedups_short_context() {
+        let a = arch();
+        let s_gpt = speedup(&a, &by_name("GPT2-355M").unwrap(), 128);
+        assert!((s_gpt - 11.6).abs() / 11.6 < 0.15, "GPT2-355M: {s_gpt}");
+        let s_opt = speedup(&a, &by_name("OPT-6.7B").unwrap(), 128);
+        assert!((s_opt - 79.2).abs() / 79.2 < 0.15, "OPT-6.7B: {s_opt}");
+    }
+
+    /// Fig. 5: GPT2-355M @4096 ~ 1.5x, OPT-6.7B @4096 ~ 5.71x.
+    #[test]
+    fn fig5_speedups_long_context() {
+        let a = arch();
+        let s_gpt = speedup(&a, &by_name("GPT2-355M").unwrap(), 4096);
+        assert!((s_gpt - 1.5).abs() / 1.5 < 0.15, "GPT2-355M: {s_gpt}");
+        let s_opt = speedup(&a, &by_name("OPT-6.7B").unwrap(), 4096);
+        assert!((s_opt - 5.71).abs() / 5.71 < 0.15, "OPT-6.7B: {s_opt}");
+    }
+
+    /// Speedup decreases with context length (paper §IV-A).
+    #[test]
+    fn speedup_monotone_decreasing_in_context() {
+        let a = arch();
+        let m = by_name("OPT-2.7B").unwrap();
+        let mut prev = f64::INFINITY;
+        for l in crate::models::CONTEXT_LENGTHS {
+            let s = speedup(&a, &m, l);
+            assert!(s < prev, "l={l}: {s} !< {prev}");
+            assert!(s > 1.0, "PIM-LLM must win at every point");
+            prev = s;
+        }
+    }
+
+    /// Fig. 6: systolic dominates; at l=4096 it exceeds 97%.
+    #[test]
+    fn fig6_breakdown_shape() {
+        let a = arch();
+        let r128 = simulate_hybrid(&a, &by_name("OPT-6.7B").unwrap(), 128);
+        let f = r128.breakdown.fractions();
+        assert!(f.systolic > 0.5 && f.systolic < 0.75, "{f:?}");
+        assert!(f.communication > 0.2, "{f:?}");
+        let r4096 = simulate_hybrid(&a, &by_name("OPT-6.7B").unwrap(), 4096);
+        assert!(r4096.breakdown.fractions().systolic > 0.9);
+    }
+
+    /// Energy ledger is positive and itemization sums to the total.
+    #[test]
+    fn energy_itemization_consistent() {
+        let a = arch();
+        for arch_kind in [Arch::PimLlm, Arch::TpuLlm] {
+            let r = simulate(&a, &by_name("OPT-1.3B").unwrap(), 512, arch_kind);
+            let sum: f64 = r.energy.items().iter().map(|(_, v)| v).sum();
+            assert!((sum - r.energy.total_j()).abs() < 1e-12 * sum.max(1.0));
+            assert!(r.energy.total_j() > 0.0);
+        }
+    }
+
+    /// Larger models -> larger speedups at fixed context (paper §IV-A).
+    #[test]
+    fn speedup_grows_with_model_size() {
+        let a = arch();
+        let small = speedup(&a, &by_name("GPT2-355M").unwrap(), 128);
+        let big = speedup(&a, &by_name("OPT-6.7B").unwrap(), 128);
+        assert!(big > small);
+    }
+
+    /// The W8A8/W1A8 partition is exhaustive and exclusive.
+    #[test]
+    fn partition_covers_all_macs() {
+        let a = arch();
+        let m = by_name("LLaMA-7B").unwrap();
+        let r = simulate_hybrid(&a, &m, 1024);
+        assert_eq!(r.stats.w1a8_macs + r.stats.w8a8_macs, r.stats.total_macs);
+        assert_eq!(r.stats.w1a8_macs, m.projection_macs());
+    }
+}

@@ -1,0 +1,111 @@
+//! Autoregressive token-loop accounting: a generation's latency/energy
+//! integrates the per-step cost as the context grows one token at a
+//! time (the per-figure sweeps evaluate fixed l; real requests do not).
+
+use super::{simulate, Arch, StepReport};
+use crate::config::ArchConfig;
+use crate::energy::EnergyLedger;
+use crate::models::LlmConfig;
+
+/// Aggregate cost of generating `n_new` tokens starting from a prompt of
+/// `prompt_len` tokens (prefill is modeled as sequential decode steps —
+/// the paper's architecture processes one token per iteration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerationReport {
+    pub arch: Arch,
+    pub model: String,
+    pub prompt_len: usize,
+    pub n_new: usize,
+    pub total_latency_s: f64,
+    pub total_energy: EnergyLedger,
+    /// Latency of each generated token (position-dependent).
+    pub per_token_latency_s: Vec<f64>,
+}
+
+impl GenerationReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        (self.prompt_len + self.n_new) as f64 / self.total_latency_s
+    }
+
+    /// Decode-only throughput (excludes prompt ingestion), the number
+    /// comparable to Fig. 5's fixed-l points.
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        let decode_s: f64 = self.per_token_latency_s[self.prompt_len..].iter().sum();
+        self.n_new as f64 / decode_s
+    }
+}
+
+/// Simulate a full generation. Context length for the step at position
+/// `p` (0-based) is `p + 1` (the KV cache holds p+1 entries after the
+/// update), so step cost grows as generation proceeds.
+pub fn generate(
+    arch_cfg: &ArchConfig,
+    model: &LlmConfig,
+    arch: Arch,
+    prompt_len: usize,
+    n_new: usize,
+) -> GenerationReport {
+    assert!(prompt_len > 0, "empty prompt");
+    let mut total_latency = 0.0;
+    let mut energy = EnergyLedger::default();
+    let mut per_token = Vec::with_capacity(prompt_len + n_new);
+    for p in 0..(prompt_len + n_new) {
+        let step: StepReport = simulate(arch_cfg, model, p + 1, arch);
+        total_latency += step.latency_s();
+        energy += step.energy;
+        per_token.push(step.latency_s());
+    }
+    GenerationReport {
+        arch,
+        model: model.name.clone(),
+        prompt_len,
+        n_new,
+        total_latency_s: total_latency,
+        total_energy: energy,
+        per_token_latency_s: per_token,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    #[test]
+    fn per_token_latency_grows_with_position() {
+        let a = ArchConfig::paper_45nm();
+        let m = by_name("GPT2-355M").unwrap();
+        let g = generate(&a, &m, Arch::PimLlm, 4, 16);
+        assert_eq!(g.per_token_latency_s.len(), 20);
+        // Later tokens attend over longer context.
+        assert!(g.per_token_latency_s[19] > g.per_token_latency_s[0]);
+    }
+
+    #[test]
+    fn totals_are_sums() {
+        let a = ArchConfig::paper_45nm();
+        let m = by_name("GPT2-355M").unwrap();
+        let g = generate(&a, &m, Arch::TpuLlm, 2, 6);
+        let s: f64 = g.per_token_latency_s.iter().sum();
+        assert!((g.total_latency_s - s).abs() < 1e-12);
+        assert!(g.tokens_per_s() > 0.0);
+        assert!(g.decode_tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn hybrid_faster_than_baseline_end_to_end() {
+        let a = ArchConfig::paper_45nm();
+        let m = by_name("OPT-1.3B").unwrap();
+        let p = generate(&a, &m, Arch::PimLlm, 8, 8);
+        let t = generate(&a, &m, Arch::TpuLlm, 8, 8);
+        assert!(p.total_latency_s < t.total_latency_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_panics() {
+        let a = ArchConfig::paper_45nm();
+        let m = by_name("GPT2-355M").unwrap();
+        generate(&a, &m, Arch::PimLlm, 0, 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Per-component energy accounting + the paper's derived efficiency
+//! metrics: tokens/joule (Fig. 7) and Words/Battery-Life (Fig. 8: a 5 Wh
+//! = 18,000 J edge battery at 1.5 tokens per word).
+
+use std::ops::{Add, AddAssign};
+
+/// Paper §IV-D battery capacity: 5 Wh.
+pub const BATTERY_JOULES: f64 = 18_000.0;
+/// Paper §IV-D tokenizer ratio: 1.5 tokens per word.
+pub const TOKENS_PER_WORD: f64 = 1.5;
+
+/// Energy ledger, itemized by architecture component (joules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyLedger {
+    /// Systolic-array MACs + its SRAM traffic.
+    pub systolic_j: f64,
+    /// TPU static/leakage over the step's wall time.
+    pub tpu_static_j: f64,
+    /// Crossbar analog reads.
+    pub xbar_j: f64,
+    /// Input drivers (DAC).
+    pub dac_j: f64,
+    /// ADC conversions.
+    pub adc_j: f64,
+    /// PIM fixed controller/peripheral energy.
+    pub pim_fixed_j: f64,
+    /// NoC traffic.
+    pub noc_j: f64,
+    /// Tile input/output buffers.
+    pub buffer_j: f64,
+    /// LPDDR traffic (weights for the baseline, KV for both).
+    pub lpddr_j: f64,
+    /// Nonlinear functional units.
+    pub nonlinear_j: f64,
+    /// Main controller + dataflow generator / scheduler sequencing (per
+    /// decoder layer, both architectures).
+    pub controller_j: f64,
+}
+
+impl EnergyLedger {
+    pub fn total_j(&self) -> f64 {
+        self.systolic_j
+            + self.tpu_static_j
+            + self.xbar_j
+            + self.dac_j
+            + self.adc_j
+            + self.pim_fixed_j
+            + self.noc_j
+            + self.buffer_j
+            + self.lpddr_j
+            + self.nonlinear_j
+            + self.controller_j
+    }
+
+    /// (label, joules) pairs for reporting, in a stable order.
+    pub fn items(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("systolic", self.systolic_j),
+            ("tpu_static", self.tpu_static_j),
+            ("xbar", self.xbar_j),
+            ("dac", self.dac_j),
+            ("adc", self.adc_j),
+            ("pim_fixed", self.pim_fixed_j),
+            ("noc", self.noc_j),
+            ("buffer", self.buffer_j),
+            ("lpddr", self.lpddr_j),
+            ("nonlinear", self.nonlinear_j),
+            ("controller", self.controller_j),
+        ]
+    }
+}
+
+impl Add for EnergyLedger {
+    type Output = EnergyLedger;
+    fn add(self, o: EnergyLedger) -> EnergyLedger {
+        EnergyLedger {
+            systolic_j: self.systolic_j + o.systolic_j,
+            tpu_static_j: self.tpu_static_j + o.tpu_static_j,
+            xbar_j: self.xbar_j + o.xbar_j,
+            dac_j: self.dac_j + o.dac_j,
+            adc_j: self.adc_j + o.adc_j,
+            pim_fixed_j: self.pim_fixed_j + o.pim_fixed_j,
+            noc_j: self.noc_j + o.noc_j,
+            buffer_j: self.buffer_j + o.buffer_j,
+            lpddr_j: self.lpddr_j + o.lpddr_j,
+            nonlinear_j: self.nonlinear_j + o.nonlinear_j,
+            controller_j: self.controller_j + o.controller_j,
+        }
+    }
+}
+
+impl AddAssign for EnergyLedger {
+    fn add_assign(&mut self, o: EnergyLedger) {
+        *self = *self + o;
+    }
+}
+
+/// Throughput/efficiency metrics for one (model, context, architecture)
+/// point — the quantities in Figs. 5, 7, 8 and Table III.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    pub token_latency_s: f64,
+    pub token_energy_j: f64,
+    pub macs_per_token: u64,
+}
+
+impl Metrics {
+    pub fn tokens_per_s(&self) -> f64 {
+        1.0 / self.token_latency_s
+    }
+
+    pub fn tokens_per_joule(&self) -> f64 {
+        1.0 / self.token_energy_j
+    }
+
+    /// Words generated on one 5 Wh battery (Fig. 8).
+    pub fn words_per_battery(&self) -> f64 {
+        BATTERY_JOULES * self.tokens_per_joule() / TOKENS_PER_WORD
+    }
+
+    /// Giga-ops per second. The paper counts one MAC as one op (verified
+    /// against Table III: OPT-6.7B @ l=4096 gives 17.6 GOPS only under
+    /// this convention).
+    pub fn gops(&self) -> f64 {
+        self.macs_per_token as f64 / self.token_latency_s / 1e9
+    }
+
+    /// GOPS per watt = (MACs/token) / (J/token) / 1e9.
+    pub fn gops_per_w(&self) -> f64 {
+        self.macs_per_token as f64 / self.token_energy_j / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Metrics {
+        Metrics {
+            token_latency_s: 0.025,
+            token_energy_j: 0.0075,
+            macs_per_token: 6_470_000_000,
+        }
+    }
+
+    #[test]
+    fn tokens_per_s_inverse_of_latency() {
+        assert!((m().tokens_per_s() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn words_per_battery_formula() {
+        // 18000 J * (1/0.0075 tok/J) / 1.5 tok/word = 1.6M words.
+        assert!((m().words_per_battery() - 1_600_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn gops_counts_macs_as_ops() {
+        let g = m().gops();
+        assert!((g - 6.47e9 / 0.025 / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_total_is_sum_of_items() {
+        let mut l = EnergyLedger::default();
+        l.systolic_j = 1.0;
+        l.adc_j = 2.0;
+        l.lpddr_j = 0.5;
+        let items_sum: f64 = l.items().iter().map(|(_, v)| v).sum();
+        assert!((l.total_j() - items_sum).abs() < 1e-12);
+        assert!((l.total_j() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_add_componentwise() {
+        let a = EnergyLedger {
+            systolic_j: 1.0,
+            ..Default::default()
+        };
+        let b = EnergyLedger {
+            systolic_j: 2.0,
+            noc_j: 3.0,
+            ..Default::default()
+        };
+        let c = a + b;
+        assert_eq!(c.systolic_j, 3.0);
+        assert_eq!(c.noc_j, 3.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! # PIM-LLM — hybrid analog-PIM + systolic-array accelerator for 1-bit LLMs
+//!
+//! Full-system reproduction of *PIM-LLM: A High-Throughput Hybrid PIM
+//! Architecture for 1-bit LLMs* (cs.AR 2025).
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! depends on:
+//!
+//! * [`config`]     — architecture + calibration parameters (45 nm-class).
+//! * [`models`]     — the LLM zoo of paper Table II (+ GPT2-S/M for Table III).
+//! * [`workload`]   — per-token MatMul enumeration (paper Table I), op
+//!   counting (Fig. 1b) and KV-cache geometry.
+//! * [`systolic`]   — SCALE-Sim-equivalent systolic-array simulator:
+//!   analytical OS/WS/IS dataflow models cross-validated by a
+//!   cycle-accurate wavefront stepper (paper Fig. 4, the TPU side).
+//! * [`pim`]        — MNSIM-equivalent behavioural model of the analog PIM:
+//!   crossbars, DAC/ADC, PE/tile/bank hierarchy, NoC, buffers.
+//! * [`memory`]     — LPDDR + SRAM models.
+//! * [`energy`]     — per-component energy ledger, tokens/J, words/battery.
+//! * [`nonlinear`]  — softmax/LayerNorm/GELU functional-unit latency models
+//!   (shown negligible, as the paper argues).
+//! * [`coordinator`]— the paper's contribution: the hybrid scheduler that
+//!   puts W1A8 projections on PIM and W8A8 attention on the systolic
+//!   array, plus the TPU-LLM baseline scheduler.
+//! * [`analysis`]   — figure/table generators (Fig. 1b, 4–8, Table III)
+//!   with paper-reference values for shape comparison.
+//! * [`runtime`]    — PJRT (xla crate) loader/executor for the AOT-lowered
+//!   1-bit decoder; the functional numerics path.
+//! * [`serving`]    — threaded request queue + batcher for the edge-serving
+//!   example.
+//!
+//! Python/JAX/Pallas exists only at build time (`make artifacts`); the
+//! binary is self-contained afterwards.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod memory;
+pub mod models;
+pub mod nonlinear;
+pub mod pim;
+pub mod runtime;
+pub mod serving;
+pub mod systolic;
+pub mod util;
+pub mod workload;
+
+pub use config::ArchConfig;
+pub use models::LlmConfig;

@@ -1,0 +1,237 @@
+//! `repro` — the PIM-LLM leader binary.
+//!
+//! Subcommands:
+//! * `simulate`  — one (model, context, arch) point: latency breakdown,
+//!   energy ledger, throughput/efficiency metrics.
+//! * `sweep`     — regenerate any paper figure/table (fig1b, fig4, fig5,
+//!   fig6, fig7, fig8, table3, or `all`).
+//! * `serve`     — end-to-end functional serving on the AOT-compiled
+//!   tiny 1-bit decoder via PJRT (requires `make artifacts`).
+//! * `validate`  — golden-token check: rust+PJRT must reproduce the JAX
+//!   generation exactly.
+//! * `generate`  — latency/energy of a full autoregressive generation on
+//!   the simulated hardware.
+
+use anyhow::{anyhow, Result};
+use pim_llm::analysis::{figures, report};
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, token_loop, Arch};
+use pim_llm::models;
+use pim_llm::runtime::{decoder, Engine};
+use pim_llm::serving::{LatencyStats, Policy, Request, Server};
+use pim_llm::util::cli::Args;
+use std::time::Instant;
+
+const USAGE: &str = "\
+repro — PIM-LLM: hybrid analog-PIM + systolic accelerator for 1-bit LLMs
+
+USAGE: repro [--config <arch.toml>] <subcommand> [flags]
+
+SUBCOMMANDS
+  simulate   --model <name> --context <l> --arch <pim-llm|tpu-llm>
+  sweep      --figure <fig1b|fig4|fig5|fig6|fig7|fig8|table3|all>
+  serve      --requests N --prompt-len P --new-tokens T --max-active A
+  validate
+  generate   --model <name> --prompt-len P --new-tokens T --arch <...>
+
+Models (paper Table II): GPT2-355M GPT2-774M GPT2-1.5B OPT-1.3B OPT-2.7B
+OPT-6.7B LLaMA-7B (+ OPT-350M, GPT2-Small, GPT2-Medium)";
+
+fn parse_arch(s: &str) -> Result<Arch> {
+    match s.to_lowercase().as_str() {
+        "pim-llm" | "pim" | "pimllm" => Ok(Arch::PimLlm),
+        "tpu-llm" | "tpu" | "tpullm" => Ok(Arch::TpuLlm),
+        other => Err(anyhow!("unknown arch '{other}' (pim-llm | tpu-llm)")),
+    }
+}
+
+fn load_arch(args: &Args) -> Result<ArchConfig> {
+    match args.get("config") {
+        Some(p) => ArchConfig::from_toml_file(p),
+        None => {
+            // Prefer the calibrated config if checked in.
+            let cal = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("configs/calibrated_45nm.toml");
+            if cal.exists() {
+                ArchConfig::from_toml_file(cal)
+            } else {
+                Ok(ArchConfig::paper_45nm())
+            }
+        }
+    }
+}
+
+fn lookup_model(name: &str) -> Result<models::LlmConfig> {
+    models::by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'\n\n{USAGE}"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let arch_cfg = load_arch(&args)?;
+
+    match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args, &arch_cfg),
+        Some("sweep") => cmd_sweep(&args, &arch_cfg),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(),
+        Some("generate") => cmd_generate(&args, &arch_cfg),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
+    let m = lookup_model(&args.str_or("model", "OPT-6.7B"))?;
+    let context = args.usize_or("context", 128)?;
+    let arch = parse_arch(&args.str_or("arch", "pim-llm"))?;
+    let r = coordinator::simulate(arch_cfg, &m, context, arch);
+    let met = r.metrics();
+    println!("{} — {} @ l={}", r.arch.name(), r.model, r.context);
+    println!("  token latency : {:.4} ms", 1e3 * r.latency_s());
+    println!("  tokens/s      : {:.2}", met.tokens_per_s());
+    println!("  energy/token  : {:.4} mJ", 1e3 * r.energy.total_j());
+    println!("  tokens/joule  : {:.2}", met.tokens_per_joule());
+    println!("  GOPS          : {:.2}", met.gops());
+    println!("  GOPS/W        : {:.2}", met.gops_per_w());
+    println!("  latency breakdown:");
+    for (k, v) in r.breakdown.items() {
+        if v > 0.0 {
+            println!(
+                "    {:<14} {:>10.4} ms ({:>6.2}%)",
+                k,
+                1e3 * v,
+                100.0 * v / r.latency_s()
+            );
+        }
+    }
+    println!("  energy breakdown:");
+    for (k, v) in r.energy.items() {
+        if v > 0.0 {
+            println!(
+                "    {:<14} {:>10.4} mJ ({:>6.2}%)",
+                k,
+                1e3 * v,
+                100.0 * v / r.energy.total_j()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
+    let figure = args.str_or("figure", "all");
+    let want = |f: &str| figure == "all" || figure == f;
+    let mut matched = false;
+    if want("fig1b") {
+        report::print_fig1b(&figures::fig1b(arch_cfg));
+        println!();
+        matched = true;
+    }
+    if want("fig4") {
+        report::print_fig4(&figures::fig4(arch_cfg));
+        println!();
+        matched = true;
+    }
+    if want("fig5") {
+        report::print_fig5(&figures::fig5(arch_cfg));
+        println!();
+        matched = true;
+    }
+    if want("fig6") {
+        report::print_fig6(&figures::fig6(arch_cfg));
+        println!();
+        matched = true;
+    }
+    if want("fig7") {
+        report::print_fig7(&figures::fig7(arch_cfg));
+        println!();
+        matched = true;
+    }
+    if want("fig8") {
+        report::print_fig8(&figures::fig8(arch_cfg));
+        println!();
+        matched = true;
+    }
+    if want("table3") {
+        report::print_table3(&figures::table3(arch_cfg));
+        matched = true;
+    }
+    if !matched {
+        return Err(anyhow!("unknown figure '{figure}'\n\n{USAGE}"));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.usize_or("requests", 16)?;
+    let prompt_len = args.usize_or("prompt-len", 8)?;
+    let new_tokens = args.usize_or("new-tokens", 16)?;
+    let max_active = args.usize_or("max-active", 4)?;
+
+    let engine = Engine::load_default()?;
+    println!(
+        "engine: platform={} model=tiny-1bit (d={}, {} layers)",
+        engine.platform(),
+        engine.artifacts.manifest.model.d,
+        engine.artifacts.manifest.model.n_layers
+    );
+    let reqs: Vec<Request> = (0..requests as u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|i| ((id as usize * 31 + i * 7) % 255 + 1) as i32)
+                .collect(),
+            n_new: new_tokens,
+        })
+        .collect();
+    let t0 = Instant::now();
+    let server = Server::new(&engine, Policy::RoundRobin { max_active });
+    let out = server.serve(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = LatencyStats::from_responses(&out, wall);
+    println!(
+        "served {} requests / {} tokens in {:.2}s",
+        stats.n, stats.total_tokens, wall
+    );
+    println!("  throughput   : {:.1} tok/s", stats.tokens_per_s);
+    println!("  mean latency : {:.3}s", stats.mean_service_s);
+    println!(
+        "  p50/p95/p99  : {:.3}/{:.3}/{:.3}s",
+        stats.p50_service_s, stats.p95_service_s, stats.p99_service_s
+    );
+    println!("  mean TTFT    : {:.3}s", stats.mean_ttft_s);
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    let engine = Engine::load_default()?;
+    let timing = decoder::validate_golden(&engine)?;
+    println!(
+        "golden OK: {} tokens reproduced exactly ({:.1} tok/s on {})",
+        timing.prompt_len + timing.new_tokens,
+        timing.tokens_per_s(),
+        engine.platform()
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
+    let m = lookup_model(&args.str_or("model", "OPT-6.7B"))?;
+    let prompt_len = args.usize_or("prompt-len", 32)?;
+    let new_tokens = args.usize_or("new-tokens", 96)?;
+    let arch = parse_arch(&args.str_or("arch", "pim-llm"))?;
+    let g = token_loop::generate(arch_cfg, &m, arch, prompt_len, new_tokens);
+    println!(
+        "{} — {}: {} prompt + {} new tokens",
+        g.arch.name(),
+        g.model,
+        g.prompt_len,
+        g.n_new
+    );
+    println!("  total latency : {:.3} s", g.total_latency_s);
+    println!("  decode tok/s  : {:.2}", g.decode_tokens_per_s());
+    println!("  total energy  : {:.4} J", g.total_energy.total_j());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Off-chip LPDDR and on-chip SRAM models.
+//!
+//! The paper preloads all data into LPDDR; the TPU's dataflow generator
+//! produces read traces that stream inputs/weights into the input/weight
+//! SRAMs, and the PIM controller moves activations between LPDDR and the
+//! PIM banks. We model both as bandwidth/energy resources.
+
+use crate::config::{LpddrConfig, TpuConfig};
+
+/// One memory transfer accounted against a channel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub bytes: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+/// Stream `bytes` over the LPDDR channel.
+pub fn lpddr_transfer(cfg: &LpddrConfig, bytes: u64) -> Transfer {
+    Transfer {
+        bytes,
+        latency_s: bytes as f64 / cfg.bandwidth_bytes_per_s,
+        energy_j: bytes as f64 * cfg.energy_per_byte_j,
+    }
+}
+
+/// SRAM access energy for `bytes` (reads + writes symmetric).
+pub fn sram_energy(cfg: &TpuConfig, bytes: u64) -> f64 {
+    bytes as f64 * cfg.sram_energy_per_byte_j
+}
+
+/// Does the working set of a model's weights fit in TPU SRAM? Decides
+/// whether the TPU-LLM baseline must re-stream weights per token.
+pub fn weights_fit_in_sram(cfg: &TpuConfig, weight_bytes: u64) -> bool {
+    weight_bytes <= cfg.sram_bytes as u64
+}
+
+/// Double-buffered streaming: compute and memory overlap; effective time
+/// is the max of the two plus one buffer fill ramp.
+pub fn overlapped_time_s(compute_s: f64, memory_s: f64, ramp_s: f64) -> f64 {
+    compute_s.max(memory_s) + ramp_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+
+    #[test]
+    fn lpddr_latency_linear() {
+        let cfg = ArchConfig::paper_45nm().lpddr;
+        let a = lpddr_transfer(&cfg, 1 << 20);
+        let b = lpddr_transfer(&cfg, 1 << 21);
+        assert!((b.latency_s - 2.0 * a.latency_s).abs() < 1e-12);
+        assert!((b.energy_j - 2.0 * a.energy_j).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tiny_model_fits_sram_large_does_not() {
+        let tpu = ArchConfig::paper_45nm().tpu;
+        assert!(weights_fit_in_sram(&tpu, 2 * 1024 * 1024));
+        // OPT-6.7B int8 weights are ~6.4 GB.
+        assert!(!weights_fit_in_sram(&tpu, 6_400_000_000));
+    }
+
+    #[test]
+    fn overlap_hides_shorter_stream() {
+        assert_eq!(overlapped_time_s(10.0, 3.0, 0.5), 10.5);
+        assert_eq!(overlapped_time_s(3.0, 10.0, 0.5), 10.5);
+    }
+}

@@ -1,0 +1,212 @@
+//! The LLM zoo: hyper-parameters of every model the paper evaluates
+//! (Table II) plus GPT2-Small/Medium used in the Table III comparison
+//! against HARDSEA and TransPIM.
+//!
+//! Note the paper's Table II convention: for the GPT2 family it sets
+//! `d_FF = d` (not the usual 4*d). We follow the table exactly — the
+//! Table III GOPS numbers only reproduce under this convention (verified
+//! in `analysis::table3`).
+
+
+/// Decoder-only LLM hyper-parameters (paper Table II row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlmConfig {
+    /// Human-readable name, e.g. "OPT-6.7B".
+    pub name: String,
+    /// Approximate parameter count (reported, used for labels only).
+    pub params: u64,
+    /// Embedding dimension d.
+    pub d: usize,
+    /// Attention heads h.
+    pub h: usize,
+    /// Feed-forward intermediate dimension d_FF.
+    pub d_ff: usize,
+    /// Decoder blocks N.
+    pub n_layers: usize,
+}
+
+impl LlmConfig {
+    pub fn new(
+        name: &str,
+        params: u64,
+        d: usize,
+        h: usize,
+        d_ff: usize,
+        n_layers: usize,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            params,
+            d,
+            h,
+            d_ff,
+            n_layers,
+        }
+    }
+
+    /// Head dimension d/h.
+    pub fn d_head(&self) -> usize {
+        self.d / self.h
+    }
+
+    /// Weight count of the projection layers (the part that lives in the
+    /// PIM crossbars): per layer W_Q, W_K, W_V, W_X (d x d each) plus the
+    /// two FF projections (d x d_FF and d_FF x d).
+    pub fn projection_weights(&self) -> u64 {
+        let per_layer = 4 * (self.d as u64) * (self.d as u64)
+            + 2 * (self.d as u64) * (self.d_ff as u64);
+        per_layer * self.n_layers as u64
+    }
+
+    /// MACs per generated token in projection layers (1 MVM per matrix).
+    pub fn projection_macs(&self) -> u64 {
+        self.projection_weights()
+    }
+
+    /// MACs per generated token in the attention heads at context length
+    /// `l`: per layer, per head, Score = Q.K^T is (l x d/h).(d/h x 1) and
+    /// V.Score is (d/h x l).(l x 1) — i.e. 2 * l * d/h MACs per head,
+    /// 2 * l * d per layer (paper Table I).
+    pub fn attention_macs(&self, l: usize) -> u64 {
+        2 * (l as u64) * (self.d as u64) * self.n_layers as u64
+    }
+
+    /// Total MACs per generated token.
+    pub fn total_macs(&self, l: usize) -> u64 {
+        self.projection_macs() + self.attention_macs(l)
+    }
+
+    /// Fraction of per-token MACs that are low-precision (W1A8) — the
+    /// quantity plotted in paper Fig. 1b.
+    pub fn low_precision_fraction(&self, l: usize) -> f64 {
+        self.projection_macs() as f64 / self.total_macs(l) as f64
+    }
+
+    /// KV-cache bytes read per token at context length `l` (both K and V,
+    /// int8 storage).
+    pub fn kv_bytes(&self, l: usize) -> u64 {
+        2 * (l as u64) * (self.d as u64) * self.n_layers as u64
+    }
+
+    /// Weight bytes streamed by the TPU-LLM baseline per token (int8).
+    pub fn weight_bytes_w8(&self) -> u64 {
+        self.projection_weights()
+    }
+}
+
+/// Paper Table II: the seven evaluated models.
+pub fn table2_models() -> Vec<LlmConfig> {
+    vec![
+        LlmConfig::new("GPT2-355M", 355_000_000, 1024, 16, 1024, 24),
+        LlmConfig::new("GPT2-774M", 774_000_000, 1280, 20, 1280, 36),
+        LlmConfig::new("GPT2-1.5B", 1_500_000_000, 1600, 25, 1600, 48),
+        LlmConfig::new("OPT-1.3B", 1_300_000_000, 2048, 32, 8192, 24),
+        LlmConfig::new("OPT-2.7B", 2_700_000_000, 2560, 32, 10240, 32),
+        LlmConfig::new("OPT-6.7B", 6_700_000_000, 4096, 32, 16384, 32),
+        LlmConfig::new("LLaMA-7B", 7_000_000_000, 4096, 32, 11008, 32),
+    ]
+}
+
+/// Extra models referenced by Fig. 1b (OPT-350M) and Table III
+/// (GPT2-Small/Medium; TransPIM and HARDSEA workloads). GPT2 family uses
+/// the paper's d_FF = d convention.
+pub fn extra_models() -> Vec<LlmConfig> {
+    vec![
+        LlmConfig::new("OPT-350M", 350_000_000, 1024, 16, 4096, 24),
+        LlmConfig::new("GPT2-Small", 124_000_000, 768, 12, 768, 12),
+        // "GPT2-Medium" in Table III is the same 355M model as Table II.
+        LlmConfig::new("GPT2-Medium", 355_000_000, 1024, 16, 1024, 24),
+    ]
+}
+
+/// Look up any known model by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<LlmConfig> {
+    let lname = name.to_lowercase();
+    table2_models()
+        .into_iter()
+        .chain(extra_models())
+        .find(|m| m.name.to_lowercase() == lname)
+}
+
+/// Context lengths swept in the paper's figures.
+pub const CONTEXT_LENGTHS: [usize; 6] = [128, 256, 512, 1024, 2048, 4096];
+
+/// The tiny functional model compiled by the AOT path (must match
+/// `python/compile/model.py::TINY`).
+pub fn tiny_functional() -> LlmConfig {
+    LlmConfig::new("tiny-1bit", 1_700_000, 256, 4, 1024, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_seven_models() {
+        let models = table2_models();
+        assert_eq!(models.len(), 7);
+        let opt67 = by_name("OPT-6.7B").unwrap();
+        assert_eq!(opt67.d, 4096);
+        assert_eq!(opt67.h, 32);
+        assert_eq!(opt67.d_ff, 16384);
+        assert_eq!(opt67.n_layers, 32);
+    }
+
+    #[test]
+    fn gpt2_uses_dff_equals_d() {
+        for name in ["GPT2-355M", "GPT2-774M", "GPT2-1.5B", "GPT2-Small"] {
+            let m = by_name(name).unwrap();
+            assert_eq!(m.d_ff, m.d, "{name}");
+        }
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in table2_models().iter().chain(extra_models().iter()) {
+            assert_eq!(m.d % m.h, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn projection_macs_match_hand_count() {
+        // OPT-6.7B: per layer 4*4096^2 + 2*4096*16384 = 201.3M; x32.
+        let m = by_name("OPT-6.7B").unwrap();
+        let per_layer = 4 * 4096u64 * 4096 + 2 * 4096 * 16384;
+        assert_eq!(m.projection_macs(), per_layer * 32);
+    }
+
+    #[test]
+    fn attention_macs_scale_linearly_in_l() {
+        let m = by_name("GPT2-355M").unwrap();
+        assert_eq!(m.attention_macs(256), 2 * m.attention_macs(128));
+    }
+
+    #[test]
+    fn fig1b_fraction_shape() {
+        // OPT-350M @ 4096 is the "evenly distributed" case (~60%);
+        // larger models at short context exceed 99%.
+        let m350 = by_name("OPT-350M").unwrap();
+        let f = m350.low_precision_fraction(4096);
+        assert!(f > 0.55 && f < 0.70, "got {f}");
+        let m67 = by_name("OPT-6.7B").unwrap();
+        assert!(m67.low_precision_fraction(128) > 0.99);
+    }
+
+    #[test]
+    fn fraction_monotonically_decreases_with_context() {
+        let m = by_name("OPT-1.3B").unwrap();
+        let mut prev = 1.0;
+        for l in CONTEXT_LENGTHS {
+            let f = m.low_precision_fraction(l);
+            assert!(f < prev);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive_and_total() {
+        assert!(by_name("opt-6.7b").is_some());
+        assert!(by_name("gpt2-small").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+}

@@ -1,0 +1,159 @@
+//! Memristive crossbar model (paper Fig. 3d).
+//!
+//! A crossbar of `dim x dim` RRAM devices stores ternary weights as
+//! differential conductance pairs (two devices per weight, so `dim x
+//! dim/2` weights). An MVM drives the int8 input vector bit-serially on
+//! the rows (`input_bits` pulses), the analog dot products develop on the
+//! column lines by Kirchhoff/Ohm, and shared 8-bit ADCs digitize the
+//! column outputs (`adc_share` columns multiplexed per ADC).
+//!
+//! Latency per crossbar MVM:
+//!   `input_bits * xbar_read_latency + ceil(cols/adc_share)... ` — the
+//!   ADC mux walks the weight columns once per input bit-slice group;
+//!   conversions pipeline behind the analog reads, so the slower of the
+//!   two streams dominates.
+//!
+//! Energy: device-pair reads per MAC, driver energy per input bit, and
+//! one ADC conversion per digitized column sample.
+
+use crate::config::PimConfig;
+
+/// Geometry of a single crossbar's weight capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XbarGeometry {
+    /// Input rows (one per activation element).
+    pub rows: usize,
+    /// Weight columns (device columns / devices_per_weight).
+    pub weight_cols: usize,
+}
+
+impl XbarGeometry {
+    pub fn from_config(pim: &PimConfig) -> Self {
+        Self {
+            rows: pim.crossbar_dim,
+            weight_cols: pim.crossbar_dim / pim.devices_per_weight,
+        }
+    }
+
+    /// Weights stored per crossbar.
+    pub fn weights(&self) -> usize {
+        self.rows * self.weight_cols
+    }
+}
+
+/// Latency/energy of one crossbar MVM (all rows x all weight columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrossbarRun {
+    /// Analog read + digitization latency, seconds.
+    pub latency_s: f64,
+    /// Portion of latency attributable to the analog crossbar reads.
+    pub xbar_s: f64,
+    /// Portion attributable to driver (DAC) setup.
+    pub dac_s: f64,
+    /// Portion attributable to ADC conversions.
+    pub adc_s: f64,
+    /// Crossbar device-read energy, joules.
+    pub xbar_energy_j: f64,
+    /// Driver energy, joules.
+    pub dac_energy_j: f64,
+    /// ADC energy, joules.
+    pub adc_energy_j: f64,
+    /// ADC conversions performed.
+    pub adc_conversions: u64,
+    /// Effective MACs performed.
+    pub macs: u64,
+}
+
+impl CrossbarRun {
+    pub fn total_energy_j(&self) -> f64 {
+        self.xbar_energy_j + self.dac_energy_j + self.adc_energy_j
+    }
+}
+
+/// Simulate one MVM on a single crossbar with `active_rows` driven input
+/// rows and `active_cols` weight columns in use (<= geometry).
+pub fn run_mvm(pim: &PimConfig, active_rows: usize, active_cols: usize) -> CrossbarRun {
+    let geom = XbarGeometry::from_config(pim);
+    let rows = active_rows.min(geom.rows);
+    let cols = active_cols.min(geom.weight_cols);
+    assert!(rows > 0 && cols > 0, "empty crossbar MVM");
+
+    // Bit-serial input streaming: one analog read per input bit plane.
+    let xbar_s = pim.input_bits as f64 * pim.xbar_read_latency_s;
+    // Drivers piggyback on the read pulses; modeled as one pulse setup.
+    let dac_s = pim.xbar_read_latency_s;
+    // Each bit plane's column outputs are digitized; `adc_share` columns
+    // share one ADC, so a plane needs ceil(cols/ (cols/adc_share ADCs))
+    // = adc_share sequential conversions, pipelined across planes.
+    let convs_per_plane = pim.adc_share as u64;
+    let adc_s = convs_per_plane as f64 * pim.adc_latency_s * pim.input_bits as f64;
+    // Analog reads and ADC conversion pipeline; slower stream dominates,
+    // the other hides underneath it.
+    let latency_s = dac_s + xbar_s.max(adc_s);
+
+    let macs = rows as u64 * cols as u64;
+    let adc_conversions = cols as u64 * pim.input_bits as u64;
+    CrossbarRun {
+        latency_s,
+        xbar_s,
+        dac_s,
+        adc_s: adc_s.min(xbar_s.max(adc_s)), // reported share
+        xbar_energy_j: macs as f64 * pim.xbar_mac_energy_j,
+        dac_energy_j: rows as f64 * pim.input_bits as f64 * pim.dac_energy_j,
+        adc_energy_j: adc_conversions as f64 * pim.adc_energy_j,
+        adc_conversions,
+        macs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pim() -> PimConfig {
+        PimConfig::default()
+    }
+
+    #[test]
+    fn geometry_differential_pairs() {
+        let g = XbarGeometry::from_config(&pim());
+        assert_eq!(g.rows, 256);
+        assert_eq!(g.weight_cols, 128);
+        assert_eq!(g.weights(), 32768);
+    }
+
+    #[test]
+    fn full_mvm_macs() {
+        let r = run_mvm(&pim(), 256, 128);
+        assert_eq!(r.macs, 256 * 128);
+        assert_eq!(r.adc_conversions, 128 * 8);
+    }
+
+    #[test]
+    fn partial_mvm_clamps() {
+        let r = run_mvm(&pim(), 1000, 1000);
+        assert_eq!(r.macs, 256 * 128);
+    }
+
+    #[test]
+    fn latency_is_sub_microsecond() {
+        // Paper: Xbar+DAC+ADC < 1% of latency; single MVM must be ~100ns.
+        let r = run_mvm(&pim(), 256, 128);
+        assert!(r.latency_s > 0.0 && r.latency_s < 1e-6, "{}", r.latency_s);
+    }
+
+    #[test]
+    fn energy_components_positive() {
+        let r = run_mvm(&pim(), 128, 64);
+        assert!(r.xbar_energy_j > 0.0);
+        assert!(r.dac_energy_j > 0.0);
+        assert!(r.adc_energy_j > 0.0);
+        assert!(r.total_energy_j() > r.adc_energy_j);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_mvm_panics() {
+        run_mvm(&pim(), 0, 4);
+    }
+}

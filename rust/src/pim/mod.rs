@@ -1,0 +1,24 @@
+//! MNSIM-equivalent behavioural model of the analog PIM part
+//! (paper §III-B, Fig. 3b-d): RRAM crossbar banks that execute the W1A8
+//! projection-layer MVMs of 1-bit LLMs.
+//!
+//! Hierarchy mirrors the paper: **bank -> tile -> PE -> crossbar**, with
+//! input/output buffers per tile, a NoC between tiles, and a PIM
+//! controller moving data between LPDDR and banks.
+//!
+//! * [`crossbar`] — mapping ternary weight matrices onto 256x256 device
+//!   arrays with differential pairs; per-MVM latency/energy from
+//!   bit-serial input streaming + shared 8-bit ADC digitization.
+//! * [`mapping`]  — how a model's projection layers tile across
+//!   crossbars/PEs/tiles/banks (weight-stationary placement, programmed
+//!   once at configuration time).
+//! * [`writes`]   — RRAM write cost + endurance model, used by the
+//!   attention-on-PIM ablation that justifies the hybrid split.
+
+pub mod crossbar;
+pub mod mapping;
+pub mod noc;
+pub mod writes;
+
+pub use crossbar::{CrossbarRun, XbarGeometry};
+pub use mapping::{ModelMapping, OpMapping};

@@ -1,0 +1,300 @@
+//! AOT artifact loading: `manifest.json` (model config + parameter
+//! layout), `weights.bin` (flat f32 LE), `golden.json` (reference
+//! generation the runtime must reproduce), `decode_step.hlo.txt`.
+//!
+//! The manifest is self-describing: argument order of the HLO entry is
+//! `params... , k_caches, v_caches, token_id, pos`, exactly as
+//! `python/compile/aot.py` lowered it. Parsed with the in-crate JSON
+//! parser (`util::json`).
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model hyper-parameters recorded by the AOT step (mirror of
+/// `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d: usize,
+    pub h: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_ctx: usize,
+    pub eps: f64,
+}
+
+impl ModelInfo {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab: v.get("vocab")?.as_usize()?,
+            d: v.get("d")?.as_usize()?,
+            h: v.get("h")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            max_ctx: v.get("max_ctx")?.as_usize()?,
+            eps: v.get("eps")?.as_f64()?,
+        })
+    }
+}
+
+/// One parameter's placement in weights.bin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+impl ParamEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            offset: v.get("offset")?.as_usize()?,
+            numel: v.get("numel")?.as_usize()?,
+        })
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub seed: u64,
+    pub entry: String,
+    pub arg_order: Vec<String>,
+    pub outputs: Vec<String>,
+    pub params: Vec<ParamEntry>,
+    pub total_floats: usize,
+}
+
+impl Manifest {
+    fn from_json(v: &Json) -> Result<Self> {
+        let strings = |key: &str| -> Result<Vec<String>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect()
+        };
+        Ok(Self {
+            model: ModelInfo::from_json(v.get("model")?)?,
+            seed: v.get("seed")?.as_i64()? as u64,
+            entry: v.get("entry")?.as_str()?.to_string(),
+            arg_order: strings("arg_order")?,
+            outputs: strings("outputs")?,
+            params: v
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(ParamEntry::from_json)
+                .collect::<Result<_>>()?,
+            total_floats: v.get("total_floats")?.as_usize()?,
+        })
+    }
+}
+
+/// Parsed golden.json.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub n_new: usize,
+    pub tokens: Vec<i32>,
+    pub first_logits_prefix: Vec<f32>,
+    pub first_logits_l2: f64,
+}
+
+impl Golden {
+    fn from_json(v: &Json) -> Result<Self> {
+        let i32s = |key: &str| -> Result<Vec<i32>> {
+            Ok(v.get(key)?
+                .as_i64_vec()?
+                .into_iter()
+                .map(|x| x as i32)
+                .collect())
+        };
+        Ok(Self {
+            prompt: i32s("prompt")?,
+            n_new: v.get("n_new")?.as_usize()?,
+            tokens: i32s("tokens")?,
+            first_logits_prefix: v
+                .get("first_logits_prefix")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            first_logits_l2: v.get("first_logits_l2")?.as_f64()?,
+        })
+    }
+}
+
+/// All artifacts of one compiled model variant.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub golden: Golden,
+    /// Flat little-endian f32 weights in manifest order.
+    pub weights: Vec<f32>,
+}
+
+impl Artifacts {
+    /// Load and validate a full artifact directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let manifest = Manifest::from_json(&json::parse(&manifest_text)?)
+            .context("parsing manifest.json")?;
+        let golden_text = std::fs::read_to_string(dir.join("golden.json"))
+            .context("reading golden.json")?;
+        let golden =
+            Golden::from_json(&json::parse(&golden_text)?).context("parsing golden.json")?;
+        let raw = std::fs::read(dir.join("weights.bin")).context("reading weights.bin")?;
+        if raw.len() != manifest.total_floats * 4 {
+            bail!(
+                "weights.bin is {} bytes, manifest expects {}",
+                raw.len(),
+                manifest.total_floats * 4
+            );
+        }
+        let weights: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let a = Self {
+            dir,
+            manifest,
+            golden,
+            weights,
+        };
+        a.validate()?;
+        Ok(a)
+    }
+
+    /// Internal consistency checks (offsets contiguous, arg order sane).
+    pub fn validate(&self) -> Result<()> {
+        let mut end = 0usize;
+        for p in &self.manifest.params {
+            if p.offset != end {
+                bail!("param {} offset {} != expected {}", p.name, p.offset, end);
+            }
+            let numel: usize = p.shape.iter().product::<usize>().max(1);
+            if numel != p.numel {
+                bail!("param {} numel mismatch", p.name);
+            }
+            end = p.offset + p.numel;
+        }
+        if end != self.manifest.total_floats {
+            bail!(
+                "params cover {} floats, manifest says {}",
+                end,
+                self.manifest.total_floats
+            );
+        }
+        let tail: Vec<&str> = self
+            .manifest
+            .arg_order
+            .iter()
+            .rev()
+            .take(4)
+            .map(String::as_str)
+            .collect();
+        if tail != ["pos", "token_id", "v_caches", "k_caches"] {
+            bail!("unexpected arg tail: {tail:?}");
+        }
+        if self.manifest.arg_order.len() != self.manifest.params.len() + 4 {
+            bail!("arg_order/params length mismatch");
+        }
+        if self.golden.tokens.len() != self.golden.prompt.len() + self.golden.n_new {
+            bail!("golden token count mismatch");
+        }
+        Ok(())
+    }
+
+    /// Slice of one parameter's data.
+    pub fn param_data(&self, p: &ParamEntry) -> &[f32] {
+        &self.weights[p.offset..p.offset + p.numel]
+    }
+
+    /// Path to the decode-step HLO text.
+    pub fn hlo_path(&self) -> PathBuf {
+        self.dir.join("decode_step.hlo.txt")
+    }
+
+    /// KV cache shape: (n_layers, h, max_ctx, d_head).
+    pub fn cache_shape(&self) -> [usize; 4] {
+        let m = &self.manifest.model;
+        [m.n_layers, m.h, m.max_ctx, m.d / m.h]
+    }
+}
+
+/// Default artifact directory relative to the repo root.
+pub fn default_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_and_validate_real_artifacts() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let a = Artifacts::load(default_dir()).unwrap();
+        assert_eq!(a.manifest.entry, "decode_step");
+        assert_eq!(a.manifest.model.d, 256);
+        assert_eq!(a.cache_shape(), [2, 4, 128, 64]);
+        assert_eq!(a.weights.len(), a.manifest.total_floats);
+        // Ternary projection weights are in {-1, 0, 1}.
+        let wq = a
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == "layer0.wq")
+            .unwrap();
+        for &v in a.param_data(wq) {
+            assert!(v == -1.0 || v == 0.0 || v == 1.0);
+        }
+    }
+
+    #[test]
+    fn corrupt_weights_rejected() {
+        if !artifacts_available() {
+            return;
+        }
+        let tmp = std::env::temp_dir().join(format!("pimllm-art-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        for f in ["manifest.json", "golden.json"] {
+            std::fs::copy(default_dir().join(f), tmp.join(f)).unwrap();
+        }
+        std::fs::write(tmp.join("weights.bin"), [0u8; 16]).unwrap();
+        let result = Artifacts::load(&tmp);
+        std::fs::remove_dir_all(&tmp).ok();
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn golden_token_count_checked() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut a = Artifacts::load(default_dir()).unwrap();
+        a.golden.tokens.pop();
+        assert!(a.validate().is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Greedy autoregressive decoding on the PJRT engine + golden
+//! validation: the Rust runtime must reproduce, token for token, the
+//! generation the JAX graph produced at AOT time (`golden.json`).
+
+use super::engine::Engine;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Stateful decoder session over a compiled engine. KV caches live as
+/// device-resident PJRT buffers threaded between steps (never copied to
+/// the host on the request path).
+pub struct TinyDecoder<'e> {
+    engine: &'e Engine,
+    caches: Option<crate::runtime::engine::Caches>,
+    pos: i32,
+    pub tokens: Vec<i32>,
+    pub last_logits: Vec<f32>,
+}
+
+/// Timing of one generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenTiming {
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub total_s: f64,
+    pub per_step_s: Vec<f64>,
+}
+
+impl GenTiming {
+    pub fn tokens_per_s(&self) -> f64 {
+        (self.prompt_len + self.new_tokens) as f64 / self.total_s
+    }
+}
+
+impl<'e> TinyDecoder<'e> {
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let caches = engine.empty_caches()?;
+        Ok(Self {
+            engine,
+            caches: Some(caches),
+            pos: 0,
+            tokens: Vec::new(),
+            last_logits: Vec::new(),
+        })
+    }
+
+    /// Feed one token; updates caches and logits.
+    pub fn feed(&mut self, token: i32) -> Result<()> {
+        if self.pos as usize >= self.engine.max_ctx() {
+            bail!("context overflow: pos {} >= {}", self.pos, self.engine.max_ctx());
+        }
+        let caches = self.caches.take().expect("caches present");
+        let out = self.engine.decode_step(caches, token, self.pos)?;
+        self.caches = Some(out.caches);
+        self.last_logits = out.logits;
+        self.tokens.push(token);
+        self.pos += 1;
+        Ok(())
+    }
+
+    /// Greedy argmax over the last logits.
+    pub fn greedy_next(&self) -> i32 {
+        self.last_logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .expect("non-empty logits")
+    }
+
+    /// Feed a prompt then greedily generate `n_new` tokens.
+    pub fn generate(&mut self, prompt: &[i32], n_new: usize) -> Result<GenTiming> {
+        let start = Instant::now();
+        let mut per_step = Vec::with_capacity(prompt.len() + n_new);
+        for &t in prompt {
+            let s = Instant::now();
+            self.feed(t)?;
+            per_step.push(s.elapsed().as_secs_f64());
+        }
+        for _ in 0..n_new {
+            let next = self.greedy_next();
+            let s = Instant::now();
+            self.feed(next)?;
+            per_step.push(s.elapsed().as_secs_f64());
+        }
+        Ok(GenTiming {
+            prompt_len: prompt.len(),
+            new_tokens: n_new,
+            total_s: start.elapsed().as_secs_f64(),
+            per_step_s: per_step,
+        })
+    }
+}
+
+/// Run the golden generation and check the produced tokens exactly.
+pub fn validate_golden(engine: &Engine) -> Result<GenTiming> {
+    let g = engine.artifacts.golden.clone();
+    let mut dec = TinyDecoder::new(engine)?;
+    let timing = dec.generate(&g.prompt, g.n_new)?;
+    if dec.tokens != g.tokens {
+        bail!(
+            "golden mismatch:\n  rust: {:?}\n  jax:  {:?}",
+            dec.tokens,
+            g.tokens
+        );
+    }
+    Ok(timing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn engine() -> Option<Engine> {
+        if !default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::load_default().expect("engine"))
+    }
+
+    /// THE end-to-end numerics check: rust+PJRT reproduces the jax
+    /// golden generation token-for-token.
+    #[test]
+    fn golden_generation_reproduces() {
+        let Some(e) = engine() else { return };
+        let timing = validate_golden(&e).expect("golden validation");
+        assert!(timing.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn context_overflow_rejected() {
+        let Some(e) = engine() else { return };
+        let mut dec = TinyDecoder::new(&e).unwrap();
+        dec.pos = e.max_ctx() as i32;
+        assert!(dec.feed(0).is_err());
+    }
+
+    #[test]
+    fn different_prompts_diverge() {
+        let Some(e) = engine() else { return };
+        let mut a = TinyDecoder::new(&e).unwrap();
+        a.generate(&[1, 2], 4).unwrap();
+        let mut b = TinyDecoder::new(&e).unwrap();
+        b.generate(&[3, 4], 4).unwrap();
+        assert_ne!(a.tokens, b.tokens);
+    }
+}

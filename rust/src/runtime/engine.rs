@@ -1,0 +1,256 @@
+//! The PJRT execution engine: compile the decode-step HLO once, stage
+//! the weights **on device once** (`buffer_from_host_buffer`, whose
+//! kImmutableOnlyDuringCall semantics copy synchronously), and run each
+//! generated token through `execute_b` with device-resident buffers.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the naive path executed with host
+//! literals, which re-uploads all ~6.8 MB of weights every decode step.
+//! Staging weights as PjRtBuffers at load time and threading the KV
+//! caches through as buffers removes that copy from the request path —
+//! only the two scalars (token, pos) are uploaded per step and only the
+//! logits are downloaded.
+//!
+//! Interchange is HLO *text* — see aot.py and /opt/xla-example/README.md
+//! for why serialized protos from jax >= 0.5 are rejected by
+//! xla_extension 0.5.1.
+
+use super::artifacts::Artifacts;
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compiled decode-step executable plus everything static across tokens.
+pub struct Engine {
+    client: PjRtClient,
+    exe: PjRtLoadedExecutable,
+    /// Device-resident parameter buffers in manifest order (staged once).
+    param_buffers: Vec<PjRtBuffer>,
+    pub artifacts: Artifacts,
+}
+
+/// Device-side KV caches threaded between steps (opaque to callers).
+pub struct Caches {
+    pub k: PjRtBuffer,
+    pub v: PjRtBuffer,
+}
+
+/// Outputs of one decode step.
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub caches: Caches,
+}
+
+impl Engine {
+    /// Load artifacts, compile the HLO on the CPU PJRT client, stage the
+    /// weights on device.
+    pub fn load(artifacts: Artifacts) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let proto = HloModuleProto::from_text_file(artifacts.hlo_path())
+            .map_err(|e| anyhow!("parsing HLO text: {e}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling decode_step: {e}"))?;
+
+        // buffer_from_host_buffer uses kImmutableOnlyDuringCall semantics:
+        // the copy completes during the call, so the host slices may be
+        // dropped afterwards (BufferFromHostLiteral, by contrast, copies
+        // asynchronously and would require keeping the literals alive).
+        let mut param_buffers = Vec::with_capacity(artifacts.manifest.params.len());
+        for p in &artifacts.manifest.params {
+            let data = artifacts.param_data(p);
+            let dims: Vec<usize> = p.shape.clone();
+            let buf = client
+                .buffer_from_host_buffer(data, &dims, None)
+                .map_err(|e| anyhow!("staging {}: {e}", p.name))?;
+            param_buffers.push(buf);
+        }
+
+        Ok(Self {
+            client,
+            exe,
+            param_buffers,
+            artifacts,
+        })
+    }
+
+    /// Load from the default `artifacts/` directory.
+    pub fn load_default() -> Result<Self> {
+        let artifacts = Artifacts::load(super::artifacts::default_dir())
+            .context("loading artifacts (run `make artifacts`)")?;
+        Self::load(artifacts)
+    }
+
+    /// Fresh zeroed device-side KV caches.
+    pub fn empty_caches(&self) -> Result<Caches> {
+        let shape = self.artifacts.cache_shape();
+        let numel: usize = shape.iter().product();
+        let zeros = vec![0f32; numel];
+        let k = self
+            .client
+            .buffer_from_host_buffer(&zeros, &shape, None)
+            .map_err(|e| anyhow!("cache upload: {e}"))?;
+        let v = self
+            .client
+            .buffer_from_host_buffer(&zeros, &shape, None)
+            .map_err(|e| anyhow!("cache upload: {e}"))?;
+        Ok(Caches { k, v })
+    }
+
+    /// Upload a scalar i32 as a device buffer (synchronous copy).
+    fn scalar_buffer(&self, v: i32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow!("scalar upload: {e}"))
+    }
+
+    /// Execute one decode step: feed token `token_id` at position `pos`
+    /// with the given caches; returns logits + updated caches. Consumes
+    /// the caches (they are superseded by the returned ones).
+    pub fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
+        let tok = self.scalar_buffer(token_id)?;
+        let p = self.scalar_buffer(pos)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.param_buffers.len() + 4);
+        args.extend(self.param_buffers.iter());
+        args.push(&caches.k);
+        args.push(&caches.v);
+        args.push(&tok);
+        args.push(&p);
+
+        let mut result = self
+            .exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("decode_step execute: {e}"))?;
+        let outputs = result.swap_remove(0);
+        self.unpack_outputs(outputs)
+    }
+
+    /// PJRT may flatten the (logits, k, v) output tuple into three
+    /// buffers or hand back a single tuple buffer depending on the
+    /// client; handle both.
+    fn unpack_outputs(&self, mut outputs: Vec<PjRtBuffer>) -> Result<StepOutput> {
+        match outputs.len() {
+            3 => {
+                let v = outputs.pop().unwrap();
+                let k = outputs.pop().unwrap();
+                let logits_buf = outputs.pop().unwrap();
+                let logits = logits_buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("logits fetch: {e}"))?
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("logits to_vec: {e}"))?;
+                Ok(StepOutput {
+                    logits,
+                    caches: Caches { k, v },
+                })
+            }
+            1 => {
+                // Tuple buffer: download, split, re-upload the caches.
+                let out = outputs.pop().unwrap();
+                let lit = out
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("tuple fetch: {e}"))?;
+                let (logits_lit, k_lit, v_lit) = lit
+                    .to_tuple3()
+                    .map_err(|e| anyhow!("output tuple: {e}"))?;
+                let logits = logits_lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("logits to_vec: {e}"))?;
+                let shape = self.artifacts.cache_shape();
+                let k_host = k_lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("cache download: {e}"))?;
+                let v_host = v_lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("cache download: {e}"))?;
+                let k = self
+                    .client
+                    .buffer_from_host_buffer(&k_host, &shape, None)
+                    .map_err(|e| anyhow!("cache re-upload: {e}"))?;
+                let v = self
+                    .client
+                    .buffer_from_host_buffer(&v_host, &shape, None)
+                    .map_err(|e| anyhow!("cache re-upload: {e}"))?;
+                Ok(StepOutput {
+                    logits,
+                    caches: Caches { k, v },
+                })
+            }
+            n => bail!("unexpected output arity {n}"),
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.artifacts.manifest.model.vocab
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.artifacts.manifest.model.max_ctx
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn engine() -> Option<Engine> {
+        if !default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::load_default().expect("engine"))
+    }
+
+    #[test]
+    fn engine_compiles_and_steps() {
+        let Some(e) = engine() else { return };
+        assert_eq!(e.platform(), "cpu");
+        let caches = e.empty_caches().unwrap();
+        let out = e.decode_step(caches, 1, 0).unwrap();
+        assert_eq!(out.logits.len(), e.vocab());
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_step_matches_golden_first_logits() {
+        let Some(e) = engine() else { return };
+        let caches = e.empty_caches().unwrap();
+        let g = e.artifacts.golden.clone();
+        let out = e.decode_step(caches, g.prompt[0], 0).unwrap();
+        for (got, want) in out.logits.iter().zip(g.first_logits_prefix.iter()) {
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "{got} vs {want}"
+            );
+        }
+        let l2: f64 = out
+            .logits
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        assert!((l2 - g.first_logits_l2).abs() / g.first_logits_l2 < 1e-4);
+    }
+
+    #[test]
+    fn decode_step_deterministic() {
+        let Some(e) = engine() else { return };
+        let a = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
+        let b = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn cache_buffers_thread_state() {
+        // Feeding [1] then [2] must differ from feeding [2] fresh.
+        let Some(e) = engine() else { return };
+        let s1 = e.decode_step(e.empty_caches().unwrap(), 1, 0).unwrap();
+        let s2 = e.decode_step(s1.caches, 2, 1).unwrap();
+        let fresh = e.decode_step(e.empty_caches().unwrap(), 2, 0).unwrap();
+        assert_ne!(s2.logits, fresh.logits);
+    }
+}

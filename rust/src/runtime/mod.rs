@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-lowered 1-bit decoder (HLO text) and
+//! executes it on the `xla` crate's CPU PJRT client — the functional
+//! numerics path of the system. Python never runs here.
+//!
+//! * [`artifacts`] — manifest/weights/golden parsing + validation.
+//! * [`engine`]    — compiled executable + device-resident weights; one
+//!   `decode_step` call per generated token.
+//! * [`decoder`]   — greedy generation loop + golden validation.
+
+pub mod artifacts;
+pub mod decoder;
+pub mod engine;
+
+pub use artifacts::Artifacts;
+pub use decoder::TinyDecoder;
+pub use engine::Engine;

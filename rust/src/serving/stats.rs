@@ -1,0 +1,79 @@
+//! Latency statistics over served requests: mean / percentiles /
+//! throughput, the numbers the edge-serving example reports.
+
+use super::Response;
+
+/// Summary statistics of a serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub total_tokens: usize,
+    pub mean_service_s: f64,
+    pub p50_service_s: f64,
+    pub p95_service_s: f64,
+    pub p99_service_s: f64,
+    pub mean_ttft_s: f64,
+    pub tokens_per_s: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl LatencyStats {
+    /// Compute stats. `wall_s` is the whole batch's wall-clock time.
+    pub fn from_responses(responses: &[Response], wall_s: f64) -> Self {
+        let mut service: Vec<f64> = responses.iter().map(|r| r.service_s).collect();
+        service.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let n = responses.len();
+        LatencyStats {
+            n,
+            total_tokens,
+            mean_service_s: service.iter().sum::<f64>() / n.max(1) as f64,
+            p50_service_s: percentile(&service, 50.0),
+            p95_service_s: percentile(&service, 95.0),
+            p99_service_s: percentile(&service, 99.0),
+            mean_ttft_s: responses.iter().map(|r| r.ttft_s).sum::<f64>() / n.max(1) as f64,
+            tokens_per_s: total_tokens as f64 / wall_s.max(f64::MIN_POSITIVE),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, service: f64) -> Response {
+        Response {
+            id,
+            tokens: vec![0; 10],
+            queue_s: 0.0,
+            service_s: service,
+            ttft_s: service / 2.0,
+        }
+    }
+
+    #[test]
+    fn stats_basic() {
+        let rs: Vec<Response> = (0..100).map(|i| resp(i, (i + 1) as f64 / 100.0)).collect();
+        let s = LatencyStats::from_responses(&rs, 1.0);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.total_tokens, 1000);
+        assert!((s.p50_service_s - 0.50).abs() < 0.02);
+        assert!((s.p95_service_s - 0.95).abs() < 0.02);
+        assert!(s.p99_service_s >= s.p95_service_s);
+        assert!((s.tokens_per_s - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_handles_singleton() {
+        let s = LatencyStats::from_responses(&[resp(0, 2.0)], 2.0);
+        assert_eq!(s.p50_service_s, 2.0);
+        assert_eq!(s.p99_service_s, 2.0);
+    }
+}

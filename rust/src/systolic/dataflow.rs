@@ -1,0 +1,141 @@
+//! Analytical cycle models for the three classic systolic dataflows,
+//! SCALE-Sim style (paper Fig. 4 compares them and selects OS).
+//!
+//! GEMM convention: ifmap (M x K) . filter (K x N) -> output (M x N) on
+//! an R x C PE array. Decoder inference makes everything an MVM (N = 1
+//! or M = 1), which is exactly the regime where dataflow choice matters:
+//! OS keeps partial sums pinned and only pays the skew once per fold,
+//! WS burns cycles re-loading weights for folds that then do almost no
+//! work, IS similarly re-streams weights.
+//!
+//! Formulas (validated cycle-by-cycle by `wavefront` property tests):
+//!
+//! * OS: folds = ceil(M/R) * ceil(N/C); per fold the K-deep accumulation
+//!   plus the 2-D skew fill/drain: `T = folds * (K + R + C - 2)`.
+//! * WS: folds = ceil(K/R) * ceil(N/C); per fold R cycles to pre-load the
+//!   weight tile, then M input rows stream through with skew:
+//!   `T = folds * (R + M + R + C - 2)`.
+//! * IS: folds = ceil(M/R) * ceil(K/C); per fold C cycles to pre-load the
+//!   input tile, then N weight columns stream through with skew:
+//!   `T = folds * (C + N + R + C - 2)`.
+
+
+/// Systolic-array dataflow (paper Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Partial sums stationary in PEs (the paper's choice).
+    OutputStationary,
+    /// Weights pre-loaded per fold, inputs stream.
+    WeightStationary,
+    /// Inputs pre-loaded per fold, weights stream.
+    InputStationary,
+}
+
+impl Dataflow {
+    pub const ALL: [Dataflow; 3] = [
+        Dataflow::OutputStationary,
+        Dataflow::WeightStationary,
+        Dataflow::InputStationary,
+    ];
+
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Dataflow::OutputStationary => "OS",
+            Dataflow::WeightStationary => "WS",
+            Dataflow::InputStationary => "IS",
+        }
+    }
+}
+
+/// Cycles for an (M x K).(K x N) GEMM on an R x C array.
+pub fn gemm_cycles(m: usize, k: usize, n: usize, r: usize, c: usize, df: Dataflow) -> u64 {
+    assert!(m > 0 && k > 0 && n > 0 && r > 0 && c > 0, "degenerate GEMM");
+    let (m64, k64, n64) = (m as u64, k as u64, n as u64);
+    let (r64, c64) = (r as u64, c as u64);
+    match df {
+        Dataflow::OutputStationary => {
+            let folds = m64.div_ceil(r64) * n64.div_ceil(c64);
+            folds * (k64 + r64 + c64 - 2)
+        }
+        Dataflow::WeightStationary => {
+            let folds = k64.div_ceil(r64) * n64.div_ceil(c64);
+            folds * (r64 + m64 + r64 + c64 - 2)
+        }
+        Dataflow::InputStationary => {
+            let folds = m64.div_ceil(r64) * k64.div_ceil(c64);
+            folds * (c64 + n64 + r64 + c64 - 2)
+        }
+    }
+}
+
+/// Cycles for a full decode step (all ops) under one dataflow — the
+/// quantity plotted per model in paper Fig. 4.
+pub fn decode_step_cycles(
+    model: &crate::models::LlmConfig,
+    l: usize,
+    r: usize,
+    c: usize,
+    df: Dataflow,
+) -> u64 {
+    crate::workload::decode_ops(model, l)
+        .iter()
+        .map(|op| gemm_cycles(op.m, op.k, op.n, r, c, df))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    #[test]
+    fn os_formula_spot_checks() {
+        // ceil(128/32)*ceil(1/32)*(64+62) = 4*126
+        assert_eq!(
+            gemm_cycles(128, 64, 1, 32, 32, Dataflow::OutputStationary),
+            4 * 126
+        );
+        // square fold: ceil(64/32)*ceil(64/32)*(64+62)
+        assert_eq!(
+            gemm_cycles(64, 64, 64, 32, 32, Dataflow::OutputStationary),
+            4 * 126
+        );
+    }
+
+    #[test]
+    fn ws_pays_weight_reload_for_mvm() {
+        // MVM M=1: WS folds over K, each fold mostly pipeline overhead.
+        let os = gemm_cycles(1, 4096, 4096, 32, 32, Dataflow::OutputStationary);
+        let ws = gemm_cycles(1, 4096, 4096, 32, 32, Dataflow::WeightStationary);
+        assert!(ws > os, "ws={ws} os={os}");
+    }
+
+    #[test]
+    fn os_wins_for_decoder_workloads() {
+        // Fig. 4's conclusion: OS < WS and OS < IS for decode steps.
+        for name in ["GPT2-355M", "OPT-1.3B", "OPT-6.7B"] {
+            let m = by_name(name).unwrap();
+            let os = decode_step_cycles(&m, 1024, 32, 32, Dataflow::OutputStationary);
+            let ws = decode_step_cycles(&m, 1024, 32, 32, Dataflow::WeightStationary);
+            let is = decode_step_cycles(&m, 1024, 32, 32, Dataflow::InputStationary);
+            assert!(os < ws, "{name}: os={os} ws={ws}");
+            assert!(os < is, "{name}: os={os} is={is}");
+        }
+    }
+
+    #[test]
+    fn cycles_monotone_in_each_dim() {
+        for df in Dataflow::ALL {
+            let base = gemm_cycles(100, 100, 100, 32, 32, df);
+            assert!(gemm_cycles(200, 100, 100, 32, 32, df) >= base);
+            assert!(gemm_cycles(100, 200, 100, 32, 32, df) >= base);
+            assert!(gemm_cycles(100, 100, 200, 32, 32, df) >= base);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_dim_panics() {
+        gemm_cycles(0, 1, 1, 32, 32, Dataflow::OutputStationary);
+    }
+}

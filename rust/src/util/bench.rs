@@ -1,0 +1,162 @@
+//! Measurement harness for `rust/benches/*` (harness = false; the
+//! offline build has no criterion). Provides warmup + repeated timing
+//! with mean/stddev/min, throughput helpers and a fixed-width report —
+//! enough to run the paper-figure benches and the perf-pass loop.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+}
+
+/// Bench runner: fixed warmup + adaptive iteration count targeting
+/// ~`target_s` of total measurement time, capped by `max_iters`.
+pub struct Bench {
+    pub warmup: usize,
+    pub target_s: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 2,
+            target_s: 0.5,
+            min_iters: 5,
+            max_iters: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            target_s: 0.1,
+            min_iters: 3,
+            max_iters: 30,
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`, returning (and recording) the measurement. The closure
+    /// should return something observable to avoid dead-code elimination
+    /// (use [`black_box`]).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        // Pilot to size the iteration count.
+        let t0 = Instant::now();
+        black_box(f());
+        let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_s / pilot) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / iters as f64;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / iters as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().cloned().fold(0.0, f64::max),
+        };
+        println!(
+            "bench {:<44} {:>10} {:>9} ±{:<9} (n={})",
+            m.name,
+            fmt_time(m.mean_s),
+            format!("min {}", fmt_time(m.min_s)),
+            fmt_time(m.stddev_s),
+            m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper, kept local so bench
+/// code reads uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::quick();
+        let m = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s && m.mean_s <= m.max_s + 1e-12);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn iteration_bounds_respected() {
+        let mut b = Bench::quick();
+        let m = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(m.iters >= b.min_iters.min(3));
+        assert!(m.iters <= b.max_iters);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0025), "2.500ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500us");
+        assert_eq!(fmt_time(2.5e-9), "2.5ns");
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny CLI flag parser for the `repro` binary and the examples
+//! (offline build — no clap). Supports `--key value`, `--key=value`,
+//! bare `--flag` booleans and one positional subcommand.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("empty flag");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument '{tok}'");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate --model OPT-6.7B --context 128 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("OPT-6.7B"));
+        assert_eq!(a.usize_or("context", 0).unwrap(), 128);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("sweep --figure=fig5");
+        assert_eq!(a.get("figure"), Some("fig5"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("simulate");
+        assert_eq!(a.usize_or("context", 128).unwrap(), 128);
+        assert_eq!(a.str_or("model", "OPT-6.7B"), "OPT-6.7B");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    }
+}

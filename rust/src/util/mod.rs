@@ -1,0 +1,20 @@
+//! In-crate substrates for facilities the offline build cannot pull from
+//! crates.io (see the dependency-policy note in Cargo.toml):
+//!
+//! * [`json`]  — JSON parser/serializer (manifest.json, golden.json).
+//! * [`toml`]  — minimal TOML (tables, numbers, strings, bools) for the
+//!   architecture configs.
+//! * [`rng`]   — SplitMix64 PRNG for synthetic workloads and the
+//!   in-crate property tests.
+//! * [`par`]   — scoped-thread data-parallel map (rayon-equivalent for
+//!   the figure sweeps).
+//! * [`cli`]   — tiny flag parser for the `repro` binary and examples.
+//! * [`bench`] — measurement harness used by `rust/benches/*`
+//!   (harness = false): warmup, repeats, mean/stddev, table output.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,140 @@
+//! Scoped-thread data-parallel map — the rayon replacement for the
+//! figure sweeps (7 models x 6 contexts x 2 architectures each calling
+//! the simulator).
+//!
+//! Work-stealing is overkill for these uniform sweeps; a shared atomic
+//! index over the input slice balances fine and keeps results in input
+//! order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (physical parallelism, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Parallel map preserving input order. `f` must be `Sync` (called from
+/// many threads); items are processed exactly once.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    parallel_map_threads(items, default_threads(), f)
+}
+
+/// Parallel map with an explicit thread count.
+pub fn parallel_map_threads<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let out_ptr = out_ptr;
+            scope.spawn(move || {
+                // Bind the wrapper itself so edition-2021 disjoint capture
+                // moves the Send wrapper, not the raw-pointer field.
+                let slots = out_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&items[i]);
+                    // SAFETY: each index i is claimed exactly once via the
+                    // atomic counter, so no two threads write the same
+                    // slot; the vector outlives the scope.
+                    unsafe {
+                        *slots.0.add(i) = Some(v);
+                    }
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+/// Raw-pointer wrapper that is Copy + Send for the scoped workers.
+struct SendPtr<U>(*mut Option<U>);
+impl<U> Clone for SendPtr<U> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<U> Copy for SendPtr<U> {}
+// SAFETY: disjoint-index writes only, synchronized by thread::scope join.
+unsafe impl<U: Send> Send for SendPtr<U> {}
+unsafe impl<U: Send> Sync for SendPtr<U> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn each_item_processed_once() {
+        let items: Vec<usize> = (0..500).collect();
+        let count = AtomicU64::new(0);
+        let out = parallel_map(&items, |&x| {
+            count.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 500);
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn explicit_thread_counts_agree() {
+        let items: Vec<u64> = (0..256).collect();
+        let a = parallel_map_threads(&items, 1, |&x| x * x);
+        let b = parallel_map_threads(&items, 8, |&x| x * x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        // With 4 threads and sleepy work, wall time << serial time.
+        let items: Vec<u32> = (0..8).collect();
+        let t0 = std::time::Instant::now();
+        parallel_map_threads(&items, 8, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(30))
+        });
+        assert!(t0.elapsed().as_millis() < 8 * 30);
+    }
+}

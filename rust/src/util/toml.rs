@@ -1,0 +1,249 @@
+//! Minimal TOML parser + emitter for the architecture config files.
+//!
+//! Supports the subset the configs use: `[table]` headers (one level of
+//! nesting), `key = value` with numbers (int/float/scientific), strings,
+//! and booleans; `#` comments. Emits deterministic, pretty output.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A TOML scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("not a non-negative integer: {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: table name -> (key -> value). Root keys live under
+/// the "" table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn table(&self, name: &str) -> Result<&BTreeMap<String, Value>> {
+        self.tables
+            .get(name)
+            .ok_or_else(|| anyhow!("missing table [{name}]"))
+    }
+
+    pub fn get(&self, table: &str, key: &str) -> Result<&Value> {
+        self.table(table)?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing {table}.{key}"))
+    }
+
+    pub fn f64(&self, table: &str, key: &str) -> Result<f64> {
+        self.get(table, key)?.as_f64()
+    }
+
+    pub fn usize(&self, table: &str, key: &str) -> Result<usize> {
+        self.get(table, key)?.as_usize()
+    }
+
+    pub fn bool(&self, table: &str, key: &str) -> Result<bool> {
+        self.get(table, key)?.as_bool()
+    }
+
+    pub fn set(&mut self, table: &str, key: &str, v: Value) {
+        self.tables
+            .entry(table.to_string())
+            .or_default()
+            .insert(key.to_string(), v);
+    }
+
+    /// Pretty-print (tables sorted, keys sorted — deterministic).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        if let Some(root) = self.tables.get("") {
+            for (k, v) in root {
+                out.push_str(&format!("{k} = {}\n", emit(v)));
+            }
+        }
+        for (name, table) in &self.tables {
+            if name.is_empty() {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            out.push_str(&format!("[{name}]\n"));
+            for (k, v) in table {
+                out.push_str(&format!("{k} = {}\n", emit(v)));
+            }
+        }
+        out
+    }
+}
+
+fn emit(v: &Value) -> String {
+    match v {
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 && *n == n.trunc() && n.abs() < 1e7 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n:e}")
+            }
+        }
+        Value::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+/// Parse a TOML document (subset; see module docs).
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut current = String::new();
+    doc.tables.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: bad table header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty table name", lineno + 1);
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(val.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.tables
+            .get_mut(&current)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    // TOML allows underscores in numbers.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("invalid value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level comment
+title = "pim-llm"  # inline comment
+
+[tpu]
+rows = 32
+freq_hz = 1e8
+mac_energy_j = 1.33e-12
+enabled = true
+
+[pim]
+crossbar_dim = 256
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.get("", "title").unwrap(), &Value::Str("pim-llm".into()));
+        assert_eq!(d.usize("tpu", "rows").unwrap(), 32);
+        assert_eq!(d.f64("tpu", "freq_hz").unwrap(), 1e8);
+        assert!((d.f64("tpu", "mac_energy_j").unwrap() - 1.33e-12).abs() < 1e-20);
+        assert!(d.bool("tpu", "enabled").unwrap());
+        assert_eq!(d.usize("pim", "crossbar_dim").unwrap(), 256);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = parse(SAMPLE).unwrap();
+        let text = d.to_string();
+        let d2 = parse(&text).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let d = parse("x = 8_388_608").unwrap();
+        assert_eq!(d.usize("", "x").unwrap(), 8_388_608);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = parse("[tpu]\nrows 32").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse("[]").is_err());
+        assert!(parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_fail() {
+        let d = parse("[a]\nb = 1").unwrap();
+        assert!(d.f64("a", "c").is_err());
+        assert!(d.f64("z", "b").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Workload enumeration: turns an [`LlmConfig`] + context length into the
+//! exact list of MatMul (MVM) operations one token-generation step
+//! executes, with paper Table I dimensions and the W1A8/W8A8 precision
+//! split of Fig. 1a.
+//!
+//! This is the contract between the model zoo and both schedulers: the
+//! hybrid coordinator routes each op by its [`Precision`], the TPU-LLM
+//! baseline runs them all on the systolic array.
+
+use crate::models::LlmConfig;
+
+/// Which part of the decoder an op belongs to (paper Fig. 1a / Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// W_Q / W_K / W_V input projections (d x d).
+    QkvProjection,
+    /// W_X output projection after head concat (d x d).
+    OutProjection,
+    /// Score = Q.K^T inside a head: (l x d/h).(d/h x 1).
+    AttentionScore,
+    /// V.Score inside a head: (d/h x l).(l x 1).
+    AttentionValue,
+    /// Intermediate FF: (d_FF x d).(d x 1).
+    FfIntermediate,
+    /// Output FF: (d x d_FF).(d_FF x 1).
+    FfOutput,
+    /// LM head (vocab projection) — not in Table I; excluded from op
+    /// enumeration by default to match the paper's accounting, but kept
+    /// for the functional runtime.
+    LmHead,
+}
+
+/// Numeric precision of an op — decides PIM vs systolic-array placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 1-bit (ternary) weights, 8-bit activations: projection layers.
+    W1A8,
+    /// 8-bit activation-to-activation: attention heads.
+    W8A8,
+}
+
+/// One matrix-vector multiplication, GEMM convention (M x K).(K x N).
+/// Decoder inference makes N = 1 everywhere (one token per iteration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatMulOp {
+    /// Decoder block index this op belongs to.
+    pub layer: usize,
+    /// Head index for attention ops (None for projections).
+    pub head: Option<usize>,
+    pub kind: OpKind,
+    pub precision: Precision,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl MatMulOp {
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Weight-operand bytes at int8 (for the TPU path) — the stationary
+    /// matrix of the op.
+    pub fn weight_bytes_int8(&self) -> u64 {
+        self.m as u64 * self.k as u64
+    }
+
+    pub fn is_attention(&self) -> bool {
+        matches!(self.kind, OpKind::AttentionScore | OpKind::AttentionValue)
+    }
+}
+
+/// The full op list of one decode step (one generated token) at context
+/// length `l`, in execution order, paper Table I dimensions.
+///
+/// Projections are enumerated as (d_out x d_in).(d_in x 1) with
+/// M = d_out: the MVM orientation where the weight matrix is stationary.
+pub fn decode_ops(model: &LlmConfig, l: usize) -> Vec<MatMulOp> {
+    let (d, dff, dh) = (model.d, model.d_ff, model.d_head());
+    let mut ops = Vec::with_capacity(model.n_layers * (6 + 2 * model.h));
+    for layer in 0..model.n_layers {
+        // Q, K, V projections (W1A8, PIM side).
+        for _ in 0..3 {
+            ops.push(MatMulOp {
+                layer,
+                head: None,
+                kind: OpKind::QkvProjection,
+                precision: Precision::W1A8,
+                m: d,
+                k: d,
+                n: 1,
+            });
+        }
+        // Attention heads (W8A8, systolic-array side).
+        for head in 0..model.h {
+            ops.push(MatMulOp {
+                layer,
+                head: Some(head),
+                kind: OpKind::AttentionScore,
+                precision: Precision::W8A8,
+                m: l,
+                k: dh,
+                n: 1,
+            });
+            ops.push(MatMulOp {
+                layer,
+                head: Some(head),
+                kind: OpKind::AttentionValue,
+                precision: Precision::W8A8,
+                m: dh,
+                k: l,
+                n: 1,
+            });
+        }
+        // Output projection.
+        ops.push(MatMulOp {
+            layer,
+            head: None,
+            kind: OpKind::OutProjection,
+            precision: Precision::W1A8,
+            m: d,
+            k: d,
+            n: 1,
+        });
+        // Feed-forward projections.
+        ops.push(MatMulOp {
+            layer,
+            head: None,
+            kind: OpKind::FfIntermediate,
+            precision: Precision::W1A8,
+            m: dff,
+            k: d,
+            n: 1,
+        });
+        ops.push(MatMulOp {
+            layer,
+            head: None,
+            kind: OpKind::FfOutput,
+            precision: Precision::W1A8,
+            m: d,
+            k: dff,
+            n: 1,
+        });
+    }
+    ops
+}
+
+/// Summary statistics over an op list.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadStats {
+    pub total_macs: u64,
+    pub w1a8_macs: u64,
+    pub w8a8_macs: u64,
+    pub n_ops: usize,
+    pub n_w1a8_ops: usize,
+    pub n_w8a8_ops: usize,
+}
+
+impl WorkloadStats {
+    pub fn low_precision_fraction(&self) -> f64 {
+        self.w1a8_macs as f64 / self.total_macs as f64
+    }
+}
+
+/// Compute stats for one decode step.
+pub fn stats(ops: &[MatMulOp]) -> WorkloadStats {
+    let mut s = WorkloadStats {
+        total_macs: 0,
+        w1a8_macs: 0,
+        w8a8_macs: 0,
+        n_ops: ops.len(),
+        n_w1a8_ops: 0,
+        n_w8a8_ops: 0,
+    };
+    for op in ops {
+        let macs = op.macs();
+        s.total_macs += macs;
+        match op.precision {
+            Precision::W1A8 => {
+                s.w1a8_macs += macs;
+                s.n_w1a8_ops += 1;
+            }
+            Precision::W8A8 => {
+                s.w8a8_macs += macs;
+                s.n_w8a8_ops += 1;
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{by_name, table2_models};
+
+    #[test]
+    fn op_count_matches_structure() {
+        let m = by_name("GPT2-355M").unwrap();
+        let ops = decode_ops(&m, 128);
+        // per layer: 3 qkv + 2*h attention + 1 out + 2 ff
+        assert_eq!(ops.len(), m.n_layers * (6 + 2 * m.h));
+    }
+
+    #[test]
+    fn macs_agree_with_closed_form() {
+        for m in table2_models() {
+            for l in [128usize, 1024, 4096] {
+                let ops = decode_ops(&m, l);
+                let s = stats(&ops);
+                assert_eq!(s.w1a8_macs, m.projection_macs(), "{} proj", m.name);
+                assert_eq!(s.w8a8_macs, m.attention_macs(l), "{} att", m.name);
+                assert_eq!(s.total_macs, m.total_macs(l), "{} total", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table1_dimensions() {
+        let m = by_name("OPT-6.7B").unwrap();
+        let ops = decode_ops(&m, 2048);
+        let score = ops.iter().find(|o| o.kind == OpKind::AttentionScore).unwrap();
+        assert_eq!((score.m, score.k, score.n), (2048, 128, 1));
+        let val = ops.iter().find(|o| o.kind == OpKind::AttentionValue).unwrap();
+        assert_eq!((val.m, val.k, val.n), (128, 2048, 1));
+        let ffi = ops.iter().find(|o| o.kind == OpKind::FfIntermediate).unwrap();
+        assert_eq!((ffi.m, ffi.k, ffi.n), (16384, 4096, 1));
+        let ffo = ops.iter().find(|o| o.kind == OpKind::FfOutput).unwrap();
+        assert_eq!((ffo.m, ffo.k, ffo.n), (4096, 16384, 1));
+    }
+
+    #[test]
+    fn precision_split_is_exact() {
+        let m = by_name("OPT-1.3B").unwrap();
+        for op in decode_ops(&m, 512) {
+            match op.kind {
+                OpKind::AttentionScore | OpKind::AttentionValue => {
+                    assert_eq!(op.precision, Precision::W8A8)
+                }
+                _ => assert_eq!(op.precision, Precision::W1A8),
+            }
+        }
+    }
+
+    #[test]
+    fn fraction_matches_model_closed_form() {
+        let m = by_name("OPT-2.7B").unwrap();
+        let s = stats(&decode_ops(&m, 1024));
+        let f1 = s.low_precision_fraction();
+        let f2 = m.low_precision_fraction(1024);
+        assert!((f1 - f2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn every_op_is_mvm() {
+        let m = by_name("LLaMA-7B").unwrap();
+        assert!(decode_ops(&m, 128).iter().all(|o| o.n == 1));
+    }
+}

@@ -1,0 +1,156 @@
+//! Cross-module integration tests: config -> workload -> schedulers ->
+//! analysis, exercising whole figure pipelines and the CLI-facing
+//! generators against the paper's stated numbers.
+
+use pim_llm::analysis::figures;
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, token_loop, Arch};
+use pim_llm::models::{self, CONTEXT_LENGTHS};
+use pim_llm::util::toml;
+
+#[test]
+fn full_fig5_pipeline_hits_all_paper_points() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig5(&arch);
+    assert_eq!(rows.len(), 7 * CONTEXT_LENGTHS.len());
+    let stated: Vec<_> = rows.iter().filter(|r| r.paper_speedup.is_some()).collect();
+    assert_eq!(stated.len(), 4, "four annotated points in §IV-A");
+    for r in stated {
+        let ps = r.paper_speedup.unwrap();
+        assert!(
+            (r.speedup - ps).abs() / ps < 0.15,
+            "{} l={}: {:.2} vs {:.2}",
+            r.model,
+            r.context,
+            r.speedup,
+            ps
+        );
+    }
+}
+
+#[test]
+fn fig6_reference_percentages_reproduced() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::fig6(&arch);
+    let pct = |model: &str, l: usize, comp: &str| {
+        rows.iter()
+            .find(|r| r.model == model && r.context == l)
+            .unwrap()
+            .percents
+            .iter()
+            .find(|(k, _)| k == comp)
+            .unwrap()
+            .1
+    };
+    // §IV-B statements with generous tolerances (we reproduce shape).
+    assert!((pct("OPT-6.7B", 128, "systolic") - 60.0).abs() < 10.0);
+    assert!((pct("GPT2-355M", 128, "systolic") - 73.9).abs() < 10.0);
+    assert!((pct("OPT-6.7B", 128, "communication") - 36.3).abs() < 10.0);
+    assert!((pct("GPT2-355M", 128, "communication") - 10.7).abs() < 6.0);
+    assert!((pct("GPT2-355M", 128, "buffer") - 14.7).abs() < 6.0);
+    assert!((pct("OPT-6.7B", 128, "buffer") - 3.5) < 3.0);
+    assert!(pct("OPT-6.7B", 4096, "systolic") > 90.0);
+    assert!(pct("GPT2-355M", 4096, "systolic") > 90.0);
+    // Analog PIM path below 1% everywhere (paper: "remain below 1%").
+    for r in &rows {
+        let analog: f64 = r
+            .percents
+            .iter()
+            .filter(|(k, _)| k == "xbar" || k == "dac" || k == "adc")
+            .map(|(_, v)| v)
+            .sum();
+        assert!(analog < 1.0, "{} l={}: {analog}", r.model, r.context);
+    }
+}
+
+#[test]
+fn fig7_crossover_and_fig8_transform() {
+    let arch = ArchConfig::paper_45nm();
+    let f7 = figures::fig7(&arch);
+    // TPU-LLM wins the smallest model at short context...
+    let g = |m: &str, l: usize| {
+        f7.iter()
+            .find(|r| r.model == m && r.context == l)
+            .unwrap()
+            .gain_pct
+    };
+    assert!(g("GPT2-355M", 128) < 0.0);
+    // ...and the gain is monotone in model size along the OPT family.
+    assert!(g("OPT-1.3B", 128) < g("OPT-2.7B", 128));
+    assert!(g("OPT-2.7B", 128) < g("OPT-6.7B", 128));
+    assert!(g("OPT-6.7B", 128) > 0.0);
+
+    // Fig. 8 is an exact transform of Fig. 7.
+    let f8 = figures::fig8(&arch);
+    for (r7, r8) in f7.iter().zip(f8.iter()) {
+        let want = pim_llm::energy::BATTERY_JOULES * r7.pim_llm_tokens_per_j
+            / pim_llm::energy::TOKENS_PER_WORD;
+        assert!((r8.pim_llm_words - want).abs() / want < 1e-9);
+    }
+}
+
+#[test]
+fn table3_beats_prior_work_as_stated() {
+    let arch = ArchConfig::paper_45nm();
+    let rows = figures::table3(&arch);
+    let ours = |m: &str, l: usize| {
+        rows.iter()
+            .find(|r| r.design.contains("ours") && r.model == m && r.context == l)
+            .unwrap()
+    };
+    // "2x improvement in GOPS" vs HARDSEA (3.2 GOPS).
+    assert!(ours("GPT2-Small", 1024).gops.unwrap() > 1.6 * 3.2);
+    // "5x improvement in GOPS/W" vs TransPIM (< 200 GOPS/W).
+    assert!(ours("GPT2-Medium", 4096).gops_per_w.unwrap() > 2.0 * 200.0);
+    // Paper's four stated PIM-LLM GOPS values within 25%.
+    for (m, l) in [
+        ("GPT2-Small", 1024usize),
+        ("GPT2-Medium", 4096),
+        ("OPT-6.7B", 1024),
+        ("OPT-6.7B", 4096),
+    ] {
+        let r = ours(m, l);
+        let rel = (r.gops.unwrap() - r.paper_gops.unwrap()).abs() / r.paper_gops.unwrap();
+        assert!(rel < 0.25, "{m} l={l}: {:?} vs {:?}", r.gops, r.paper_gops);
+    }
+}
+
+#[test]
+fn calibrated_config_roundtrips_through_cli_path() {
+    // What `repro --config` does: serialize -> reparse -> identical sim.
+    let arch = ArchConfig::paper_45nm();
+    let text = arch.to_toml_string();
+    let doc = toml::parse(&text).unwrap();
+    assert!(doc.table("tpu").is_ok() && doc.table("pim").is_ok());
+    let back = ArchConfig::from_toml_str(&text).unwrap();
+    let m = models::by_name("OPT-1.3B").unwrap();
+    let a = coordinator::simulate(&arch, &m, 512, Arch::PimLlm);
+    let b = coordinator::simulate(&back, &m, 512, Arch::PimLlm);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn generation_accounting_consistent_with_step_sim() {
+    let arch = ArchConfig::paper_45nm();
+    let m = models::by_name("GPT2-355M").unwrap();
+    let g = token_loop::generate(&arch, &m, Arch::PimLlm, 4, 8);
+    // Sum of independently simulated steps == generation total.
+    let mut want = 0.0;
+    for p in 0..12 {
+        want += coordinator::simulate(&arch, &m, p + 1, Arch::PimLlm).latency_s();
+    }
+    assert!((g.total_latency_s - want).abs() < 1e-12);
+}
+
+#[test]
+fn every_table2_model_simulates_at_every_context() {
+    let arch = ArchConfig::paper_45nm();
+    for m in models::table2_models() {
+        for l in CONTEXT_LENGTHS {
+            for a in [Arch::PimLlm, Arch::TpuLlm] {
+                let r = coordinator::simulate(&arch, &m, l, a);
+                assert!(r.latency_s() > 0.0, "{} l={l} {a:?}", m.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Property-based tests over the simulator substrates, driven by the
+//! in-crate SplitMix64 PRNG (the offline build has no proptest; the
+//! shrink-free random-sweep style below covers the same invariants).
+//!
+//! The headline property: the closed-form dataflow cycle models equal
+//! the cycle-accurate wavefront stepper on every random GEMM shape —
+//! i.e. the SCALE-Sim-style analytical mode is exact, not approximate.
+
+use pim_llm::config::ArchConfig;
+use pim_llm::coordinator::{self, Arch};
+use pim_llm::models;
+use pim_llm::pim::mapping::{map_model, OpMapping};
+use pim_llm::systolic::dataflow::{gemm_cycles, Dataflow};
+use pim_llm::systolic::wavefront::simulate_gemm;
+use pim_llm::util::rng::Rng;
+use pim_llm::workload::{decode_ops, stats, Precision};
+
+const CASES: usize = 200;
+
+#[test]
+fn analytical_equals_wavefront_on_random_shapes() {
+    let mut rng = Rng::new(0xDEC0DE);
+    for case in 0..CASES {
+        let m = rng.range(1, 40);
+        let k = rng.range(1, 40);
+        let n = rng.range(1, 40);
+        let r = rng.range(1, 12);
+        let c = rng.range(1, 12);
+        for df in Dataflow::ALL {
+            let analytical = gemm_cycles(m, k, n, r, c, df);
+            let stepped = simulate_gemm(m, k, n, r, c, df);
+            assert_eq!(
+                analytical, stepped.cycles,
+                "case {case}: ({m},{k},{n}) on {r}x{c} {df:?}"
+            );
+            assert_eq!(
+                stepped.macs,
+                (m * k * n) as u64,
+                "work conservation, case {case}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cycles_monotone_in_gemm_dims() {
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..CASES {
+        let m = rng.range(1, 200);
+        let k = rng.range(1, 200);
+        let n = rng.range(1, 200);
+        for df in Dataflow::ALL {
+            let base = gemm_cycles(m, k, n, 32, 32, df);
+            assert!(gemm_cycles(m + rng.range(1, 50), k, n, 32, 32, df) >= base);
+            assert!(gemm_cycles(m, k + rng.range(1, 50), n, 32, 32, df) >= base);
+            assert!(gemm_cycles(m, k, n + rng.range(1, 50), 32, 32, df) >= base);
+        }
+    }
+}
+
+#[test]
+fn workload_macs_partition_exactly_for_random_models() {
+    // Random-but-valid decoder configs: the W1A8/W8A8 partition must be
+    // exhaustive and match the closed forms for ANY hyper-parameters.
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..CASES {
+        let h = rng.range(1, 32);
+        let d = h * rng.range(1, 64); // divisible by h
+        let model = models::LlmConfig::new(
+            "random",
+            0,
+            d,
+            h,
+            rng.range(1, 4096),
+            rng.range(1, 48),
+        );
+        let l = rng.range(1, 4096);
+        let ops = decode_ops(&model, l);
+        let s = stats(&ops);
+        assert_eq!(s.w1a8_macs, model.projection_macs());
+        assert_eq!(s.w8a8_macs, model.attention_macs(l));
+        assert_eq!(s.total_macs, s.w1a8_macs + s.w8a8_macs);
+        // Every op is an MVM and belongs to exactly one side.
+        for op in &ops {
+            assert_eq!(op.n, 1);
+            match op.precision {
+                Precision::W1A8 => assert!(!op.is_attention()),
+                Precision::W8A8 => assert!(op.is_attention()),
+            }
+        }
+    }
+}
+
+#[test]
+fn crossbar_mapping_covers_all_weights() {
+    // Mapped crossbar capacity always >= weight count; utilization in
+    // (0, 1]; crossbar count exact per-op.
+    let arch = ArchConfig::paper_45nm();
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..CASES {
+        let h = rng.range(1, 16);
+        let model = models::LlmConfig::new(
+            "random",
+            0,
+            h * rng.range(1, 96),
+            h,
+            rng.range(1, 8192),
+            rng.range(1, 40),
+        );
+        let ops = decode_ops(&model, 128);
+        let mapping = map_model(&arch, &ops);
+        let capacity = mapping.total_crossbars * arch.weights_per_crossbar() as u64;
+        assert!(capacity >= model.projection_weights());
+        assert!(mapping.utilization > 0.0 && mapping.utilization <= 1.0);
+        for op in ops.iter().filter(|o| o.precision == Precision::W1A8) {
+            let om = OpMapping::for_op(&arch, op);
+            let cap = om.crossbars() * arch.weights_per_crossbar() as u64;
+            assert!(cap >= (op.m * op.k) as u64);
+        }
+    }
+}
+
+#[test]
+fn simulation_invariants_hold_across_random_points() {
+    // For random (model, context): latencies/energies positive and
+    // finite, breakdown sums to total, PIM-LLM never slower than
+    // TPU-LLM (projections never dominate on PIM).
+    let arch = ArchConfig::paper_45nm();
+    let zoo = models::table2_models();
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..60 {
+        let model = &zoo[rng.range(0, zoo.len() - 1)];
+        let l = rng.range(1, 4096);
+        let p = coordinator::simulate(&arch, model, l, Arch::PimLlm);
+        let t = coordinator::simulate(&arch, model, l, Arch::TpuLlm);
+        for r in [&p, &t] {
+            assert!(r.latency_s().is_finite() && r.latency_s() > 0.0);
+            assert!(r.energy.total_j().is_finite() && r.energy.total_j() > 0.0);
+            let items_sum: f64 = r.breakdown.items().iter().map(|(_, v)| v).sum();
+            assert!((items_sum - r.latency_s()).abs() < 1e-9 * r.latency_s());
+            let frac_sum: f64 = r.breakdown.fractions().as_vec().iter().map(|(_, v)| v).sum();
+            assert!((frac_sum - 1.0).abs() < 1e-9);
+        }
+        assert!(
+            p.latency_s() < t.latency_s(),
+            "{} l={l}: hybrid must win on latency",
+            model.name
+        );
+        // Hybrid's systolic time equals baseline's attention-only time.
+        assert!(p.breakdown.systolic_s <= t.breakdown.systolic_s);
+    }
+}
+
+#[test]
+fn speedup_scales_with_projection_share() {
+    // The more MACs live in projections (the PIM side), the larger the
+    // hybrid speedup — Fig. 1b's motivation connected to Fig. 5.
+    let arch = ArchConfig::paper_45nm();
+    let mut rng = Rng::new(0xACE);
+    for _ in 0..40 {
+        let model = models::by_name("OPT-2.7B").unwrap();
+        let l1 = rng.range(1, 2000);
+        let l2 = l1 + rng.range(100, 2096);
+        // larger l => smaller projection share => smaller speedup
+        let s1 = coordinator::speedup(&arch, &model, l1);
+        let s2 = coordinator::speedup(&arch, &model, l2);
+        assert!(
+            s2 < s1,
+            "l={l1}->{l2}: speedup must fall ({s1} -> {s2})"
+        );
+    }
+}
