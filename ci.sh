@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification, offline-enforced.
+#
+# `--offline` makes any attempt to touch the network (i.e. any external
+# dependency sneaking into the default feature set) a hard failure —
+# the no-network invariant of this repo's default build.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: release build (offline) =="
+cargo build --release --offline
+
+echo "== tier-1: tests (offline) =="
+cargo test -q --offline
+
+echo "== bench + example targets compile (offline) =="
+cargo build --benches --offline
+cargo build --examples --offline
+
+echo "ci.sh: all green"

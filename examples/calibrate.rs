@@ -20,6 +20,7 @@
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, Arch};
 use pim_llm::models;
+use pim_llm::util::error::Result;
 
 /// (model, context, paper tokens/J gain of PIM over TPU in %, weight)
 const ANCHORS: &[(&str, usize, f64, f64)] = &[
@@ -93,7 +94,7 @@ fn set(arch: &mut ArchConfig, knob: &str, v: f64) {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut arch = ArchConfig::paper_45nm();
     let mut best = loss(&arch);
     println!("initial loss: {best:.4}");

@@ -12,13 +12,14 @@ use pim_llm::models;
 use pim_llm::systolic::dataflow::{decode_step_cycles, gemm_cycles, Dataflow};
 use pim_llm::systolic::wavefront::simulate_gemm;
 use pim_llm::util::cli::Args;
+use pim_llm::util::error::{anyhow, Result};
 use pim_llm::workload::{decode_ops, OpKind};
 use std::collections::BTreeMap;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env()?;
     let model = models::by_name(&args.str_or("model", "OPT-6.7B"))
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+        .ok_or_else(|| anyhow!("unknown model"))?;
     let l = args.usize_or("context", 1024)?;
     let rows = args.usize_or("rows", 32)?;
     let cols = args.usize_or("cols", 32)?;

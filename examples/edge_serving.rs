@@ -14,10 +14,11 @@ use pim_llm::models;
 use pim_llm::runtime::Engine;
 use pim_llm::serving::{LatencyStats, Policy, Request, Server};
 use pim_llm::util::cli::Args;
+use pim_llm::util::error::Result;
 use pim_llm::util::rng::Rng;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env()?;
     let n_requests = args.usize_or("requests", 32)?;
     let prompt_len = args.usize_or("prompt-len", 8)?;
@@ -29,7 +30,8 @@ fn main() -> anyhow::Result<()> {
     // ----------------------------------------------------------------
     let engine = Engine::load_default()?;
     println!(
-        "engine up: platform={} tiny-1bit d={} ({} layers)",
+        "engine up: backend={} platform={} tiny-1bit d={} ({} layers)",
+        engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.n_layers

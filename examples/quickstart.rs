@@ -2,18 +2,21 @@
 //!
 //! 1. Simulate one decode step of OPT-6.7B on the hybrid architecture
 //!    and on the TPU-LLM baseline (the paper's headline comparison).
-//! 2. Load the AOT-compiled tiny 1-bit decoder (JAX/Pallas -> HLO text
-//!    -> PJRT) and generate real tokens, validating against the golden
-//!    generation recorded at compile time.
+//! 2. Load the tiny 1-bit decoder and generate real tokens, validating
+//!    against the golden generation. With AOT artifacts present (`make
+//!    artifacts`) that is the JAX-lowered model; without them a
+//!    synthetic model runs on the pure-Rust reference backend, so this
+//!    example works fully offline.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, Arch};
 use pim_llm::models;
 use pim_llm::runtime::{decoder, Engine, TinyDecoder};
+use pim_llm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---------------------------------------------------------------
     // Part 1: performance model — one decode step on both architectures.
     // ---------------------------------------------------------------
@@ -42,10 +45,11 @@ fn main() -> anyhow::Result<()> {
     // ---------------------------------------------------------------
     // Part 2: functional path — real numerics through PJRT.
     // ---------------------------------------------------------------
-    println!("\n== functional tiny-1bit decoder (PJRT) ==");
+    println!("\n== functional tiny-1bit decoder ==");
     let engine = Engine::load_default()?;
     println!(
-        "platform {} | d={} h={} layers={} vocab={}",
+        "backend {} platform {} | d={} h={} layers={} vocab={}",
+        engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.h,

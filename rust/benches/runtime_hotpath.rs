@@ -1,27 +1,40 @@
-//! Bench for the L3 runtime hot path: PJRT decode-step execution, cache
-//! literal construction, and the serving loop — the targets of the perf
-//! pass (EXPERIMENTS.md §Perf).
+//! Bench for the L3 runtime hot path: decode-step execution, cache
+//! construction, and the serving loop — the targets of the perf pass
+//! (EXPERIMENTS.md §Perf).
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench runtime_hotpath`
+//! Runs offline on the synthetic tiny model / reference backend; with
+//! `make artifacts` the real AOT decoder is benched instead (and with
+//! `--features pjrt` + `PIM_LLM_BACKEND=pjrt`, the PJRT engine).
+//!
+//! Run: `cargo bench --bench runtime_hotpath`
 
 use pim_llm::runtime::{artifacts, Artifacts, Engine, TinyDecoder};
 use pim_llm::serving::{Policy, Request, Server};
 use pim_llm::util::bench::{black_box, Bench};
+use pim_llm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = artifacts::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first; skipping");
-        return Ok(());
-    }
+    let have_real = dir.join("manifest.json").exists();
 
     let mut b = Bench::quick();
 
-    // Artifact load + engine compile (cold-start cost).
-    b.run("runtime/artifacts_load", || {
-        black_box(Artifacts::load(&dir).unwrap())
-    });
-    let engine = Engine::load(Artifacts::load(&dir)?)?;
+    // Artifact acquisition (cold-start cost).
+    if have_real {
+        b.run("runtime/artifacts_load", || {
+            black_box(Artifacts::load(&dir).unwrap())
+        });
+    } else {
+        b.run("runtime/artifacts_synthesize", || {
+            black_box(Artifacts::synthetic(0).unwrap())
+        });
+    }
+    let engine = Engine::load_default()?;
+    println!(
+        "engine: backend={} platform={}",
+        engine.backend_name(),
+        engine.platform()
+    );
 
     // Single decode step (the per-token cost on the request path).
     b.run("runtime/decode_step", || {

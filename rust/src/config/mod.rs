@@ -8,8 +8,8 @@
 //! `configs/calibrated_45nm.toml` and experiments are reproducible from a
 //! checked-in file rather than magic numbers.
 
+use crate::util::error::{Context, Result};
 use crate::util::toml;
-use anyhow::{Context, Result};
 use std::path::Path;
 
 /// Override helpers: apply a TOML key if present.

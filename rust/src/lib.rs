@@ -24,8 +24,10 @@
 //!   array, plus the TPU-LLM baseline scheduler.
 //! * [`analysis`]   — figure/table generators (Fig. 1b, 4–8, Table III)
 //!   with paper-reference values for shape comparison.
-//! * [`runtime`]    — PJRT (xla crate) loader/executor for the AOT-lowered
-//!   1-bit decoder; the functional numerics path.
+//! * [`runtime`]    — loader/executor for the AOT-lowered 1-bit decoder
+//!   (the functional numerics path) behind a pluggable `Backend`: a
+//!   pure-Rust reference executor by default, the PJRT (xla crate)
+//!   engine behind the off-by-default `pjrt` feature.
 //! * [`serving`]    — threaded request queue + batcher for the edge-serving
 //!   example.
 //!

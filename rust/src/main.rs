@@ -5,14 +5,14 @@
 //!   energy ledger, throughput/efficiency metrics.
 //! * `sweep`     — regenerate any paper figure/table (fig1b, fig4, fig5,
 //!   fig6, fig7, fig8, table3, or `all`).
-//! * `serve`     — end-to-end functional serving on the AOT-compiled
-//!   tiny 1-bit decoder via PJRT (requires `make artifacts`).
-//! * `validate`  — golden-token check: rust+PJRT must reproduce the JAX
-//!   generation exactly.
+//! * `serve`     — end-to-end functional serving on the tiny 1-bit
+//!   decoder (AOT artifacts when present, else the synthetic offline
+//!   model) through the configured runtime backend.
+//! * `validate`  — golden-token check: the runtime must reproduce the
+//!   recorded golden generation exactly.
 //! * `generate`  — latency/energy of a full autoregressive generation on
 //!   the simulated hardware.
 
-use anyhow::{anyhow, Result};
 use pim_llm::analysis::{figures, report};
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, token_loop, Arch};
@@ -20,6 +20,7 @@ use pim_llm::models;
 use pim_llm::runtime::{decoder, Engine};
 use pim_llm::serving::{LatencyStats, Policy, Request, Server};
 use pim_llm::util::cli::Args;
+use pim_llm::util::error::{anyhow, Result};
 use std::time::Instant;
 
 const USAGE: &str = "\
@@ -172,7 +173,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let engine = Engine::load_default()?;
     println!(
-        "engine: platform={} model=tiny-1bit (d={}, {} layers)",
+        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers)",
+        engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.n_layers

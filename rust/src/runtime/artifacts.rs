@@ -7,8 +7,8 @@
 //! `python/compile/aot.py` lowered it. Parsed with the in-crate JSON
 //! parser (`util::json`).
 
+use crate::util::error::{bail, Context, Result};
 use crate::util::json::{self, Json};
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Model hyper-parameters recorded by the AOT step (mirror of
@@ -234,6 +234,169 @@ impl Artifacts {
         let m = &self.manifest.model;
         [m.n_layers, m.h, m.max_ctx, m.d / m.h]
     }
+
+    /// Build a fully in-memory synthetic artifact set: a tiny random
+    /// 1-bit decoder in the exact manifest layout `python/compile/aot.py`
+    /// emits (same parameter order and naming as `model.py`), with the
+    /// golden generation produced by the in-crate reference executor.
+    ///
+    /// This is what makes the functional path (decoder, serving, CLI
+    /// `serve`/`validate`, runtime benches) exercisable OFFLINE with no
+    /// `make artifacts` step. There is no HLO text, so the PJRT backend
+    /// cannot load synthetic artifacts — use the real AOT output for
+    /// that.
+    pub fn synthetic(seed: u64) -> Result<Self> {
+        use crate::util::rng::Rng;
+
+        // Tiny-but-real decoder shape (small enough for debug-mode test
+        // runs; same structure as model.py's TINY config).
+        let model = ModelInfo {
+            vocab: 64,
+            d: 32,
+            h: 4,
+            d_ff: 64,
+            n_layers: 2,
+            max_ctx: 32,
+            eps: 1e-5,
+        };
+        let mut rng = Rng::new(seed ^ 0x5EED_1B17_C0DE_CAFE);
+
+        struct Builder {
+            params: Vec<ParamEntry>,
+            weights: Vec<f32>,
+        }
+        impl Builder {
+            fn push(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+                let numel = shape.iter().product::<usize>().max(1);
+                assert_eq!(numel, data.len(), "{name}");
+                self.params.push(ParamEntry {
+                    name: name.to_string(),
+                    shape,
+                    offset: self.weights.len(),
+                    numel,
+                });
+                self.weights.extend_from_slice(&data);
+            }
+        }
+
+        // BitNet-b1.58 ternary quantization of a random master weight
+        // (ref.py::weight_quant_ternary): scale = mean(|W|),
+        // W_q = clip(round(W/scale), -1, 1).
+        let ternary = |rng: &mut Rng, fan_in: usize, numel: usize| -> (Vec<f32>, f32) {
+            let master: Vec<f32> = (0..numel)
+                .map(|_| (rng.normal() / (fan_in as f64).sqrt()) as f32)
+                .collect();
+            let scale = (master.iter().map(|w| w.abs()).sum::<f32>()
+                / numel as f32)
+                .max(1e-5);
+            let q: Vec<f32> = master
+                .iter()
+                .map(|w| (w / scale).round().clamp(-1.0, 1.0))
+                .collect();
+            (q, scale)
+        };
+
+        let (d, dff, v) = (model.d, model.d_ff, model.vocab);
+        let mut b = Builder {
+            params: Vec::new(),
+            weights: Vec::new(),
+        };
+        for layer in 0..model.n_layers {
+            let l = format!("layer{layer}.");
+            b.push(&format!("{l}ln1_gamma"), vec![d], vec![1.0; d]);
+            for name in ["wq", "wk", "wv", "wx"] {
+                let (q, s) = ternary(&mut rng, d, d * d);
+                b.push(&format!("{l}{name}"), vec![d, d], q);
+                b.push(&format!("{l}{name}_scale"), vec![], vec![s]);
+            }
+            b.push(&format!("{l}ln2_gamma"), vec![d], vec![1.0; d]);
+            let (q, s) = ternary(&mut rng, d, d * dff);
+            b.push(&format!("{l}w_in"), vec![d, dff], q);
+            b.push(&format!("{l}w_in_scale"), vec![], vec![s]);
+            let (q, s) = ternary(&mut rng, dff, dff * d);
+            b.push(&format!("{l}w_out"), vec![dff, d], q);
+            b.push(&format!("{l}w_out_scale"), vec![], vec![s]);
+        }
+        let emb: Vec<f32> = (0..v * d).map(|_| 0.02 * rng.normal() as f32).collect();
+        b.push("embedding", vec![v, d], emb);
+        b.push("lnf_gamma", vec![d], vec![1.0; d]);
+        let (q, s) = ternary(&mut rng, d, d * v);
+        b.push("w_head", vec![d, v], q);
+        b.push("w_head_scale", vec![], vec![s]);
+
+        let mut arg_order: Vec<String> = b.params.iter().map(|p| p.name.clone()).collect();
+        arg_order.extend(
+            ["k_caches", "v_caches", "token_id", "pos"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let total_floats = b.weights.len();
+
+        let prompt: Vec<i32> = vec![1, 2, 3];
+        let n_new = 4usize;
+        let mut a = Artifacts {
+            dir: PathBuf::from("<synthetic>"),
+            manifest: Manifest {
+                model,
+                seed,
+                entry: "decode_step".to_string(),
+                arg_order,
+                outputs: vec![
+                    "logits".to_string(),
+                    "k_caches".to_string(),
+                    "v_caches".to_string(),
+                ],
+                params: b.params,
+                total_floats,
+            },
+            golden: Golden {
+                prompt: prompt.clone(),
+                n_new: 0,
+                tokens: prompt.clone(),
+                first_logits_prefix: Vec::new(),
+                first_logits_l2: 1.0,
+            },
+            weights: b.weights,
+        };
+        a.validate().context("synthetic manifest inconsistent")?;
+
+        // Produce the golden generation through the real decode loop
+        // (TinyDecoder on the reference backend) — one source of truth
+        // for greedy decoding incl. argmax tie-breaking, and the same
+        // numerics the default backend runs, so `validate` closes the
+        // loop end to end.
+        let engine = crate::runtime::Engine::load_with(
+            a.clone(),
+            crate::runtime::BackendKind::Reference,
+        )?;
+        let mut dec = crate::runtime::TinyDecoder::new(&engine)?;
+        let mut first_logits: Vec<f32> = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            dec.feed(t)?;
+            if pos == 0 {
+                first_logits = dec.last_logits.clone();
+            }
+        }
+        for _ in 0..n_new {
+            let next = dec.greedy_next();
+            dec.feed(next)?;
+        }
+        let tokens = dec.tokens.clone();
+        let l2: f64 = first_logits
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        a.golden = Golden {
+            prompt,
+            n_new,
+            tokens,
+            first_logits_prefix: first_logits.into_iter().take(8).collect(),
+            first_logits_l2: l2,
+        };
+        a.validate()?;
+        Ok(a)
+    }
 }
 
 /// Default artifact directory relative to the repo root.
@@ -286,6 +449,33 @@ mod tests {
         let result = Artifacts::load(&tmp);
         std::fs::remove_dir_all(&tmp).ok();
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn synthetic_artifacts_validate_and_are_deterministic() {
+        let a = Artifacts::synthetic(7).unwrap();
+        assert_eq!(a.manifest.entry, "decode_step");
+        assert_eq!(
+            a.golden.tokens.len(),
+            a.golden.prompt.len() + a.golden.n_new
+        );
+        assert_eq!(a.weights.len(), a.manifest.total_floats);
+        // Ternary projection weights are in {-1, 0, 1}.
+        let wq = a
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == "layer0.wq")
+            .unwrap();
+        for &w in a.param_data(wq) {
+            assert!(w == -1.0 || w == 0.0 || w == 1.0);
+        }
+        // Same seed -> bit-identical artifacts; different seed differs.
+        let b = Artifacts::synthetic(7).unwrap();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.golden.tokens, b.golden.tokens);
+        let c = Artifacts::synthetic(8).unwrap();
+        assert_ne!(a.weights, c.weights);
     }
 
     #[test]

@@ -1,0 +1,57 @@
+//! The execution-backend abstraction of the functional runtime.
+//!
+//! The decode-step numerics can be executed by more than one engine
+//! (HPIM and LEAP structure their simulators the same way):
+//!
+//! * [`crate::runtime::reference`] — pure-Rust reference executor
+//!   mirroring `python/compile/kernels/ref.py`; the DEFAULT, builds and
+//!   runs offline with zero dependencies.
+//! * [`crate::runtime::pjrt`] — the XLA/PJRT engine executing the
+//!   AOT-lowered HLO; behind the off-by-default `pjrt` Cargo feature
+//!   because the `xla` crate needs network access to build.
+//!
+//! Callers (decoder, serving, CLI) talk to [`crate::runtime::Engine`],
+//! which owns a `Box<dyn Backend>`; KV caches are opaque [`Caches`]
+//! values threaded between steps, so backends can keep state wherever
+//! it lives naturally (host vectors vs device buffers).
+
+use crate::util::error::Result;
+
+/// KV-cache state threaded between decode steps. Opaque to callers:
+/// obtain from [`Backend::empty_caches`], pass to
+/// [`Backend::decode_step`], which consumes it and returns the successor.
+pub enum Caches {
+    /// Host-resident caches of the reference backend; each of `k`/`v` is
+    /// the flattened `(n_layers, h, max_ctx, d_head)` tensor, row-major.
+    Host { k: Vec<f32>, v: Vec<f32> },
+    /// Device-resident PJRT buffers (never copied to the host on the
+    /// request path).
+    #[cfg(feature = "pjrt")]
+    Device {
+        k: xla::PjRtBuffer,
+        v: xla::PjRtBuffer,
+    },
+}
+
+/// Outputs of one decode step.
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub caches: Caches,
+}
+
+/// One execution engine for the decode step.
+pub trait Backend {
+    /// Short identifier: "reference" or "pjrt".
+    fn name(&self) -> &'static str;
+
+    /// Platform string (mirrors PJRT's platform_name, e.g. "cpu").
+    fn platform(&self) -> String;
+
+    /// Fresh zeroed KV caches in this backend's native representation.
+    fn empty_caches(&self) -> Result<Caches>;
+
+    /// Execute one decode step: feed token `token_id` at position `pos`
+    /// with the given caches; returns logits + updated caches. Consumes
+    /// the caches (they are superseded by the returned ones).
+    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput>;
+}

@@ -1,182 +1,123 @@
-//! The PJRT execution engine: compile the decode-step HLO once, stage
-//! the weights **on device once** (`buffer_from_host_buffer`, whose
-//! kImmutableOnlyDuringCall semantics copy synchronously), and run each
-//! generated token through `execute_b` with device-resident buffers.
+//! The runtime engine facade: artifacts + a boxed [`Backend`] chosen at
+//! load time.
 //!
-//! Perf note (EXPERIMENTS.md §Perf): the naive path executed with host
-//! literals, which re-uploads all ~6.8 MB of weights every decode step.
-//! Staging weights as PjRtBuffers at load time and threading the KV
-//! caches through as buffers removes that copy from the request path —
-//! only the two scalars (token, pos) are uploaded per step and only the
-//! logits are downloaded.
+//! The default backend is the pure-Rust [`super::reference`] executor,
+//! which builds and runs offline. With the `pjrt` Cargo feature enabled
+//! (plus the `xla` dependency — see Cargo.toml), the XLA/PJRT engine is
+//! available behind [`BackendKind::Pjrt`] or `PIM_LLM_BACKEND=pjrt`.
 //!
-//! Interchange is HLO *text* — see aot.py and /opt/xla-example/README.md
-//! for why serialized protos from jax >= 0.5 are rejected by
-//! xla_extension 0.5.1.
+//! Callers (decoder, serving, CLI, benches) only see `Engine`; the KV
+//! caches they thread between steps are the opaque [`Caches`] values of
+//! whichever backend is active.
 
 use super::artifacts::Artifacts;
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use super::backend::{Backend, Caches, StepOutput};
+use crate::util::error::{Context, Result};
+use std::sync::Arc;
 
-/// Compiled decode-step executable plus everything static across tokens.
+/// Which execution backend to load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust reference executor (the offline default).
+    Reference,
+    /// XLA/PJRT engine executing the AOT-lowered HLO.
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Resolve from `PIM_LLM_BACKEND` (unset/"reference" -> Reference;
+    /// "pjrt" -> Pjrt when the feature is compiled in, error otherwise).
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("PIM_LLM_BACKEND").ok().as_deref() {
+            None | Some("") | Some("reference") => Ok(BackendKind::Reference),
+            #[cfg(feature = "pjrt")]
+            Some("pjrt") => Ok(BackendKind::Pjrt),
+            Some(other) => {
+                // With the feature on, "pjrt" is matched above, so this
+                // branch only fires for it on feature-less builds.
+                if other == "pjrt" {
+                    crate::bail!(
+                        "PIM_LLM_BACKEND=pjrt needs a build with --features pjrt \
+                         (see rust/README.md for the build matrix)"
+                    );
+                }
+                crate::bail!("unknown PIM_LLM_BACKEND '{other}' (reference | pjrt)")
+            }
+        }
+    }
+}
+
+/// Loaded model + execution backend; one `decode_step` per generated
+/// token.
 pub struct Engine {
-    client: PjRtClient,
-    exe: PjRtLoadedExecutable,
-    /// Device-resident parameter buffers in manifest order (staged once).
-    param_buffers: Vec<PjRtBuffer>,
-    pub artifacts: Artifacts,
-}
-
-/// Device-side KV caches threaded between steps (opaque to callers).
-pub struct Caches {
-    pub k: PjRtBuffer,
-    pub v: PjRtBuffer,
-}
-
-/// Outputs of one decode step.
-pub struct StepOutput {
-    pub logits: Vec<f32>,
-    pub caches: Caches,
+    pub artifacts: Arc<Artifacts>,
+    backend: Box<dyn Backend>,
 }
 
 impl Engine {
-    /// Load artifacts, compile the HLO on the CPU PJRT client, stage the
-    /// weights on device.
+    /// Load with the backend selected by `PIM_LLM_BACKEND` (reference by
+    /// default).
     pub fn load(artifacts: Artifacts) -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        let proto = HloModuleProto::from_text_file(artifacts.hlo_path())
-            .map_err(|e| anyhow!("parsing HLO text: {e}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling decode_step: {e}"))?;
-
-        // buffer_from_host_buffer uses kImmutableOnlyDuringCall semantics:
-        // the copy completes during the call, so the host slices may be
-        // dropped afterwards (BufferFromHostLiteral, by contrast, copies
-        // asynchronously and would require keeping the literals alive).
-        let mut param_buffers = Vec::with_capacity(artifacts.manifest.params.len());
-        for p in &artifacts.manifest.params {
-            let data = artifacts.param_data(p);
-            let dims: Vec<usize> = p.shape.clone();
-            let buf = client
-                .buffer_from_host_buffer(data, &dims, None)
-                .map_err(|e| anyhow!("staging {}: {e}", p.name))?;
-            param_buffers.push(buf);
-        }
-
-        Ok(Self {
-            client,
-            exe,
-            param_buffers,
-            artifacts,
-        })
+        Self::load_with(artifacts, BackendKind::from_env()?)
     }
 
-    /// Load from the default `artifacts/` directory.
+    /// Load with an explicit backend.
+    pub fn load_with(artifacts: Artifacts, kind: BackendKind) -> Result<Self> {
+        let artifacts = Arc::new(artifacts);
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Reference => Box::new(
+                super::reference::ReferenceBackend::new(Arc::clone(&artifacts))?,
+            ),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                Box::new(super::pjrt::PjrtBackend::new(Arc::clone(&artifacts))?)
+            }
+        };
+        Ok(Self { artifacts, backend })
+    }
+
+    /// Load from the default `artifacts/` directory; if no AOT artifacts
+    /// exist there, fall back to the in-memory synthetic tiny model so
+    /// the functional path still runs offline. The fallback only applies
+    /// to the reference backend — PJRT needs the real HLO text, so a
+    /// non-reference selection without artifacts is a clear error rather
+    /// than a confusing HLO-parse failure later.
     pub fn load_default() -> Result<Self> {
-        let artifacts = Artifacts::load(super::artifacts::default_dir())
-            .context("loading artifacts (run `make artifacts`)")?;
-        Self::load(artifacts)
+        let kind = BackendKind::from_env()?;
+        let dir = super::artifacts::default_dir();
+        if dir.join("manifest.json").exists() {
+            let artifacts = Artifacts::load(dir)
+                .context("loading artifacts (run `make artifacts`)")?;
+            Self::load_with(artifacts, kind)
+        } else if kind != BackendKind::Reference {
+            crate::bail!(
+                "backend {kind:?} requires real AOT artifacts at {} — run `make \
+                 artifacts` first (only the reference backend has a synthetic \
+                 fallback)",
+                dir.display()
+            )
+        } else {
+            eprintln!(
+                "note: no AOT artifacts at {} — using the built-in synthetic tiny \
+                 model on the reference backend (run `make artifacts` for the real \
+                 AOT decoder)",
+                dir.display()
+            );
+            Self::load_with(Artifacts::synthetic(0)?, kind)
+        }
     }
 
-    /// Fresh zeroed device-side KV caches.
+    /// Fresh zeroed KV caches in the backend's native representation.
     pub fn empty_caches(&self) -> Result<Caches> {
-        let shape = self.artifacts.cache_shape();
-        let numel: usize = shape.iter().product();
-        let zeros = vec![0f32; numel];
-        let k = self
-            .client
-            .buffer_from_host_buffer(&zeros, &shape, None)
-            .map_err(|e| anyhow!("cache upload: {e}"))?;
-        let v = self
-            .client
-            .buffer_from_host_buffer(&zeros, &shape, None)
-            .map_err(|e| anyhow!("cache upload: {e}"))?;
-        Ok(Caches { k, v })
-    }
-
-    /// Upload a scalar i32 as a device buffer (synchronous copy).
-    fn scalar_buffer(&self, v: i32) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(&[v], &[], None)
-            .map_err(|e| anyhow!("scalar upload: {e}"))
+        self.backend.empty_caches()
     }
 
     /// Execute one decode step: feed token `token_id` at position `pos`
     /// with the given caches; returns logits + updated caches. Consumes
     /// the caches (they are superseded by the returned ones).
     pub fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
-        let tok = self.scalar_buffer(token_id)?;
-        let p = self.scalar_buffer(pos)?;
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.param_buffers.len() + 4);
-        args.extend(self.param_buffers.iter());
-        args.push(&caches.k);
-        args.push(&caches.v);
-        args.push(&tok);
-        args.push(&p);
-
-        let mut result = self
-            .exe
-            .execute_b::<&PjRtBuffer>(&args)
-            .map_err(|e| anyhow!("decode_step execute: {e}"))?;
-        let outputs = result.swap_remove(0);
-        self.unpack_outputs(outputs)
-    }
-
-    /// PJRT may flatten the (logits, k, v) output tuple into three
-    /// buffers or hand back a single tuple buffer depending on the
-    /// client; handle both.
-    fn unpack_outputs(&self, mut outputs: Vec<PjRtBuffer>) -> Result<StepOutput> {
-        match outputs.len() {
-            3 => {
-                let v = outputs.pop().unwrap();
-                let k = outputs.pop().unwrap();
-                let logits_buf = outputs.pop().unwrap();
-                let logits = logits_buf
-                    .to_literal_sync()
-                    .map_err(|e| anyhow!("logits fetch: {e}"))?
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("logits to_vec: {e}"))?;
-                Ok(StepOutput {
-                    logits,
-                    caches: Caches { k, v },
-                })
-            }
-            1 => {
-                // Tuple buffer: download, split, re-upload the caches.
-                let out = outputs.pop().unwrap();
-                let lit = out
-                    .to_literal_sync()
-                    .map_err(|e| anyhow!("tuple fetch: {e}"))?;
-                let (logits_lit, k_lit, v_lit) = lit
-                    .to_tuple3()
-                    .map_err(|e| anyhow!("output tuple: {e}"))?;
-                let logits = logits_lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("logits to_vec: {e}"))?;
-                let shape = self.artifacts.cache_shape();
-                let k_host = k_lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("cache download: {e}"))?;
-                let v_host = v_lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("cache download: {e}"))?;
-                let k = self
-                    .client
-                    .buffer_from_host_buffer(&k_host, &shape, None)
-                    .map_err(|e| anyhow!("cache re-upload: {e}"))?;
-                let v = self
-                    .client
-                    .buffer_from_host_buffer(&v_host, &shape, None)
-                    .map_err(|e| anyhow!("cache re-upload: {e}"))?;
-                Ok(StepOutput {
-                    logits,
-                    caches: Caches { k, v },
-                })
-            }
-            n => bail!("unexpected output arity {n}"),
-        }
+        self.backend.decode_step(caches, token_id, pos)
     }
 
     pub fn vocab(&self) -> usize {
@@ -188,26 +129,28 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
+    }
+
+    /// Short backend identifier: "reference" or "pjrt".
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::default_dir;
 
-    fn engine() -> Option<Engine> {
-        if !default_dir().join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        Some(Engine::load_default().expect("engine"))
+    fn engine() -> Engine {
+        Engine::load_with(Artifacts::synthetic(1).unwrap(), BackendKind::Reference)
+            .expect("engine")
     }
 
     #[test]
-    fn engine_compiles_and_steps() {
-        let Some(e) = engine() else { return };
+    fn engine_loads_and_steps_offline() {
+        let e = engine();
+        assert_eq!(e.backend_name(), "reference");
         assert_eq!(e.platform(), "cpu");
         let caches = e.empty_caches().unwrap();
         let out = e.decode_step(caches, 1, 0).unwrap();
@@ -216,11 +159,30 @@ mod tests {
     }
 
     #[test]
+    fn decode_step_deterministic() {
+        let e = engine();
+        let a = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
+        let b = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn cache_buffers_thread_state() {
+        // Feeding [1] then [2] must differ from feeding [2] fresh.
+        let e = engine();
+        let s1 = e.decode_step(e.empty_caches().unwrap(), 1, 0).unwrap();
+        let s2 = e.decode_step(s1.caches, 2, 1).unwrap();
+        let fresh = e.decode_step(e.empty_caches().unwrap(), 2, 0).unwrap();
+        assert_ne!(s2.logits, fresh.logits);
+    }
+
+    #[test]
     fn decode_step_matches_golden_first_logits() {
-        let Some(e) = engine() else { return };
-        let caches = e.empty_caches().unwrap();
+        let e = engine();
         let g = e.artifacts.golden.clone();
-        let out = e.decode_step(caches, g.prompt[0], 0).unwrap();
+        let out = e
+            .decode_step(e.empty_caches().unwrap(), g.prompt[0], 0)
+            .unwrap();
         for (got, want) in out.logits.iter().zip(g.first_logits_prefix.iter()) {
             assert!(
                 (got - want).abs() <= 1e-4 * want.abs().max(1.0),
@@ -237,20 +199,12 @@ mod tests {
     }
 
     #[test]
-    fn decode_step_deterministic() {
-        let Some(e) = engine() else { return };
-        let a = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
-        let b = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
-        assert_eq!(a.logits, b.logits);
-    }
-
-    #[test]
-    fn cache_buffers_thread_state() {
-        // Feeding [1] then [2] must differ from feeding [2] fresh.
-        let Some(e) = engine() else { return };
-        let s1 = e.decode_step(e.empty_caches().unwrap(), 1, 0).unwrap();
-        let s2 = e.decode_step(s1.caches, 2, 1).unwrap();
-        let fresh = e.decode_step(e.empty_caches().unwrap(), 2, 0).unwrap();
-        assert_ne!(s2.logits, fresh.logits);
+    fn engines_agree_across_instances() {
+        // Two engines from the same artifacts must agree bitwise.
+        let e1 = engine();
+        let e2 = engine();
+        let o1 = e1.decode_step(e1.empty_caches().unwrap(), 42, 0).unwrap();
+        let o2 = e2.decode_step(e2.empty_caches().unwrap(), 42, 0).unwrap();
+        assert_eq!(o1.logits, o2.logits);
     }
 }

@@ -1,16 +1,28 @@
-//! PJRT runtime: loads the AOT-lowered 1-bit decoder (HLO text) and
-//! executes it on the `xla` crate's CPU PJRT client — the functional
-//! numerics path of the system. Python never runs here.
+//! Functional runtime: loads the AOT artifacts of the 1-bit decoder and
+//! executes decode steps through a pluggable [`Backend`]. Python never
+//! runs here.
 //!
-//! * [`artifacts`] — manifest/weights/golden parsing + validation.
-//! * [`engine`]    — compiled executable + device-resident weights; one
-//!   `decode_step` call per generated token.
+//! * [`artifacts`] — manifest/weights/golden parsing + validation, plus
+//!   an offline synthetic artifact generator.
+//! * [`backend`]   — the `Backend` trait and the opaque `Caches` /
+//!   `StepOutput` types threaded between steps.
+//! * [`reference`] — pure-Rust reference executor (ref.py semantics);
+//!   the DEFAULT backend, zero dependencies, runs offline.
+//! * [`pjrt`]      — XLA/PJRT engine for the AOT-lowered HLO, behind
+//!   the off-by-default `pjrt` Cargo feature (the `xla` crate needs
+//!   network access to build — see Cargo.toml).
+//! * [`engine`]    — the facade callers use; picks a backend at load.
 //! * [`decoder`]   — greedy generation loop + golden validation.
 
 pub mod artifacts;
+pub mod backend;
 pub mod decoder;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 
 pub use artifacts::Artifacts;
+pub use backend::{Backend, Caches, StepOutput};
 pub use decoder::TinyDecoder;
-pub use engine::Engine;
+pub use engine::{BackendKind, Engine};

@@ -1,0 +1,245 @@
+//! The PJRT execution backend (behind the `pjrt` Cargo feature; needs
+//! the `xla` crate — see the dependency-policy note in Cargo.toml).
+//!
+//! Compiles the decode-step HLO once, stages the weights **on device
+//! once** (`buffer_from_host_buffer`, whose kImmutableOnlyDuringCall
+//! semantics copy synchronously), and runs each generated token through
+//! `execute_b` with device-resident buffers.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the naive path executed with host
+//! literals, which re-uploads all ~6.8 MB of weights every decode step.
+//! Staging weights as PjRtBuffers at load time and threading the KV
+//! caches through as buffers removes that copy from the request path —
+//! only the two scalars (token, pos) are uploaded per step and only the
+//! logits are downloaded.
+//!
+//! Interchange is HLO *text* — see aot.py and /opt/xla-example/README.md
+//! for why serialized protos from jax >= 0.5 are rejected by
+//! xla_extension 0.5.1.
+
+use super::artifacts::Artifacts;
+use super::backend::{Backend, Caches, StepOutput};
+use crate::util::error::{anyhow, bail, Result};
+use std::sync::Arc;
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compiled decode-step executable plus everything static across tokens.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    exe: PjRtLoadedExecutable,
+    /// Device-resident parameter buffers in manifest order (staged once).
+    param_buffers: Vec<PjRtBuffer>,
+    artifacts: Arc<Artifacts>,
+}
+
+impl PjrtBackend {
+    /// Compile the HLO on the CPU PJRT client, stage the weights on
+    /// device. Requires real AOT artifacts (`make artifacts`) — the
+    /// synthetic set has no HLO text.
+    pub fn new(artifacts: Arc<Artifacts>) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let proto = HloModuleProto::from_text_file(artifacts.hlo_path())
+            .map_err(|e| anyhow!("parsing HLO text: {e}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling decode_step: {e}"))?;
+
+        // buffer_from_host_buffer uses kImmutableOnlyDuringCall semantics:
+        // the copy completes during the call, so the host slices may be
+        // dropped afterwards (BufferFromHostLiteral, by contrast, copies
+        // asynchronously and would require keeping the literals alive).
+        let mut param_buffers = Vec::with_capacity(artifacts.manifest.params.len());
+        for p in &artifacts.manifest.params {
+            let data = artifacts.param_data(p);
+            let dims: Vec<usize> = p.shape.clone();
+            let buf = client
+                .buffer_from_host_buffer(data, &dims, None)
+                .map_err(|e| anyhow!("staging {}: {e}", p.name))?;
+            param_buffers.push(buf);
+        }
+
+        Ok(Self {
+            client,
+            exe,
+            param_buffers,
+            artifacts,
+        })
+    }
+
+    /// Upload a scalar i32 as a device buffer (synchronous copy).
+    fn scalar_buffer(&self, v: i32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow!("scalar upload: {e}"))
+    }
+
+    /// PJRT may flatten the (logits, k, v) output tuple into three
+    /// buffers or hand back a single tuple buffer depending on the
+    /// client; handle both.
+    fn unpack_outputs(&self, mut outputs: Vec<PjRtBuffer>) -> Result<StepOutput> {
+        match outputs.len() {
+            3 => {
+                let v = outputs.pop().unwrap();
+                let k = outputs.pop().unwrap();
+                let logits_buf = outputs.pop().unwrap();
+                let logits = logits_buf
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("logits fetch: {e}"))?
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("logits to_vec: {e}"))?;
+                Ok(StepOutput {
+                    logits,
+                    caches: Caches::Device { k, v },
+                })
+            }
+            1 => {
+                // Tuple buffer: download, split, re-upload the caches.
+                let out = outputs.pop().unwrap();
+                let lit = out
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("tuple fetch: {e}"))?;
+                let (logits_lit, k_lit, v_lit) = lit
+                    .to_tuple3()
+                    .map_err(|e| anyhow!("output tuple: {e}"))?;
+                let logits = logits_lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("logits to_vec: {e}"))?;
+                let shape = self.artifacts.cache_shape();
+                let k_host = k_lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("cache download: {e}"))?;
+                let v_host = v_lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("cache download: {e}"))?;
+                let k = self
+                    .client
+                    .buffer_from_host_buffer(&k_host, &shape, None)
+                    .map_err(|e| anyhow!("cache re-upload: {e}"))?;
+                let v = self
+                    .client
+                    .buffer_from_host_buffer(&v_host, &shape, None)
+                    .map_err(|e| anyhow!("cache re-upload: {e}"))?;
+                Ok(StepOutput {
+                    logits,
+                    caches: Caches::Device { k, v },
+                })
+            }
+            n => bail!("unexpected output arity {n}"),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn empty_caches(&self) -> Result<Caches> {
+        let shape = self.artifacts.cache_shape();
+        let numel: usize = shape.iter().product();
+        let zeros = vec![0f32; numel];
+        let k = self
+            .client
+            .buffer_from_host_buffer(&zeros, &shape, None)
+            .map_err(|e| anyhow!("cache upload: {e}"))?;
+        let v = self
+            .client
+            .buffer_from_host_buffer(&zeros, &shape, None)
+            .map_err(|e| anyhow!("cache upload: {e}"))?;
+        Ok(Caches::Device { k, v })
+    }
+
+    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
+        let (cache_k, cache_v) = match caches {
+            Caches::Device { k, v } => (k, v),
+            Caches::Host { .. } => bail!("pjrt backend received host-resident caches"),
+        };
+        let tok = self.scalar_buffer(token_id)?;
+        let p = self.scalar_buffer(pos)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.param_buffers.len() + 4);
+        args.extend(self.param_buffers.iter());
+        args.push(&cache_k);
+        args.push(&cache_v);
+        args.push(&tok);
+        args.push(&p);
+
+        let mut result = self
+            .exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("decode_step execute: {e}"))?;
+        let outputs = result.swap_remove(0);
+        self.unpack_outputs(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn backend() -> Option<PjrtBackend> {
+        if !default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let artifacts = Arc::new(Artifacts::load(default_dir()).expect("artifacts"));
+        Some(PjrtBackend::new(artifacts).expect("pjrt backend"))
+    }
+
+    #[test]
+    fn engine_compiles_and_steps() {
+        let Some(b) = backend() else { return };
+        assert_eq!(b.platform(), "cpu");
+        let caches = b.empty_caches().unwrap();
+        let out = b.decode_step(caches, 1, 0).unwrap();
+        assert_eq!(out.logits.len(), b.artifacts.manifest.model.vocab);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_step_matches_golden_first_logits() {
+        let Some(b) = backend() else { return };
+        let caches = b.empty_caches().unwrap();
+        let g = b.artifacts.golden.clone();
+        let out = b.decode_step(caches, g.prompt[0], 0).unwrap();
+        for (got, want) in out.logits.iter().zip(g.first_logits_prefix.iter()) {
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "{got} vs {want}"
+            );
+        }
+        let l2: f64 = out
+            .logits
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        assert!((l2 - g.first_logits_l2).abs() / g.first_logits_l2 < 1e-4);
+    }
+
+    #[test]
+    fn corrupt_hlo_rejected_at_load() {
+        // Failure injection: valid manifest/weights/golden but truncated
+        // HLO text must fail at PjrtBackend::new (the parse step).
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let tmp = std::env::temp_dir().join(format!("pimllm-hlo-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        for f in ["manifest.json", "golden.json", "weights.bin"] {
+            std::fs::copy(dir.join(f), tmp.join(f)).unwrap();
+        }
+        let hlo = std::fs::read_to_string(dir.join("decode_step.hlo.txt")).unwrap();
+        std::fs::write(tmp.join("decode_step.hlo.txt"), &hlo[..hlo.len() / 3]).unwrap();
+        let arts = Artifacts::load(&tmp).expect("artifacts themselves are valid");
+        let result = PjrtBackend::new(Arc::new(arts));
+        std::fs::remove_dir_all(&tmp).ok();
+        assert!(result.is_err(), "truncated HLO must not compile");
+    }
+}

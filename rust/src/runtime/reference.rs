@@ -1,0 +1,428 @@
+//! Pure-Rust reference executor for the 1-bit decode step — the default
+//! runtime backend of the offline build.
+//!
+//! Numerics mirror `python/compile/kernels/ref.py` + `model.py` exactly:
+//!
+//! * `act_quant_int8`  — absmax per-tensor symmetric int8 quantization.
+//! * `bitlinear`       — W1A8 projection: quantize → exact integer
+//!   matmul on f32 carriers → rescale (what one PIM bank computes).
+//! * `qmatmul`         — W8A8 activation-to-activation matmul (the
+//!   attention-head op PIM-LLM keeps on the systolic array).
+//! * RMSNorm / tanh-GELU / softmax in f32, like the paper's nonlinear
+//!   functional units.
+//!
+//! Quantized integer values are carried in f32; exact for |v| < 2^24,
+//! and the largest magnitude here is bounded by k_max * 127 * 127 with
+//! k <= 1024 for the AOT tiny model — inside the exact window (see the
+//! derivation in ref.py's module docstring).
+//!
+//! KV caches are host `Vec<f32>` tensors of shape
+//! `(n_layers, h, max_ctx, d_head)`, threaded through [`Caches::Host`].
+
+use super::artifacts::Artifacts;
+use super::backend::{Backend, Caches, StepOutput};
+use crate::util::error::{anyhow, ensure, Context, Result};
+use std::sync::Arc;
+
+/// Absmax per-tensor symmetric int8 quantization (ref.py::act_quant_int8):
+/// scale = 127 / max(|x|, eps); x_q = clip(round(x * scale), -128, 127).
+fn act_quant_int8(x: &[f32]) -> (Vec<f32>, f32) {
+    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = 127.0 / absmax.max(1e-5);
+    let q = x
+        .iter()
+        .map(|&v| (v * scale).round().clamp(-128.0, 127.0))
+        .collect();
+    (q, scale)
+}
+
+/// RMSNorm (model.py::rms_norm): x * rsqrt(mean(x^2) + eps) * gamma.
+fn rms_norm(x: &[f32], gamma: &[f32], eps: f32) -> Vec<f32> {
+    let var = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (var + eps).sqrt();
+    x.iter().zip(gamma).map(|(&v, &g)| v * r * g).collect()
+}
+
+/// Tanh-approximate GELU (jax.nn.gelu approximate=True).
+fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Numerically-stable softmax in place over `x`.
+fn softmax(x: &mut [f32]) {
+    let max = x.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// W1A8 projection (ref.py::bitlinear_ref): `x` (len k) through the
+/// ternary matrix `w` (k x n_out, row-major) with combined dequant
+/// rescale. One PIM-bank MVM.
+fn bitlinear(x: &[f32], w: &[f32], n_out: usize, w_scale: f32) -> Vec<f32> {
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n_out);
+    let (x_q, x_scale) = act_quant_int8(x);
+    let mut acc = vec![0.0f32; n_out];
+    for (kk, &xv) in x_q.iter().enumerate() {
+        if xv == 0.0 {
+            continue; // ternary-friendly: skip zero activations
+        }
+        let row = &w[kk * n_out..(kk + 1) * n_out];
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xv * wv;
+        }
+    }
+    let rescale = w_scale / x_scale;
+    for a in &mut acc {
+        *a *= rescale;
+    }
+    acc
+}
+
+/// Resolved parameter indices (into `manifest.params`) of one layer.
+struct LayerParams {
+    ln1_gamma: usize,
+    wq: usize,
+    wq_scale: usize,
+    wk: usize,
+    wk_scale: usize,
+    wv: usize,
+    wv_scale: usize,
+    wx: usize,
+    wx_scale: usize,
+    ln2_gamma: usize,
+    w_in: usize,
+    w_in_scale: usize,
+    w_out: usize,
+    w_out_scale: usize,
+}
+
+/// The reference backend: interprets the manifest/weights directly.
+pub struct ReferenceBackend {
+    artifacts: Arc<Artifacts>,
+    /// Per-layer parameter indices, resolved once at construction so the
+    /// per-token path does no name lookups or allocation.
+    layers: Vec<LayerParams>,
+    embedding: usize,
+    lnf_gamma: usize,
+    w_head: usize,
+    w_head_scale: usize,
+}
+
+impl ReferenceBackend {
+    pub fn new(artifacts: Arc<Artifacts>) -> Result<Self> {
+        // Resolve every parameter up front: a malformed manifest fails
+        // here, not mid-decode, and decode_step indexes straight into
+        // the manifest afterwards.
+        let find = |name: &str| -> Result<usize> {
+            artifacts
+                .manifest
+                .params
+                .iter()
+                .position(|p| p.name == name)
+                .ok_or_else(|| anyhow!("manifest missing parameter '{name}'"))
+        };
+        let scalar = |name: &str| -> Result<usize> {
+            let i = find(name)?;
+            ensure!(
+                artifacts.manifest.params[i].numel == 1,
+                "parameter '{name}' is not a scalar"
+            );
+            Ok(i)
+        };
+        let mut layers = Vec::with_capacity(artifacts.manifest.model.n_layers);
+        for layer in 0..artifacts.manifest.model.n_layers {
+            let l = |name: &str| format!("layer{layer}.{name}");
+            layers.push(LayerParams {
+                ln1_gamma: find(&l("ln1_gamma"))?,
+                wq: find(&l("wq"))?,
+                wq_scale: scalar(&l("wq_scale"))?,
+                wk: find(&l("wk"))?,
+                wk_scale: scalar(&l("wk_scale"))?,
+                wv: find(&l("wv"))?,
+                wv_scale: scalar(&l("wv_scale"))?,
+                wx: find(&l("wx"))?,
+                wx_scale: scalar(&l("wx_scale"))?,
+                ln2_gamma: find(&l("ln2_gamma"))?,
+                w_in: find(&l("w_in"))?,
+                w_in_scale: scalar(&l("w_in_scale"))?,
+                w_out: find(&l("w_out"))?,
+                w_out_scale: scalar(&l("w_out_scale"))?,
+            });
+        }
+        let embedding = find("embedding")?;
+        let lnf_gamma = find("lnf_gamma")?;
+        let w_head = find("w_head")?;
+        let w_head_scale = scalar("w_head_scale")?;
+        Ok(Self {
+            artifacts,
+            layers,
+            embedding,
+            lnf_gamma,
+            w_head,
+            w_head_scale,
+        })
+    }
+
+    /// Parameter tensor data by resolved index.
+    fn data(&self, idx: usize) -> &[f32] {
+        self.artifacts
+            .param_data(&self.artifacts.manifest.params[idx])
+    }
+
+    /// Scalar parameter (shape validated at construction).
+    fn scalar(&self, idx: usize) -> f32 {
+        self.data(idx)[0]
+    }
+
+    /// Multi-head attention over the (already updated) caches of one
+    /// layer — both matmuls through W8A8 qmatmul semantics, mirroring
+    /// model.py::_attention.
+    fn attention(
+        &self,
+        q: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        layer: usize,
+        pos: usize,
+    ) -> Vec<f32> {
+        let m = &self.artifacts.manifest.model;
+        let (h, max_ctx) = (m.h, m.max_ctx);
+        let dh = m.d / m.h;
+        let valid = pos + 1; // causal: slots [0, pos]
+        let mut out = vec![0.0f32; m.d];
+        for head in 0..h {
+            let base = (layer * h + head) * max_ctx * dh;
+            let k_head = &k_cache[base..base + valid * dh];
+            let v_head = &v_cache[base..base + valid * dh];
+            let q_head = &q[head * dh..(head + 1) * dh];
+
+            // Score = q . K^T, both operands int8-quantized (W8A8).
+            let (q_q, q_s) = act_quant_int8(q_head);
+            let (k_q, k_s) = act_quant_int8(k_head);
+            let inv_scale = 1.0 / (q_s * k_s);
+            let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+            let mut scores = vec![0.0f32; valid];
+            for (t, s) in scores.iter_mut().enumerate() {
+                let row = &k_q[t * dh..(t + 1) * dh];
+                let mut acc = 0.0f32;
+                for (a, b) in q_q.iter().zip(row) {
+                    acc += a * b;
+                }
+                *s = acc * inv_scale * inv_sqrt_dh;
+            }
+            softmax(&mut scores);
+
+            // Out = probs . V (W8A8 again).
+            let (p_q, p_s) = act_quant_int8(&scores);
+            let (v_q, v_s) = act_quant_int8(v_head);
+            let inv_scale = 1.0 / (p_s * v_s);
+            let o = &mut out[head * dh..(head + 1) * dh];
+            for (t, &pv) in p_q.iter().enumerate() {
+                if pv == 0.0 {
+                    continue;
+                }
+                let row = &v_q[t * dh..(t + 1) * dh];
+                for (oj, &vj) in o.iter_mut().zip(row) {
+                    *oj += pv * vj;
+                }
+            }
+            for oj in o.iter_mut() {
+                *oj *= inv_scale;
+            }
+        }
+        out
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    fn empty_caches(&self) -> Result<Caches> {
+        let numel: usize = self.artifacts.cache_shape().iter().product();
+        Ok(Caches::Host {
+            k: vec![0.0; numel],
+            v: vec![0.0; numel],
+        })
+    }
+
+    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
+        let (mut kc, mut vc) = match caches {
+            Caches::Host { k, v } => (k, v),
+            #[cfg(feature = "pjrt")]
+            Caches::Device { .. } => {
+                crate::bail!("reference backend received device-resident caches")
+            }
+        };
+        let m = self.artifacts.manifest.model.clone();
+        let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
+        let dh = d / h;
+        ensure!(pos >= 0, "negative position {pos}");
+        let pos = pos as usize;
+        ensure!(pos < max_ctx, "position {pos} >= max_ctx {max_ctx}");
+        let eps = m.eps as f32;
+
+        // Embed (XLA clamps out-of-range gather indices; mirror that).
+        let tok = (token_id.max(0) as usize).min(m.vocab - 1);
+        let embedding = self.data(self.embedding);
+        let mut x: Vec<f32> = embedding[tok * d..(tok + 1) * d].to_vec();
+
+        for (layer, lp) in self.layers.iter().enumerate() {
+            // --- attention sub-block (projections on PIM, W1A8) -------
+            let xn = rms_norm(&x, self.data(lp.ln1_gamma), eps);
+            let q = bitlinear(&xn, self.data(lp.wq), d, self.scalar(lp.wq_scale));
+            let k = bitlinear(&xn, self.data(lp.wk), d, self.scalar(lp.wk_scale));
+            let v = bitlinear(&xn, self.data(lp.wv), d, self.scalar(lp.wv_scale));
+
+            // Write this token's K/V into the caches at `pos` (the
+            // LPDDR-side concat of the paper; never touches RRAM).
+            for head in 0..h {
+                let base = ((layer * h + head) * max_ctx + pos) * dh;
+                kc[base..base + dh].copy_from_slice(&k[head * dh..(head + 1) * dh]);
+                vc[base..base + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
+            }
+
+            let att = self.attention(&q, &kc, &vc, layer, pos);
+            let att = bitlinear(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
+            for (xi, ai) in x.iter_mut().zip(&att) {
+                *xi += ai;
+            }
+
+            // --- feed-forward sub-block -------------------------------
+            let xn = rms_norm(&x, self.data(lp.ln2_gamma), eps);
+            let ff = bitlinear(&xn, self.data(lp.w_in), m.d_ff, self.scalar(lp.w_in_scale));
+            let ff: Vec<f32> = ff.into_iter().map(gelu).collect();
+            let ff = bitlinear(&ff, self.data(lp.w_out), d, self.scalar(lp.w_out_scale));
+            for (xi, fi) in x.iter_mut().zip(&ff) {
+                *xi += fi;
+            }
+        }
+
+        let x = rms_norm(&x, self.data(self.lnf_gamma), eps);
+        let logits = bitlinear(&x, self.data(self.w_head), m.vocab, self.scalar(self.w_head_scale));
+
+        Ok(StepOutput {
+            logits,
+            caches: Caches::Host { k: kc, v: vc },
+        })
+    }
+}
+
+/// Convenience: build the backend straight from artifacts.
+pub fn load(artifacts: Arc<Artifacts>) -> Result<ReferenceBackend> {
+    ReferenceBackend::new(artifacts).context("building reference backend")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::new(Arc::new(Artifacts::synthetic(3).unwrap())).unwrap()
+    }
+
+    #[test]
+    fn act_quant_matches_ref_py_semantics() {
+        let (q, s) = act_quant_int8(&[0.5, -1.0, 0.25]);
+        assert_eq!(s, 127.0);
+        assert_eq!(q, vec![64.0, -127.0, 32.0]);
+        // All-zero input: eps floor keeps the scale finite.
+        let (q0, s0) = act_quant_int8(&[0.0, 0.0]);
+        assert!(s0.is_finite() && s0 > 0.0);
+        assert_eq!(q0, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0];
+        softmax(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn bitlinear_identity_on_identity_matrix() {
+        // w = I (ternary-legal), scale chosen so rescale undoes x's
+        // quantization: y ~= x.
+        let n = 4;
+        let mut w = vec![0.0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0;
+        }
+        let x = vec![0.5, -0.25, 0.125, 1.0];
+        let y = bitlinear(&x, &w, n, 1.0);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_step_is_deterministic_and_finite() {
+        let b = backend();
+        let vocab = b.artifacts.manifest.model.vocab;
+        let o1 = b.decode_step(b.empty_caches().unwrap(), 5, 0).unwrap();
+        let o2 = b.decode_step(b.empty_caches().unwrap(), 5, 0).unwrap();
+        assert_eq!(o1.logits, o2.logits);
+        assert_eq!(o1.logits.len(), vocab);
+        assert!(o1.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn caches_carry_state() {
+        // Feeding [1] then [2] must differ from feeding [2] fresh.
+        let b = backend();
+        let s1 = b.decode_step(b.empty_caches().unwrap(), 1, 0).unwrap();
+        let s2 = b.decode_step(s1.caches, 2, 1).unwrap();
+        let fresh = b.decode_step(b.empty_caches().unwrap(), 2, 0).unwrap();
+        assert_ne!(s2.logits, fresh.logits);
+    }
+
+    #[test]
+    fn position_bounds_enforced() {
+        let b = backend();
+        let max_ctx = b.artifacts.manifest.model.max_ctx;
+        let r = b.decode_step(b.empty_caches().unwrap(), 0, max_ctx as i32);
+        assert!(r.is_err());
+        let r = b.decode_step(b.empty_caches().unwrap(), 0, -1);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn out_of_range_token_clamped_like_xla_gather() {
+        let b = backend();
+        let vocab = b.artifacts.manifest.model.vocab as i32;
+        let o = b
+            .decode_step(b.empty_caches().unwrap(), vocab + 500, 0)
+            .unwrap();
+        let edge = b
+            .decode_step(b.empty_caches().unwrap(), vocab - 1, 0)
+            .unwrap();
+        assert_eq!(o.logits, edge.logits);
+    }
+
+    #[test]
+    fn missing_parameter_rejected_at_load() {
+        let mut a = Artifacts::synthetic(4).unwrap();
+        let idx = a
+            .manifest
+            .params
+            .iter()
+            .position(|p| p.name == "layer1.wk")
+            .unwrap();
+        a.manifest.params[idx].name = "layer1.wk_gone".to_string();
+        assert!(ReferenceBackend::new(Arc::new(a)).is_err());
+    }
+}

@@ -1,18 +1,19 @@
-//! Edge-serving front end: a request queue feeding the PJRT engine, with
-//! FIFO admission, round-robin continuous batching across active
+//! Edge-serving front end: a request queue feeding the runtime engine,
+//! with FIFO admission, round-robin continuous batching across active
 //! sessions (the engine decodes one token per call, so "batching"
 //! interleaves sessions token-wise — exactly the one-token-per-iteration
 //! regime the paper's architecture is built for), and latency
-//! statistics. A threaded front end (`serve_threaded`) drives multiple
-//! engine replicas; the offline build has no tokio, so concurrency is
-//! std::thread-based (documented substitution — see Cargo.toml).
+//! statistics. A threaded front end (`serve_threaded_with`) drives
+//! multiple engine replicas; the offline build has no tokio, so
+//! concurrency is std::thread-based (documented substitution — see
+//! Cargo.toml).
 
 pub mod stats;
 
 pub use stats::LatencyStats;
 
 use crate::runtime::{Engine, TinyDecoder};
-use anyhow::Result;
+use crate::util::error::Result;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -139,16 +140,20 @@ impl<'e> Server<'e> {
 }
 
 /// Threaded front end: shard the request list across `workers` threads,
-/// each driving its **own engine replica** (the xla crate's PJRT handles
-/// are not `Sync`, so replication — one compiled executable per worker —
-/// is the sound multi-worker topology; it also mirrors a real deployment
-/// where each accelerator instance holds its own programmed crossbars).
-pub fn serve_threaded(
-    artifacts_dir: &std::path::Path,
+/// each driving its **own engine replica** built by `make_engine`
+/// (engine backends are not `Sync` — the pjrt feature's PJRT handles in
+/// particular — so replication, one engine per worker, is the sound
+/// multi-worker topology; it also mirrors a real deployment where each
+/// accelerator instance holds its own programmed crossbars).
+pub fn serve_threaded_with<F>(
+    make_engine: F,
     requests: Vec<Request>,
     workers: usize,
     max_active: usize,
-) -> Result<Vec<Response>> {
+) -> Result<Vec<Response>>
+where
+    F: Fn() -> Result<Engine> + Sync,
+{
     let workers = workers.clamp(1, requests.len().max(1));
     // Shard round-robin so load is balanced even with mixed lengths.
     let mut shards: Vec<Vec<Request>> = (0..workers).map(|_| Vec::new()).collect();
@@ -156,12 +161,12 @@ pub fn serve_threaded(
         shards[i % workers].push(r);
     }
     let results: Vec<Result<Vec<Response>>> = std::thread::scope(|scope| {
+        let make_engine = &make_engine;
         let handles: Vec<_> = shards
             .into_iter()
             .map(|shard| {
                 scope.spawn(move || {
-                    let artifacts = crate::runtime::Artifacts::load(artifacts_dir)?;
-                    let engine = Engine::load(artifacts)?;
+                    let engine = make_engine()?;
                     Server::new(&engine, Policy::RoundRobin { max_active }).serve(shard)
                 })
             })
@@ -179,18 +184,30 @@ pub fn serve_threaded(
     Ok(out)
 }
 
+/// Threaded front end loading each replica from an artifact directory.
+pub fn serve_threaded(
+    artifacts_dir: &std::path::Path,
+    requests: Vec<Request>,
+    workers: usize,
+    max_active: usize,
+) -> Result<Vec<Response>> {
+    serve_threaded_with(
+        || Engine::load(crate::runtime::Artifacts::load(artifacts_dir)?),
+        requests,
+        workers,
+        max_active,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::default_dir;
     use crate::runtime::Artifacts;
 
-    fn engine() -> Option<Engine> {
-        if !default_dir().join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return None;
-        }
-        Some(Engine::load(Artifacts::load(default_dir()).unwrap()).unwrap())
+    const SEED: u64 = 11;
+
+    fn engine() -> Engine {
+        Engine::load(Artifacts::synthetic(SEED).unwrap()).unwrap()
     }
 
     fn reqs(n: u64) -> Vec<Request> {
@@ -205,7 +222,7 @@ mod tests {
 
     #[test]
     fn fifo_serves_all_and_preserves_order() {
-        let Some(e) = engine() else { return };
+        let e = engine();
         let server = Server::new(&e, Policy::Fifo);
         let out = server.serve(reqs(3)).unwrap();
         assert_eq!(out.len(), 3);
@@ -218,7 +235,7 @@ mod tests {
 
     #[test]
     fn round_robin_matches_fifo_outputs() {
-        let Some(e) = engine() else { return };
+        let e = engine();
         let fifo = Server::new(&e, Policy::Fifo).serve(reqs(3)).unwrap();
         let rr = Server::new(&e, Policy::RoundRobin { max_active: 3 })
             .serve(reqs(3))
@@ -232,7 +249,7 @@ mod tests {
 
     #[test]
     fn responses_have_sane_timing() {
-        let Some(e) = engine() else { return };
+        let e = engine();
         let out = Server::new(&e, Policy::RoundRobin { max_active: 2 })
             .serve(reqs(2))
             .unwrap();
@@ -244,13 +261,36 @@ mod tests {
 
     #[test]
     fn threaded_front_end_serves_and_sorts() {
-        if engine().is_none() {
-            return;
-        }
-        let dir = crate::runtime::artifacts::default_dir();
-        let out = serve_threaded(&dir, reqs(4), 2, 2).unwrap();
+        let out = serve_threaded_with(
+            || Engine::load(Artifacts::synthetic(SEED)?),
+            reqs(4),
+            2,
+            2,
+        )
+        .unwrap();
         assert_eq!(out.len(), 4);
         let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn threaded_replicas_match_single_engine() {
+        // Worker replicas are deterministic copies: the sharded threaded
+        // path must produce exactly the tokens the single-engine server
+        // produces.
+        let single = Server::new(&engine(), Policy::RoundRobin { max_active: 2 })
+            .serve(reqs(4))
+            .unwrap();
+        let threaded = serve_threaded_with(
+            || Engine::load(Artifacts::synthetic(SEED)?),
+            reqs(4),
+            2,
+            2,
+        )
+        .unwrap();
+        for t in &threaded {
+            let s = single.iter().find(|s| s.id == t.id).unwrap();
+            assert_eq!(s.tokens, t.tokens, "request {}", t.id);
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! (offline build — no clap). Supports `--key value`, `--key=value`,
 //! bare `--flag` booleans and one positional subcommand.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line: subcommand + flags.

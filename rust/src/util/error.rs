@@ -1,0 +1,241 @@
+//! In-crate error substrate — the `anyhow` replacement for the offline
+//! build (see the dependency-policy note in Cargo.toml).
+//!
+//! Provides the same surface the rest of the crate uses:
+//!
+//! * [`Error`] — a message-chain error (outermost context first, like
+//!   `anyhow::Error`'s "Caused by" chain).
+//! * [`Result`] — alias defaulting the error type to [`Error`].
+//! * [`crate::anyhow!`] / [`crate::bail!`] / [`crate::ensure!`] — macro
+//!   equivalents, re-exported here so call sites can
+//!   `use crate::util::error::{anyhow, bail, ensure}`.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` extension for
+//!   `Result` and `Option`.
+
+use std::fmt;
+
+/// Chain-of-messages error. The first frame is the outermost context;
+/// the last is the root cause.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+/// Crate-wide result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// New root error from a message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error {
+            frames: vec![msg.into()],
+        }
+    }
+
+    /// Wrap with an outer context message (becomes the new headline).
+    pub fn context(mut self, msg: impl Into<String>) -> Self {
+        self.frames.insert(0, msg.into());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn frames(&self) -> &[String] {
+        &self.frames
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for frame in &self.frames {
+            if !first {
+                write!(f, ": ")?;
+            }
+            write!(f, "{frame}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> Result<()>` prints the Debug form on error; render
+    // the anyhow-style "Caused by" chain so failures stay readable.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.frames.split_first() {
+            None => write!(f, "unknown error"),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for frame in rest {
+                        write!(f, "\n    {frame}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error::new(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error::new(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` for fallible values, mirroring
+/// `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context<S: Into<String>>(self, msg: S) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.ok_or_else(|| Error::new(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `anyhow!("bad {x}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::new(format!($($arg)*)).into())
+    };
+}
+
+/// `ensure!(cond, "msg {x}")` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Make the crate-root macros importable from this module, so call sites
+// read `use crate::util::error::{anyhow, bail, ensure, Context, Result}`.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("root cause {}", 42);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "root cause 42");
+        assert_eq!(e.root_cause(), "root cause 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("loading artifacts").unwrap_err();
+        assert_eq!(e.frames().len(), 2);
+        assert_eq!(e.frames()[0], "loading artifacts");
+        assert_eq!(e.to_string(), "loading artifacts: root cause 42");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root cause 42"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32> = Ok(7);
+        let mut called = false;
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "never"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called, "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let r = std::fs::read_to_string("/nonexistent/definitely/missing")
+            .with_context(|| "reading config".to_string());
+        let e = r.unwrap_err();
+        assert_eq!(e.frames()[0], "reading config");
+        assert!(e.frames().len() == 2);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(check(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn anyhow_macro_builds_error() {
+        let e = anyhow!("value {} out of range", 7);
+        assert_eq!(e.to_string(), "value 7 out of range");
+    }
+}

@@ -5,7 +5,7 @@
 //! `golden.json` and to emit structured results. Object key order is
 //! preserved (Vec of pairs) so round-trips are stable.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::fmt::Write as _;
 
 /// A JSON value.
@@ -150,7 +150,17 @@ fn write_escaped(out: &mut String, s: &str) {
             c if (c as u32) < 0x20 => {
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
-            c => out.push(c),
+            c if c.is_ascii() => out.push(c),
+            c => {
+                // Escape all non-ASCII as \u sequences so emitted JSON is
+                // pure ASCII. A \u escape carries one UTF-16 code unit, so
+                // codepoints above U+FFFF MUST be written as a surrogate
+                // pair (a single 5-hex-digit escape would be invalid JSON).
+                let mut units = [0u16; 2];
+                for &unit in c.encode_utf16(&mut units).iter() {
+                    let _ = write!(out, "\\u{unit:04x}");
+                }
+            }
         }
     }
     out.push('"');
@@ -289,17 +299,34 @@ impl<'a> Parser<'a> {
                     b'b' => s.push('\u{8}'),
                     b'f' => s.push('\u{c}'),
                     b'u' => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let c = self.bump()? as char;
-                            code = code * 16
-                                + c.to_digit(16)
-                                    .ok_or_else(|| anyhow!("bad \\u escape"))?;
-                        }
-                        s.push(
-                            char::from_u32(code)
+                        let code = self.hex4()?;
+                        let c = match code {
+                            // High surrogate: a low surrogate escape MUST
+                            // follow; together they encode one codepoint
+                            // above U+FFFF.
+                            0xD800..=0xDBFF => {
+                                if self.bump()? != b'\\' || self.bump()? != b'u' {
+                                    bail!("unpaired high surrogate \\u{code:04x}");
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    bail!(
+                                        "high surrogate \\u{code:04x} followed by \
+                                         non-surrogate \\u{lo:04x}"
+                                    );
+                                }
+                                let combined =
+                                    0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(combined)
+                                    .ok_or_else(|| anyhow!("bad codepoint {combined}"))?
+                            }
+                            0xDC00..=0xDFFF => {
+                                bail!("unpaired low surrogate \\u{code:04x}")
+                            }
+                            _ => char::from_u32(code)
                                 .ok_or_else(|| anyhow!("bad codepoint {code}"))?,
-                        );
+                        };
+                        s.push(c);
                     }
                     c => bail!("bad escape '\\{}'", c as char),
                 },
@@ -324,6 +351,18 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a \u escape.
+    fn hex4(&mut self) -> Result<u32> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let c = self.bump()? as char;
+            code = code * 16
+                + c.to_digit(16)
+                    .ok_or_else(|| anyhow!("bad \\u escape"))?;
+        }
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json> {
@@ -382,6 +421,39 @@ mod tests {
         let original = Json::Str("a\"b\\c\nd\te\u{1f600}".to_string());
         let text = original.to_string();
         assert_eq!(parse(&text).unwrap(), original);
+    }
+
+    #[test]
+    fn non_bmp_serialized_as_surrogate_pair() {
+        // U+1F600 is the UTF-16 pair D83D/DE00; a single 5-hex-digit
+        // escape would be invalid JSON (\u carries one 16-bit code unit).
+        let text = Json::Str("\u{1f600}".to_string()).to_string();
+        assert_eq!(text, r#""\ud83d\ude00""#);
+        // BMP non-ASCII uses a single escape.
+        assert_eq!(
+            Json::Str("\u{e9}".to_string()).to_string(),
+            r#""\u00e9""#
+        );
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_decode() {
+        let v = parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1f600}");
+        // Highest codepoint: U+10FFFF = DBFF/DFFF.
+        let v = parse(r#""\udbff\udfff""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{10ffff}");
+    }
+
+    #[test]
+    fn unpaired_surrogates_rejected() {
+        // Lone high surrogate (end of string, or followed by non-escape).
+        assert!(parse(r#""\ud800""#).is_err());
+        assert!(parse(r#""\ud83dx""#).is_err());
+        // High surrogate followed by a non-low-surrogate escape.
+        assert!(parse(r#""\ud83dA""#).is_err());
+        // Lone low surrogate.
+        assert!(parse(r#""\ude00""#).is_err());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! In-crate substrates for facilities the offline build cannot pull from
 //! crates.io (see the dependency-policy note in Cargo.toml):
 //!
+//! * [`error`] — `anyhow`-equivalent error type, `Result` alias,
+//!   `anyhow!`/`bail!`/`ensure!` macros and a `Context` extension trait.
 //! * [`json`]  — JSON parser/serializer (manifest.json, golden.json).
 //! * [`toml`]  — minimal TOML (tables, numbers, strings, bools) for the
 //!   architecture configs.
@@ -14,6 +16,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod par;
 pub mod rng;

@@ -6,7 +6,8 @@
 //! index over the input slice balances fine and keeps results in input
 //! order.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads (physical parallelism, capped).
 pub fn default_threads() -> usize {
@@ -28,6 +29,16 @@ where
 }
 
 /// Parallel map with an explicit thread count.
+///
+/// # Panic propagation
+///
+/// If the closure panics on any item, the panic is caught in the worker,
+/// the other workers stop claiming new items, and the ORIGINAL panic
+/// payload is re-raised on the calling thread after all workers have
+/// joined — the caller never observes partial results. (Catching inside
+/// the worker, rather than letting `thread::scope` re-panic on join,
+/// also guarantees the already-written `Some` slots are dropped normally
+/// during unwinding instead of leaking through a raw-pointer write.)
 pub fn parallel_map_threads<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
 where
     T: Sync,
@@ -44,6 +55,8 @@ where
     }
 
     let next = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
+    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
     let out_ptr = SendPtr(out.as_mut_ptr());
 
@@ -52,27 +65,54 @@ where
             let next = &next;
             let f = &f;
             let out_ptr = out_ptr;
+            let poisoned = &poisoned;
+            let payload = &payload;
             scope.spawn(move || {
                 // Bind the wrapper itself so edition-2021 disjoint capture
                 // moves the Send wrapper, not the raw-pointer field.
                 let slots = out_ptr;
                 loop {
+                    if poisoned.load(Ordering::Relaxed) {
+                        break; // another worker panicked; stop early
+                    }
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let v = f(&items[i]);
-                    // SAFETY: each index i is claimed exactly once via the
-                    // atomic counter, so no two threads write the same
-                    // slot; the vector outlives the scope.
-                    unsafe {
-                        *slots.0.add(i) = Some(v);
+                    // AssertUnwindSafe: on Err we never touch the closure
+                    // or the output again — the payload is re-thrown.
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        f(&items[i])
+                    })) {
+                        Ok(v) => {
+                            // SAFETY: each index i is claimed exactly once
+                            // via the atomic counter, so no two threads
+                            // write the same slot; the vector outlives the
+                            // scope.
+                            unsafe {
+                                *slots.0.add(i) = Some(v);
+                            }
+                        }
+                        Err(p) => {
+                            poisoned.store(true, Ordering::Relaxed);
+                            let mut guard =
+                                payload.lock().unwrap_or_else(|e| e.into_inner());
+                            // Keep the FIRST panic if several race.
+                            if guard.is_none() {
+                                *guard = Some(p);
+                            }
+                            break;
+                        }
                     }
                 }
             });
         }
     });
 
+    let first_panic = payload.into_inner().unwrap_or_else(|e| e.into_inner());
+    if let Some(p) = first_panic {
+        std::panic::resume_unwind(p);
+    }
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 
@@ -125,6 +165,34 @@ mod tests {
         let a = parallel_map_threads(&items, 1, |&x| x * x);
         let b = parallel_map_threads(&items, 8, |&x| x * x);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_panic_propagates_not_partial_results() {
+        let items: Vec<usize> = (0..64).collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map_threads(&items, 4, |&x| {
+                if x == 13 {
+                    panic!("boom at {x}");
+                }
+                x * 2
+            })
+        }));
+        let payload = result.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 13"), "original payload kept: {msg}");
+    }
+
+    #[test]
+    fn single_thread_path_panics_too() {
+        let items = vec![1u32];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map_threads(&items, 1, |_| -> u32 { panic!("serial boom") })
+        }));
+        assert!(result.is_err());
     }
 
     #[test]

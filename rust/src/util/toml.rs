@@ -4,7 +4,7 @@
 //! nesting), `key = value` with numbers (int/float/scientific), strings,
 //! and booleans; `#` comments. Emits deterministic, pretty output.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 /// A TOML scalar value.

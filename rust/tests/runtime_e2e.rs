@@ -1,31 +1,57 @@
-//! End-to-end runtime tests: AOT artifacts -> PJRT -> token generation
-//! -> serving, the full functional path of the system. Skipped (with a
-//! message) when `make artifacts` has not been run.
+//! End-to-end runtime tests: artifacts -> backend -> token generation
+//! -> serving, the full functional path of the system. Run offline on
+//! the synthetic tiny model (reference backend); when real AOT
+//! artifacts exist (`make artifacts`), they are exercised too.
 
 use pim_llm::runtime::{artifacts, decoder, Artifacts, Engine, TinyDecoder};
-use pim_llm::serving::{LatencyStats, Policy, Request, Server};
+use pim_llm::serving::{serve_threaded_with, LatencyStats, Policy, Request, Server};
 
-fn engine() -> Option<Engine> {
-    let dir = artifacts::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping runtime e2e: run `make artifacts` first");
-        return None;
-    }
-    Some(Engine::load(Artifacts::load(dir).expect("artifacts")).expect("engine"))
+const SEED: u64 = 0xE2E;
+
+fn engine() -> Engine {
+    Engine::load(Artifacts::synthetic(SEED).expect("synthetic artifacts")).expect("engine")
 }
 
 #[test]
 fn golden_generation_token_for_token() {
-    let Some(e) = engine() else { return };
-    decoder::validate_golden(&e).expect("rust+PJRT must reproduce the jax golden generation");
+    let e = engine();
+    decoder::validate_golden(&e).expect("runtime must reproduce the recorded golden generation");
+}
+
+#[test]
+fn real_artifacts_golden_if_present() {
+    // With `make artifacts` output checked out, exercise the real AOT
+    // decoder too; skipped (with a message) otherwise.
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping real-artifact e2e: run `make artifacts` first");
+        return;
+    }
+    let e = Engine::load(Artifacts::load(dir).expect("artifacts")).expect("engine");
+    match decoder::validate_golden(&e) {
+        Ok(timing) => assert!(timing.tokens_per_s() > 0.0),
+        // Bit-exact reproduction of the JAX golden is only guaranteed
+        // under the pjrt backend; the reference executor's integer
+        // matmuls are exact but its f32 norm/softmax reductions may
+        // differ from XLA's in the last ulp, which can flip a greedy
+        // argmax at a near-tie (see rust/README.md). Don't fail the
+        // suite for that — surface it.
+        Err(err) if e.backend_name() == "reference" => {
+            eprintln!(
+                "note: reference backend diverged from the JAX golden ({err}); \
+                 exactness is guaranteed only under --features pjrt"
+            );
+        }
+        Err(err) => panic!("golden generation on real artifacts: {err:?}"),
+    }
 }
 
 #[test]
 fn kv_cache_threading_matches_monolithic_generation() {
     // Generating [a,b,c,d] in one session must equal feeding the same
     // prefix in a fresh session — cache state is fully captured by the
-    // returned literals.
-    let Some(e) = engine() else { return };
+    // threaded cache values.
+    let e = engine();
     let mut full = TinyDecoder::new(&e).unwrap();
     full.generate(&[3, 1, 4, 1], 6).unwrap();
 
@@ -41,7 +67,7 @@ fn kv_cache_threading_matches_monolithic_generation() {
 
 #[test]
 fn prompts_are_isolated_across_sessions() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     // Interleave two sessions; each must produce what it produces alone.
     let mut alone_a = TinyDecoder::new(&e).unwrap();
     alone_a.generate(&[5, 6], 5).unwrap();
@@ -66,7 +92,7 @@ fn prompts_are_isolated_across_sessions() {
 
 #[test]
 fn serving_end_to_end_with_stats() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let reqs: Vec<Request> = (0..6)
         .map(|id| Request {
             id,
@@ -90,41 +116,62 @@ fn serving_end_to_end_with_stats() {
 }
 
 #[test]
+fn threaded_serving_matches_single_engine() {
+    let reqs: Vec<Request> = (0..4)
+        .map(|id| Request {
+            id,
+            prompt: vec![(id % 3) as i32 + 1, 2],
+            n_new: 4,
+        })
+        .collect();
+    let single = Server::new(&engine(), Policy::RoundRobin { max_active: 2 })
+        .serve(reqs.clone())
+        .unwrap();
+    let threaded = serve_threaded_with(
+        || Engine::load(Artifacts::synthetic(SEED)?),
+        reqs,
+        2,
+        2,
+    )
+    .unwrap();
+    assert_eq!(threaded.len(), 4);
+    for t in &threaded {
+        let s = single.iter().find(|s| s.id == t.id).unwrap();
+        assert_eq!(s.tokens, t.tokens, "request {}", t.id);
+    }
+}
+
+#[test]
 fn logits_are_stable_across_engine_instances() {
-    // Two engines compiled from the same artifacts must agree bitwise.
-    let Some(e1) = engine() else { return };
-    let e2 = Engine::load(Artifacts::load(artifacts::default_dir()).unwrap()).unwrap();
+    // Two engines built from the same artifacts must agree bitwise.
+    let e1 = engine();
+    let e2 = engine();
     let o1 = e1.decode_step(e1.empty_caches().unwrap(), 42, 0).unwrap();
     let o2 = e2.decode_step(e2.empty_caches().unwrap(), 42, 0).unwrap();
     assert_eq!(o1.logits, o2.logits);
 }
 
 #[test]
-fn corrupt_hlo_rejected_at_load() {
-    // Failure injection: valid manifest/weights/golden but truncated HLO
-    // text must fail at Engine::load (the PJRT parse step), not later.
-    let dir = artifacts::default_dir();
-    if !dir.join("manifest.json").exists() {
-        return;
-    }
-    let tmp = std::env::temp_dir().join(format!("pimllm-hlo-{}", std::process::id()));
-    std::fs::create_dir_all(&tmp).unwrap();
-    for f in ["manifest.json", "golden.json", "weights.bin"] {
-        std::fs::copy(dir.join(f), tmp.join(f)).unwrap();
-    }
-    let hlo = std::fs::read_to_string(dir.join("decode_step.hlo.txt")).unwrap();
-    std::fs::write(tmp.join("decode_step.hlo.txt"), &hlo[..hlo.len() / 3]).unwrap();
-    let arts = Artifacts::load(&tmp).expect("artifacts themselves are valid");
-    let result = Engine::load(arts);
-    std::fs::remove_dir_all(&tmp).ok();
-    assert!(result.is_err(), "truncated HLO must not compile");
+fn missing_parameter_fails_at_load_not_mid_decode() {
+    // Failure injection: a manifest missing a required parameter must be
+    // rejected when the engine is built, not during token generation.
+    let mut a = Artifacts::synthetic(SEED).unwrap();
+    let idx = a
+        .manifest
+        .params
+        .iter()
+        .position(|p| p.name == "layer0.w_out")
+        .unwrap();
+    a.manifest.params[idx].name = "layer0.w_out_renamed".to_string();
+    assert!(Engine::load(a).is_err());
 }
 
 #[test]
 fn out_of_range_token_still_safe() {
     // Token ids index the embedding via gather; out-of-range ids must
-    // not crash the engine (XLA clamps gather indices).
-    let Some(e) = engine() else { return };
+    // not crash the engine (XLA clamps gather indices; the reference
+    // backend mirrors that).
+    let e = engine();
     let out = e.decode_step(e.empty_caches().unwrap(), (e.vocab() as i32) + 500, 0);
     if let Ok(o) = out {
         assert!(o.logits.iter().all(|x| x.is_finite()));
