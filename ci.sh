@@ -7,10 +7,26 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+echo "== lint: rustfmt =="
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --all -- --check
+else
+  echo "skipped: rustfmt not installed (rustup component add rustfmt)"
+fi
+
+echo "== lint: clippy (deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets --offline -- -D warnings
+else
+  echo "skipped: clippy not installed (rustup component add clippy)"
+fi
+
 echo "== tier-1: release build (offline) =="
 cargo build --release --offline
 
 echo "== tier-1: tests (offline) =="
+# Runs every test target, including the batched-path suites
+# tests/batch_equivalence.rs and tests/serving_determinism.rs.
 cargo test -q --offline
 
 echo "== bench + example targets compile (offline) =="

@@ -60,8 +60,9 @@ fn main() -> Result<()> {
     // Golden validation: rust must reproduce the jax generation exactly.
     let timing = decoder::validate_golden(&engine)?;
     println!(
-        "golden generation reproduced token-for-token ({:.1} tok/s)",
-        timing.tokens_per_s()
+        "golden generation reproduced token-for-token (decode {:.1} tok/s, prefill {:.1} tok/s)",
+        timing.decode_tokens_per_s(),
+        timing.prefill_tokens_per_s()
     );
 
     // Free-running generation from a custom prompt.

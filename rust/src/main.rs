@@ -31,7 +31,10 @@ USAGE: repro [--config <arch.toml>] <subcommand> [flags]
 SUBCOMMANDS
   simulate   --model <name> --context <l> --arch <pim-llm|tpu-llm>
   sweep      --figure <fig1b|fig4|fig5|fig6|fig7|fig8|table3|all>
-  serve      --requests N --prompt-len P --new-tokens T --max-active A
+  serve      --requests N --prompt-len P --new-tokens T [--batch B | --max-active A]
+             (--batch B schedules one decode_batch over B sessions per
+              tick — one weight traversal per step for the whole batch;
+              --max-active A is the per-session round-robin scheduler)
   validate
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
 
@@ -170,10 +173,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 8)?;
     let new_tokens = args.usize_or("new-tokens", 16)?;
     let max_active = args.usize_or("max-active", 4)?;
+    // --batch B > 0 selects the batched scheduler (one decode_batch
+    // over all active sessions per tick); 0 keeps round-robin.
+    let batch = args.usize_or("batch", 0)?;
+    let policy = if batch > 0 {
+        Policy::Batched { batch }
+    } else {
+        Policy::RoundRobin { max_active }
+    };
 
     let engine = Engine::load_default()?;
     println!(
-        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers)",
+        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?}",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
@@ -189,7 +200,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let t0 = Instant::now();
-    let server = Server::new(&engine, Policy::RoundRobin { max_active });
+    let server = Server::new(&engine, policy);
     let out = server.serve(reqs)?;
     let wall = t0.elapsed().as_secs_f64();
     let stats = LatencyStats::from_responses(&out, wall);
@@ -211,10 +222,11 @@ fn cmd_validate() -> Result<()> {
     let engine = Engine::load_default()?;
     let timing = decoder::validate_golden(&engine)?;
     println!(
-        "golden OK: {} tokens reproduced exactly ({:.1} tok/s on {})",
+        "golden OK: {} tokens reproduced exactly on {} (decode {:.1} tok/s, prefill {:.1} tok/s)",
         timing.prompt_len + timing.new_tokens,
-        timing.tokens_per_s(),
-        engine.platform()
+        engine.platform(),
+        timing.decode_tokens_per_s(),
+        timing.prefill_tokens_per_s()
     );
     Ok(())
 }

@@ -7,7 +7,7 @@
 //! `python/compile/aot.py` lowered it. Parsed with the in-crate JSON
 //! parser (`util::json`).
 
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 use crate::util::json::{self, Json};
 use std::path::{Path, PathBuf};
 
@@ -246,19 +246,32 @@ impl Artifacts {
     /// cannot load synthetic artifacts — use the real AOT output for
     /// that.
     pub fn synthetic(seed: u64) -> Result<Self> {
-        use crate::util::rng::Rng;
-
         // Tiny-but-real decoder shape (small enough for debug-mode test
         // runs; same structure as model.py's TINY config).
-        let model = ModelInfo {
-            vocab: 64,
-            d: 32,
-            h: 4,
-            d_ff: 64,
-            n_layers: 2,
-            max_ctx: 32,
-            eps: 1e-5,
-        };
+        Self::synthetic_with(
+            seed,
+            ModelInfo {
+                vocab: 64,
+                d: 32,
+                h: 4,
+                d_ff: 64,
+                n_layers: 2,
+                max_ctx: 32,
+                eps: 1e-5,
+            },
+        )
+    }
+
+    /// [`Artifacts::synthetic`] with an explicit model shape — lets the
+    /// batching tests and the `runtime_batching` bench synthesize models
+    /// large enough that the per-step weight traversal dominates (the
+    /// regime the paper's batched-throughput argument is about).
+    pub fn synthetic_with(seed: u64, model: ModelInfo) -> Result<Self> {
+        use crate::util::rng::Rng;
+
+        ensure!(model.d % model.h == 0, "d must be divisible by h");
+        ensure!(model.vocab >= 8, "synthetic golden needs vocab >= 8");
+        ensure!(model.max_ctx >= 8, "synthetic golden needs max_ctx >= 8");
         let mut rng = Rng::new(seed ^ 0x5EED_1B17_C0DE_CAFE);
 
         struct Builder {
@@ -476,6 +489,40 @@ mod tests {
         assert_eq!(a.golden.tokens, b.golden.tokens);
         let c = Artifacts::synthetic(8).unwrap();
         assert_ne!(a.weights, c.weights);
+    }
+
+    #[test]
+    fn sized_synthetic_artifacts_validate() {
+        let a = Artifacts::synthetic_with(
+            3,
+            ModelInfo {
+                vocab: 32,
+                d: 16,
+                h: 2,
+                d_ff: 32,
+                n_layers: 1,
+                max_ctx: 16,
+                eps: 1e-5,
+            },
+        )
+        .unwrap();
+        assert_eq!(a.manifest.model.d, 16);
+        assert_eq!(a.cache_shape(), [1, 2, 16, 8]);
+        assert_eq!(
+            a.golden.tokens.len(),
+            a.golden.prompt.len() + a.golden.n_new
+        );
+        // Bad shapes are rejected up front.
+        let bad = ModelInfo {
+            vocab: 32,
+            d: 10,
+            h: 4,
+            d_ff: 16,
+            n_layers: 1,
+            max_ctx: 16,
+            eps: 1e-5,
+        };
+        assert!(Artifacts::synthetic_with(3, bad).is_err());
     }
 
     #[test]

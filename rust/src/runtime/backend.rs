@@ -15,7 +15,7 @@
 //! values threaded between steps, so backends can keep state wherever
 //! it lives naturally (host vectors vs device buffers).
 
-use crate::util::error::Result;
+use crate::util::error::{ensure, Result};
 
 /// KV-cache state threaded between decode steps. Opaque to callers:
 /// obtain from [`Backend::empty_caches`], pass to
@@ -54,4 +54,36 @@ pub trait Backend {
     /// with the given caches; returns logits + updated caches. Consumes
     /// the caches (they are superseded by the returned ones).
     fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput>;
+
+    /// Execute one decode step for B independent sequences at once:
+    /// sequence `i` feeds `tokens[i]` at `positions[i]` into `caches[i]`
+    /// (ragged positions allowed — sequences need not be in lock-step).
+    /// Returns one [`StepOutput`] per sequence, in input order.
+    ///
+    /// Contract: the result MUST be exactly (bit-for-bit) what B separate
+    /// [`Backend::decode_step`] calls would produce — batching is a
+    /// throughput optimization, never a numerics change. The default
+    /// implementation simply loops `decode_step`; backends that can
+    /// amortize the per-step weight traversal across sequences (the PIM
+    /// weight-stationary regime the paper's throughput claim rests on)
+    /// override it.
+    fn decode_batch(
+        &self,
+        caches: Vec<Caches>,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        ensure!(
+            caches.len() == tokens.len() && caches.len() == positions.len(),
+            "decode_batch arity mismatch: {} caches, {} tokens, {} positions",
+            caches.len(),
+            tokens.len(),
+            positions.len()
+        );
+        caches
+            .into_iter()
+            .zip(tokens.iter().zip(positions))
+            .map(|(c, (&t, &p))| self.decode_step(c, t, p))
+            .collect()
+    }
 }

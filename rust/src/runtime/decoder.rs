@@ -1,10 +1,32 @@
-//! Greedy autoregressive decoding on the PJRT engine + golden
-//! validation: the Rust runtime must reproduce, token for token, the
-//! generation the JAX graph produced at AOT time (`golden.json`).
+//! Greedy autoregressive decoding + golden validation: the Rust runtime
+//! must reproduce, token for token, the generation the JAX graph
+//! produced at AOT time (`golden.json`).
+//!
+//! Two decoders share the engine:
+//! * [`TinyDecoder`] — one session, one `decode_step` per token.
+//! * [`BatchDecoder`] — B concurrent sessions advanced one token each
+//!   per `decode_batch` call, so every layer's weights are traversed
+//!   once per step for the whole batch (bit-identical outputs to B
+//!   `TinyDecoder`s — enforced by `tests/batch_equivalence.rs`).
 
+use super::backend::Caches;
 use super::engine::Engine;
-use crate::util::error::{bail, Result};
+use crate::util::error::{anyhow, bail, ensure, Result};
 use std::time::Instant;
+
+/// THE greedy-decoding convention, shared by [`TinyDecoder`],
+/// [`BatchDecoder`] and the serving loop — the cross-scheduler
+/// token-equivalence guarantee depends on every path using exactly this
+/// function: last-maximal-index argmax (`Iterator::max_by` semantics),
+/// and token 0 (the tiny model's BOS) when no logits exist yet (empty
+/// prompt, nothing fed).
+pub fn greedy_argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map_or(0, |(i, _)| i as i32)
+}
 
 /// Stateful decoder session over a loaded engine. KV caches live in the
 /// backend's native representation (host tensors for the reference
@@ -18,18 +40,41 @@ pub struct TinyDecoder<'e> {
     pub last_logits: Vec<f32>,
 }
 
-/// Timing of one generation.
+/// Timing of one generation, with the prefill (prompt ingestion) and
+/// decode (token generation) phases accounted separately.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenTiming {
     pub prompt_len: usize,
     pub new_tokens: usize,
     pub total_s: f64,
+    /// Time spent ingesting the prompt.
+    pub prefill_s: f64,
+    /// Time spent generating new tokens.
+    pub decode_s: f64,
     pub per_step_s: Vec<f64>,
 }
 
 impl GenTiming {
-    pub fn tokens_per_s(&self) -> f64 {
-        (self.prompt_len + self.new_tokens) as f64 / self.total_s
+    /// Decode-only throughput: generated tokens over the time spent
+    /// generating them. Prompt tokens are deliberately excluded — they
+    /// are prefill work, and counting them inflated the reported
+    /// generation rate. Returns 0.0 when nothing was generated.
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.new_tokens == 0 || self.decode_s <= 0.0 {
+            0.0
+        } else {
+            self.new_tokens as f64 / self.decode_s
+        }
+    }
+
+    /// Prefill rate: prompt tokens over the prompt-ingestion time.
+    /// Returns 0.0 for an empty prompt.
+    pub fn prefill_tokens_per_s(&self) -> f64 {
+        if self.prompt_len == 0 || self.prefill_s <= 0.0 {
+            0.0
+        } else {
+            self.prompt_len as f64 / self.prefill_s
+        }
     }
 }
 
@@ -59,36 +104,241 @@ impl<'e> TinyDecoder<'e> {
         Ok(())
     }
 
-    /// Greedy argmax over the last logits.
+    /// Greedy argmax over the last logits (see [`greedy_argmax`] for the
+    /// shared convention, including the empty-prompt BOS start).
     pub fn greedy_next(&self) -> i32 {
-        self.last_logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i as i32)
-            .expect("non-empty logits")
+        greedy_argmax(&self.last_logits)
     }
 
     /// Feed a prompt then greedily generate `n_new` tokens.
     pub fn generate(&mut self, prompt: &[i32], n_new: usize) -> Result<GenTiming> {
         let start = Instant::now();
         let mut per_step = Vec::with_capacity(prompt.len() + n_new);
+        let mut prefill_s = 0.0;
+        let mut decode_s = 0.0;
         for &t in prompt {
             let s = Instant::now();
             self.feed(t)?;
-            per_step.push(s.elapsed().as_secs_f64());
+            let dt = s.elapsed().as_secs_f64();
+            prefill_s += dt;
+            per_step.push(dt);
         }
         for _ in 0..n_new {
             let next = self.greedy_next();
             let s = Instant::now();
             self.feed(next)?;
-            per_step.push(s.elapsed().as_secs_f64());
+            let dt = s.elapsed().as_secs_f64();
+            decode_s += dt;
+            per_step.push(dt);
         }
         Ok(GenTiming {
             prompt_len: prompt.len(),
             new_tokens: n_new,
             total_s: start.elapsed().as_secs_f64(),
+            prefill_s,
+            decode_s,
             per_step_s: per_step,
+        })
+    }
+}
+
+/// One decoding session inside a [`BatchDecoder`]: its own KV caches,
+/// position, token history and last logits — exactly the state a
+/// [`TinyDecoder`] holds, minus the engine handle.
+pub struct BatchSession {
+    caches: Option<Caches>,
+    pos: i32,
+    pub tokens: Vec<i32>,
+    pub last_logits: Vec<f32>,
+}
+
+impl BatchSession {
+    /// Next decode position (= number of tokens fed so far).
+    pub fn pos(&self) -> i32 {
+        self.pos
+    }
+}
+
+/// Timing of one batched generation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchTiming {
+    /// Number of sequences decoded together.
+    pub batch: usize,
+    /// Number of `decode_batch` calls (= weight traversals) issued.
+    pub steps: usize,
+    pub prompt_tokens: usize,
+    pub new_tokens: usize,
+    pub total_s: f64,
+}
+
+impl BatchTiming {
+    /// Aggregate throughput in fed tokens (prompt + generated) per
+    /// second: every fed token occupies one lane of one `decode_batch`
+    /// call, so this is the engine-level token rate of the batched loop.
+    pub fn fed_tokens_per_s(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            0.0
+        } else {
+            (self.prompt_tokens + self.new_tokens) as f64 / self.total_s
+        }
+    }
+}
+
+/// Batched decoder: B independent greedy sessions advanced one token
+/// each per engine call. Each [`BatchDecoder::feed`] issues a single
+/// [`Engine::decode_batch`], so on the reference backend every layer's
+/// weights are walked once for the whole batch instead of once per
+/// session — the amortization the paper's throughput claim rests on.
+/// Sessions may be at ragged positions (mixed prompt lengths, mixed
+/// progress); outputs are bit-identical to per-session [`TinyDecoder`]s.
+pub struct BatchDecoder<'e> {
+    engine: &'e Engine,
+    sessions: Vec<BatchSession>,
+}
+
+impl<'e> BatchDecoder<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        Self {
+            engine,
+            sessions: Vec::new(),
+        }
+    }
+
+    /// Open a fresh session (empty caches, position 0); returns its id.
+    pub fn add_session(&mut self) -> Result<usize> {
+        let caches = self.engine.empty_caches()?;
+        self.sessions.push(BatchSession {
+            caches: Some(caches),
+            pos: 0,
+            tokens: Vec::new(),
+            last_logits: Vec::new(),
+        });
+        Ok(self.sessions.len() - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn session(&self, id: usize) -> &BatchSession {
+        &self.sessions[id]
+    }
+
+    /// Greedy argmax over session `id`'s last logits (see
+    /// [`greedy_argmax`] for the shared convention).
+    pub fn greedy_next(&self, id: usize) -> i32 {
+        greedy_argmax(&self.sessions[id].last_logits)
+    }
+
+    /// Feed one token into each listed `(session, token)` pair through a
+    /// SINGLE `decode_batch` call. A session may appear at most once per
+    /// call (it advances by exactly one position).
+    ///
+    /// Error semantics: argument problems (unknown/duplicate session,
+    /// context overflow) are rejected up front and consume nothing. An
+    /// engine-level `decode_batch` error, however, poisons every session
+    /// in the batch — their caches were consumed by the failed call and
+    /// cannot be recovered, so further feeds on them return a clear
+    /// "no caches" error rather than stale results. (On the reference
+    /// backend the up-front validation makes such failures unreachable.)
+    pub fn feed(&mut self, steps: &[(usize, i32)]) -> Result<()> {
+        if steps.is_empty() {
+            return Ok(());
+        }
+        // Validate up front so no session state is consumed on error: a
+        // session may appear at most once (it advances by exactly one
+        // position), must exist, and must have context room.
+        let max_ctx = self.engine.max_ctx() as i32;
+        for (n, &(id, _)) in steps.iter().enumerate() {
+            ensure!(
+                !steps[..n].iter().any(|&(seen, _)| seen == id),
+                "session {id} listed twice in one batch"
+            );
+            let s = self
+                .sessions
+                .get(id)
+                .ok_or_else(|| anyhow!("no session {id}"))?;
+            ensure!(
+                s.pos < max_ctx,
+                "context overflow: session {id} pos {} >= {max_ctx}",
+                s.pos
+            );
+        }
+        let mut caches = Vec::with_capacity(steps.len());
+        let mut tokens = Vec::with_capacity(steps.len());
+        let mut positions = Vec::with_capacity(steps.len());
+        for &(id, token) in steps {
+            let s = &mut self.sessions[id];
+            let c = s.caches.take().ok_or_else(|| {
+                anyhow!("session {id} has no caches (lost in an earlier failed call)")
+            })?;
+            caches.push(c);
+            tokens.push(token);
+            positions.push(s.pos);
+        }
+        let outs = self.engine.decode_batch(caches, &tokens, &positions)?;
+        for (&(id, token), out) in steps.iter().zip(outs) {
+            let s = &mut self.sessions[id];
+            s.caches = Some(out.caches);
+            s.last_logits = out.logits;
+            s.tokens.push(token);
+            s.pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Open one session per prompt and run the whole ragged workload to
+    /// completion: each step feeds every unfinished session (its next
+    /// prompt token while prefilling, its greedy continuation after) in
+    /// one `decode_batch`. Returns aggregate timing; per-session tokens
+    /// are in [`BatchDecoder::session`].
+    pub fn generate(&mut self, prompts: &[Vec<i32>], n_new: &[usize]) -> Result<BatchTiming> {
+        ensure!(
+            prompts.len() == n_new.len(),
+            "generate arity mismatch: {} prompts, {} n_new",
+            prompts.len(),
+            n_new.len()
+        );
+        let start = Instant::now();
+        let base = self.sessions.len();
+        for _ in prompts {
+            self.add_session()?;
+        }
+        let total: Vec<usize> = prompts.iter().zip(n_new).map(|(p, &n)| p.len() + n).collect();
+        let mut fed = vec![0usize; prompts.len()];
+        let mut steps = 0usize;
+        loop {
+            let mut batch: Vec<(usize, i32)> = Vec::new();
+            for (i, (p, &tot)) in prompts.iter().zip(&total).enumerate() {
+                if fed[i] >= tot {
+                    continue;
+                }
+                let token = if fed[i] < p.len() {
+                    p[fed[i]]
+                } else {
+                    self.greedy_next(base + i)
+                };
+                batch.push((base + i, token));
+            }
+            if batch.is_empty() {
+                break;
+            }
+            self.feed(&batch)?;
+            for &(id, _) in &batch {
+                fed[id - base] += 1;
+            }
+            steps += 1;
+        }
+        Ok(BatchTiming {
+            batch: prompts.len(),
+            steps,
+            prompt_tokens: prompts.iter().map(Vec::len).sum(),
+            new_tokens: n_new.iter().sum(),
+            total_s: start.elapsed().as_secs_f64(),
         })
     }
 }
@@ -126,7 +376,18 @@ mod tests {
     fn golden_generation_reproduces() {
         let e = engine();
         let timing = validate_golden(&e).expect("golden validation");
-        assert!(timing.tokens_per_s() > 0.0);
+        assert!(timing.decode_tokens_per_s() > 0.0);
+        assert!(timing.prefill_tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn greedy_argmax_convention_is_pinned() {
+        // Empty logits -> BOS token 0; ties resolve to the LAST maximal
+        // index (Iterator::max_by semantics). Every decode path shares
+        // this function, so pin the convention here.
+        assert_eq!(greedy_argmax(&[]), 0);
+        assert_eq!(greedy_argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(greedy_argmax(&[5.0, 5.0, 1.0]), 1);
     }
 
     #[test]
@@ -156,5 +417,103 @@ mod tests {
         assert_eq!(t.new_tokens, 5);
         assert_eq!(t.per_step_s.len(), 8);
         assert_eq!(dec.tokens.len(), 8);
+        // The phase split covers exactly the per-step samples.
+        let prefill: f64 = t.per_step_s[..3].iter().sum();
+        let decode: f64 = t.per_step_s[3..].iter().sum();
+        assert!((t.prefill_s - prefill).abs() < 1e-12);
+        assert!((t.decode_s - decode).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_rates_are_phase_scoped() {
+        // decode tokens/s must come from the decode phase only — the
+        // old all-tokens-over-total number counted prompt ingestion as
+        // generation throughput.
+        let t = GenTiming {
+            prompt_len: 90,
+            new_tokens: 10,
+            total_s: 2.0,
+            prefill_s: 1.0,
+            decode_s: 1.0,
+            per_step_s: Vec::new(),
+        };
+        assert!((t.decode_tokens_per_s() - 10.0).abs() < 1e-12);
+        assert!((t.prefill_tokens_per_s() - 90.0).abs() < 1e-12);
+        // Degenerate cases report 0, not NaN/inf.
+        let none = GenTiming {
+            prompt_len: 0,
+            new_tokens: 0,
+            total_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            per_step_s: Vec::new(),
+        };
+        assert_eq!(none.decode_tokens_per_s(), 0.0);
+        assert_eq!(none.prefill_tokens_per_s(), 0.0);
+    }
+
+    #[test]
+    fn batch_decoder_matches_tiny_decoder_ragged() {
+        // Three sessions with different prompt lengths and generation
+        // budgets, advanced together: token streams must be identical to
+        // three independent TinyDecoders.
+        let e = engine();
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![9], vec![4, 5, 6, 7, 8]];
+        let n_new = [5usize, 7, 2];
+        let mut batch = BatchDecoder::new(&e);
+        let timing = batch.generate(&prompts, &n_new).unwrap();
+        assert_eq!(timing.batch, 3);
+        // Longest lane: 5 prompt + 2 new = 7; lane 1: 1 + 7 = 8 steps.
+        assert_eq!(timing.steps, 8);
+        for (i, (p, &n)) in prompts.iter().zip(&n_new).enumerate() {
+            let mut tiny = TinyDecoder::new(&e).unwrap();
+            tiny.generate(p, n).unwrap();
+            assert_eq!(batch.session(i).tokens, tiny.tokens, "session {i}");
+            assert_eq!(
+                batch.session(i).last_logits,
+                tiny.last_logits,
+                "session {i} logits"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_prompt_decodes_identically_everywhere() {
+        let e = engine();
+        let mut tiny = TinyDecoder::new(&e).unwrap();
+        tiny.generate(&[], 4).unwrap();
+        assert_eq!(tiny.tokens.len(), 4);
+        assert_eq!(tiny.tokens[0], 0); // BOS convention
+        let mut batch = BatchDecoder::new(&e);
+        batch.generate(&[vec![]], &[4]).unwrap();
+        assert_eq!(batch.session(0).tokens, tiny.tokens);
+    }
+
+    #[test]
+    fn batch_feed_rejects_duplicate_session_and_overflow() {
+        let e = engine();
+        let mut batch = BatchDecoder::new(&e);
+        let s = batch.add_session().unwrap();
+        assert!(batch.feed(&[(s, 1), (s, 2)]).is_err());
+        // The rejected call consumed nothing: the same session still works.
+        batch.feed(&[(s, 1)]).unwrap();
+        assert_eq!(batch.session(s).tokens, vec![1]);
+        // Context overflow is rejected up front.
+        let mut batch = BatchDecoder::new(&e);
+        let s = batch.add_session().unwrap();
+        for i in 0..e.max_ctx() {
+            batch.feed(&[(s, i as i32 % 7)]).unwrap();
+        }
+        assert!(batch.feed(&[(s, 0)]).is_err());
+    }
+
+    #[test]
+    fn zero_token_generate_is_a_noop() {
+        let e = engine();
+        let mut batch = BatchDecoder::new(&e);
+        let t = batch.generate(&[vec![]], &[0]).unwrap();
+        assert_eq!(t.steps, 0);
+        assert_eq!(batch.session(0).tokens.len(), 0);
+        assert_eq!(t.fed_tokens_per_s(), 0.0);
     }
 }

@@ -12,7 +12,8 @@
 //!   the off-by-default `pjrt` Cargo feature (the `xla` crate needs
 //!   network access to build — see Cargo.toml).
 //! * [`engine`]    — the facade callers use; picks a backend at load.
-//! * [`decoder`]   — greedy generation loop + golden validation.
+//! * [`decoder`]   — greedy generation loops (single-session
+//!   `TinyDecoder`, batched `BatchDecoder`) + golden validation.
 
 pub mod artifacts;
 pub mod backend;
@@ -24,5 +25,5 @@ pub mod reference;
 
 pub use artifacts::Artifacts;
 pub use backend::{Backend, Caches, StepOutput};
-pub use decoder::TinyDecoder;
+pub use decoder::{BatchDecoder, TinyDecoder};
 pub use engine::{BackendKind, Engine};

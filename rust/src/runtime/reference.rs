@@ -86,6 +86,82 @@ fn bitlinear(x: &[f32], w: &[f32], n_out: usize, w_scale: f32) -> Vec<f32> {
     acc
 }
 
+/// Batched W1A8 projection: the same numerics as [`bitlinear`] for each
+/// of the B activation vectors in `xs`, but with ONE traversal of the
+/// weight matrix `w` per call — each weight row is read once and applied
+/// to every sequence while it is hot, instead of being re-streamed B
+/// times. This is the software analogue of the paper's weight-stationary
+/// PIM banks serving many users per programmed crossbar, and the whole
+/// source of the batched path's throughput win.
+///
+/// Exactness: for every sequence `b` and output `j`, the accumulator
+/// receives `x_q[b][kk] * w[kk][j]` for `kk` ascending — the identical
+/// f32 operation sequence [`bitlinear`] performs — so the result is
+/// bit-for-bit equal to B sequential calls. Column striping (below)
+/// partitions `j`, never reorders `kk`, so thread count and stripe
+/// boundaries cannot change a single bit of the output.
+fn bitlinear_batch(xs: &[Vec<f32>], w: &[f32], n_out: usize, w_scale: f32) -> Vec<Vec<f32>> {
+    let b = xs.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let k = xs[0].len();
+    debug_assert!(xs.iter().all(|x| x.len() == k));
+    debug_assert_eq!(w.len(), k * n_out);
+    let quant: Vec<(Vec<f32>, f32)> = xs.iter().map(|x| act_quant_int8(x)).collect();
+
+    // Column stripes: split the output dimension across threads once the
+    // MAC count is large enough to amortize thread spawn. Each stripe
+    // reads only its own columns of every row, so the weight matrix is
+    // still traversed exactly once per call in aggregate.
+    const PAR_MAC_THRESHOLD: usize = 1 << 21;
+    let threads = if b * k * n_out >= PAR_MAC_THRESHOLD {
+        crate::util::par::default_threads().min(n_out)
+    } else {
+        1
+    };
+    let chunk = n_out.div_ceil(threads);
+    let stripes: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(n_out)))
+        .filter(|&(j0, j1)| j0 < j1)
+        .collect();
+
+    let parts = crate::util::par::parallel_map_threads(&stripes, stripes.len(), |&(j0, j1)| {
+        let width = j1 - j0;
+        let mut acc = vec![0.0f32; b * width];
+        for kk in 0..k {
+            let row = &w[kk * n_out + j0..kk * n_out + j1];
+            for (bi, (x_q, _)) in quant.iter().enumerate() {
+                let xv = x_q[kk];
+                if xv == 0.0 {
+                    continue; // ternary-friendly: skip zero activations
+                }
+                let a = &mut acc[bi * width..(bi + 1) * width];
+                for (aj, &wv) in a.iter_mut().zip(row) {
+                    *aj += xv * wv;
+                }
+            }
+        }
+        acc
+    });
+
+    let mut out: Vec<Vec<f32>> = vec![vec![0.0f32; n_out]; b];
+    for (stripe, part) in stripes.iter().zip(&parts) {
+        let (j0, j1) = *stripe;
+        let width = j1 - j0;
+        for (bi, o) in out.iter_mut().enumerate() {
+            o[j0..j1].copy_from_slice(&part[bi * width..(bi + 1) * width]);
+        }
+    }
+    for (o, (_, x_scale)) in out.iter_mut().zip(&quant) {
+        let rescale = w_scale / x_scale;
+        for a in o.iter_mut() {
+            *a *= rescale;
+        }
+    }
+    out
+}
+
 /// Resolved parameter indices (into `manifest.params`) of one layer.
 struct LayerParams {
     ln1_gamma: usize,
@@ -319,6 +395,147 @@ impl Backend for ReferenceBackend {
             caches: Caches::Host { k: kc, v: vc },
         })
     }
+
+    /// The genuinely batched decode step: every weight matrix is
+    /// traversed ONCE per call (via [`bitlinear_batch`]) and applied to
+    /// all B per-sequence activations; only the attention sub-block —
+    /// which reads per-sequence KV state, not weights — runs per
+    /// sequence. Ragged positions are allowed: sequence `i` decodes at
+    /// `positions[i]` against its own cache.
+    ///
+    /// Bit-for-bit equivalent to B sequential [`Backend::decode_step`]
+    /// calls (enforced by `tests/batch_equivalence.rs`).
+    fn decode_batch(
+        &self,
+        caches: Vec<Caches>,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        ensure!(
+            caches.len() == tokens.len() && caches.len() == positions.len(),
+            "decode_batch arity mismatch: {} caches, {} tokens, {} positions",
+            caches.len(),
+            tokens.len(),
+            positions.len()
+        );
+        if caches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let m = self.artifacts.manifest.model.clone();
+        let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
+        let dh = d / h;
+        let eps = m.eps as f32;
+
+        let mut kcs = Vec::with_capacity(caches.len());
+        let mut vcs = Vec::with_capacity(caches.len());
+        for c in caches {
+            match c {
+                Caches::Host { k, v } => {
+                    kcs.push(k);
+                    vcs.push(v);
+                }
+                #[cfg(feature = "pjrt")]
+                Caches::Device { .. } => {
+                    crate::bail!("reference backend received device-resident caches")
+                }
+            }
+        }
+        let mut poss = Vec::with_capacity(positions.len());
+        for &p in positions {
+            ensure!(p >= 0, "negative position {p}");
+            let p = p as usize;
+            ensure!(p < max_ctx, "position {p} >= max_ctx {max_ctx}");
+            poss.push(p);
+        }
+
+        // Embed every sequence's token (XLA-style clamped gather).
+        let embedding = self.data(self.embedding);
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&t| {
+                let tok = (t.max(0) as usize).min(m.vocab - 1);
+                embedding[tok * d..(tok + 1) * d].to_vec()
+            })
+            .collect();
+
+        for (layer, lp) in self.layers.iter().enumerate() {
+            // --- attention sub-block (projections on PIM, W1A8) -------
+            let xn: Vec<Vec<f32>> = xs
+                .iter()
+                .map(|x| rms_norm(x, self.data(lp.ln1_gamma), eps))
+                .collect();
+            let q = bitlinear_batch(&xn, self.data(lp.wq), d, self.scalar(lp.wq_scale));
+            let k = bitlinear_batch(&xn, self.data(lp.wk), d, self.scalar(lp.wk_scale));
+            let v = bitlinear_batch(&xn, self.data(lp.wv), d, self.scalar(lp.wv_scale));
+
+            // Scatter each sequence's new K/V into its own cache at its
+            // own (ragged) position.
+            for (((kc, vc), &pos), (k_i, v_i)) in kcs
+                .iter_mut()
+                .zip(vcs.iter_mut())
+                .zip(&poss)
+                .zip(k.iter().zip(&v))
+            {
+                for head in 0..h {
+                    let base = ((layer * h + head) * max_ctx + pos) * dh;
+                    kc[base..base + dh].copy_from_slice(&k_i[head * dh..(head + 1) * dh]);
+                    vc[base..base + dh].copy_from_slice(&v_i[head * dh..(head + 1) * dh]);
+                }
+            }
+
+            // Attention reads per-sequence KV state, not weights — there
+            // is nothing to amortize, so it runs per sequence.
+            let att: Vec<Vec<f32>> = q
+                .iter()
+                .zip(kcs.iter().zip(&vcs))
+                .zip(&poss)
+                .map(|((q_i, (kc, vc)), &pos)| self.attention(q_i, kc, vc, layer, pos))
+                .collect();
+            let att = bitlinear_batch(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
+            for (x, a) in xs.iter_mut().zip(&att) {
+                for (xi, ai) in x.iter_mut().zip(a) {
+                    *xi += ai;
+                }
+            }
+
+            // --- feed-forward sub-block -------------------------------
+            let xn: Vec<Vec<f32>> = xs
+                .iter()
+                .map(|x| rms_norm(x, self.data(lp.ln2_gamma), eps))
+                .collect();
+            let ff = bitlinear_batch(&xn, self.data(lp.w_in), m.d_ff, self.scalar(lp.w_in_scale));
+            let ff: Vec<Vec<f32>> = ff
+                .into_iter()
+                .map(|f| f.into_iter().map(gelu).collect())
+                .collect();
+            let ff = bitlinear_batch(&ff, self.data(lp.w_out), d, self.scalar(lp.w_out_scale));
+            for (x, f) in xs.iter_mut().zip(&ff) {
+                for (xi, fi) in x.iter_mut().zip(f) {
+                    *xi += fi;
+                }
+            }
+        }
+
+        let xs: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| rms_norm(x, self.data(self.lnf_gamma), eps))
+            .collect();
+        let logits = bitlinear_batch(
+            &xs,
+            self.data(self.w_head),
+            m.vocab,
+            self.scalar(self.w_head_scale),
+        );
+
+        Ok(logits
+            .into_iter()
+            .zip(kcs.into_iter().zip(vcs))
+            .map(|(lg, (kc, vc))| StepOutput {
+                logits: lg,
+                caches: Caches::Host { k: kc, v: vc },
+            })
+            .collect())
+    }
 }
 
 /// Convenience: build the backend straight from artifacts.
@@ -411,6 +628,83 @@ mod tests {
             .decode_step(b.empty_caches().unwrap(), vocab - 1, 0)
             .unwrap();
         assert_eq!(o.logits, edge.logits);
+    }
+
+    #[test]
+    fn bitlinear_batch_bitwise_matches_sequential() {
+        // Random-ish inputs across shapes that exercise both the serial
+        // stripe path and ragged widths; the batched kernel must agree
+        // bit-for-bit with per-vector bitlinear.
+        let mut rng = crate::util::rng::Rng::new(99);
+        for (b_n, k, n_out) in [(1usize, 8usize, 5usize), (3, 16, 16), (8, 32, 7)] {
+            let w: Vec<f32> = (0..k * n_out)
+                .map(|_| rng.range(0, 3) as f32 - 1.0)
+                .collect();
+            let xs: Vec<Vec<f32>> = (0..b_n)
+                .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let batched = bitlinear_batch(&xs, &w, n_out, 0.37);
+            for (x, y) in xs.iter().zip(&batched) {
+                assert_eq!(&bitlinear(x, &w, n_out, 0.37), y);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_bitwise_matches_decode_step() {
+        let b = backend();
+        let tokens = [1i32, 9, 23, 4];
+        let seq: Vec<StepOutput> = tokens
+            .iter()
+            .map(|&t| b.decode_step(b.empty_caches().unwrap(), t, 0).unwrap())
+            .collect();
+        let caches = tokens.iter().map(|_| b.empty_caches().unwrap()).collect();
+        let batch = b.decode_batch(caches, &tokens, &[0, 0, 0, 0]).unwrap();
+        for (s, bt) in seq.iter().zip(&batch) {
+            assert_eq!(s.logits, bt.logits);
+        }
+    }
+
+    #[test]
+    fn decode_batch_allows_ragged_positions() {
+        // Sequence A at pos 2 (two tokens already cached), sequence B
+        // fresh at pos 0, decoded in ONE batch: each must match its own
+        // sequential continuation exactly.
+        let b = backend();
+        let s1 = b.decode_step(b.empty_caches().unwrap(), 1, 0).unwrap();
+        let s2 = b.decode_step(s1.caches, 2, 1).unwrap();
+        let seq_a = b.decode_step(s2.caches, 3, 2).unwrap();
+        let seq_b = b.decode_step(b.empty_caches().unwrap(), 7, 0).unwrap();
+
+        let s1 = b.decode_step(b.empty_caches().unwrap(), 1, 0).unwrap();
+        let s2 = b.decode_step(s1.caches, 2, 1).unwrap();
+        let out = b
+            .decode_batch(
+                vec![s2.caches, b.empty_caches().unwrap()],
+                &[3, 7],
+                &[2, 0],
+            )
+            .unwrap();
+        assert_eq!(out[0].logits, seq_a.logits);
+        assert_eq!(out[1].logits, seq_b.logits);
+    }
+
+    #[test]
+    fn decode_batch_rejects_arity_mismatch_and_bad_positions() {
+        let b = backend();
+        let r = b.decode_batch(vec![b.empty_caches().unwrap()], &[1, 2], &[0, 0]);
+        assert!(r.is_err());
+        let max_ctx = b.artifacts.manifest.model.max_ctx as i32;
+        let r = b.decode_batch(vec![b.empty_caches().unwrap()], &[1], &[max_ctx]);
+        assert!(r.is_err());
+        let r = b.decode_batch(vec![b.empty_caches().unwrap()], &[1], &[-1]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn decode_batch_empty_is_empty() {
+        let b = backend();
+        assert!(b.decode_batch(Vec::new(), &[], &[]).unwrap().is_empty());
     }
 
     #[test]

@@ -1,9 +1,18 @@
 //! Edge-serving front end: a request queue feeding the runtime engine,
-//! with FIFO admission, round-robin continuous batching across active
-//! sessions (the engine decodes one token per call, so "batching"
-//! interleaves sessions token-wise — exactly the one-token-per-iteration
-//! regime the paper's architecture is built for), and latency
-//! statistics. A threaded front end (`serve_threaded_with`) drives
+//! with FIFO admission, latency statistics, and three schedulers:
+//!
+//! * [`Policy::Fifo`] — each request runs to completion alone.
+//! * [`Policy::RoundRobin`] — token-wise interleaving across up to
+//!   `max_active` sessions, one `decode_step` per session per tick.
+//! * [`Policy::Batched`] — the paper's regime: every scheduler tick
+//!   issues ONE `decode_batch` over all active sessions (sessions still
+//!   prefilling and sessions generating advance together), so each
+//!   layer's weights are traversed once per tick for the whole batch
+//!   instead of once per session. The `batch` knob is the admission cap.
+//!
+//! All three produce identical tokens for identical requests (enforced
+//! by `tests/batch_equivalence.rs`); they differ only in throughput and
+//! latency shape. A threaded front end (`serve_threaded_with`) drives
 //! multiple engine replicas; the offline build has no tokio, so
 //! concurrency is std::thread-based (documented substitution — see
 //! Cargo.toml).
@@ -12,8 +21,9 @@ pub mod stats;
 
 pub use stats::LatencyStats;
 
-use crate::runtime::{Engine, TinyDecoder};
-use crate::util::error::Result;
+use crate::runtime::decoder::greedy_argmax;
+use crate::runtime::{Caches, Engine, StepOutput};
+use crate::util::error::{ensure, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -32,7 +42,7 @@ pub struct Response {
     pub tokens: Vec<i32>,
     /// Queueing delay before the first decode step.
     pub queue_s: f64,
-    /// Time from admission to completion.
+    /// Time from arrival to completion.
     pub service_s: f64,
     /// Time to first generated token (prompt ingestion included).
     pub ttft_s: f64,
@@ -43,39 +53,88 @@ pub struct Response {
 pub enum Policy {
     /// Run each request to completion before admitting the next.
     Fifo,
-    /// Interleave decode steps across up to `max_active` sessions.
+    /// Interleave decode steps across up to `max_active` sessions, one
+    /// engine call per session per tick.
     RoundRobin { max_active: usize },
+    /// Admit up to `batch` sessions and advance ALL of them with a
+    /// single `decode_batch` per tick — one weight traversal per tick
+    /// regardless of how many users are active.
+    Batched { batch: usize },
 }
 
-struct Active<'e> {
+/// One admitted session: its decode state plus bookkeeping for the
+/// latency stats. Prefill and generation are both driven through
+/// [`Active::next_token`]/[`Active::absorb`], so a tick can mix sessions
+/// in either phase.
+struct Active {
     req: Request,
-    dec: TinyDecoder<'e>,
+    caches: Option<Caches>,
+    pos: i32,
+    tokens: Vec<i32>,
+    last_logits: Vec<f32>,
     fed: usize,
     admitted: Instant,
     arrived: Instant,
     first_token_at: Option<f64>,
 }
 
-impl<'e> Active<'e> {
-    /// Advance by one token step. Returns true when finished.
-    fn step(&mut self) -> Result<bool> {
+impl Active {
+    fn admit(req: Request, engine: &Engine, arrived: Instant) -> Result<Self> {
+        Ok(Self {
+            caches: Some(engine.empty_caches()?),
+            req,
+            pos: 0,
+            tokens: Vec::new(),
+            last_logits: Vec::new(),
+            fed: 0,
+            admitted: Instant::now(),
+            arrived,
+            first_token_at: None,
+        })
+    }
+
+    fn done(&self) -> bool {
+        self.fed >= self.req.prompt.len() + self.req.n_new
+    }
+
+    /// Token this session feeds next: its next prompt token while
+    /// prefilling, else its greedy continuation via the shared
+    /// [`greedy_argmax`] convention (token 0 before any logits exist).
+    fn next_token(&self) -> i32 {
         if self.fed < self.req.prompt.len() {
-            let t = self.req.prompt[self.fed];
-            self.dec.feed(t)?;
+            self.req.prompt[self.fed]
         } else {
-            let next = self.dec.greedy_next();
-            self.dec.feed(next)?;
-            if self.first_token_at.is_none() {
-                self.first_token_at = Some(self.arrived.elapsed().as_secs_f64());
-            }
+            greedy_argmax(&self.last_logits)
         }
+    }
+
+    /// Account one fed token + its engine output.
+    fn absorb(&mut self, token: i32, out: StepOutput) {
+        let generated = self.fed >= self.req.prompt.len();
+        self.caches = Some(out.caches);
+        self.last_logits = out.logits;
+        self.tokens.push(token);
         self.fed += 1;
-        Ok(self.fed >= self.req.prompt.len() + self.req.n_new)
+        self.pos += 1;
+        if generated && self.first_token_at.is_none() {
+            self.first_token_at = Some(self.arrived.elapsed().as_secs_f64());
+        }
+    }
+
+    fn finish(self) -> Response {
+        let service_s = self.arrived.elapsed().as_secs_f64();
+        Response {
+            id: self.req.id,
+            tokens: self.tokens,
+            queue_s: (self.admitted - self.arrived).as_secs_f64(),
+            service_s,
+            ttft_s: self.first_token_at.unwrap_or(service_s),
+        }
     }
 }
 
-/// Synchronous serving engine (the async front end in `serve_async`
-/// drives this from a tokio task; the PJRT call itself is blocking).
+/// Synchronous serving engine (the threaded front end drives one of
+/// these per worker; the engine call itself is blocking).
 pub struct Server<'e> {
     engine: &'e Engine,
     policy: Policy,
@@ -92,44 +151,71 @@ impl<'e> Server<'e> {
         let t0 = Instant::now();
         let mut queue: VecDeque<(Request, Instant)> =
             requests.into_iter().map(|r| (r, t0)).collect();
-        let mut active: Vec<Active<'e>> = Vec::new();
+        let mut active: Vec<Active> = Vec::new();
         let mut done = Vec::new();
         let max_active = match self.policy {
             Policy::Fifo => 1,
             Policy::RoundRobin { max_active } => max_active.max(1),
+            Policy::Batched { batch } => batch.max(1),
         };
+        let max_ctx = self.engine.max_ctx();
 
         while !queue.is_empty() || !active.is_empty() {
-            // Admit.
+            // Admission: top the active set up to the cap. Requests that
+            // cannot fit the context window are rejected here, not
+            // mid-decode; zero-work requests (empty prompt, n_new == 0)
+            // complete immediately without occupying a batch lane.
             while active.len() < max_active {
                 let Some((req, arrived)) = queue.pop_front() else {
                     break;
                 };
-                let dec = TinyDecoder::new(self.engine)?;
-                active.push(Active {
-                    req,
-                    dec,
-                    fed: 0,
-                    admitted: Instant::now(),
-                    arrived,
-                    first_token_at: None,
-                });
+                ensure!(
+                    req.prompt.len() + req.n_new <= max_ctx,
+                    "request {} needs {} tokens > max_ctx {max_ctx}",
+                    req.id,
+                    req.prompt.len() + req.n_new
+                );
+                let a = Active::admit(req, self.engine, arrived)?;
+                if a.done() {
+                    done.push(a.finish());
+                } else {
+                    active.push(a);
+                }
             }
-            // One round-robin pass: each active session advances a token.
+            if active.is_empty() {
+                continue;
+            }
+
+            // One scheduler tick: every active session advances exactly
+            // one token (prefill or generate, mixed freely).
+            match self.policy {
+                Policy::Batched { .. } => {
+                    let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
+                    let positions: Vec<i32> = active.iter().map(|a| a.pos).collect();
+                    let caches: Vec<Caches> = active
+                        .iter_mut()
+                        .map(|a| a.caches.take().expect("caches present"))
+                        .collect();
+                    let outs = self.engine.decode_batch(caches, &tokens, &positions)?;
+                    for ((a, out), &t) in active.iter_mut().zip(outs).zip(&tokens) {
+                        a.absorb(t, out);
+                    }
+                }
+                Policy::Fifo | Policy::RoundRobin { .. } => {
+                    for a in active.iter_mut() {
+                        let t = a.next_token();
+                        let caches = a.caches.take().expect("caches present");
+                        let out = self.engine.decode_step(caches, t, a.pos)?;
+                        a.absorb(t, out);
+                    }
+                }
+            }
+
+            // Sweep finished sessions (completion order).
             let mut i = 0;
             while i < active.len() {
-                let finished = active[i].step()?;
-                if finished {
-                    let a = active.swap_remove(i);
-                    done.push(Response {
-                        id: a.req.id,
-                        tokens: a.dec.tokens.clone(),
-                        queue_s: (a.admitted - a.arrived).as_secs_f64(),
-                        service_s: a.arrived.elapsed().as_secs_f64(),
-                        ttft_s: a
-                            .first_token_at
-                            .unwrap_or_else(|| a.arrived.elapsed().as_secs_f64()),
-                    });
+                if active[i].done() {
+                    done.push(active.swap_remove(i).finish());
                 } else {
                     i += 1;
                 }
@@ -144,12 +230,13 @@ impl<'e> Server<'e> {
 /// (engine backends are not `Sync` — the pjrt feature's PJRT handles in
 /// particular — so replication, one engine per worker, is the sound
 /// multi-worker topology; it also mirrors a real deployment where each
-/// accelerator instance holds its own programmed crossbars).
-pub fn serve_threaded_with<F>(
+/// accelerator instance holds its own programmed crossbars). Each worker
+/// runs the given scheduling `policy` over its shard.
+pub fn serve_threaded_policy<F>(
     make_engine: F,
     requests: Vec<Request>,
     workers: usize,
-    max_active: usize,
+    policy: Policy,
 ) -> Result<Vec<Response>>
 where
     F: Fn() -> Result<Engine> + Sync,
@@ -167,7 +254,7 @@ where
             .map(|shard| {
                 scope.spawn(move || {
                     let engine = make_engine()?;
-                    Server::new(&engine, Policy::RoundRobin { max_active }).serve(shard)
+                    Server::new(&engine, policy).serve(shard)
                 })
             })
             .collect();
@@ -182,6 +269,24 @@ where
     }
     out.sort_by_key(|r| r.id);
     Ok(out)
+}
+
+/// [`serve_threaded_policy`] with the historical round-robin policy.
+pub fn serve_threaded_with<F>(
+    make_engine: F,
+    requests: Vec<Request>,
+    workers: usize,
+    max_active: usize,
+) -> Result<Vec<Response>>
+where
+    F: Fn() -> Result<Engine> + Sync,
+{
+    serve_threaded_policy(
+        make_engine,
+        requests,
+        workers,
+        Policy::RoundRobin { max_active },
+    )
 }
 
 /// Threaded front end loading each replica from an artifact directory.
@@ -248,9 +353,69 @@ mod tests {
     }
 
     #[test]
+    fn batched_matches_fifo_outputs() {
+        // The batched scheduler (one decode_batch per tick) must be
+        // token-for-token identical to per-session decoding.
+        let e = engine();
+        let fifo = Server::new(&e, Policy::Fifo).serve(reqs(5)).unwrap();
+        let batched = Server::new(&e, Policy::Batched { batch: 3 })
+            .serve(reqs(5))
+            .unwrap();
+        assert_eq!(batched.len(), 5);
+        for f in &fifo {
+            let b = batched.iter().find(|b| b.id == f.id).unwrap();
+            assert_eq!(f.tokens, b.tokens, "request {}", f.id);
+        }
+    }
+
+    #[test]
+    fn batched_handles_ragged_and_degenerate_requests() {
+        // Mixed prompt lengths, empty prompts, and zero-work requests in
+        // one batch: everything completes, empty-prompt generation
+        // starts from token 0, zero-work requests return no tokens.
+        let e = engine();
+        let requests = vec![
+            Request { id: 0, prompt: vec![1, 2, 3, 4, 5], n_new: 2 },
+            Request { id: 1, prompt: vec![], n_new: 3 },
+            Request { id: 2, prompt: vec![9], n_new: 0 },
+            Request { id: 3, prompt: vec![], n_new: 0 },
+        ];
+        let out = Server::new(&e, Policy::Batched { batch: 4 })
+            .serve(requests.clone())
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        let by_id = |id: u64| out.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).tokens.len(), 7);
+        assert_eq!(by_id(1).tokens.len(), 3);
+        assert_eq!(by_id(1).tokens[0], 0);
+        assert_eq!(by_id(2).tokens, vec![9]);
+        assert!(by_id(3).tokens.is_empty());
+        // And identically under the sequential schedulers.
+        for policy in [Policy::Fifo, Policy::RoundRobin { max_active: 2 }] {
+            let seq = Server::new(&e, policy).serve(requests.clone()).unwrap();
+            for r in &out {
+                let s = seq.iter().find(|s| s.id == r.id).unwrap();
+                assert_eq!(r.tokens, s.tokens, "request {} under {policy:?}", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_request_rejected_at_admission() {
+        let e = engine();
+        let max_ctx = e.max_ctx();
+        let out = Server::new(&e, Policy::Batched { batch: 2 }).serve(vec![Request {
+            id: 0,
+            prompt: vec![1; max_ctx],
+            n_new: 1,
+        }]);
+        assert!(out.is_err());
+    }
+
+    #[test]
     fn responses_have_sane_timing() {
         let e = engine();
-        let out = Server::new(&e, Policy::RoundRobin { max_active: 2 })
+        let out = Server::new(&e, Policy::Batched { batch: 2 })
             .serve(reqs(2))
             .unwrap();
         for r in out {
@@ -277,20 +442,25 @@ mod tests {
     fn threaded_replicas_match_single_engine() {
         // Worker replicas are deterministic copies: the sharded threaded
         // path must produce exactly the tokens the single-engine server
-        // produces.
+        // produces — under both the round-robin and batched policies.
         let single = Server::new(&engine(), Policy::RoundRobin { max_active: 2 })
             .serve(reqs(4))
             .unwrap();
-        let threaded = serve_threaded_with(
-            || Engine::load(Artifacts::synthetic(SEED)?),
-            reqs(4),
-            2,
-            2,
-        )
-        .unwrap();
-        for t in &threaded {
-            let s = single.iter().find(|s| s.id == t.id).unwrap();
-            assert_eq!(s.tokens, t.tokens, "request {}", t.id);
+        for policy in [
+            Policy::RoundRobin { max_active: 2 },
+            Policy::Batched { batch: 2 },
+        ] {
+            let threaded = serve_threaded_policy(
+                || Engine::load(Artifacts::synthetic(SEED)?),
+                reqs(4),
+                2,
+                policy,
+            )
+            .unwrap();
+            for t in &threaded {
+                let s = single.iter().find(|s| s.id == t.id).unwrap();
+                assert_eq!(s.tokens, t.tokens, "request {} under {policy:?}", t.id);
+            }
         }
     }
 }

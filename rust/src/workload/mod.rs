@@ -193,7 +193,7 @@ pub fn stats(ops: &[MatMulOp]) -> WorkloadStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::{by_name, table2_models};
+    use crate::models::{by_name, extra_models, table2_models, CONTEXT_LENGTHS};
 
     #[test]
     fn op_count_matches_structure() {
@@ -204,15 +204,78 @@ mod tests {
     }
 
     #[test]
-    fn macs_agree_with_closed_form() {
-        for m in table2_models() {
-            for l in [128usize, 1024, 4096] {
-                let ops = decode_ops(&m, l);
+    fn macs_agree_with_closed_form_for_whole_zoo_at_every_context() {
+        // The enumerated op list is the contract between the model zoo
+        // and both schedulers: its MAC totals must equal the closed-form
+        // projection/attention formulas for EVERY model (Table II plus
+        // the Fig. 1b / Table III extras) at EVERY paper context point.
+        let zoo: Vec<_> = table2_models()
+            .into_iter()
+            .chain(extra_models())
+            .collect();
+        assert_eq!(zoo.len(), 10);
+        for m in &zoo {
+            for l in CONTEXT_LENGTHS {
+                let ops = decode_ops(m, l);
                 let s = stats(&ops);
-                assert_eq!(s.w1a8_macs, m.projection_macs(), "{} proj", m.name);
-                assert_eq!(s.w8a8_macs, m.attention_macs(l), "{} att", m.name);
-                assert_eq!(s.total_macs, m.total_macs(l), "{} total", m.name);
+                assert_eq!(s.w1a8_macs, m.projection_macs(), "{} proj @ {l}", m.name);
+                assert_eq!(s.w8a8_macs, m.attention_macs(l), "{} att @ {l}", m.name);
+                assert_eq!(s.total_macs, m.total_macs(l), "{} total @ {l}", m.name);
+                assert_eq!(s.n_ops, m.n_layers * (6 + 2 * m.h), "{} ops @ {l}", m.name);
+                assert_eq!(s.n_w1a8_ops, m.n_layers * 6, "{} w1a8 ops @ {l}", m.name);
+                assert_eq!(s.n_w8a8_ops, m.n_layers * 2 * m.h, "{} w8a8 ops @ {l}", m.name);
             }
+        }
+    }
+
+    #[test]
+    fn execution_order_respects_dependency_chain() {
+        // Within every layer the op list must follow the decoder's data
+        // dependencies: the three QKV projections (which produce the
+        // head inputs), then per-head AttentionScore immediately
+        // followed by its AttentionValue (score feeds value), then the
+        // output projection over the concatenated heads, then the two
+        // feed-forward projections in order; layers strictly ascending.
+        for m in table2_models().iter().chain(extra_models().iter()) {
+            let ops = decode_ops(m, 512);
+            let mut it = ops.iter();
+            for layer in 0..m.n_layers {
+                for slot in 0..3 {
+                    let op = it.next().expect("qkv op");
+                    assert_eq!(
+                        (op.layer, op.kind, op.head),
+                        (layer, OpKind::QkvProjection, None),
+                        "{} layer {layer} qkv slot {slot}",
+                        m.name
+                    );
+                }
+                for head in 0..m.h {
+                    let score = it.next().expect("score op");
+                    assert_eq!(
+                        (score.layer, score.kind, score.head),
+                        (layer, OpKind::AttentionScore, Some(head)),
+                        "{} layer {layer} head {head}",
+                        m.name
+                    );
+                    let value = it.next().expect("value op");
+                    assert_eq!(
+                        (value.layer, value.kind, value.head),
+                        (layer, OpKind::AttentionValue, Some(head)),
+                        "{} layer {layer} head {head}",
+                        m.name
+                    );
+                }
+                for kind in [OpKind::OutProjection, OpKind::FfIntermediate, OpKind::FfOutput] {
+                    let op = it.next().expect("tail op");
+                    assert_eq!(
+                        (op.layer, op.kind, op.head),
+                        (layer, kind, None),
+                        "{} layer {layer}",
+                        m.name
+                    );
+                }
+            }
+            assert!(it.next().is_none(), "{}: trailing ops", m.name);
         }
     }
 

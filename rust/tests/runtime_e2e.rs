@@ -29,7 +29,7 @@ fn real_artifacts_golden_if_present() {
     }
     let e = Engine::load(Artifacts::load(dir).expect("artifacts")).expect("engine");
     match decoder::validate_golden(&e) {
-        Ok(timing) => assert!(timing.tokens_per_s() > 0.0),
+        Ok(timing) => assert!(timing.decode_tokens_per_s() > 0.0),
         // Bit-exact reproduction of the JAX golden is only guaranteed
         // under the pjrt backend; the reference executor's integer
         // matmuls are exact but its f32 norm/softmax reductions may

@@ -1,0 +1,126 @@
+//! Determinism stress for the serving front end: repeated runs of the
+//! threaded server over a mixed-length request set — including
+//! zero-generation requests (`n_new == 0`), empty prompts, and a
+//! zero-work request (both at once) — must produce byte-identical token
+//! streams every time, under both the round-robin and batched
+//! schedulers. This is what flushed out the empty-logits argmax panic
+//! and zero-work admission hang of the pre-batching serving loop.
+
+use pim_llm::runtime::{Artifacts, Engine};
+use pim_llm::serving::{serve_threaded_policy, serve_threaded_with, Policy, Request, Response};
+
+const SEED: u64 = 0xDE7;
+const RUNS: usize = 10;
+
+/// Deliberately awkward request mix: ragged lengths, degenerate shapes.
+fn mixed_requests() -> Vec<Request> {
+    vec![
+        Request { id: 0, prompt: vec![1, 2, 3, 4, 5, 6], n_new: 5 },
+        Request { id: 1, prompt: vec![], n_new: 4 },
+        Request { id: 2, prompt: vec![7], n_new: 0 },
+        Request { id: 3, prompt: vec![], n_new: 0 },
+        Request { id: 4, prompt: vec![9, 8, 7], n_new: 7 },
+        Request { id: 5, prompt: vec![2; 10], n_new: 1 },
+        Request { id: 6, prompt: vec![5, 5], n_new: 6 },
+        Request { id: 7, prompt: vec![63, 1], n_new: 3 },
+    ]
+}
+
+/// The byte-comparable part of a response set: ids + token streams in
+/// returned order (timing fields legitimately vary between runs).
+fn token_streams(responses: &[Response]) -> Vec<(u64, Vec<i32>)> {
+    responses
+        .iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect()
+}
+
+fn run_threaded(policy: Policy) -> Vec<(u64, Vec<i32>)> {
+    let out = serve_threaded_policy(
+        || Engine::load(Artifacts::synthetic(SEED)?),
+        mixed_requests(),
+        3,
+        policy,
+    )
+    .expect("threaded serve");
+    token_streams(&out)
+}
+
+#[test]
+fn threaded_round_robin_byte_identical_across_10_runs() {
+    let golden = run_threaded(Policy::RoundRobin { max_active: 2 });
+    assert_eq!(golden.len(), mixed_requests().len());
+    for run in 1..RUNS {
+        assert_eq!(
+            golden,
+            run_threaded(Policy::RoundRobin { max_active: 2 }),
+            "round-robin run {run} diverged"
+        );
+    }
+}
+
+#[test]
+fn threaded_batched_byte_identical_across_10_runs() {
+    let golden = run_threaded(Policy::Batched { batch: 3 });
+    assert_eq!(golden.len(), mixed_requests().len());
+    for run in 1..RUNS {
+        assert_eq!(
+            golden,
+            run_threaded(Policy::Batched { batch: 3 }),
+            "batched run {run} diverged"
+        );
+    }
+}
+
+#[test]
+fn schedulers_and_worker_counts_agree_on_the_mixed_set() {
+    // Same tokens whatever the worker count or scheduler — determinism
+    // is a property of the numerics, not the deployment shape.
+    let golden = run_threaded(Policy::RoundRobin { max_active: 2 });
+    for workers in [1usize, 2, 4, 8] {
+        for policy in [
+            Policy::Fifo,
+            Policy::RoundRobin { max_active: 4 },
+            Policy::Batched { batch: 4 },
+        ] {
+            let out = serve_threaded_policy(
+                || Engine::load(Artifacts::synthetic(SEED)?),
+                mixed_requests(),
+                workers,
+                policy,
+            )
+            .expect("threaded serve");
+            assert_eq!(
+                golden,
+                token_streams(&out),
+                "{workers} workers under {policy:?} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn degenerate_requests_complete_with_correct_shapes() {
+    let out = serve_threaded_with(
+        || Engine::load(Artifacts::synthetic(SEED)?),
+        mixed_requests(),
+        2,
+        3,
+    )
+    .expect("threaded serve");
+    let by_id = |id: u64| out.iter().find(|r| r.id == id).expect("response");
+    for req in mixed_requests() {
+        let r = by_id(req.id);
+        assert_eq!(
+            r.tokens.len(),
+            req.prompt.len() + req.n_new,
+            "request {}",
+            req.id
+        );
+        assert_eq!(&r.tokens[..req.prompt.len()], &req.prompt[..]);
+    }
+    // Zero-work request: completes with no tokens and sane timing.
+    let r = by_id(3);
+    assert!(r.tokens.is_empty());
+    assert!(r.service_s >= 0.0 && r.ttft_s >= 0.0);
+}
