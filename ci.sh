@@ -29,6 +29,22 @@ echo "== tier-1: tests (offline) =="
 # tests/batch_equivalence.rs and tests/serving_determinism.rs.
 cargo test -q --offline
 
+echo "== packed-backend suites (offline, explicit) =="
+# Named explicitly so a test-target wiring mistake (a file dropped from
+# the harness) cannot silently skip the bitwise-equivalence guarantees.
+cargo test -q --offline --test packed_equivalence
+cargo test -q --offline --test batch_equivalence
+
+echo "== smoke: runtime backend selection =="
+# Exercise the --backend flag end to end (synthetic-model fallback, no
+# artifacts needed) so backend selection can't silently rot: `validate`
+# must reproduce the golden generation bit-exactly on BOTH host
+# backends, and a tiny batched `serve` must complete on packed.
+cargo run -q --release --offline --bin repro -- validate --backend reference
+cargo run -q --release --offline --bin repro -- validate --backend packed
+cargo run -q --release --offline --bin repro -- serve --backend packed \
+  --requests 4 --prompt-len 4 --new-tokens 8 --batch 4
+
 echo "== bench + example targets compile (offline) =="
 cargo build --benches --offline
 cargo build --examples --offline

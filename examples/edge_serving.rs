@@ -12,12 +12,13 @@
 //! round-robin scheduler is used; both produce identical tokens.
 //!
 //! Run: `cargo run --release --example edge_serving -- \
-//!        --requests 32 --prompt-len 8 --new-tokens 16 --batch 8`
+//!        --requests 32 --prompt-len 8 --new-tokens 16 --batch 8 \
+//!        [--backend reference|packed]`
 
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{token_loop, Arch};
 use pim_llm::models;
-use pim_llm::runtime::Engine;
+use pim_llm::runtime::{BackendKind, Engine};
 use pim_llm::serving::{LatencyStats, Policy, Request, Server};
 use pim_llm::util::cli::Args;
 use pim_llm::util::error::Result;
@@ -38,9 +39,11 @@ fn main() -> Result<()> {
     };
 
     // ----------------------------------------------------------------
-    // Functional serving on the runtime backend.
+    // Functional serving on the runtime backend (`--backend packed`
+    // selects the bitplane popcount executor — identical tokens, less
+    // weight traffic).
     // ----------------------------------------------------------------
-    let engine = Engine::load_default()?;
+    let engine = Engine::load_default_with(BackendKind::resolve(args.backend())?)?;
     println!(
         "engine up: backend={} platform={} tiny-1bit d={} ({} layers), policy={policy:?}",
         engine.backend_name(),

@@ -24,10 +24,14 @@
 //!   array, plus the TPU-LLM baseline scheduler.
 //! * [`analysis`]   — figure/table generators (Fig. 1b, 4–8, Table III)
 //!   with paper-reference values for shape comparison.
+//! * [`quant`]      — packed ternary weight representation: each {-1,0,+1}
+//!   matrix lowered to two u64 bitplanes (2 bits/weight) + popcount MVM
+//!   kernels, bit-identical to the dense reference kernels.
 //! * [`runtime`]    — loader/executor for the AOT-lowered 1-bit decoder
 //!   (the functional numerics path) behind a pluggable `Backend`: a
-//!   pure-Rust reference executor by default, the PJRT (xla crate)
-//!   engine behind the off-by-default `pjrt` feature.
+//!   pure-Rust reference executor by default, the `quant`-backed packed
+//!   bitplane executor, and the PJRT (xla crate) engine behind the
+//!   off-by-default `pjrt` feature.
 //! * [`serving`]    — threaded request queue + batcher for the edge-serving
 //!   example.
 //!
@@ -42,6 +46,7 @@ pub mod memory;
 pub mod models;
 pub mod nonlinear;
 pub mod pim;
+pub mod quant;
 pub mod runtime;
 pub mod serving;
 pub mod systolic;

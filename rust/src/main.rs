@@ -17,7 +17,7 @@ use pim_llm::analysis::{figures, report};
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, token_loop, Arch};
 use pim_llm::models;
-use pim_llm::runtime::{decoder, Engine};
+use pim_llm::runtime::{decoder, BackendKind, Engine};
 use pim_llm::serving::{LatencyStats, Policy, Request, Server};
 use pim_llm::util::cli::Args;
 use pim_llm::util::error::{anyhow, Result};
@@ -32,11 +32,17 @@ SUBCOMMANDS
   simulate   --model <name> --context <l> --arch <pim-llm|tpu-llm>
   sweep      --figure <fig1b|fig4|fig5|fig6|fig7|fig8|table3|all>
   serve      --requests N --prompt-len P --new-tokens T [--batch B | --max-active A]
+             [--backend reference|packed|pjrt]
              (--batch B schedules one decode_batch over B sessions per
               tick — one weight traversal per step for the whole batch;
               --max-active A is the per-session round-robin scheduler)
-  validate
+  validate   [--backend reference|packed|pjrt]
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
+
+--backend selects the runtime executor (default: the PIM_LLM_BACKEND
+env var, else the pure-Rust reference executor; `packed` runs the same
+numerics over 2-bit ternary bitplanes with popcount kernels —
+bit-identical outputs, ~16x less weight traffic).
 
 Models (paper Table II): GPT2-355M GPT2-774M GPT2-1.5B OPT-1.3B OPT-2.7B
 OPT-6.7B LLaMA-7B (+ OPT-350M, GPT2-Small, GPT2-Medium)";
@@ -77,7 +83,7 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args, &arch_cfg),
         Some("sweep") => cmd_sweep(&args, &arch_cfg),
         Some("serve") => cmd_serve(&args),
-        Some("validate") => cmd_validate(),
+        Some("validate") => cmd_validate(&args),
         Some("generate") => cmd_generate(&args, &arch_cfg),
         _ => {
             println!("{USAGE}");
@@ -182,7 +188,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Policy::RoundRobin { max_active }
     };
 
-    let engine = Engine::load_default()?;
+    let engine = Engine::load_default_with(BackendKind::resolve(args.backend())?)?;
     println!(
         "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?}",
         engine.backend_name(),
@@ -218,13 +224,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_validate() -> Result<()> {
-    let engine = Engine::load_default()?;
+fn cmd_validate(args: &Args) -> Result<()> {
+    let engine = Engine::load_default_with(BackendKind::resolve(args.backend())?)?;
     let timing = decoder::validate_golden(&engine)?;
     println!(
-        "golden OK: {} tokens reproduced exactly on {} (decode {:.1} tok/s, prefill {:.1} tok/s)",
+        "golden OK: {} tokens reproduced exactly on {} backend={} (decode {:.1} tok/s, \
+         prefill {:.1} tok/s)",
         timing.prompt_len + timing.new_tokens,
         engine.platform(),
+        engine.backend_name(),
         timing.decode_tokens_per_s(),
         timing.prefill_tokens_per_s()
     );

@@ -1,0 +1,285 @@
+//! Popcount MVM kernels over [`TernaryPlanes`] — the packed W1A8
+//! projection, bit-for-bit identical to the dense reference kernels.
+//!
+//! ## How the mask-select accumulation works
+//!
+//! The dense kernel computes, per output column `j`,
+//!
+//! ```text
+//! y[j] = sum_kk x_q[kk] * w[kk][j]        (w in {-1, 0, +1})
+//!      = sum_{kk in PLUS_j} x_q[kk]  -  sum_{kk in MINUS_j} x_q[kk]
+//! ```
+//!
+//! so the matmul is two masked sums of int8 activations. To turn a
+//! masked sum into popcounts, the int8 activations are lifted to the
+//! unsigned byte `u[kk] = x_q[kk] + 128` (in `[0, 255]`) and sliced
+//! into eight activation bitplanes `A_b` (`A_b` bit `kk` = bit `b` of
+//! `u[kk]`). Then for a 64-row mask word `M`:
+//!
+//! ```text
+//! sum_{kk in M} u[kk]   = sum_{b=0..8} 2^b * popcount(M & A_b)
+//! sum_{kk in M} x_q[kk] = that - 128 * popcount(M)
+//! ```
+//!
+//! — 18 popcounts per 64-row word per column (8 per plane + the bias
+//! correction) replace up to 128 scalar FMAs, and the operands are 16x
+//! smaller than the dense f32 matrix (2 bits/weight vs 32).
+//!
+//! ## Why the result is bit-for-bit equal to the f32 reference
+//!
+//! All accumulation here is i32 and therefore exact. The dense
+//! reference accumulates the same integer terms in f32 carriers; inside
+//! the exact window (`k * 127 < 2^24`, enforced by
+//! [`super::pack::MAX_EXACT_K`]) every one of its partial sums is an
+//! exactly-representable integer, so its f32 additions never round and
+//! its final accumulator equals the exact integer sum — the same
+//! integer this kernel produces. Both kernels then apply the identical
+//! final operation `(sum as f32) * (w_scale / x_scale)` with identical
+//! operands, so the outputs are identical bit patterns. (Integer
+//! addition is order-independent, which is also why column striping and
+//! thread count cannot change a bit.)
+
+use super::planes::TernaryPlanes;
+use crate::runtime::kernels::{act_quant_int8, column_stripes};
+
+/// One activation vector quantized and sliced into eight 64-lane
+/// bitplanes. Word group `wi` (rows `[wi*64, wi*64+64)`) owns the eight
+/// consecutive words `words[wi*8 .. wi*8+8]`, one per bit of
+/// `u = x_q + 128` — keeping a word group contiguous means the whole
+/// group a column word needs sits in a single cache line.
+struct ActPlanes {
+    /// `words_per_col * 8` words, `[wi * 8 + b]` = plane `b` of group `wi`.
+    words: Vec<u64>,
+    /// The activation quantization scale (127 / absmax).
+    scale: f32,
+}
+
+/// Quantize with the SHARED [`act_quant_int8`] (identical `x_q` and
+/// `x_scale` to the dense kernel, which is what makes the final rescale
+/// bit-identical), then slice into bitplanes. Padding lanes beyond
+/// `x.len()` stay zero; the weight masks are zero there too, so they
+/// never contribute.
+///
+/// Precondition: finite activations. The `xv as i32` lift saturates
+/// NaN to 0 where the dense kernel would propagate it, so the
+/// bit-for-bit contract requires finite inputs — guaranteed for model
+/// activations because [`super::model::PackedModel::lower`] rejects any
+/// non-finite parameter tensor at load.
+fn quantize_to_planes(x: &[f32], words_per_col: usize) -> ActPlanes {
+    let (x_q, scale) = act_quant_int8(x);
+    let mut words = vec![0u64; words_per_col * 8];
+    for (kk, &xv) in x_q.iter().enumerate() {
+        // x_q is an exact integer in [-128, 127] carried in f32.
+        let u = (xv as i32 + 128) as u64;
+        let (wi, lane) = (kk / 64, kk % 64);
+        let group = &mut words[wi * 8..wi * 8 + 8];
+        for (b, word) in group.iter_mut().enumerate() {
+            *word |= ((u >> b) & 1) << lane;
+        }
+    }
+    ActPlanes { words, scale }
+}
+
+/// The masked integer dot product of one column: walks the column's
+/// plus/minus words once, popcounting against the activation planes.
+#[inline]
+fn column_dot(act: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
+    let mut acc = 0i32;
+    for (wi, (&pw, &mw)) in plus.iter().zip(minus).enumerate() {
+        if pw == 0 && mw == 0 {
+            continue; // fully-zero 64-row stretch: nothing to select
+        }
+        let group = &act[wi * 8..wi * 8 + 8];
+        let (mut up, mut um) = (0u32, 0u32);
+        for (b, &plane) in group.iter().enumerate() {
+            up += (pw & plane).count_ones() << b;
+            um += (mw & plane).count_ones() << b;
+        }
+        // The planes carry u = x_q + 128: subtract the bias once per
+        // selected lane. (up/um <= 64 * 255 per word group, so nothing
+        // here can overflow.)
+        acc += up as i32 - um as i32
+            - 128 * (pw.count_ones() as i32 - mw.count_ones() as i32);
+    }
+    acc
+}
+
+/// Packed W1A8 projection: `x` (len `planes.k`) through the bitplane
+/// matrix, returning bit for bit the same `n`-vector that
+/// [`crate::runtime::kernels::bitlinear`] computes from the dense
+/// source (enforced by `tests/packed_equivalence.rs`).
+pub fn bitlinear_packed(x: &[f32], planes: &TernaryPlanes) -> Vec<f32> {
+    // Hard assert (not debug_assert): a short `x` would leave its
+    // missing rows' activation planes zero, which the -128 bias
+    // correction then mis-reads as x_q = -128 — silent corruption, so
+    // make the misuse loud even in release builds.
+    assert_eq!(
+        x.len(),
+        planes.k,
+        "bitlinear_packed: activation length != matrix rows"
+    );
+    let act = quantize_to_planes(x, planes.words_per_col);
+    let rescale = planes.scale / act.scale;
+    (0..planes.n)
+        .map(|j| column_dot(&act.words, planes.plus_col(j), planes.minus_col(j)) as f32 * rescale)
+        .collect()
+}
+
+/// Batched packed projection: one traversal of the bitplanes per call,
+/// every column's mask words applied to all B activation-plane sets
+/// while they are hot — the packed analogue of
+/// [`crate::runtime::kernels::bitlinear_batch`], and bit-for-bit equal
+/// to B [`bitlinear_packed`] calls (integer accumulation is exact, so
+/// this is immediate; the tests pin it anyway).
+///
+/// Above [`crate::runtime::kernels::PAR_MAC_THRESHOLD`] MACs the output
+/// columns are striped across threads via the SAME
+/// [`column_stripes`] partition the dense batch kernel uses — stripes
+/// partition `j` and each column's sum is independent and exact, so
+/// thread count cannot change a bit.
+pub fn bitlinear_packed_batch(xs: &[Vec<f32>], planes: &TernaryPlanes) -> Vec<Vec<f32>> {
+    let b = xs.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    // Hard assert for the same reason as in `bitlinear_packed`.
+    assert!(
+        xs.iter().all(|x| x.len() == planes.k),
+        "bitlinear_packed_batch: activation length != matrix rows"
+    );
+    let acts: Vec<ActPlanes> = xs
+        .iter()
+        .map(|x| quantize_to_planes(x, planes.words_per_col))
+        .collect();
+    let n = planes.n;
+    let stripes = column_stripes(b * planes.k * n, n);
+
+    let parts = crate::util::par::parallel_map_threads(&stripes, stripes.len(), |&(j0, j1)| {
+        let width = j1 - j0;
+        let mut acc = vec![0i32; b * width];
+        for j in j0..j1 {
+            let plus = planes.plus_col(j);
+            let minus = planes.minus_col(j);
+            for (bi, act) in acts.iter().enumerate() {
+                acc[bi * width + (j - j0)] = column_dot(&act.words, plus, minus);
+            }
+        }
+        acc
+    });
+
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(b);
+    for (bi, act) in acts.iter().enumerate() {
+        let rescale = planes.scale / act.scale;
+        let mut o = vec![0.0f32; n];
+        for (stripe, part) in stripes.iter().zip(&parts) {
+            let (j0, j1) = *stripe;
+            let width = j1 - j0;
+            for (oj, &sum) in o[j0..j1].iter_mut().zip(&part[bi * width..(bi + 1) * width]) {
+                *oj = sum as f32 * rescale;
+            }
+        }
+        out.push(o);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack;
+    use crate::runtime::kernels::{bitlinear, bitlinear_batch};
+    use crate::util::rng::Rng;
+
+    fn random_ternary(rng: &mut Rng, numel: usize) -> Vec<f32> {
+        // Rng::range is INCLUSIVE: [0, 2] - 1 = {-1, 0, 1}.
+        (0..numel)
+            .map(|_| rng.range(0, 2) as f32 - 1.0)
+            .collect()
+    }
+
+    #[test]
+    fn packed_matches_dense_bitwise_across_shapes() {
+        let mut rng = Rng::new(7);
+        for (k, n) in [
+            (1usize, 1usize),
+            (5, 3),
+            (63, 9),
+            (64, 16),
+            (65, 8),
+            (130, 31),
+            (256, 64),
+        ] {
+            let w = random_ternary(&mut rng, k * n);
+            let scale = 0.25 + rng.f64() as f32;
+            let planes = pack(&w, k, n, scale).unwrap();
+            for case in 0..3 {
+                let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+                let dense = bitlinear(&x, &w, n, scale);
+                let packed = bitlinear_packed(&x, &planes);
+                assert_eq!(dense, packed, "{k}x{n} case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_handles_extreme_activations() {
+        // Saturating, all-zero, and single-spike activations: the u =
+        // x_q + 128 lift and the eps floor must all agree with dense.
+        let k = 70usize;
+        let n = 6usize;
+        let mut rng = Rng::new(9);
+        let w = random_ternary(&mut rng, k * n);
+        let planes = pack(&w, k, n, 0.73).unwrap();
+        let mut spike = vec![0.0f32; k];
+        spike[67] = -4.2;
+        for x in [
+            vec![0.0f32; k],              // all zeros: eps-floored scale
+            vec![1e-7f32; k],             // below the eps floor
+            (0..k).map(|i| if i % 2 == 0 { 1e6 } else { -1e6 }).collect(),
+            spike,
+        ] {
+            assert_eq!(bitlinear(&x, &w, n, 0.73), bitlinear_packed(&x, &planes));
+        }
+    }
+
+    #[test]
+    fn packed_batch_matches_dense_batch_and_singles() {
+        let mut rng = Rng::new(21);
+        for (b_n, k, n) in [(1usize, 8usize, 5usize), (3, 100, 16), (8, 64, 7)] {
+            let w = random_ternary(&mut rng, k * n);
+            let planes = pack(&w, k, n, 0.37).unwrap();
+            let xs: Vec<Vec<f32>> = (0..b_n)
+                .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let packed = bitlinear_packed_batch(&xs, &planes);
+            let dense = bitlinear_batch(&xs, &w, n, 0.37);
+            assert_eq!(packed, dense, "b={b_n} {k}x{n} vs dense batch");
+            for (x, y) in xs.iter().zip(&packed) {
+                assert_eq!(&bitlinear_packed(x, &planes), y, "b={b_n} {k}x{n} single");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_batch_striped_path_is_bitwise_equal() {
+        // 8 * 64 * 4096 = 2^21 MACs: exactly at the striping threshold,
+        // so this exercises the threaded column walk.
+        let (b_n, k, n) = (8usize, 64usize, 4096usize);
+        let mut rng = Rng::new(33);
+        let w = random_ternary(&mut rng, k * n);
+        let planes = pack(&w, k, n, 1.5).unwrap();
+        let xs: Vec<Vec<f32>> = (0..b_n)
+            .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let packed = bitlinear_packed_batch(&xs, &planes);
+        for (x, y) in xs.iter().zip(&packed) {
+            assert_eq!(&bitlinear(x, &w, n, 1.5), y);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let planes = pack(&[1.0, -1.0], 2, 1, 1.0).unwrap();
+        assert!(bitlinear_packed_batch(&[], &planes).is_empty());
+    }
+}

@@ -1,0 +1,62 @@
+//! Packed ternary weight representation + popcount MVM kernels — the
+//! codebase's first representation-level subsystem: instead of another
+//! consumer of dense f32 weights, this is the compile/pack step that
+//! lowers {-1, 0, +1} projection matrices into the 2-bit hardware-shaped
+//! storage the paper's PIM banks actually hold, and the integer kernels
+//! that execute sign-accumulate MVMs over it.
+//!
+//! ## Bitplane layout
+//!
+//! Each k x n ternary matrix becomes two u64 bitplanes (one marking +1
+//! weights, one marking -1), stored column-major in 64-row words so one
+//! output column's masks are contiguous and the contraction dimension
+//! advances 64 rows per word:
+//!
+//! ```text
+//! dense (row-major f32, 4 bytes/weight)      packed (2 bits/weight)
+//!
+//!         col0 col1 .. coln                  plus plane        minus plane
+//! row0  [  +1   0  ..  -1 ]                  col0: w0 w1 ..    col0: w0 w1 ..
+//! row1  [   0  -1  ..  +1 ]          =>      col1: w0 w1 ..    col1: w0 w1 ..
+//!  ...                                        ...               ...
+//! row63 [  -1  +1  ..   0 ]                  (w0 bit i = row i of this col)
+//! row64 [  +1   0  ..   0 ]                  (w1 bit i = row 64+i, ...)
+//! ```
+//!
+//! `weight = (plus bit) - (minus bit)`; both bits set is illegal and
+//! rejected by [`pack`]. Rows past `k` in the last word are zero in both
+//! planes. A 512 x 512 f32 matrix (1 MiB) packs into 64 KiB — 16x — and
+//! zero weights (a measured ~31% of ternary entries, see
+//! [`crate::workload::EXPECTED_TERNARY_SPARSITY`]) simply have no bit
+//! set in either plane, so the kernels skip them for free.
+//!
+//! ## Why the packed kernels are bit-for-bit exact
+//!
+//! The dense reference kernel performs integer arithmetic in f32
+//! carriers: int8 activations times {-1,0,+1} weights, accumulated in
+//! `kk`-ascending order. Inside the f32 exact-integer window (every
+//! partial sum below 2^24, i.e. `k * 127 < 2^24` — enforced at pack
+//! time via [`pack::MAX_EXACT_K`]) none of those f32 additions can
+//! round, so its accumulator IS the exact integer sum. The popcount
+//! kernels ([`bitlinear_packed`], [`bitlinear_packed_batch`]) compute
+//! the same sum in i32 (exact by construction, in any order), convert
+//! it to f32 (exact below 2^24), and apply the identical final rescale
+//! `* (w_scale / x_scale)` with identical operands — hence identical
+//! output bits, asserted across backends by
+//! `tests/packed_equivalence.rs`. Full derivation in
+//! [`kernels`]'s module docs.
+//!
+//! * [`planes`]  — [`TernaryPlanes`] storage format.
+//! * [`pack`]    — dense ↔ packed conversion + round-trip validation.
+//! * [`kernels`] — popcount MVM kernels (single + batched, striped).
+//! * [`model`]   — [`PackedModel`]: whole-artifacts lowering at load.
+
+pub mod kernels;
+pub mod model;
+pub mod pack;
+pub mod planes;
+
+pub use kernels::{bitlinear_packed, bitlinear_packed_batch};
+pub use model::{PackedLayer, PackedModel};
+pub use pack::{pack, pack_verified, unpack};
+pub use planes::TernaryPlanes;

@@ -1,0 +1,242 @@
+//! `Artifacts` → [`PackedModel`] lowering: the compile/pack step that
+//! turns every dense ternary projection matrix of a loaded model into
+//! [`TernaryPlanes`], once, at engine load — the software analogue of
+//! programming the PIM crossbars before serving traffic (HPIM and LEAP
+//! structure their simulators around the same pack-then-execute split).
+
+use super::pack::pack_verified;
+use super::planes::TernaryPlanes;
+use crate::runtime::artifacts::Artifacts;
+use crate::util::error::{anyhow, ensure, Context, Result};
+
+/// The six packed projection matrices of one decoder layer.
+pub struct PackedLayer {
+    pub wq: TernaryPlanes,
+    pub wk: TernaryPlanes,
+    pub wv: TernaryPlanes,
+    pub wx: TernaryPlanes,
+    pub w_in: TernaryPlanes,
+    pub w_out: TernaryPlanes,
+}
+
+/// Every ternary weight matrix of a model in packed bitplane form (the
+/// seventh matrix kind, `w_head`, is model-level). Non-ternary
+/// parameters (embedding, norm gammas, scales) stay in the artifacts —
+/// only projection weights have a 2-bit representation.
+pub struct PackedModel {
+    pub layers: Vec<PackedLayer>,
+    pub w_head: TernaryPlanes,
+}
+
+impl PackedModel {
+    /// Lower a loaded model. Each matrix is packed with a full
+    /// `unpack == source` round-trip check, so a model whose projection
+    /// weights are not exactly ternary (or a packing bug) fails loudly
+    /// at load time, never as wrong logits.
+    pub fn lower(artifacts: &Artifacts) -> Result<Self> {
+        let matrix = |name: &str| -> Result<TernaryPlanes> {
+            let p = artifacts
+                .manifest
+                .params
+                .iter()
+                .find(|p| p.name == name)
+                .ok_or_else(|| anyhow!("manifest missing parameter '{name}'"))?;
+            ensure!(
+                p.shape.len() == 2,
+                "parameter '{name}' is not a matrix (shape {:?})",
+                p.shape
+            );
+            let scale_name = format!("{name}_scale");
+            let s = artifacts
+                .manifest
+                .params
+                .iter()
+                .find(|p| p.name == scale_name)
+                .ok_or_else(|| anyhow!("manifest missing parameter '{scale_name}'"))?;
+            ensure!(s.numel == 1, "parameter '{scale_name}' is not a scalar");
+            let scale = artifacts.param_data(s)[0];
+            pack_verified(artifacts.param_data(p), p.shape[0], p.shape[1], scale)
+                .with_context(|| format!("packing '{name}'"))
+        };
+        let mut layers = Vec::with_capacity(artifacts.manifest.model.n_layers);
+        for layer in 0..artifacts.manifest.model.n_layers {
+            let l = |name: &str| format!("layer{layer}.{name}");
+            layers.push(PackedLayer {
+                wq: matrix(&l("wq"))?,
+                wk: matrix(&l("wk"))?,
+                wv: matrix(&l("wv"))?,
+                wx: matrix(&l("wx"))?,
+                w_in: matrix(&l("w_in"))?,
+                w_out: matrix(&l("w_out"))?,
+            });
+        }
+        let w_head = matrix("w_head")?;
+        // The popcount kernels' bit-for-bit contract with the dense
+        // reference assumes finite activations: the dense path would
+        // propagate a NaN loudly, while the `x_q as i32` lift in
+        // `quantize_to_planes` saturates NaN to 0 and would diverge
+        // silently. Finite parameters guarantee finite activations
+        // (every downstream op — rms_norm, gelu, stable softmax, the
+        // integer matmuls — is NaN/Inf-free on finite input), so a
+        // corrupt tensor ANYWHERE in the model (gammas and embedding
+        // included, which the per-matrix round trips above never see)
+        // is rejected here, at load.
+        for p in &artifacts.manifest.params {
+            ensure!(
+                artifacts.param_data(p).iter().all(|v| v.is_finite()),
+                "parameter '{}' contains non-finite values — the packed backend \
+                 requires finite tensors",
+                p.name
+            );
+        }
+        Ok(Self { layers, w_head })
+    }
+
+    /// Every packed matrix with its manifest name, layer order then head.
+    pub fn matrices(&self) -> Vec<(String, &TernaryPlanes)> {
+        let mut out = Vec::with_capacity(self.layers.len() * 6 + 1);
+        for (i, l) in self.layers.iter().enumerate() {
+            for (name, m) in [
+                ("wq", &l.wq),
+                ("wk", &l.wk),
+                ("wv", &l.wv),
+                ("wx", &l.wx),
+                ("w_in", &l.w_in),
+                ("w_out", &l.w_out),
+            ] {
+                out.push((format!("layer{i}.{name}"), m));
+            }
+        }
+        out.push(("w_head".to_string(), &self.w_head));
+        out
+    }
+
+    /// Total bytes of the packed representation (all bitplanes).
+    pub fn packed_bytes(&self) -> usize {
+        self.matrices().iter().map(|(_, m)| m.packed_bytes()).sum()
+    }
+
+    /// Total bytes of the dense f32 source matrices.
+    pub fn dense_f32_bytes(&self) -> usize {
+        self.matrices()
+            .iter()
+            .map(|(_, m)| m.dense_f32_bytes())
+            .sum()
+    }
+
+    /// Measured zero fraction over ALL ternary weights of the model —
+    /// the plane-popcount census, aggregated through the same
+    /// [`crate::workload::SparsityStats`] the dense-side censuses use.
+    pub fn sparsity(&self) -> f64 {
+        let mut census = crate::workload::SparsityStats { zeros: 0, total: 0 };
+        for (_, m) in self.matrices() {
+            let (p, mi) = m.nnz();
+            let total = (m.k * m.n) as u64;
+            census.merge(crate::workload::SparsityStats {
+                zeros: total - p - mi,
+                total,
+            });
+        }
+        census.fraction()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowers_synthetic_model_with_expected_geometry() {
+        let a = Artifacts::synthetic(5).unwrap();
+        let m = PackedModel::lower(&a).unwrap();
+        let info = &a.manifest.model;
+        assert_eq!(m.layers.len(), info.n_layers);
+        for l in &m.layers {
+            assert_eq!((l.wq.k, l.wq.n), (info.d, info.d));
+            assert_eq!((l.w_in.k, l.w_in.n), (info.d, info.d_ff));
+            assert_eq!((l.w_out.k, l.w_out.n), (info.d_ff, info.d));
+        }
+        assert_eq!((m.w_head.k, m.w_head.n), (info.d, info.vocab));
+        assert_eq!(m.matrices().len(), info.n_layers * 6 + 1);
+        // Unpacked planes reproduce the dense source exactly.
+        let wq = a
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == "layer0.wq")
+            .unwrap();
+        assert_eq!(
+            crate::quant::pack::unpack(&m.layers[0].wq),
+            a.param_data(wq)
+        );
+    }
+
+    #[test]
+    fn size_and_sparsity_accounting() {
+        let a = Artifacts::synthetic(6).unwrap();
+        let m = PackedModel::lower(&a).unwrap();
+        // d=32 < 64 rows: one word per column per plane, so packed is
+        // 16 bytes per column-plane-pair vs 128 f32 bytes for 32 rows.
+        assert!(m.packed_bytes() > 0);
+        assert!(m.dense_f32_bytes() > m.packed_bytes());
+        let s = m.sparsity();
+        // BitNet-b1.58 ternary quantization of Gaussian weights zeroes
+        // ~31% of entries (workload::EXPECTED_TERNARY_SPARSITY); allow
+        // a generous band for the tiny model's sample noise.
+        assert!(s > 0.15 && s < 0.50, "sparsity {s}");
+    }
+
+    #[test]
+    fn non_ternary_weights_rejected_at_lowering() {
+        let mut a = Artifacts::synthetic(7).unwrap();
+        let p = a
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == "layer0.wv")
+            .unwrap()
+            .clone();
+        a.weights[p.offset + 3] = 0.5;
+        assert!(PackedModel::lower(&a).is_err());
+    }
+
+    #[test]
+    fn non_finite_parameters_rejected_at_lowering() {
+        // A NaN in a NON-matrix tensor (gamma) must fail the load: the
+        // reference backend would propagate it loudly, the popcount
+        // lift would saturate it to 0 and diverge silently.
+        let mut a = Artifacts::synthetic(9).unwrap();
+        let p = a
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == "layer0.ln1_gamma")
+            .unwrap()
+            .clone();
+        a.weights[p.offset] = f32::NAN;
+        assert!(PackedModel::lower(&a).is_err());
+        let mut b = Artifacts::synthetic(9).unwrap();
+        let e = b
+            .manifest
+            .params
+            .iter()
+            .find(|p| p.name == "embedding")
+            .unwrap()
+            .clone();
+        b.weights[e.offset + 1] = f32::INFINITY;
+        assert!(PackedModel::lower(&b).is_err());
+    }
+
+    #[test]
+    fn missing_parameter_rejected_at_lowering() {
+        let mut a = Artifacts::synthetic(8).unwrap();
+        let idx = a
+            .manifest
+            .params
+            .iter()
+            .position(|p| p.name == "layer1.w_in")
+            .unwrap();
+        a.manifest.params[idx].name = "layer1.w_in_gone".to_string();
+        assert!(PackedModel::lower(&a).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! `pack`/`unpack` between dense row-major f32 ternary matrices and
+//! [`TernaryPlanes`], with round-trip validation.
+
+use super::planes::TernaryPlanes;
+use crate::util::error::{ensure, Result};
+
+/// Largest contraction dimension for which the dense f32 reference
+/// kernel is still exact-integer arithmetic (every partial sum of k
+/// int8*ternary products stays below 2^24, the f32 exact-integer
+/// window): `k * 127 < 2^24`. The packed kernels accumulate in i32 and
+/// are exact far beyond this, but bit-for-bit identity WITH the f32
+/// reference is only guaranteed inside the window, so `pack` enforces
+/// it. Every model in this repo (d_ff <= 16384) is orders of magnitude
+/// inside the bound.
+pub const MAX_EXACT_K: usize = (1 << 24) / 127;
+
+/// Pack a dense row-major ternary matrix `w` (`k` rows x `n` columns,
+/// every entry in {-1.0, 0.0, +1.0}) into two column-major u64
+/// bitplanes. Fails on non-ternary entries (including NaN) and on
+/// degenerate/oversized shapes; padding bits beyond row `k` are zero in
+/// both planes.
+pub fn pack(w: &[f32], k: usize, n: usize, scale: f32) -> Result<TernaryPlanes> {
+    ensure!(k > 0 && n > 0, "pack: degenerate shape {k}x{n}");
+    ensure!(
+        k <= MAX_EXACT_K,
+        "pack: k={k} exceeds the f32-exact window (max {MAX_EXACT_K}); \
+         the packed kernel could no longer be bit-identical to the dense \
+         reference"
+    );
+    ensure!(
+        w.len() == k * n,
+        "pack: {} weights for a {k}x{n} matrix",
+        w.len()
+    );
+    ensure!(
+        scale.is_finite() && scale > 0.0,
+        "pack: non-positive weight scale {scale}"
+    );
+    let words_per_col = k.div_ceil(64);
+    let mut plus = vec![0u64; n * words_per_col];
+    let mut minus = vec![0u64; n * words_per_col];
+    for kk in 0..k {
+        let (wi, lane) = (kk / 64, kk % 64);
+        let row = &w[kk * n..(kk + 1) * n];
+        for (j, &wv) in row.iter().enumerate() {
+            let word = j * words_per_col + wi;
+            if wv == 1.0 {
+                plus[word] |= 1u64 << lane;
+            } else if wv == -1.0 {
+                minus[word] |= 1u64 << lane;
+            } else {
+                ensure!(
+                    wv == 0.0,
+                    "pack: non-ternary weight {wv} at row {kk}, col {j}"
+                );
+            }
+        }
+    }
+    Ok(TernaryPlanes {
+        k,
+        n,
+        scale,
+        words_per_col,
+        plus,
+        minus,
+    })
+}
+
+/// Unpack back to the dense row-major f32 matrix (`k * n` entries in
+/// {-1.0, 0.0, +1.0}).
+pub fn unpack(planes: &TernaryPlanes) -> Vec<f32> {
+    let mut w = vec![0.0f32; planes.k * planes.n];
+    for j in 0..planes.n {
+        let plus = planes.plus_col(j);
+        let minus = planes.minus_col(j);
+        for (wi, (&pw, &mw)) in plus.iter().zip(minus).enumerate() {
+            let mut bits = pw | mw;
+            while bits != 0 {
+                let lane = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let kk = wi * 64 + lane;
+                w[kk * planes.n + j] = if (pw >> lane) & 1 == 1 { 1.0 } else { -1.0 };
+            }
+        }
+    }
+    w
+}
+
+/// [`pack`] followed by an [`unpack`] round-trip check against the f32
+/// source — the validated entry point the model lowering uses, so a
+/// packing bug can never silently corrupt a backend.
+pub fn pack_verified(w: &[f32], k: usize, n: usize, scale: f32) -> Result<TernaryPlanes> {
+    let planes = pack(w, k, n, scale)?;
+    ensure!(
+        unpack(&planes) == w,
+        "pack round-trip mismatch on a {k}x{n} matrix"
+    );
+    Ok(planes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_ternary(rng: &mut Rng, numel: usize) -> Vec<f32> {
+        // Rng::range is INCLUSIVE: [0, 2] - 1 = {-1, 0, 1}.
+        (0..numel).map(|_| rng.range(0, 2) as f32 - 1.0).collect()
+    }
+
+    #[test]
+    fn round_trips_adversarial_shapes() {
+        // k not a multiple of 64, n=1, k=1, word-boundary straddles.
+        let mut rng = Rng::new(41);
+        for (k, n) in [
+            (1usize, 1usize),
+            (1, 7),
+            (7, 1),
+            (63, 3),
+            (64, 3),
+            (65, 3),
+            (130, 5),
+            (128, 1),
+            (200, 17),
+        ] {
+            let w = random_ternary(&mut rng, k * n);
+            let planes = pack_verified(&w, k, n, 0.5).unwrap();
+            assert_eq!(planes.words_per_col, k.div_ceil(64), "{k}x{n}");
+            assert_eq!(unpack(&planes), w, "{k}x{n}");
+            // Element accessor agrees with the dense source.
+            for kk in 0..k {
+                for j in 0..n {
+                    assert_eq!(planes.weight(kk, j), w[kk * n + j], "{k}x{n} @ ({kk},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_lanes_are_zero_and_masks_disjoint() {
+        let mut rng = Rng::new(42);
+        for (k, n) in [(1usize, 4usize), (65, 2), (100, 3)] {
+            let w = random_ternary(&mut rng, k * n);
+            let planes = pack(&w, k, n, 1.0).unwrap();
+            let pad_mask = if k % 64 == 0 {
+                0u64
+            } else {
+                !0u64 << (k % 64)
+            };
+            for j in 0..n {
+                let (plus, minus) = (planes.plus_col(j), planes.minus_col(j));
+                let last = planes.words_per_col - 1;
+                assert_eq!(plus[last] & pad_mask, 0, "{k}x{n} col {j} plus padding");
+                assert_eq!(minus[last] & pad_mask, 0, "{k}x{n} col {j} minus padding");
+                for (&pw, &mw) in plus.iter().zip(minus) {
+                    assert_eq!(pw & mw, 0, "{k}x{n} col {j}: +1 and -1 bits overlap");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_and_sparsity_count_exactly() {
+        // 3x2 with a known census: two +1, one -1, three 0.
+        let w = vec![1.0, 0.0, -1.0, 0.0, 0.0, 1.0];
+        let planes = pack(&w, 3, 2, 1.0).unwrap();
+        assert_eq!(planes.nnz(), (2, 1));
+        assert!((planes.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn packed_bytes_are_16x_smaller_at_word_multiples() {
+        let w = vec![0.0f32; 128 * 32];
+        let planes = pack(&w, 128, 32, 1.0).unwrap();
+        assert_eq!(planes.dense_f32_bytes(), 128 * 32 * 4);
+        assert_eq!(planes.packed_bytes(), 2 * 32 * 2 * 8); // 2 words/col/plane
+        assert_eq!(planes.dense_f32_bytes() / planes.packed_bytes(), 16);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(pack(&[0.5], 1, 1, 1.0).is_err()); // non-ternary
+        assert!(pack(&[f32::NAN], 1, 1, 1.0).is_err());
+        assert!(pack(&[1.0], 1, 1, 0.0).is_err()); // bad scale
+        assert!(pack(&[1.0], 1, 1, f32::NAN).is_err());
+        assert!(pack(&[1.0, 0.0], 1, 1, 1.0).is_err()); // wrong numel
+        assert!(pack(&[], 0, 1, 1.0).is_err()); // degenerate shape
+        assert!(pack(&[], 1, 0, 1.0).is_err());
+    }
+
+    #[test]
+    fn exact_window_guard_enforced() {
+        // The k guard fires before the data-length check, so no
+        // >132k-row matrix needs to be materialized to exercise it.
+        let k = MAX_EXACT_K + 1;
+        let r = pack(&[0.0], k, 1, 1.0);
+        assert!(r.is_err());
+        assert!(pack(&[0.0], 1, 1, 1.0).is_ok());
+    }
+}

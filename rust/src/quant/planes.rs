@@ -1,0 +1,98 @@
+//! [`TernaryPlanes`] — the packed storage format for one ternary weight
+//! matrix: two u64 bitplanes (plus-mask, minus-mask) in column-major
+//! 64-row words, plus the per-matrix dequantization scale.
+//!
+//! See the module docs of [`crate::quant`] for the layout diagram and
+//! the exactness argument.
+
+/// One k x n ternary matrix packed into two bitplanes.
+///
+/// Layout: column-major over 64-row words. Column `j` owns the word
+/// range `[j * words_per_col, (j + 1) * words_per_col)` in each plane;
+/// word `wi` of a column covers rows `[wi * 64, wi * 64 + 64)`, row
+/// `kk` mapping to bit `kk % 64`. Bits for rows >= `k` (the padding
+/// lanes of the last word) are ZERO in both planes — the kernels rely
+/// on that, so [`crate::quant::pack::pack`] guarantees it and the
+/// round-trip tests pin it.
+///
+/// Row `kk` of column `j` encodes weight `w[kk][j]`:
+///
+/// | plus bit | minus bit | weight |
+/// |---|---|---|
+/// | 0 | 0 |  0 |
+/// | 1 | 0 | +1 |
+/// | 0 | 1 | -1 |
+/// | 1 | 1 |  (illegal — rejected by `pack`) |
+#[derive(Debug, Clone, PartialEq)]
+pub struct TernaryPlanes {
+    /// Rows (the input/contraction dimension: `x.len()`).
+    pub k: usize,
+    /// Columns (the output dimension).
+    pub n: usize,
+    /// Dequantization scale of the matrix (the `w_scale` the dense
+    /// kernel folds into its final rescale).
+    pub scale: f32,
+    /// Words per column: `k.div_ceil(64)`.
+    pub words_per_col: usize,
+    /// +1 mask, `n * words_per_col` words, column-major.
+    pub(crate) plus: Vec<u64>,
+    /// -1 mask, same layout.
+    pub(crate) minus: Vec<u64>,
+}
+
+impl TernaryPlanes {
+    /// The +1 mask words of column `j`.
+    #[inline]
+    pub fn plus_col(&self, j: usize) -> &[u64] {
+        &self.plus[j * self.words_per_col..(j + 1) * self.words_per_col]
+    }
+
+    /// The -1 mask words of column `j`.
+    #[inline]
+    pub fn minus_col(&self, j: usize) -> &[u64] {
+        &self.minus[j * self.words_per_col..(j + 1) * self.words_per_col]
+    }
+
+    /// Weight at row `kk`, column `j`, as the ternary f32 it unpacks to.
+    pub fn weight(&self, kk: usize, j: usize) -> f32 {
+        assert!(kk < self.k && j < self.n, "weight({kk}, {j}) out of range");
+        let (wi, lane) = (kk / 64, kk % 64);
+        let bit = 1u64 << lane;
+        if self.plus_col(j)[wi] & bit != 0 {
+            1.0
+        } else if self.minus_col(j)[wi] & bit != 0 {
+            -1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Non-zero counts: (number of +1 weights, number of -1 weights).
+    pub fn nnz(&self) -> (u64, u64) {
+        let pop = |words: &[u64]| words.iter().map(|w| w.count_ones() as u64).sum();
+        (pop(&self.plus), pop(&self.minus))
+    }
+
+    /// Fraction of exactly-zero weights (the measured ternary sparsity
+    /// of this matrix).
+    pub fn sparsity(&self) -> f64 {
+        let (p, m) = self.nnz();
+        let total = (self.k * self.n) as u64;
+        if total == 0 {
+            0.0
+        } else {
+            1.0 - (p + m) as f64 / total as f64
+        }
+    }
+
+    /// Bytes this packed representation occupies (both planes; 2 bits
+    /// per weight plus last-word padding).
+    pub fn packed_bytes(&self) -> usize {
+        (self.plus.len() + self.minus.len()) * std::mem::size_of::<u64>()
+    }
+
+    /// Bytes the dense f32 source occupies (4 bytes per weight).
+    pub fn dense_f32_bytes(&self) -> usize {
+        self.k * self.n * std::mem::size_of::<f32>()
+    }
+}

@@ -6,6 +6,9 @@
 //! * [`crate::runtime::reference`] — pure-Rust reference executor
 //!   mirroring `python/compile/kernels/ref.py`; the DEFAULT, builds and
 //!   runs offline with zero dependencies.
+//! * [`crate::runtime::packed`] — bitplane popcount executor over
+//!   [`crate::quant`] packed ternary weights; bit-identical outputs to
+//!   the reference backend at a fraction of the weight traffic.
 //! * [`crate::runtime::pjrt`] — the XLA/PJRT engine executing the
 //!   AOT-lowered HLO; behind the off-by-default `pjrt` Cargo feature
 //!   because the `xla` crate needs network access to build.
@@ -41,7 +44,7 @@ pub struct StepOutput {
 
 /// One execution engine for the decode step.
 pub trait Backend {
-    /// Short identifier: "reference" or "pjrt".
+    /// Short identifier: "reference", "packed" or "pjrt".
     fn name(&self) -> &'static str;
 
     /// Platform string (mirrors PJRT's platform_name, e.g. "cpu").

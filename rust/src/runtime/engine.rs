@@ -1,10 +1,16 @@
 //! The runtime engine facade: artifacts + a boxed [`Backend`] chosen at
 //! load time.
 //!
-//! The default backend is the pure-Rust [`super::reference`] executor,
-//! which builds and runs offline. With the `pjrt` Cargo feature enabled
-//! (plus the `xla` dependency — see Cargo.toml), the XLA/PJRT engine is
-//! available behind [`BackendKind::Pjrt`] or `PIM_LLM_BACKEND=pjrt`.
+//! Three backends: the pure-Rust [`super::reference`] executor (the
+//! offline default), the [`super::packed`] bitplane popcount executor
+//! (also offline; bit-identical outputs, packed ternary weights), and —
+//! with the `pjrt` Cargo feature plus the `xla` dependency (see
+//! Cargo.toml) — the XLA/PJRT engine behind [`BackendKind::Pjrt`].
+//!
+//! Selection: the `--backend reference|packed|pjrt` CLI flag resolves
+//! through [`BackendKind::resolve`]; without the flag the
+//! `PIM_LLM_BACKEND` env var applies, and with neither the reference
+//! backend is used.
 //!
 //! Callers (decoder, serving, CLI, benches) only see `Engine`; the KV
 //! caches they thread between steps are the opaque [`Caches`] values of
@@ -20,30 +26,62 @@ use std::sync::Arc;
 pub enum BackendKind {
     /// Pure-Rust reference executor (the offline default).
     Reference,
+    /// Bitplane popcount executor over packed ternary weights
+    /// ([`crate::quant`]); bit-identical to `Reference`.
+    Packed,
     /// XLA/PJRT engine executing the AOT-lowered HLO.
     #[cfg(feature = "pjrt")]
     Pjrt,
 }
 
 impl BackendKind {
-    /// Resolve from `PIM_LLM_BACKEND` (unset/"reference" -> Reference;
-    /// "pjrt" -> Pjrt when the feature is compiled in, error otherwise).
-    pub fn from_env() -> Result<Self> {
-        match std::env::var("PIM_LLM_BACKEND").ok().as_deref() {
-            None | Some("") | Some("reference") => Ok(BackendKind::Reference),
+    /// Resolve a backend name ("" / "reference" -> Reference; "packed"
+    /// -> Packed; "pjrt" -> Pjrt when the feature is compiled in, a
+    /// clear error otherwise).
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "" | "reference" => Ok(BackendKind::Reference),
+            "packed" => Ok(BackendKind::Packed),
             #[cfg(feature = "pjrt")]
-            Some("pjrt") => Ok(BackendKind::Pjrt),
-            Some(other) => {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => {
                 // With the feature on, "pjrt" is matched above, so this
                 // branch only fires for it on feature-less builds.
                 if other == "pjrt" {
                     crate::bail!(
-                        "PIM_LLM_BACKEND=pjrt needs a build with --features pjrt \
+                        "backend 'pjrt' needs a build with --features pjrt \
                          (see rust/README.md for the build matrix)"
                     );
                 }
-                crate::bail!("unknown PIM_LLM_BACKEND '{other}' (reference | pjrt)")
+                crate::bail!("unknown backend '{other}' (reference | packed | pjrt)")
             }
+        }
+    }
+
+    /// Resolve from `PIM_LLM_BACKEND` (unset -> Reference).
+    pub fn from_env() -> Result<Self> {
+        let name = std::env::var("PIM_LLM_BACKEND").unwrap_or_default();
+        Self::from_name(&name).context("resolving PIM_LLM_BACKEND")
+    }
+
+    /// Resolve the CLI `--backend` flag, falling back to the env var
+    /// (then the reference default) when the flag was not given.
+    pub fn resolve(flag: Option<&str>) -> Result<Self> {
+        match flag {
+            Some(name) => Self::from_name(name).context("resolving --backend"),
+            None => Self::from_env(),
+        }
+    }
+
+    /// Whether this backend can only run from real AOT artifacts.
+    /// Synthetic artifacts carry weights but no HLO text, so only the
+    /// PJRT engine needs the real thing — the host executors (reference,
+    /// packed) both run from the synthetic fallback.
+    pub fn requires_aot_artifacts(self) -> bool {
+        match self {
+            BackendKind::Reference | BackendKind::Packed => false,
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => true,
         }
     }
 }
@@ -69,6 +107,9 @@ impl Engine {
             BackendKind::Reference => Box::new(
                 super::reference::ReferenceBackend::new(Arc::clone(&artifacts))?,
             ),
+            BackendKind::Packed => {
+                Box::new(super::packed::PackedBackend::new(Arc::clone(&artifacts))?)
+            }
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => {
                 Box::new(super::pjrt::PjrtBackend::new(Arc::clone(&artifacts))?)
@@ -77,30 +118,35 @@ impl Engine {
         Ok(Self { artifacts, backend })
     }
 
+    /// Load from the default `artifacts/` directory with the env-var
+    /// backend; see [`Engine::load_default_with`].
+    pub fn load_default() -> Result<Self> {
+        Self::load_default_with(BackendKind::from_env()?)
+    }
+
     /// Load from the default `artifacts/` directory; if no AOT artifacts
     /// exist there, fall back to the in-memory synthetic tiny model so
-    /// the functional path still runs offline. The fallback only applies
-    /// to the reference backend — PJRT needs the real HLO text, so a
-    /// non-reference selection without artifacts is a clear error rather
-    /// than a confusing HLO-parse failure later.
-    pub fn load_default() -> Result<Self> {
-        let kind = BackendKind::from_env()?;
+    /// the functional path still runs offline. The fallback applies to
+    /// both host executors (reference and packed) — PJRT needs the real
+    /// HLO text, so selecting it without artifacts is a clear error
+    /// rather than a confusing HLO-parse failure later.
+    pub fn load_default_with(kind: BackendKind) -> Result<Self> {
         let dir = super::artifacts::default_dir();
         if dir.join("manifest.json").exists() {
             let artifacts = Artifacts::load(dir)
                 .context("loading artifacts (run `make artifacts`)")?;
             Self::load_with(artifacts, kind)
-        } else if kind != BackendKind::Reference {
+        } else if kind.requires_aot_artifacts() {
             crate::bail!(
                 "backend {kind:?} requires real AOT artifacts at {} — run `make \
-                 artifacts` first (only the reference backend has a synthetic \
+                 artifacts` first (only the host backends have a synthetic \
                  fallback)",
                 dir.display()
             )
         } else {
             eprintln!(
                 "note: no AOT artifacts at {} — using the built-in synthetic tiny \
-                 model on the reference backend (run `make artifacts` for the real \
+                 model on the {kind:?} backend (run `make artifacts` for the real \
                  AOT decoder)",
                 dir.display()
             );
@@ -124,8 +170,8 @@ impl Engine {
     /// backend call (sequence `i` feeds `tokens[i]` at `positions[i]`
     /// into `caches[i]`; ragged positions allowed). Guaranteed
     /// bit-identical to B separate [`Engine::decode_step`] calls — on
-    /// the reference backend each weight matrix is traversed once per
-    /// call instead of once per sequence.
+    /// the host backends each weight matrix is traversed once per call
+    /// instead of once per sequence.
     pub fn decode_batch(
         &self,
         caches: Vec<Caches>,
@@ -147,7 +193,7 @@ impl Engine {
         self.backend.platform()
     }
 
-    /// Short backend identifier: "reference" or "pjrt".
+    /// Short backend identifier: "reference", "packed" or "pjrt".
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
@@ -171,6 +217,47 @@ mod tests {
         let out = e.decode_step(caches, 1, 0).unwrap();
         assert_eq!(out.logits.len(), e.vocab());
         assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn packed_engine_loads_and_matches_reference() {
+        let reference = engine();
+        let packed =
+            Engine::load_with(Artifacts::synthetic(1).unwrap(), BackendKind::Packed)
+                .expect("packed engine");
+        assert_eq!(packed.backend_name(), "packed");
+        let a = reference
+            .decode_step(reference.empty_caches().unwrap(), 7, 0)
+            .unwrap();
+        let b = packed
+            .decode_step(packed.empty_caches().unwrap(), 7, 0)
+            .unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn backend_names_resolve() {
+        assert_eq!(BackendKind::from_name("").unwrap(), BackendKind::Reference);
+        assert_eq!(
+            BackendKind::from_name("reference").unwrap(),
+            BackendKind::Reference
+        );
+        assert_eq!(
+            BackendKind::from_name("packed").unwrap(),
+            BackendKind::Packed
+        );
+        assert!(BackendKind::from_name("tpu").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(BackendKind::from_name("pjrt").is_err());
+        // The flag wins over the env var; no flag falls through.
+        assert_eq!(
+            BackendKind::resolve(Some("packed")).unwrap(),
+            BackendKind::Packed
+        );
+        assert!(BackendKind::resolve(Some("nope")).is_err());
+        // AOT requirement: only PJRT insists on real artifacts.
+        assert!(!BackendKind::Reference.requires_aot_artifacts());
+        assert!(!BackendKind::Packed.requires_aot_artifacts());
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Shared dense f32 kernels of the runtime backends.
+//!
+//! Extracted from the reference executor so the packed-bitplane backend
+//! ([`crate::runtime::packed`]) can reuse the exact same
+//! quantization/normalization/attention numerics while replacing only
+//! the projection MVMs. Every function here mirrors
+//! `python/compile/kernels/ref.py` + `model.py` bit for bit; the
+//! cross-backend equivalence guarantee (`tests/packed_equivalence.rs`)
+//! depends on both backends calling into this one module rather than
+//! carrying private copies.
+//!
+//! Quantized integer values are carried in f32; every partial sum stays
+//! inside the f32 exact-integer window (|v| < 2^24) for the shapes this
+//! runtime sees: [`bitlinear`]'s accumulator is bounded by `k * 127`
+//! (exact for k < 132,104 — [`crate::quant::pack::MAX_EXACT_K`] pins
+//! the packed backend to the same window; the largest contraction in
+//! this repo's models is d_ff <= 16384), and [`attention`]'s W8A8
+//! products are bounded by `max(dh, max_ctx) * 127 * 127` with both
+//! dims <= 128 here. See ref.py's module docstring for the original
+//! derivation.
+
+/// Absmax per-tensor symmetric int8 quantization (ref.py::act_quant_int8):
+/// scale = 127 / max(|x|, eps); x_q = clip(round(x * scale), -128, 127).
+pub fn act_quant_int8(x: &[f32]) -> (Vec<f32>, f32) {
+    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = 127.0 / absmax.max(1e-5);
+    let q = x
+        .iter()
+        .map(|&v| (v * scale).round().clamp(-128.0, 127.0))
+        .collect();
+    (q, scale)
+}
+
+/// RMSNorm (model.py::rms_norm): x * rsqrt(mean(x^2) + eps) * gamma.
+pub fn rms_norm(x: &[f32], gamma: &[f32], eps: f32) -> Vec<f32> {
+    let var = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (var + eps).sqrt();
+    x.iter().zip(gamma).map(|(&v, &g)| v * r * g).collect()
+}
+
+/// Tanh-approximate GELU (jax.nn.gelu approximate=True).
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Numerically-stable softmax in place over `x`.
+pub fn softmax(x: &mut [f32]) {
+    let max = x.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// W1A8 projection (ref.py::bitlinear_ref): `x` (len k) through the
+/// ternary matrix `w` (k x n_out, row-major) with combined dequant
+/// rescale. One PIM-bank MVM.
+pub fn bitlinear(x: &[f32], w: &[f32], n_out: usize, w_scale: f32) -> Vec<f32> {
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n_out);
+    let (x_q, x_scale) = act_quant_int8(x);
+    let mut acc = vec![0.0f32; n_out];
+    for (kk, &xv) in x_q.iter().enumerate() {
+        if xv == 0.0 {
+            // Zero activations contribute nothing, so skip the row.
+            // (The weight-side analogue — zero TERNARY WEIGHTS, a
+            // measured ~31% of entries per `workload::ternary_sparsity`
+            // / `workload::EXPECTED_TERNARY_SPARSITY` — costs this
+            // dense kernel a full multiply per entry; the packed
+            // backend's bitplanes skip those for free.)
+            continue;
+        }
+        let row = &w[kk * n_out..(kk + 1) * n_out];
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xv * wv;
+        }
+    }
+    let rescale = w_scale / x_scale;
+    for a in &mut acc {
+        *a *= rescale;
+    }
+    acc
+}
+
+/// Batched W1A8 projection: the same numerics as [`bitlinear`] for each
+/// of the B activation vectors in `xs`, but with ONE traversal of the
+/// weight matrix `w` per call — each weight row is read once and applied
+/// to every sequence while it is hot, instead of being re-streamed B
+/// times. This is the software analogue of the paper's weight-stationary
+/// PIM banks serving many users per programmed crossbar, and the whole
+/// source of the batched path's throughput win.
+///
+/// Exactness: for every sequence `b` and output `j`, the accumulator
+/// receives `x_q[b][kk] * w[kk][j]` for `kk` ascending — the identical
+/// f32 operation sequence [`bitlinear`] performs — so the result is
+/// bit-for-bit equal to B sequential calls. Column striping (below)
+/// partitions `j`, never reorders `kk`, so thread count and stripe
+/// boundaries cannot change a single bit of the output.
+pub fn bitlinear_batch(xs: &[Vec<f32>], w: &[f32], n_out: usize, w_scale: f32) -> Vec<Vec<f32>> {
+    let b = xs.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let k = xs[0].len();
+    debug_assert!(xs.iter().all(|x| x.len() == k));
+    debug_assert_eq!(w.len(), k * n_out);
+    let quant: Vec<(Vec<f32>, f32)> = xs.iter().map(|x| act_quant_int8(x)).collect();
+
+    // Column stripes: split the output dimension across threads once the
+    // MAC count is large enough to amortize thread spawn. Each stripe
+    // reads only its own columns of every row, so the weight matrix is
+    // still traversed exactly once per call in aggregate.
+    let stripes = column_stripes(b * k * n_out, n_out);
+
+    let parts = crate::util::par::parallel_map_threads(&stripes, stripes.len(), |&(j0, j1)| {
+        let width = j1 - j0;
+        let mut acc = vec![0.0f32; b * width];
+        for kk in 0..k {
+            let row = &w[kk * n_out + j0..kk * n_out + j1];
+            for (bi, (x_q, _)) in quant.iter().enumerate() {
+                let xv = x_q[kk];
+                if xv == 0.0 {
+                    continue; // zero activation: nothing to accumulate
+                }
+                let a = &mut acc[bi * width..(bi + 1) * width];
+                for (aj, &wv) in a.iter_mut().zip(row) {
+                    *aj += xv * wv;
+                }
+            }
+        }
+        acc
+    });
+
+    let mut out: Vec<Vec<f32>> = vec![vec![0.0f32; n_out]; b];
+    for (stripe, part) in stripes.iter().zip(&parts) {
+        let (j0, j1) = *stripe;
+        let width = j1 - j0;
+        for (bi, o) in out.iter_mut().enumerate() {
+            o[j0..j1].copy_from_slice(&part[bi * width..(bi + 1) * width]);
+        }
+    }
+    for (o, (_, x_scale)) in out.iter_mut().zip(&quant) {
+        let rescale = w_scale / x_scale;
+        for a in o.iter_mut() {
+            *a *= rescale;
+        }
+    }
+    out
+}
+
+/// MAC-count threshold above which the batched projection kernels
+/// (dense [`bitlinear_batch`] and the packed-bitplane batch kernel in
+/// [`crate::quant`]) stripe output columns across threads. Striping
+/// partitions columns and never reorders accumulation, so crossing the
+/// threshold cannot change a bit of any output.
+pub const PAR_MAC_THRESHOLD: usize = 1 << 21;
+
+/// The shared column-stripe partition of both batched projection
+/// kernels: one `[j0, j1)` range per worker thread over `n_out` output
+/// columns, serial (a single full-width stripe) below
+/// [`PAR_MAC_THRESHOLD`] MACs. One definition so the dense and packed
+/// backends can never drift in how they parallelize.
+pub fn column_stripes(macs: usize, n_out: usize) -> Vec<(usize, usize)> {
+    let threads = if macs >= PAR_MAC_THRESHOLD {
+        crate::util::par::default_threads().min(n_out)
+    } else {
+        1
+    };
+    let chunk = n_out.div_ceil(threads);
+    (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(n_out)))
+        .filter(|&(j0, j1)| j0 < j1)
+        .collect()
+}
+
+/// Multi-head attention over the (already updated) KV caches of one
+/// layer — both matmuls through W8A8 qmatmul semantics, mirroring
+/// model.py::_attention. `k_cache`/`v_cache` are the flattened
+/// `(n_layers, h, max_ctx, d_head)` host tensors; `q` is this token's
+/// query vector (len `h * dh`); slots `[0, pos]` are attended (causal).
+///
+/// Shared by every host backend: attention reads per-sequence cache
+/// state, not weights, so there is nothing for the packed backend to
+/// repack — it calls this function unchanged.
+pub fn attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    layer: usize,
+    pos: usize,
+    h: usize,
+    max_ctx: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let valid = pos + 1; // causal: slots [0, pos]
+    let mut out = vec![0.0f32; h * dh];
+    for head in 0..h {
+        let base = (layer * h + head) * max_ctx * dh;
+        let k_head = &k_cache[base..base + valid * dh];
+        let v_head = &v_cache[base..base + valid * dh];
+        let q_head = &q[head * dh..(head + 1) * dh];
+
+        // Score = q . K^T, both operands int8-quantized (W8A8).
+        let (q_q, q_s) = act_quant_int8(q_head);
+        let (k_q, k_s) = act_quant_int8(k_head);
+        let inv_scale = 1.0 / (q_s * k_s);
+        let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+        let mut scores = vec![0.0f32; valid];
+        for (t, s) in scores.iter_mut().enumerate() {
+            let row = &k_q[t * dh..(t + 1) * dh];
+            let mut acc = 0.0f32;
+            for (a, b) in q_q.iter().zip(row) {
+                acc += a * b;
+            }
+            *s = acc * inv_scale * inv_sqrt_dh;
+        }
+        softmax(&mut scores);
+
+        // Out = probs . V (W8A8 again).
+        let (p_q, p_s) = act_quant_int8(&scores);
+        let (v_q, v_s) = act_quant_int8(v_head);
+        let inv_scale = 1.0 / (p_s * v_s);
+        let o = &mut out[head * dh..(head + 1) * dh];
+        for (t, &pv) in p_q.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let row = &v_q[t * dh..(t + 1) * dh];
+            for (oj, &vj) in o.iter_mut().zip(row) {
+                *oj += pv * vj;
+            }
+        }
+        for oj in o.iter_mut() {
+            *oj *= inv_scale;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_quant_matches_ref_py_semantics() {
+        let (q, s) = act_quant_int8(&[0.5, -1.0, 0.25]);
+        assert_eq!(s, 127.0);
+        assert_eq!(q, vec![64.0, -127.0, 32.0]);
+        // All-zero input: eps floor keeps the scale finite.
+        let (q0, s0) = act_quant_int8(&[0.0, 0.0]);
+        assert!(s0.is_finite() && s0 > 0.0);
+        assert_eq!(q0, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0];
+        softmax(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn bitlinear_identity_on_identity_matrix() {
+        // w = I (ternary-legal), scale chosen so rescale undoes x's
+        // quantization: y ~= x.
+        let n = 4;
+        let mut w = vec![0.0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0;
+        }
+        let x = vec![0.5, -0.25, 0.125, 1.0];
+        let y = bitlinear(&x, &w, n, 1.0);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 0.01, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bitlinear_batch_bitwise_matches_sequential() {
+        // Random-ish inputs across shapes that exercise both the serial
+        // stripe path and ragged widths; the batched kernel must agree
+        // bit-for-bit with per-vector bitlinear.
+        let mut rng = crate::util::rng::Rng::new(99);
+        for (b_n, k, n_out) in [(1usize, 8usize, 5usize), (3, 16, 16), (8, 32, 7)] {
+            // Rng::range is INCLUSIVE: [0, 2] - 1 = {-1, 0, 1}, the
+            // ternary domain the W1A8 contract is about.
+            let w: Vec<f32> = (0..k * n_out)
+                .map(|_| rng.range(0, 2) as f32 - 1.0)
+                .collect();
+            let xs: Vec<Vec<f32>> = (0..b_n)
+                .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let batched = bitlinear_batch(&xs, &w, n_out, 0.37);
+            for (x, y) in xs.iter().zip(&batched) {
+                assert_eq!(&bitlinear(x, &w, n_out, 0.37), y);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_is_causal_and_finite() {
+        // One layer, one head, dh=2, max_ctx=4: slots beyond `pos` must
+        // not influence the output.
+        let (h, max_ctx, dh) = (1usize, 4usize, 2usize);
+        let q = vec![0.3, -0.7];
+        let mut k_cache = vec![0.0f32; h * max_ctx * dh];
+        let mut v_cache = vec![0.0f32; h * max_ctx * dh];
+        for (i, (kv, vv)) in k_cache.iter_mut().zip(v_cache.iter_mut()).enumerate() {
+            *kv = (i as f32 * 0.31).sin();
+            *vv = (i as f32 * 0.17).cos();
+        }
+        let at_pos1 = attention(&q, &k_cache, &v_cache, 0, 1, h, max_ctx, dh);
+        // Scribble over the not-yet-valid slots: output must not change.
+        for i in 2 * dh..max_ctx * dh {
+            k_cache[i] = 1e6;
+            v_cache[i] = -1e6;
+        }
+        let again = attention(&q, &k_cache, &v_cache, 0, 1, h, max_ctx, dh);
+        assert_eq!(at_pos1, again);
+        assert!(at_pos1.iter().all(|x| x.is_finite()));
+    }
+}

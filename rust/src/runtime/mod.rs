@@ -6,8 +6,14 @@
 //!   an offline synthetic artifact generator.
 //! * [`backend`]   — the `Backend` trait and the opaque `Caches` /
 //!   `StepOutput` types threaded between steps.
+//! * [`kernels`]   — the shared dense f32 kernels (quantization,
+//!   RMSNorm/GELU/softmax, `bitlinear`, attention) both host backends
+//!   execute.
 //! * [`reference`] — pure-Rust reference executor (ref.py semantics);
 //!   the DEFAULT backend, zero dependencies, runs offline.
+//! * [`packed`]    — bitplane popcount executor: ternary weights lowered
+//!   to [`crate::quant`] planes at load, projections as integer
+//!   mask-select MVMs; bit-identical outputs to `reference`.
 //! * [`pjrt`]      — XLA/PJRT engine for the AOT-lowered HLO, behind
 //!   the off-by-default `pjrt` Cargo feature (the `xla` crate needs
 //!   network access to build — see Cargo.toml).
@@ -19,6 +25,8 @@ pub mod artifacts;
 pub mod backend;
 pub mod decoder;
 pub mod engine;
+pub mod kernels;
+pub mod packed;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;

@@ -1,0 +1,331 @@
+//! Packed-bitplane runtime backend: the third execution engine, running
+//! every W1A8 projection as a popcount MVM over [`crate::quant`]
+//! bitplanes instead of a dense f32 matmul.
+//!
+//! Structure: at load, [`crate::quant::PackedModel::lower`] packs all
+//! seven ternary matrix kinds (per layer wq/wk/wv/wx/w_in/w_out, plus
+//! the model-level w_head) into two-u64-bitplane form — once, the way
+//! the paper programs its PIM crossbars once before serving. The decode
+//! step then routes every projection through
+//! [`bitlinear_packed`]/[`bitlinear_packed_batch`] while reusing the
+//! reference backend's attention/nonlinear path (shared
+//! [`super::kernels`]) and its resolved parameter table for everything
+//! that is not a ternary matrix (embedding, norm gammas).
+//!
+//! Outputs — logits AND KV caches — are bit-for-bit identical to the
+//! reference backend on every path (single step, full generation,
+//! ragged batches, batched serving); `tests/packed_equivalence.rs`
+//! enforces it. See [`crate::quant`] for why exactness holds.
+
+use super::artifacts::Artifacts;
+use super::backend::{Backend, Caches, StepOutput};
+use super::kernels::{attention, gelu, rms_norm};
+use super::reference::ReferenceBackend;
+use crate::quant::{bitlinear_packed, bitlinear_packed_batch, PackedModel};
+use crate::util::error::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// The packed backend: bitplane weights + popcount projection kernels.
+///
+/// Memory note: the 16x shrink is in weight TRAFFIC (what the decode
+/// step streams per token), not residency — the embedded reference
+/// backend keeps the full `Arc<Artifacts>` alive (embedding and gammas
+/// live there), so the dense f32 projection tensors stay resident
+/// alongside the bitplanes. Dropping them would need `Artifacts` to
+/// give up per-parameter storage; not worth the churn while the dense
+/// copy also serves the engine's `artifacts` accessor.
+pub struct PackedBackend {
+    /// The reference backend supplies the resolved parameter table
+    /// (embedding, gammas) and the non-projection numerics; it holds no
+    /// decode state, so reusing it costs a few indices.
+    reference: ReferenceBackend,
+    /// Every ternary matrix in packed form, lowered once at load.
+    model: PackedModel,
+}
+
+impl PackedBackend {
+    pub fn new(artifacts: Arc<Artifacts>) -> Result<Self> {
+        let model =
+            PackedModel::lower(&artifacts).context("lowering artifacts to bitplanes")?;
+        let reference = ReferenceBackend::new(artifacts)?;
+        Ok(Self { reference, model })
+    }
+}
+
+impl Backend for PackedBackend {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    fn empty_caches(&self) -> Result<Caches> {
+        self.reference.empty_caches()
+    }
+
+    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
+        let (mut kc, mut vc) = match caches {
+            Caches::Host { k, v } => (k, v),
+            #[cfg(feature = "pjrt")]
+            Caches::Device { .. } => {
+                crate::bail!("packed backend received device-resident caches")
+            }
+        };
+        let r = &self.reference;
+        let m = r.artifacts.manifest.model.clone();
+        let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
+        let dh = d / h;
+        ensure!(pos >= 0, "negative position {pos}");
+        let pos = pos as usize;
+        ensure!(pos < max_ctx, "position {pos} >= max_ctx {max_ctx}");
+        let eps = m.eps as f32;
+
+        // Embed (XLA clamps out-of-range gather indices; mirror that).
+        let tok = (token_id.max(0) as usize).min(m.vocab - 1);
+        let embedding = r.data(r.embedding);
+        let mut x: Vec<f32> = embedding[tok * d..(tok + 1) * d].to_vec();
+
+        for (layer, (lp, pl)) in r.layers.iter().zip(&self.model.layers).enumerate() {
+            // --- attention sub-block (projections over bitplanes) -----
+            let xn = rms_norm(&x, r.data(lp.ln1_gamma), eps);
+            let q = bitlinear_packed(&xn, &pl.wq);
+            let k = bitlinear_packed(&xn, &pl.wk);
+            let v = bitlinear_packed(&xn, &pl.wv);
+
+            // Write this token's K/V into the caches at `pos` (same
+            // LPDDR-side concat as the reference backend).
+            for head in 0..h {
+                let base = ((layer * h + head) * max_ctx + pos) * dh;
+                kc[base..base + dh].copy_from_slice(&k[head * dh..(head + 1) * dh]);
+                vc[base..base + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
+            }
+
+            let att = attention(&q, &kc, &vc, layer, pos, h, max_ctx, dh);
+            let att = bitlinear_packed(&att, &pl.wx);
+            for (xi, ai) in x.iter_mut().zip(&att) {
+                *xi += ai;
+            }
+
+            // --- feed-forward sub-block -------------------------------
+            let xn = rms_norm(&x, r.data(lp.ln2_gamma), eps);
+            let ff = bitlinear_packed(&xn, &pl.w_in);
+            let ff: Vec<f32> = ff.into_iter().map(gelu).collect();
+            let ff = bitlinear_packed(&ff, &pl.w_out);
+            for (xi, fi) in x.iter_mut().zip(&ff) {
+                *xi += fi;
+            }
+        }
+
+        let x = rms_norm(&x, r.data(r.lnf_gamma), eps);
+        let logits = bitlinear_packed(&x, &self.model.w_head);
+
+        Ok(StepOutput {
+            logits,
+            caches: Caches::Host { k: kc, v: vc },
+        })
+    }
+
+    /// Batched decode over the bitplanes: every matrix's mask words are
+    /// traversed ONCE per call and applied to all B activation-plane
+    /// sets ([`bitlinear_packed_batch`]); attention runs per sequence,
+    /// exactly like the reference backend's batched path. Ragged
+    /// positions allowed; bit-identical to B sequential
+    /// [`Backend::decode_step`] calls.
+    fn decode_batch(
+        &self,
+        caches: Vec<Caches>,
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        ensure!(
+            caches.len() == tokens.len() && caches.len() == positions.len(),
+            "decode_batch arity mismatch: {} caches, {} tokens, {} positions",
+            caches.len(),
+            tokens.len(),
+            positions.len()
+        );
+        if caches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let r = &self.reference;
+        let m = r.artifacts.manifest.model.clone();
+        let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
+        let dh = d / h;
+        let eps = m.eps as f32;
+
+        let mut kcs = Vec::with_capacity(caches.len());
+        let mut vcs = Vec::with_capacity(caches.len());
+        for c in caches {
+            match c {
+                Caches::Host { k, v } => {
+                    kcs.push(k);
+                    vcs.push(v);
+                }
+                #[cfg(feature = "pjrt")]
+                Caches::Device { .. } => {
+                    crate::bail!("packed backend received device-resident caches")
+                }
+            }
+        }
+        let mut poss = Vec::with_capacity(positions.len());
+        for &p in positions {
+            ensure!(p >= 0, "negative position {p}");
+            let p = p as usize;
+            ensure!(p < max_ctx, "position {p} >= max_ctx {max_ctx}");
+            poss.push(p);
+        }
+
+        // Embed every sequence's token (XLA-style clamped gather).
+        let embedding = r.data(r.embedding);
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&t| {
+                let tok = (t.max(0) as usize).min(m.vocab - 1);
+                embedding[tok * d..(tok + 1) * d].to_vec()
+            })
+            .collect();
+
+        for (layer, (lp, pl)) in r.layers.iter().zip(&self.model.layers).enumerate() {
+            // --- attention sub-block (projections over bitplanes) -----
+            let xn: Vec<Vec<f32>> = xs
+                .iter()
+                .map(|x| rms_norm(x, r.data(lp.ln1_gamma), eps))
+                .collect();
+            let q = bitlinear_packed_batch(&xn, &pl.wq);
+            let k = bitlinear_packed_batch(&xn, &pl.wk);
+            let v = bitlinear_packed_batch(&xn, &pl.wv);
+
+            // Scatter each sequence's new K/V into its own cache at its
+            // own (ragged) position.
+            for (((kc, vc), &pos), (k_i, v_i)) in kcs
+                .iter_mut()
+                .zip(vcs.iter_mut())
+                .zip(&poss)
+                .zip(k.iter().zip(&v))
+            {
+                for head in 0..h {
+                    let base = ((layer * h + head) * max_ctx + pos) * dh;
+                    kc[base..base + dh].copy_from_slice(&k_i[head * dh..(head + 1) * dh]);
+                    vc[base..base + dh].copy_from_slice(&v_i[head * dh..(head + 1) * dh]);
+                }
+            }
+
+            // Attention reads per-sequence KV state, not weights — there
+            // is nothing to amortize, so it runs per sequence.
+            let att: Vec<Vec<f32>> = q
+                .iter()
+                .zip(kcs.iter().zip(&vcs))
+                .zip(&poss)
+                .map(|((q_i, (kc, vc)), &pos)| attention(q_i, kc, vc, layer, pos, h, max_ctx, dh))
+                .collect();
+            let att = bitlinear_packed_batch(&att, &pl.wx);
+            for (x, a) in xs.iter_mut().zip(&att) {
+                for (xi, ai) in x.iter_mut().zip(a) {
+                    *xi += ai;
+                }
+            }
+
+            // --- feed-forward sub-block -------------------------------
+            let xn: Vec<Vec<f32>> = xs
+                .iter()
+                .map(|x| rms_norm(x, r.data(lp.ln2_gamma), eps))
+                .collect();
+            let ff = bitlinear_packed_batch(&xn, &pl.w_in);
+            let ff: Vec<Vec<f32>> = ff
+                .into_iter()
+                .map(|f| f.into_iter().map(gelu).collect())
+                .collect();
+            let ff = bitlinear_packed_batch(&ff, &pl.w_out);
+            for (x, f) in xs.iter_mut().zip(&ff) {
+                for (xi, fi) in x.iter_mut().zip(f) {
+                    *xi += fi;
+                }
+            }
+        }
+
+        let xs: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| rms_norm(x, r.data(r.lnf_gamma), eps))
+            .collect();
+        let logits = bitlinear_packed_batch(&xs, &self.model.w_head);
+
+        Ok(logits
+            .into_iter()
+            .zip(kcs.into_iter().zip(vcs))
+            .map(|(lg, (kc, vc))| StepOutput {
+                logits: lg,
+                caches: Caches::Host { k: kc, v: vc },
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backends() -> (ReferenceBackend, PackedBackend) {
+        let a = Arc::new(Artifacts::synthetic(13).unwrap());
+        (
+            ReferenceBackend::new(Arc::clone(&a)).unwrap(),
+            PackedBackend::new(a).unwrap(),
+        )
+    }
+
+    fn host(c: &Caches) -> (&[f32], &[f32]) {
+        match c {
+            Caches::Host { k, v } => (k, v),
+            #[cfg(feature = "pjrt")]
+            Caches::Device { .. } => panic!("expected host caches"),
+        }
+    }
+
+    #[test]
+    fn single_step_matches_reference_bitwise_including_caches() {
+        let (r, p) = backends();
+        let ro = r.decode_step(r.empty_caches().unwrap(), 9, 0).unwrap();
+        let po = p.decode_step(p.empty_caches().unwrap(), 9, 0).unwrap();
+        assert_eq!(ro.logits, po.logits);
+        let (rk, rv) = host(&ro.caches);
+        let (pk, pv) = host(&po.caches);
+        assert_eq!(rk, pk);
+        assert_eq!(rv, pv);
+    }
+
+    #[test]
+    fn decode_batch_matches_reference_bitwise() {
+        let (r, p) = backends();
+        let tokens = [3i32, 17, 60];
+        let positions = [0i32, 0, 0];
+        let rc = tokens.iter().map(|_| r.empty_caches().unwrap()).collect();
+        let pc = tokens.iter().map(|_| p.empty_caches().unwrap()).collect();
+        let ro = r.decode_batch(rc, &tokens, &positions).unwrap();
+        let po = p.decode_batch(pc, &tokens, &positions).unwrap();
+        for (a, b) in ro.iter().zip(&po) {
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(host(&a.caches), host(&b.caches));
+        }
+    }
+
+    #[test]
+    fn bounds_enforced_like_reference() {
+        let (_, p) = backends();
+        let max_ctx = p.reference.artifacts.manifest.model.max_ctx as i32;
+        assert!(p.decode_step(p.empty_caches().unwrap(), 0, -1).is_err());
+        assert!(p.decode_step(p.empty_caches().unwrap(), 0, max_ctx).is_err());
+        assert!(p
+            .decode_batch(vec![p.empty_caches().unwrap()], &[1, 2], &[0, 0])
+            .is_err());
+        assert!(p.decode_batch(Vec::new(), &[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn name_and_platform() {
+        let (_, p) = backends();
+        assert_eq!(p.name(), "packed");
+        assert_eq!(p.platform(), "cpu");
+        assert!(p.model.packed_bytes() > 0);
+    }
+}

@@ -1,195 +1,60 @@
 //! Pure-Rust reference executor for the 1-bit decode step — the default
 //! runtime backend of the offline build.
 //!
-//! Numerics mirror `python/compile/kernels/ref.py` + `model.py` exactly:
+//! Numerics mirror `python/compile/kernels/ref.py` + `model.py` exactly;
+//! the dense f32 kernels themselves (activation quantization, RMSNorm,
+//! GELU, softmax, `bitlinear`, `bitlinear_batch`, attention) live in the
+//! shared [`super::kernels`] module so the packed-bitplane backend
+//! ([`super::packed`]) can reuse them verbatim — this file owns only the
+//! manifest resolution and the decode-step orchestration:
 //!
 //! * `act_quant_int8`  — absmax per-tensor symmetric int8 quantization.
 //! * `bitlinear`       — W1A8 projection: quantize → exact integer
 //!   matmul on f32 carriers → rescale (what one PIM bank computes).
-//! * `qmatmul`         — W8A8 activation-to-activation matmul (the
+//! * attention         — W8A8 activation-to-activation matmuls (the
 //!   attention-head op PIM-LLM keeps on the systolic array).
 //! * RMSNorm / tanh-GELU / softmax in f32, like the paper's nonlinear
 //!   functional units.
-//!
-//! Quantized integer values are carried in f32; exact for |v| < 2^24,
-//! and the largest magnitude here is bounded by k_max * 127 * 127 with
-//! k <= 1024 for the AOT tiny model — inside the exact window (see the
-//! derivation in ref.py's module docstring).
 //!
 //! KV caches are host `Vec<f32>` tensors of shape
 //! `(n_layers, h, max_ctx, d_head)`, threaded through [`Caches::Host`].
 
 use super::artifacts::Artifacts;
 use super::backend::{Backend, Caches, StepOutput};
+use super::kernels::{attention, bitlinear, bitlinear_batch, gelu, rms_norm};
 use crate::util::error::{anyhow, ensure, Context, Result};
 use std::sync::Arc;
 
-/// Absmax per-tensor symmetric int8 quantization (ref.py::act_quant_int8):
-/// scale = 127 / max(|x|, eps); x_q = clip(round(x * scale), -128, 127).
-fn act_quant_int8(x: &[f32]) -> (Vec<f32>, f32) {
-    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-    let scale = 127.0 / absmax.max(1e-5);
-    let q = x
-        .iter()
-        .map(|&v| (v * scale).round().clamp(-128.0, 127.0))
-        .collect();
-    (q, scale)
-}
-
-/// RMSNorm (model.py::rms_norm): x * rsqrt(mean(x^2) + eps) * gamma.
-fn rms_norm(x: &[f32], gamma: &[f32], eps: f32) -> Vec<f32> {
-    let var = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
-    let r = 1.0 / (var + eps).sqrt();
-    x.iter().zip(gamma).map(|(&v, &g)| v * r * g).collect()
-}
-
-/// Tanh-approximate GELU (jax.nn.gelu approximate=True).
-fn gelu(x: f32) -> f32 {
-    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
-    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
-}
-
-/// Numerically-stable softmax in place over `x`.
-fn softmax(x: &mut [f32]) {
-    let max = x.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-    let mut sum = 0.0f32;
-    for v in x.iter_mut() {
-        *v = (*v - max).exp();
-        sum += *v;
-    }
-    for v in x.iter_mut() {
-        *v /= sum;
-    }
-}
-
-/// W1A8 projection (ref.py::bitlinear_ref): `x` (len k) through the
-/// ternary matrix `w` (k x n_out, row-major) with combined dequant
-/// rescale. One PIM-bank MVM.
-fn bitlinear(x: &[f32], w: &[f32], n_out: usize, w_scale: f32) -> Vec<f32> {
-    let k = x.len();
-    debug_assert_eq!(w.len(), k * n_out);
-    let (x_q, x_scale) = act_quant_int8(x);
-    let mut acc = vec![0.0f32; n_out];
-    for (kk, &xv) in x_q.iter().enumerate() {
-        if xv == 0.0 {
-            continue; // ternary-friendly: skip zero activations
-        }
-        let row = &w[kk * n_out..(kk + 1) * n_out];
-        for (a, &wv) in acc.iter_mut().zip(row) {
-            *a += xv * wv;
-        }
-    }
-    let rescale = w_scale / x_scale;
-    for a in &mut acc {
-        *a *= rescale;
-    }
-    acc
-}
-
-/// Batched W1A8 projection: the same numerics as [`bitlinear`] for each
-/// of the B activation vectors in `xs`, but with ONE traversal of the
-/// weight matrix `w` per call — each weight row is read once and applied
-/// to every sequence while it is hot, instead of being re-streamed B
-/// times. This is the software analogue of the paper's weight-stationary
-/// PIM banks serving many users per programmed crossbar, and the whole
-/// source of the batched path's throughput win.
-///
-/// Exactness: for every sequence `b` and output `j`, the accumulator
-/// receives `x_q[b][kk] * w[kk][j]` for `kk` ascending — the identical
-/// f32 operation sequence [`bitlinear`] performs — so the result is
-/// bit-for-bit equal to B sequential calls. Column striping (below)
-/// partitions `j`, never reorders `kk`, so thread count and stripe
-/// boundaries cannot change a single bit of the output.
-fn bitlinear_batch(xs: &[Vec<f32>], w: &[f32], n_out: usize, w_scale: f32) -> Vec<Vec<f32>> {
-    let b = xs.len();
-    if b == 0 {
-        return Vec::new();
-    }
-    let k = xs[0].len();
-    debug_assert!(xs.iter().all(|x| x.len() == k));
-    debug_assert_eq!(w.len(), k * n_out);
-    let quant: Vec<(Vec<f32>, f32)> = xs.iter().map(|x| act_quant_int8(x)).collect();
-
-    // Column stripes: split the output dimension across threads once the
-    // MAC count is large enough to amortize thread spawn. Each stripe
-    // reads only its own columns of every row, so the weight matrix is
-    // still traversed exactly once per call in aggregate.
-    const PAR_MAC_THRESHOLD: usize = 1 << 21;
-    let threads = if b * k * n_out >= PAR_MAC_THRESHOLD {
-        crate::util::par::default_threads().min(n_out)
-    } else {
-        1
-    };
-    let chunk = n_out.div_ceil(threads);
-    let stripes: Vec<(usize, usize)> = (0..threads)
-        .map(|t| (t * chunk, ((t + 1) * chunk).min(n_out)))
-        .filter(|&(j0, j1)| j0 < j1)
-        .collect();
-
-    let parts = crate::util::par::parallel_map_threads(&stripes, stripes.len(), |&(j0, j1)| {
-        let width = j1 - j0;
-        let mut acc = vec![0.0f32; b * width];
-        for kk in 0..k {
-            let row = &w[kk * n_out + j0..kk * n_out + j1];
-            for (bi, (x_q, _)) in quant.iter().enumerate() {
-                let xv = x_q[kk];
-                if xv == 0.0 {
-                    continue; // ternary-friendly: skip zero activations
-                }
-                let a = &mut acc[bi * width..(bi + 1) * width];
-                for (aj, &wv) in a.iter_mut().zip(row) {
-                    *aj += xv * wv;
-                }
-            }
-        }
-        acc
-    });
-
-    let mut out: Vec<Vec<f32>> = vec![vec![0.0f32; n_out]; b];
-    for (stripe, part) in stripes.iter().zip(&parts) {
-        let (j0, j1) = *stripe;
-        let width = j1 - j0;
-        for (bi, o) in out.iter_mut().enumerate() {
-            o[j0..j1].copy_from_slice(&part[bi * width..(bi + 1) * width]);
-        }
-    }
-    for (o, (_, x_scale)) in out.iter_mut().zip(&quant) {
-        let rescale = w_scale / x_scale;
-        for a in o.iter_mut() {
-            *a *= rescale;
-        }
-    }
-    out
-}
-
 /// Resolved parameter indices (into `manifest.params`) of one layer.
-struct LayerParams {
-    ln1_gamma: usize,
-    wq: usize,
-    wq_scale: usize,
-    wk: usize,
-    wk_scale: usize,
-    wv: usize,
-    wv_scale: usize,
-    wx: usize,
-    wx_scale: usize,
-    ln2_gamma: usize,
-    w_in: usize,
-    w_in_scale: usize,
-    w_out: usize,
-    w_out_scale: usize,
+/// Shared with the packed backend, which resolves the same names and
+/// then lowers the six projection matrices into bitplanes.
+pub(crate) struct LayerParams {
+    pub(crate) ln1_gamma: usize,
+    pub(crate) wq: usize,
+    pub(crate) wq_scale: usize,
+    pub(crate) wk: usize,
+    pub(crate) wk_scale: usize,
+    pub(crate) wv: usize,
+    pub(crate) wv_scale: usize,
+    pub(crate) wx: usize,
+    pub(crate) wx_scale: usize,
+    pub(crate) ln2_gamma: usize,
+    pub(crate) w_in: usize,
+    pub(crate) w_in_scale: usize,
+    pub(crate) w_out: usize,
+    pub(crate) w_out_scale: usize,
 }
 
 /// The reference backend: interprets the manifest/weights directly.
 pub struct ReferenceBackend {
-    artifacts: Arc<Artifacts>,
+    pub(crate) artifacts: Arc<Artifacts>,
     /// Per-layer parameter indices, resolved once at construction so the
     /// per-token path does no name lookups or allocation.
-    layers: Vec<LayerParams>,
-    embedding: usize,
-    lnf_gamma: usize,
-    w_head: usize,
-    w_head_scale: usize,
+    pub(crate) layers: Vec<LayerParams>,
+    pub(crate) embedding: usize,
+    pub(crate) lnf_gamma: usize,
+    pub(crate) w_head: usize,
+    pub(crate) w_head_scale: usize,
 }
 
 impl ReferenceBackend {
@@ -248,73 +113,14 @@ impl ReferenceBackend {
     }
 
     /// Parameter tensor data by resolved index.
-    fn data(&self, idx: usize) -> &[f32] {
+    pub(crate) fn data(&self, idx: usize) -> &[f32] {
         self.artifacts
             .param_data(&self.artifacts.manifest.params[idx])
     }
 
     /// Scalar parameter (shape validated at construction).
-    fn scalar(&self, idx: usize) -> f32 {
+    pub(crate) fn scalar(&self, idx: usize) -> f32 {
         self.data(idx)[0]
-    }
-
-    /// Multi-head attention over the (already updated) caches of one
-    /// layer — both matmuls through W8A8 qmatmul semantics, mirroring
-    /// model.py::_attention.
-    fn attention(
-        &self,
-        q: &[f32],
-        k_cache: &[f32],
-        v_cache: &[f32],
-        layer: usize,
-        pos: usize,
-    ) -> Vec<f32> {
-        let m = &self.artifacts.manifest.model;
-        let (h, max_ctx) = (m.h, m.max_ctx);
-        let dh = m.d / m.h;
-        let valid = pos + 1; // causal: slots [0, pos]
-        let mut out = vec![0.0f32; m.d];
-        for head in 0..h {
-            let base = (layer * h + head) * max_ctx * dh;
-            let k_head = &k_cache[base..base + valid * dh];
-            let v_head = &v_cache[base..base + valid * dh];
-            let q_head = &q[head * dh..(head + 1) * dh];
-
-            // Score = q . K^T, both operands int8-quantized (W8A8).
-            let (q_q, q_s) = act_quant_int8(q_head);
-            let (k_q, k_s) = act_quant_int8(k_head);
-            let inv_scale = 1.0 / (q_s * k_s);
-            let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
-            let mut scores = vec![0.0f32; valid];
-            for (t, s) in scores.iter_mut().enumerate() {
-                let row = &k_q[t * dh..(t + 1) * dh];
-                let mut acc = 0.0f32;
-                for (a, b) in q_q.iter().zip(row) {
-                    acc += a * b;
-                }
-                *s = acc * inv_scale * inv_sqrt_dh;
-            }
-            softmax(&mut scores);
-
-            // Out = probs . V (W8A8 again).
-            let (p_q, p_s) = act_quant_int8(&scores);
-            let (v_q, v_s) = act_quant_int8(v_head);
-            let inv_scale = 1.0 / (p_s * v_s);
-            let o = &mut out[head * dh..(head + 1) * dh];
-            for (t, &pv) in p_q.iter().enumerate() {
-                if pv == 0.0 {
-                    continue;
-                }
-                let row = &v_q[t * dh..(t + 1) * dh];
-                for (oj, &vj) in o.iter_mut().zip(row) {
-                    *oj += pv * vj;
-                }
-            }
-            for oj in o.iter_mut() {
-                *oj *= inv_scale;
-            }
-        }
-        out
     }
 }
 
@@ -371,7 +177,7 @@ impl Backend for ReferenceBackend {
                 vc[base..base + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
             }
 
-            let att = self.attention(&q, &kc, &vc, layer, pos);
+            let att = attention(&q, &kc, &vc, layer, pos, h, max_ctx, dh);
             let att = bitlinear(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
             for (xi, ai) in x.iter_mut().zip(&att) {
                 *xi += ai;
@@ -489,7 +295,7 @@ impl Backend for ReferenceBackend {
                 .iter()
                 .zip(kcs.iter().zip(&vcs))
                 .zip(&poss)
-                .map(|((q_i, (kc, vc)), &pos)| self.attention(q_i, kc, vc, layer, pos))
+                .map(|((q_i, (kc, vc)), &pos)| attention(q_i, kc, vc, layer, pos, h, max_ctx, dh))
                 .collect();
             let att = bitlinear_batch(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
             for (x, a) in xs.iter_mut().zip(&att) {
@@ -552,41 +358,6 @@ mod tests {
     }
 
     #[test]
-    fn act_quant_matches_ref_py_semantics() {
-        let (q, s) = act_quant_int8(&[0.5, -1.0, 0.25]);
-        assert_eq!(s, 127.0);
-        assert_eq!(q, vec![64.0, -127.0, 32.0]);
-        // All-zero input: eps floor keeps the scale finite.
-        let (q0, s0) = act_quant_int8(&[0.0, 0.0]);
-        assert!(s0.is_finite() && s0 > 0.0);
-        assert_eq!(q0, vec![0.0, 0.0]);
-    }
-
-    #[test]
-    fn softmax_normalizes() {
-        let mut x = vec![1.0, 2.0, 3.0];
-        softmax(&mut x);
-        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
-        assert!(x[2] > x[1] && x[1] > x[0]);
-    }
-
-    #[test]
-    fn bitlinear_identity_on_identity_matrix() {
-        // w = I (ternary-legal), scale chosen so rescale undoes x's
-        // quantization: y ~= x.
-        let n = 4;
-        let mut w = vec![0.0f32; n * n];
-        for i in 0..n {
-            w[i * n + i] = 1.0;
-        }
-        let x = vec![0.5, -0.25, 0.125, 1.0];
-        let y = bitlinear(&x, &w, n, 1.0);
-        for (a, b) in x.iter().zip(&y) {
-            assert!((a - b).abs() < 0.01, "{a} vs {b}");
-        }
-    }
-
-    #[test]
     fn decode_step_is_deterministic_and_finite() {
         let b = backend();
         let vocab = b.artifacts.manifest.model.vocab;
@@ -628,26 +399,6 @@ mod tests {
             .decode_step(b.empty_caches().unwrap(), vocab - 1, 0)
             .unwrap();
         assert_eq!(o.logits, edge.logits);
-    }
-
-    #[test]
-    fn bitlinear_batch_bitwise_matches_sequential() {
-        // Random-ish inputs across shapes that exercise both the serial
-        // stripe path and ragged widths; the batched kernel must agree
-        // bit-for-bit with per-vector bitlinear.
-        let mut rng = crate::util::rng::Rng::new(99);
-        for (b_n, k, n_out) in [(1usize, 8usize, 5usize), (3, 16, 16), (8, 32, 7)] {
-            let w: Vec<f32> = (0..k * n_out)
-                .map(|_| rng.range(0, 3) as f32 - 1.0)
-                .collect();
-            let xs: Vec<Vec<f32>> = (0..b_n)
-                .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
-                .collect();
-            let batched = bitlinear_batch(&xs, &w, n_out, 0.37);
-            for (x, y) in xs.iter().zip(&batched) {
-                assert_eq!(&bitlinear(x, &w, n_out, 0.37), y);
-            }
-        }
     }
 
     #[test]

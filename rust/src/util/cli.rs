@@ -76,6 +76,14 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// The `--backend` runtime-executor selector shared by `repro
+    /// serve`/`repro validate` and the examples. `None` (flag absent)
+    /// lets `BackendKind::resolve` fall back to the `PIM_LLM_BACKEND`
+    /// env var, then the reference default.
+    pub fn backend(&self) -> Option<&str> {
+        self.get("backend")
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +107,14 @@ mod tests {
     fn equals_syntax() {
         let a = parse("sweep --figure=fig5");
         assert_eq!(a.get("figure"), Some("fig5"));
+    }
+
+    #[test]
+    fn backend_flag_threads_through() {
+        let a = parse("serve --backend packed --requests 4");
+        assert_eq!(a.backend(), Some("packed"));
+        assert_eq!(parse("serve --backend=pjrt").backend(), Some("pjrt"));
+        assert_eq!(parse("validate").backend(), None);
     }
 
     #[test]
