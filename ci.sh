@@ -29,11 +29,13 @@ echo "== tier-1: tests (offline) =="
 # tests/batch_equivalence.rs and tests/serving_determinism.rs.
 cargo test -q --offline
 
-echo "== packed-backend suites (offline, explicit) =="
+echo "== equivalence + allocator suites (offline, explicit) =="
 # Named explicitly so a test-target wiring mistake (a file dropped from
 # the harness) cannot silently skip the bitwise-equivalence guarantees.
 cargo test -q --offline --test packed_equivalence
 cargo test -q --offline --test batch_equivalence
+cargo test -q --offline --test paged_equivalence
+cargo test -q --offline --test kvcache_properties
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -44,6 +46,18 @@ cargo run -q --release --offline --bin repro -- validate --backend reference
 cargo run -q --release --offline --bin repro -- validate --backend packed
 cargo run -q --release --offline --bin repro -- serve --backend packed \
   --requests 4 --prompt-len 4 --new-tokens 8 --batch 4
+
+echo "== smoke: continuous batching under arena pressure =="
+# The continuous policy on BOTH host backends, on an arena deliberately
+# too small for every session's worst case (6 requests x 2 blocks
+# against 8 blocks), so the preempt -> requeue -> re-prefill path runs
+# end to end in CI, not just in unit tests.
+cargo run -q --release --offline --bin repro -- serve --backend reference \
+  --policy continuous --requests 6 --prompt-len 4 --new-tokens 16 \
+  --max-active 6 --arena-blocks 8
+cargo run -q --release --offline --bin repro -- serve --backend packed \
+  --policy continuous --requests 6 --prompt-len 4 --new-tokens 16 \
+  --max-active 6 --arena-blocks 8
 
 echo "== bench + example targets compile (offline) =="
 cargo build --benches --offline

@@ -1,18 +1,26 @@
 //! Edge serving — the end-to-end driver required by the reproduction:
 //! load the 1-bit decoder (AOT artifacts when present, else the offline
 //! synthetic model), serve a batch of requests through the runtime, and
-//! report latency/throughput; then project the same workload onto the
-//! simulated PIM-LLM and TPU-LLM hardware for the paper's
-//! edge-deployment metrics (tokens/s, tokens/J, words/battery).
+//! report latency/throughput (queue wait, TTFT, and end-to-end
+//! percentiles); then project the same workload onto the simulated
+//! PIM-LLM and TPU-LLM hardware for the paper's edge-deployment metrics
+//! (tokens/s, tokens/J, words/battery).
 //!
-//! The `--batch B` knob selects the batched scheduler: one
-//! `decode_batch` over all B active sessions per tick, i.e. one weight
-//! traversal per step for the whole batch (the amortization the paper's
-//! throughput claim rests on). With `--batch 0` the per-session
-//! round-robin scheduler is used; both produce identical tokens.
+//! Scheduling: `--policy fifo|rr|batched|continuous` selects the
+//! scheduler. `batched` issues one `decode_batch` over all active
+//! sessions per tick (one weight traversal per step for the whole
+//! batch) with worst-case KV-block reservations per request;
+//! `continuous` admits and retires sessions every tick against the
+//! paged KV-cache arena, preempting the youngest session under arena
+//! pressure. Without `--policy`, `--batch B > 0` selects batched and
+//! `--batch 0` round-robin (the historical knobs). All policies produce
+//! identical tokens. `--arena-blocks`/`--block-len` size the arena
+//! (0 = defaults) — a small arena is what makes `continuous` show its
+//! packing advantage (and its preemptions) on this tiny model.
 //!
 //! Run: `cargo run --release --example edge_serving -- \
 //!        --requests 32 --prompt-len 8 --new-tokens 16 --batch 8 \
+//!        [--policy continuous --arena-blocks 24] \
 //!        [--backend reference|packed]`
 
 use pim_llm::config::ArchConfig;
@@ -31,25 +39,35 @@ fn main() -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 8)?;
     let new_tokens = args.usize_or("new-tokens", 16)?;
     let max_active = args.usize_or("max-active", 4)?;
-    let batch = args.usize_or("batch", 8)?;
-    let policy = if batch > 0 {
-        Policy::Batched { batch }
-    } else {
-        Policy::RoundRobin { max_active }
-    };
+    // Historical default (no --policy given): batched with 8 lanes. With
+    // an explicit --policy, the batch default drops to 0 so --max-active
+    // governs the lane count unless --batch is passed too — the same
+    // precedence `repro serve` uses.
+    let batch = args.usize_or("batch", if args.get("policy").is_some() { 0 } else { 8 })?;
+    let policy = Policy::from_flags(args.get("policy"), batch, max_active)?;
+    let arena_blocks = args.usize_or("arena-blocks", 0)?;
+    let block_len = args.usize_or("block-len", 0)?;
 
     // ----------------------------------------------------------------
     // Functional serving on the runtime backend (`--backend packed`
     // selects the bitplane popcount executor — identical tokens, less
     // weight traffic).
     // ----------------------------------------------------------------
-    let engine = Engine::load_default_with(BackendKind::resolve(args.backend())?)?;
+    let engine = Engine::load_default_with_arena(
+        BackendKind::resolve(args.backend())?,
+        block_len,
+        arena_blocks,
+    )?;
+    let arena = engine.arena_status();
     println!(
-        "engine up: backend={} platform={} tiny-1bit d={} ({} layers), policy={policy:?}",
+        "engine up: backend={} platform={} tiny-1bit d={} ({} layers), policy={policy:?}, \
+         KV arena {} blocks x {} positions",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
-        engine.artifacts.manifest.model.n_layers
+        engine.artifacts.manifest.model.n_layers,
+        arena.total_blocks,
+        arena.block_len
     );
 
     let mut rng = Rng::new(7);
@@ -83,28 +101,47 @@ fn main() -> Result<()> {
         "  p50 / p95 / p99  : {:.3} / {:.3} / {:.3} s",
         stats.p50_service_s, stats.p95_service_s, stats.p99_service_s
     );
-    println!("  mean TTFT        : {:8.3} s", stats.mean_ttft_s);
+    println!(
+        "  TTFT mean/p50/p95: {:.3} / {:.3} / {:.3} s",
+        stats.mean_ttft_s, stats.p50_ttft_s, stats.p95_ttft_s
+    );
+    println!(
+        "  queue mean/p95   : {:.3} / {:.3} s",
+        stats.mean_queue_s, stats.p95_queue_s
+    );
+    println!("  preemptions      : {}", stats.evictions);
 
     // All responses complete and deterministic per prompt.
     assert!(responses
         .iter()
         .all(|r| r.tokens.len() == prompt_len + new_tokens));
 
-    // When the batched scheduler is active, show the amortization win
-    // over token-wise interleaving on the same workload — same tokens,
-    // one weight traversal per tick instead of one per session.
-    if matches!(policy, Policy::Batched { .. }) {
+    // Show the scheduling win over a baseline on the same workload —
+    // same tokens, different batching regime: batched amortizes one
+    // weight traversal per tick over round-robin's one per session;
+    // continuous packs more sessions into the same arena than
+    // fixed-wave worst-case reservations allow.
+    let baseline = match policy {
+        Policy::Batched { .. } => {
+            Some((Policy::RoundRobin { max_active }, "round-robin", "batched"))
+        }
+        Policy::Continuous { max_active: lanes } => {
+            Some((Policy::Batched { batch: lanes }, "fixed-wave batched", "continuous"))
+        }
+        _ => None,
+    };
+    if let Some((base_policy, base_label, label)) = baseline {
         let t0 = Instant::now();
-        let rr = Server::new(&engine, Policy::RoundRobin { max_active }).serve(requests)?;
-        let rr_wall = t0.elapsed().as_secs_f64();
+        let base = Server::new(&engine, base_policy).serve(requests)?;
+        let base_wall = t0.elapsed().as_secs_f64();
         for r in &responses {
-            let s = rr.iter().find(|s| s.id == r.id).expect("same ids");
+            let s = base.iter().find(|s| s.id == r.id).expect("same ids");
             assert_eq!(r.tokens, s.tokens, "schedulers must agree token-for-token");
         }
         println!(
-            "\nround-robin baseline: {:.2}s — batched speedup {:.2}x (identical tokens)",
-            rr_wall,
-            rr_wall / wall.max(f64::MIN_POSITIVE)
+            "\n{base_label} baseline: {base_wall:.2}s — {label} speedup {:.2}x \
+             (identical tokens)",
+            base_wall / wall.max(f64::MIN_POSITIVE)
         );
     }
 

@@ -36,15 +36,21 @@ fn main() -> Result<()> {
         engine.platform()
     );
 
-    // Single decode step (the per-token cost on the request path).
+    // Single decode step (the per-token cost on the request path):
+    // repeatedly decoding position 0 of one arena-backed session, so
+    // the measured cost is the step itself, not session setup.
+    let session = engine.new_session()?;
     b.run("runtime/decode_step", || {
-        let caches = engine.empty_caches().unwrap();
-        black_box(engine.decode_step(caches, 1, 0).unwrap().logits.len())
+        black_box(engine.decode_step(session, 1, 0).unwrap().len())
     });
+    engine.free_session(session)?;
 
-    // Cache construction (per-session setup).
-    b.run("runtime/empty_caches", || {
-        black_box(engine.empty_caches().unwrap())
+    // Session open/close against the paged arena (per-request setup —
+    // replaces the old full-tensor `empty_caches` allocation).
+    b.run("runtime/session_alloc_free", || {
+        let s = engine.new_session().unwrap();
+        engine.free_session(s).unwrap();
+        black_box(s)
     });
 
     // Full short generation (prompt 4 + 8 new).

@@ -31,8 +31,11 @@
 //!   (the functional numerics path) behind a pluggable `Backend`: a
 //!   pure-Rust reference executor by default, the `quant`-backed packed
 //!   bitplane executor, and the PJRT (xla crate) engine behind the
-//!   off-by-default `pjrt` feature.
-//! * [`serving`]    — threaded request queue + batcher for the edge-serving
+//!   off-by-default `pjrt` feature. Session KV state lives in a shared
+//!   block-paged arena (`runtime::kvcache`) addressed by opaque handles.
+//! * [`serving`]    — threaded request queue + schedulers (FIFO,
+//!   round-robin, fixed-wave batched, continuous batching with
+//!   arena-pressure admission and preemption) for the edge-serving
 //!   example.
 //!
 //! Python/JAX/Pallas exists only at build time (`make artifacts`); the

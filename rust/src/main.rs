@@ -32,10 +32,15 @@ SUBCOMMANDS
   simulate   --model <name> --context <l> --arch <pim-llm|tpu-llm>
   sweep      --figure <fig1b|fig4|fig5|fig6|fig7|fig8|table3|all>
   serve      --requests N --prompt-len P --new-tokens T [--batch B | --max-active A]
+             [--policy fifo|rr|batched|continuous]
+             [--arena-blocks K] [--block-len L]
              [--backend reference|packed|pjrt]
-             (--batch B schedules one decode_batch over B sessions per
-              tick — one weight traversal per step for the whole batch;
-              --max-active A is the per-session round-robin scheduler)
+             (--policy continuous admits/retires sessions every tick
+              against the paged KV-cache arena, preempting under
+              pressure; batched reserves worst-case blocks per request
+              and advances fixed lanes. Without --policy, --batch B > 0
+              selects batched, else round-robin. --arena-blocks /
+              --block-len size the KV arena; 0 = defaults)
   validate   [--backend reference|packed|pjrt]
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
 
@@ -179,22 +184,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 8)?;
     let new_tokens = args.usize_or("new-tokens", 16)?;
     let max_active = args.usize_or("max-active", 4)?;
-    // --batch B > 0 selects the batched scheduler (one decode_batch
-    // over all active sessions per tick); 0 keeps round-robin.
+    // Without --policy the historical knobs apply: --batch B > 0 selects
+    // the batched scheduler (one decode_batch over all active sessions
+    // per tick); 0 keeps round-robin.
     let batch = args.usize_or("batch", 0)?;
-    let policy = if batch > 0 {
-        Policy::Batched { batch }
-    } else {
-        Policy::RoundRobin { max_active }
-    };
+    let policy = Policy::from_flags(args.get("policy"), batch, max_active)?;
+    // KV-cache arena geometry (0 = defaults); small --arena-blocks is
+    // how to see the continuous policy's preemption path live.
+    let arena_blocks = args.usize_or("arena-blocks", 0)?;
+    let block_len = args.usize_or("block-len", 0)?;
 
-    let engine = Engine::load_default_with(BackendKind::resolve(args.backend())?)?;
+    let engine = Engine::load_default_with_arena(
+        BackendKind::resolve(args.backend())?,
+        block_len,
+        arena_blocks,
+    )?;
+    let arena = engine.arena_status();
     println!(
-        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?}",
+        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?} \
+         arena={} blocks x {} positions",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
-        engine.artifacts.manifest.model.n_layers
+        engine.artifacts.manifest.model.n_layers,
+        arena.total_blocks,
+        arena.block_len
     );
     let reqs: Vec<Request> = (0..requests as u64)
         .map(|id| Request {
@@ -211,16 +225,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let stats = LatencyStats::from_responses(&out, wall);
     println!(
-        "served {} requests / {} tokens in {:.2}s",
-        stats.n, stats.total_tokens, wall
+        "served {} requests / {} tokens in {:.2}s (mean latency {:.3}s)",
+        stats.n, stats.total_tokens, wall, stats.mean_service_s
     );
-    println!("  throughput   : {:.1} tok/s", stats.tokens_per_s);
-    println!("  mean latency : {:.3}s", stats.mean_service_s);
-    println!(
-        "  p50/p95/p99  : {:.3}/{:.3}/{:.3}s",
-        stats.p50_service_s, stats.p95_service_s, stats.p99_service_s
-    );
-    println!("  mean TTFT    : {:.3}s", stats.mean_ttft_s);
+    println!("  {}", stats.report());
     Ok(())
 }
 

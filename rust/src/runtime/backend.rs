@@ -13,34 +13,21 @@
 //!   AOT-lowered HLO; behind the off-by-default `pjrt` Cargo feature
 //!   because the `xla` crate needs network access to build.
 //!
-//! Callers (decoder, serving, CLI) talk to [`crate::runtime::Engine`],
-//! which owns a `Box<dyn Backend>`; KV caches are opaque [`Caches`]
-//! values threaded between steps, so backends can keep state wherever
-//! it lives naturally (host vectors vs device buffers).
+//! KV-cache state no longer moves through these calls: it lives in the
+//! shared block-paged [`CacheArena`] ([`crate::runtime::kvcache`]), and
+//! callers hold opaque generation-checked [`CacheHandle`]s. A decode
+//! step reads and writes the session's cache in place through the
+//! arena and returns only the logits — which is what lets the serving
+//! layer admit, retire, and preempt sessions against real block usage
+//! instead of worst-case context reservations. The host backends keep
+//! all session state in the arena; the PJRT backend keeps its
+//! device-resident contiguous buffers in a private side table keyed by
+//! [`CacheHandle::key`] (the contiguous compatibility shim) while still
+//! registering handles with the arena so handle lifecycle and
+//! validation stay uniform.
 
+use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use crate::util::error::{ensure, Result};
-
-/// KV-cache state threaded between decode steps. Opaque to callers:
-/// obtain from [`Backend::empty_caches`], pass to
-/// [`Backend::decode_step`], which consumes it and returns the successor.
-pub enum Caches {
-    /// Host-resident caches of the reference backend; each of `k`/`v` is
-    /// the flattened `(n_layers, h, max_ctx, d_head)` tensor, row-major.
-    Host { k: Vec<f32>, v: Vec<f32> },
-    /// Device-resident PJRT buffers (never copied to the host on the
-    /// request path).
-    #[cfg(feature = "pjrt")]
-    Device {
-        k: xla::PjRtBuffer,
-        v: xla::PjRtBuffer,
-    },
-}
-
-/// Outputs of one decode step.
-pub struct StepOutput {
-    pub logits: Vec<f32>,
-    pub caches: Caches,
-}
 
 /// One execution engine for the decode step.
 pub trait Backend {
@@ -50,43 +37,94 @@ pub trait Backend {
     /// Platform string (mirrors PJRT's platform_name, e.g. "cpu").
     fn platform(&self) -> String;
 
-    /// Fresh zeroed KV caches in this backend's native representation.
-    fn empty_caches(&self) -> Result<Caches>;
+    /// Open a fresh decode session (zeroed cache state, no blocks held
+    /// yet). Backends with private per-session state (PJRT's device
+    /// buffers) override this to set it up alongside the arena slot.
+    fn new_session(&self, arena: &mut CacheArena) -> Result<CacheHandle> {
+        arena.alloc_session()
+    }
+
+    /// Retire a session: release its arena blocks (and any private
+    /// backend state) and invalidate the handle.
+    fn drop_session(&self, arena: &mut CacheArena, handle: CacheHandle) -> Result<()> {
+        arena.free_session(handle)
+    }
+
+    /// Reserve cache capacity for a session that will feed `positions`
+    /// tokens in total — the worst-case up-front reservation the
+    /// fixed-wave schedulers use. Backends whose caches are not arena
+    /// blocks (PJRT's contiguous device buffers already hold the full
+    /// window) override this to a no-op.
+    fn reserve_session(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        positions: usize,
+    ) -> Result<()> {
+        if positions > 0 {
+            arena.ensure_capacity(handle, positions - 1)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Whether decoding the session at position `pos` would claim a
+    /// cache block it does not yet hold — the serving layer's arena
+    /// pressure signal. Backends whose caches are not arena blocks
+    /// (PJRT's device buffers) override this to report no pressure.
+    fn session_needs_block(
+        &self,
+        arena: &CacheArena,
+        handle: CacheHandle,
+        pos: usize,
+    ) -> Result<bool> {
+        Ok(arena.layout().blocks_for_positions(pos + 1) > arena.session_blocks(handle)?)
+    }
 
     /// Execute one decode step: feed token `token_id` at position `pos`
-    /// with the given caches; returns logits + updated caches. Consumes
-    /// the caches (they are superseded by the returned ones).
-    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput>;
+    /// into the session's cache state (updated in place through the
+    /// arena); returns the logits. Claims the position's cache block on
+    /// demand if the session does not hold it yet.
+    fn decode_step(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>>;
 
-    /// Execute one decode step for B independent sequences at once:
-    /// sequence `i` feeds `tokens[i]` at `positions[i]` into `caches[i]`
-    /// (ragged positions allowed — sequences need not be in lock-step).
-    /// Returns one [`StepOutput`] per sequence, in input order.
+    /// Execute one decode step for B independent sessions at once:
+    /// session `handles[i]` feeds `tokens[i]` at `positions[i]` (ragged
+    /// positions allowed — sessions need not be in lock-step). Returns
+    /// one logits vector per session, in input order. A session may
+    /// appear at most once per call.
     ///
-    /// Contract: the result MUST be exactly (bit-for-bit) what B separate
-    /// [`Backend::decode_step`] calls would produce — batching is a
-    /// throughput optimization, never a numerics change. The default
-    /// implementation simply loops `decode_step`; backends that can
-    /// amortize the per-step weight traversal across sequences (the PIM
-    /// weight-stationary regime the paper's throughput claim rests on)
-    /// override it.
+    /// Contract: the result MUST be exactly (bit-for-bit) what B
+    /// separate [`Backend::decode_step`] calls would produce — batching
+    /// is a throughput optimization, never a numerics change. The
+    /// default implementation simply loops `decode_step`; backends that
+    /// can amortize the per-step weight traversal across sequences (the
+    /// PIM weight-stationary regime the paper's throughput claim rests
+    /// on) override it.
     fn decode_batch(
         &self,
-        caches: Vec<Caches>,
+        arena: &mut CacheArena,
+        handles: &[CacheHandle],
         tokens: &[i32],
         positions: &[i32],
-    ) -> Result<Vec<StepOutput>> {
+    ) -> Result<Vec<Vec<f32>>> {
         ensure!(
-            caches.len() == tokens.len() && caches.len() == positions.len(),
-            "decode_batch arity mismatch: {} caches, {} tokens, {} positions",
-            caches.len(),
+            handles.len() == tokens.len() && handles.len() == positions.len(),
+            "decode_batch arity mismatch: {} handles, {} tokens, {} positions",
+            handles.len(),
             tokens.len(),
             positions.len()
         );
-        caches
-            .into_iter()
+        ensure_distinct(handles)?;
+        handles
+            .iter()
             .zip(tokens.iter().zip(positions))
-            .map(|(c, (&t, &p))| self.decode_step(c, t, p))
+            .map(|(&h, (&t, &p))| self.decode_step(arena, h, t, p))
             .collect()
     }
 }

@@ -8,9 +8,15 @@
 //!   per `decode_batch` call, so every layer's weights are traversed
 //!   once per step for the whole batch (bit-identical outputs to B
 //!   `TinyDecoder`s — enforced by `tests/batch_equivalence.rs`).
+//!
+//! Sessions are arena-backed [`CacheHandle`]s since the paging refactor
+//! (see [`crate::runtime::kvcache`]): cache blocks are claimed on
+//! demand as positions advance, and both decoders retire their sessions
+//! on drop so a decoder's capacity is reusable the moment it goes out
+//! of scope.
 
-use super::backend::Caches;
 use super::engine::Engine;
+use super::kvcache::CacheHandle;
 use crate::util::error::{anyhow, bail, ensure, Result};
 use std::time::Instant;
 
@@ -28,13 +34,12 @@ pub fn greedy_argmax(logits: &[f32]) -> i32 {
         .map_or(0, |(i, _)| i as i32)
 }
 
-/// Stateful decoder session over a loaded engine. KV caches live in the
-/// backend's native representation (host tensors for the reference
-/// executor, device-resident PJRT buffers for the `pjrt` feature) and
-/// are threaded between steps as opaque values.
+/// Stateful decoder session over a loaded engine. KV-cache state lives
+/// in the engine's paged arena behind the session handle; the decoder
+/// only tracks its position and token history.
 pub struct TinyDecoder<'e> {
     engine: &'e Engine,
-    caches: Option<crate::runtime::backend::Caches>,
+    session: CacheHandle,
     pos: i32,
     pub tokens: Vec<i32>,
     pub last_logits: Vec<f32>,
@@ -80,10 +85,10 @@ impl GenTiming {
 
 impl<'e> TinyDecoder<'e> {
     pub fn new(engine: &'e Engine) -> Result<Self> {
-        let caches = engine.empty_caches()?;
+        let session = engine.new_session()?;
         Ok(Self {
             engine,
-            caches: Some(caches),
+            session,
             pos: 0,
             tokens: Vec::new(),
             last_logits: Vec::new(),
@@ -95,10 +100,7 @@ impl<'e> TinyDecoder<'e> {
         if self.pos as usize >= self.engine.max_ctx() {
             bail!("context overflow: pos {} >= {}", self.pos, self.engine.max_ctx());
         }
-        let caches = self.caches.take().expect("caches present");
-        let out = self.engine.decode_step(caches, token, self.pos)?;
-        self.caches = Some(out.caches);
-        self.last_logits = out.logits;
+        self.last_logits = self.engine.decode_step(self.session, token, self.pos)?;
         self.tokens.push(token);
         self.pos += 1;
         Ok(())
@@ -142,11 +144,17 @@ impl<'e> TinyDecoder<'e> {
     }
 }
 
-/// One decoding session inside a [`BatchDecoder`]: its own KV caches,
+impl Drop for TinyDecoder<'_> {
+    fn drop(&mut self) {
+        self.engine.release_session(self.session);
+    }
+}
+
+/// One decoding session inside a [`BatchDecoder`]: its cache handle,
 /// position, token history and last logits — exactly the state a
 /// [`TinyDecoder`] holds, minus the engine handle.
 pub struct BatchSession {
-    caches: Option<Caches>,
+    session: CacheHandle,
     pos: i32,
     pub tokens: Vec<i32>,
     pub last_logits: Vec<f32>,
@@ -204,11 +212,12 @@ impl<'e> BatchDecoder<'e> {
         }
     }
 
-    /// Open a fresh session (empty caches, position 0); returns its id.
+    /// Open a fresh session (no cache blocks yet, position 0); returns
+    /// its id.
     pub fn add_session(&mut self) -> Result<usize> {
-        let caches = self.engine.empty_caches()?;
+        let session = self.engine.new_session()?;
         self.sessions.push(BatchSession {
-            caches: Some(caches),
+            session,
             pos: 0,
             tokens: Vec::new(),
             last_logits: Vec::new(),
@@ -239,19 +248,18 @@ impl<'e> BatchDecoder<'e> {
     /// call (it advances by exactly one position).
     ///
     /// Error semantics: argument problems (unknown/duplicate session,
-    /// context overflow) are rejected up front and consume nothing. An
-    /// engine-level `decode_batch` error, however, poisons every session
-    /// in the batch — their caches were consumed by the failed call and
-    /// cannot be recovered, so further feeds on them return a clear
-    /// "no caches" error rather than stale results. (On the reference
-    /// backend the up-front validation makes such failures unreachable.)
+    /// context overflow) are rejected up front and consume nothing, and
+    /// since cache state lives in the arena (nothing is moved), an
+    /// engine-level error consumes nothing either — positions only
+    /// advance on success, and a retried step deterministically
+    /// overwrites the same cache rows.
     pub fn feed(&mut self, steps: &[(usize, i32)]) -> Result<()> {
         if steps.is_empty() {
             return Ok(());
         }
-        // Validate up front so no session state is consumed on error: a
-        // session may appear at most once (it advances by exactly one
-        // position), must exist, and must have context room.
+        // Validate up front: a session may appear at most once (it
+        // advances by exactly one position), must exist, and must have
+        // context room.
         let max_ctx = self.engine.max_ctx() as i32;
         for (n, &(id, _)) in steps.iter().enumerate() {
             ensure!(
@@ -268,23 +276,19 @@ impl<'e> BatchDecoder<'e> {
                 s.pos
             );
         }
-        let mut caches = Vec::with_capacity(steps.len());
+        let mut handles = Vec::with_capacity(steps.len());
         let mut tokens = Vec::with_capacity(steps.len());
         let mut positions = Vec::with_capacity(steps.len());
         for &(id, token) in steps {
-            let s = &mut self.sessions[id];
-            let c = s.caches.take().ok_or_else(|| {
-                anyhow!("session {id} has no caches (lost in an earlier failed call)")
-            })?;
-            caches.push(c);
+            let s = &self.sessions[id];
+            handles.push(s.session);
             tokens.push(token);
             positions.push(s.pos);
         }
-        let outs = self.engine.decode_batch(caches, &tokens, &positions)?;
-        for (&(id, token), out) in steps.iter().zip(outs) {
+        let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
+        for (&(id, token), logits) in steps.iter().zip(outs) {
             let s = &mut self.sessions[id];
-            s.caches = Some(out.caches);
-            s.last_logits = out.logits;
+            s.last_logits = logits;
             s.tokens.push(token);
             s.pos += 1;
         }
@@ -340,6 +344,14 @@ impl<'e> BatchDecoder<'e> {
             new_tokens: n_new.iter().sum(),
             total_s: start.elapsed().as_secs_f64(),
         })
+    }
+}
+
+impl Drop for BatchDecoder<'_> {
+    fn drop(&mut self) {
+        for s in &self.sessions {
+            self.engine.release_session(s.session);
+        }
     }
 }
 
@@ -406,6 +418,20 @@ mod tests {
         let mut b = TinyDecoder::new(&e).unwrap();
         b.generate(&[3, 4], 4).unwrap();
         assert_ne!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn dropped_decoders_release_their_arena_blocks() {
+        let e = engine();
+        let full = e.arena_status().free_blocks;
+        {
+            let mut tiny = TinyDecoder::new(&e).unwrap();
+            tiny.generate(&[1, 2, 3], 4).unwrap();
+            let mut batch = BatchDecoder::new(&e);
+            batch.generate(&[vec![1], vec![2, 3]], &[2, 2]).unwrap();
+            assert!(e.arena_status().free_blocks < full);
+        }
+        assert_eq!(e.arena_status().free_blocks, full);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! The runtime engine facade: artifacts + a boxed [`Backend`] chosen at
-//! load time.
+//! The runtime engine facade: artifacts + a boxed [`Backend`] + the
+//! shared block-paged KV-cache arena, chosen and sized at load time.
 //!
 //! Three backends: the pure-Rust [`super::reference`] executor (the
 //! offline default), the [`super::packed`] bitplane popcount executor
@@ -12,13 +12,19 @@
 //! `PIM_LLM_BACKEND` env var applies, and with neither the reference
 //! backend is used.
 //!
-//! Callers (decoder, serving, CLI, benches) only see `Engine`; the KV
-//! caches they thread between steps are the opaque [`Caches`] values of
-//! whichever backend is active.
+//! Callers (decoder, serving, CLI, benches) only see `Engine`: sessions
+//! are opened with [`Engine::new_session`], advanced with
+//! [`Engine::decode_step`] / [`Engine::decode_batch`] against opaque
+//! [`CacheHandle`]s, and retired with [`Engine::free_session`]. Cache
+//! state never moves through these calls — it lives in the arena
+//! ([`super::kvcache`]), whose occupancy ([`Engine::arena_status`])
+//! drives the serving layer's pressure-aware admission and preemption.
 
 use super::artifacts::Artifacts;
-use super::backend::{Backend, Caches, StepOutput};
+use super::backend::Backend;
+use super::kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 use crate::util::error::{Context, Result};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Which execution backend to load.
@@ -86,11 +92,18 @@ impl BackendKind {
     }
 }
 
-/// Loaded model + execution backend; one `decode_step` per generated
-/// token.
+/// Loaded model + execution backend + the shared KV-cache arena; one
+/// `decode_step`/`decode_batch` per generated token.
+///
+/// The arena sits behind a `RefCell`: engine calls are already
+/// single-threaded per engine (backends are not `Sync`; the threaded
+/// serving front end replicates one engine per worker), and interior
+/// mutability is what lets many sessions share one `&Engine` the way
+/// they shared it before the paging refactor.
 pub struct Engine {
     pub artifacts: Arc<Artifacts>,
     backend: Box<dyn Backend>,
+    arena: RefCell<CacheArena>,
 }
 
 impl Engine {
@@ -100,8 +113,23 @@ impl Engine {
         Self::load_with(artifacts, BackendKind::from_env()?)
     }
 
-    /// Load with an explicit backend.
+    /// Load with an explicit backend and the default arena geometry
+    /// (default block length, [`super::kvcache::DEFAULT_ARENA_SESSIONS`]
+    /// worst-case sessions of capacity).
     pub fn load_with(artifacts: Artifacts, kind: BackendKind) -> Result<Self> {
+        Self::load_with_arena(artifacts, kind, 0, 0)
+    }
+
+    /// Load with an explicit backend AND arena geometry: `block_len`
+    /// positions per cache block and `capacity_blocks` total blocks
+    /// (either `0` selects its default). Small capacities are how the
+    /// continuous-batching tests and benches create arena pressure.
+    pub fn load_with_arena(
+        artifacts: Artifacts,
+        kind: BackendKind,
+        block_len: usize,
+        capacity_blocks: usize,
+    ) -> Result<Self> {
         let artifacts = Arc::new(artifacts);
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Reference => Box::new(
@@ -115,7 +143,17 @@ impl Engine {
                 Box::new(super::pjrt::PjrtBackend::new(Arc::clone(&artifacts))?)
             }
         };
-        Ok(Self { artifacts, backend })
+        let layout = CacheLayout::with_block_len(&artifacts.manifest.model, block_len);
+        let arena = if capacity_blocks == 0 {
+            CacheArena::with_sessions(layout, 0)?
+        } else {
+            CacheArena::new(layout, capacity_blocks)?
+        };
+        Ok(Self {
+            artifacts,
+            backend,
+            arena: RefCell::new(arena),
+        })
     }
 
     /// Load from the default `artifacts/` directory with the env-var
@@ -124,18 +162,18 @@ impl Engine {
         Self::load_default_with(BackendKind::from_env()?)
     }
 
-    /// Load from the default `artifacts/` directory; if no AOT artifacts
-    /// exist there, fall back to the in-memory synthetic tiny model so
-    /// the functional path still runs offline. The fallback applies to
-    /// both host executors (reference and packed) — PJRT needs the real
-    /// HLO text, so selecting it without artifacts is a clear error
-    /// rather than a confusing HLO-parse failure later.
-    pub fn load_default_with(kind: BackendKind) -> Result<Self> {
+    /// [`Engine::load_default_with`] with explicit arena geometry (both
+    /// `0` = defaults); what the CLI's `--arena-blocks` flag maps to.
+    pub fn load_default_with_arena(
+        kind: BackendKind,
+        block_len: usize,
+        capacity_blocks: usize,
+    ) -> Result<Self> {
         let dir = super::artifacts::default_dir();
         if dir.join("manifest.json").exists() {
             let artifacts = Artifacts::load(dir)
                 .context("loading artifacts (run `make artifacts`)")?;
-            Self::load_with(artifacts, kind)
+            Self::load_with_arena(artifacts, kind, block_len, capacity_blocks)
         } else if kind.requires_aot_artifacts() {
             crate::bail!(
                 "backend {kind:?} requires real AOT artifacts at {} — run `make \
@@ -150,35 +188,107 @@ impl Engine {
                  AOT decoder)",
                 dir.display()
             );
-            Self::load_with(Artifacts::synthetic(0)?, kind)
+            Self::load_with_arena(Artifacts::synthetic(0)?, kind, block_len, capacity_blocks)
         }
     }
 
-    /// Fresh zeroed KV caches in the backend's native representation.
-    pub fn empty_caches(&self) -> Result<Caches> {
-        self.backend.empty_caches()
+    /// Load from the default `artifacts/` directory; if no AOT artifacts
+    /// exist there, fall back to the in-memory synthetic tiny model so
+    /// the functional path still runs offline. The fallback applies to
+    /// both host executors (reference and packed) — PJRT needs the real
+    /// HLO text, so selecting it without artifacts is a clear error
+    /// rather than a confusing HLO-parse failure later.
+    pub fn load_default_with(kind: BackendKind) -> Result<Self> {
+        Self::load_default_with_arena(kind, 0, 0)
+    }
+
+    /// Open a fresh decode session; retire it with
+    /// [`Engine::free_session`] (the decoders do this on drop).
+    pub fn new_session(&self) -> Result<CacheHandle> {
+        self.backend.new_session(&mut self.arena.borrow_mut())
+    }
+
+    /// Retire a session, returning its cache blocks to the arena.
+    pub fn free_session(&self, handle: CacheHandle) -> Result<()> {
+        self.backend.drop_session(&mut self.arena.borrow_mut(), handle)
+    }
+
+    /// Non-panicking session release for `Drop` impls: skips (leaving
+    /// the blocks to the arena's owner) if the arena is mid-borrow,
+    /// which can only happen while unwinding out of an engine call.
+    pub(crate) fn release_session(&self, handle: CacheHandle) {
+        if let Ok(mut arena) = self.arena.try_borrow_mut() {
+            let _ = self.backend.drop_session(&mut arena, handle);
+        }
+    }
+
+    /// Reserve worst-case cache capacity (`positions` total fed tokens)
+    /// for a session up front — what the fixed-wave serving policies do
+    /// at admission so an admitted session can never stall mid-decode.
+    pub fn reserve_session(&self, handle: CacheHandle, positions: usize) -> Result<()> {
+        self.backend
+            .reserve_session(&mut self.arena.borrow_mut(), handle, positions)
     }
 
     /// Execute one decode step: feed token `token_id` at position `pos`
-    /// with the given caches; returns logits + updated caches. Consumes
-    /// the caches (they are superseded by the returned ones).
-    pub fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
-        self.backend.decode_step(caches, token_id, pos)
+    /// into the session's cache state (updated in place); returns the
+    /// logits.
+    pub fn decode_step(
+        &self,
+        handle: CacheHandle,
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        self.backend
+            .decode_step(&mut self.arena.borrow_mut(), handle, token_id, pos)
     }
 
-    /// Execute one decode step for B independent sequences in a single
-    /// backend call (sequence `i` feeds `tokens[i]` at `positions[i]`
-    /// into `caches[i]`; ragged positions allowed). Guaranteed
+    /// Execute one decode step for B independent sessions in a single
+    /// backend call (session `handles[i]` feeds `tokens[i]` at
+    /// `positions[i]`; ragged positions allowed). Guaranteed
     /// bit-identical to B separate [`Engine::decode_step`] calls — on
     /// the host backends each weight matrix is traversed once per call
-    /// instead of once per sequence.
+    /// instead of once per session.
     pub fn decode_batch(
         &self,
-        caches: Vec<Caches>,
+        handles: &[CacheHandle],
         tokens: &[i32],
         positions: &[i32],
-    ) -> Result<Vec<StepOutput>> {
-        self.backend.decode_batch(caches, tokens, positions)
+    ) -> Result<Vec<Vec<f32>>> {
+        self.backend
+            .decode_batch(&mut self.arena.borrow_mut(), handles, tokens, positions)
+    }
+
+    /// Current arena occupancy (total/free/used blocks), the signal the
+    /// continuous-batching scheduler admits and preempts on.
+    pub fn arena_status(&self) -> ArenaStatus {
+        self.arena.borrow().status()
+    }
+
+    /// Cache blocks needed to back `positions` fed tokens.
+    pub fn blocks_for_positions(&self, positions: usize) -> usize {
+        self.arena.borrow().layout().blocks_for_positions(positions)
+    }
+
+    /// Cache blocks the session currently holds.
+    pub fn session_blocks(&self, handle: CacheHandle) -> Result<usize> {
+        self.arena.borrow().session_blocks(handle)
+    }
+
+    /// Whether decoding the session at `pos` would claim a cache block
+    /// it does not yet hold (always false on backends whose caches are
+    /// not arena blocks, e.g. PJRT) — the continuous scheduler's
+    /// pressure signal.
+    pub fn session_needs_block(&self, handle: CacheHandle, pos: usize) -> Result<bool> {
+        self.backend
+            .session_needs_block(&self.arena.borrow(), handle, pos)
+    }
+
+    /// Reassemble a session's cache as the contiguous
+    /// `(n_layers, h, max_ctx, d_head)` K/V tensors — test/diagnostic
+    /// surface for the paged-vs-contiguous equivalence suites.
+    pub fn gather_session(&self, handle: CacheHandle) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.arena.borrow().gather_contiguous(handle)
     }
 
     pub fn vocab(&self) -> usize {
@@ -213,10 +323,11 @@ mod tests {
         let e = engine();
         assert_eq!(e.backend_name(), "reference");
         assert_eq!(e.platform(), "cpu");
-        let caches = e.empty_caches().unwrap();
-        let out = e.decode_step(caches, 1, 0).unwrap();
-        assert_eq!(out.logits.len(), e.vocab());
-        assert!(out.logits.iter().all(|x| x.is_finite()));
+        let s = e.new_session().unwrap();
+        let logits = e.decode_step(s, 1, 0).unwrap();
+        assert_eq!(logits.len(), e.vocab());
+        assert!(logits.iter().all(|x| x.is_finite()));
+        e.free_session(s).unwrap();
     }
 
     #[test]
@@ -226,13 +337,12 @@ mod tests {
             Engine::load_with(Artifacts::synthetic(1).unwrap(), BackendKind::Packed)
                 .expect("packed engine");
         assert_eq!(packed.backend_name(), "packed");
-        let a = reference
-            .decode_step(reference.empty_caches().unwrap(), 7, 0)
-            .unwrap();
-        let b = packed
-            .decode_step(packed.empty_caches().unwrap(), 7, 0)
-            .unwrap();
-        assert_eq!(a.logits, b.logits);
+        let rs = reference.new_session().unwrap();
+        let ps = packed.new_session().unwrap();
+        assert_eq!(
+            reference.decode_step(rs, 7, 0).unwrap(),
+            packed.decode_step(ps, 7, 0).unwrap()
+        );
     }
 
     #[test]
@@ -263,53 +373,84 @@ mod tests {
     #[test]
     fn decode_step_deterministic() {
         let e = engine();
-        let a = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
-        let b = e.decode_step(e.empty_caches().unwrap(), 5, 0).unwrap();
-        assert_eq!(a.logits, b.logits);
+        let s1 = e.new_session().unwrap();
+        let s2 = e.new_session().unwrap();
+        assert_eq!(
+            e.decode_step(s1, 5, 0).unwrap(),
+            e.decode_step(s2, 5, 0).unwrap()
+        );
     }
 
     #[test]
-    fn cache_buffers_thread_state() {
-        // Feeding [1] then [2] must differ from feeding [2] fresh.
+    fn sessions_thread_state_and_free_releases_blocks() {
+        // Feeding [1] then [2] must differ from feeding [2] fresh, and
+        // retiring sessions must return their blocks to the pool.
         let e = engine();
-        let s1 = e.decode_step(e.empty_caches().unwrap(), 1, 0).unwrap();
-        let s2 = e.decode_step(s1.caches, 2, 1).unwrap();
-        let fresh = e.decode_step(e.empty_caches().unwrap(), 2, 0).unwrap();
-        assert_ne!(s2.logits, fresh.logits);
+        let full = e.arena_status().free_blocks;
+        let s = e.new_session().unwrap();
+        e.decode_step(s, 1, 0).unwrap();
+        let continued = e.decode_step(s, 2, 1).unwrap();
+        let fresh_s = e.new_session().unwrap();
+        let fresh = e.decode_step(fresh_s, 2, 0).unwrap();
+        assert_ne!(continued, fresh);
+        assert!(e.arena_status().free_blocks < full);
+        e.free_session(s).unwrap();
+        e.free_session(fresh_s).unwrap();
+        assert_eq!(e.arena_status().free_blocks, full);
+        // Stale handle rejected.
+        assert!(e.decode_step(s, 0, 0).is_err());
     }
 
     #[test]
     fn decode_batch_matches_individual_steps() {
         let e = engine();
-        let a = e.decode_step(e.empty_caches().unwrap(), 3, 0).unwrap();
-        let b = e.decode_step(e.empty_caches().unwrap(), 9, 0).unwrap();
-        let out = e
-            .decode_batch(
-                vec![e.empty_caches().unwrap(), e.empty_caches().unwrap()],
-                &[3, 9],
-                &[0, 0],
-            )
-            .unwrap();
+        let sa = e.new_session().unwrap();
+        let sb = e.new_session().unwrap();
+        let a = e.decode_step(sa, 3, 0).unwrap();
+        let b = e.decode_step(sb, 9, 0).unwrap();
+        let ba = e.new_session().unwrap();
+        let bb = e.new_session().unwrap();
+        let out = e.decode_batch(&[ba, bb], &[3, 9], &[0, 0]).unwrap();
         assert_eq!(out.len(), 2);
-        assert_eq!(out[0].logits, a.logits);
-        assert_eq!(out[1].logits, b.logits);
+        assert_eq!(out[0], a);
+        assert_eq!(out[1], b);
+    }
+
+    #[test]
+    fn explicit_arena_geometry_is_respected() {
+        let e = Engine::load_with_arena(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            6,
+        )
+        .unwrap();
+        let st = e.arena_status();
+        assert_eq!(st.block_len, 4);
+        assert_eq!(st.total_blocks, 6);
+        assert_eq!(e.blocks_for_positions(0), 0);
+        assert_eq!(e.blocks_for_positions(4), 1);
+        assert_eq!(e.blocks_for_positions(5), 2);
+        // Reservation claims worst-case blocks up front.
+        let s = e.new_session().unwrap();
+        e.reserve_session(s, 9).unwrap();
+        assert_eq!(e.session_blocks(s).unwrap(), 3);
+        assert_eq!(e.arena_status().free_blocks, 3);
     }
 
     #[test]
     fn decode_step_matches_golden_first_logits() {
         let e = engine();
         let g = e.artifacts.golden.clone();
-        let out = e
-            .decode_step(e.empty_caches().unwrap(), g.prompt[0], 0)
-            .unwrap();
-        for (got, want) in out.logits.iter().zip(g.first_logits_prefix.iter()) {
+        let s = e.new_session().unwrap();
+        let logits = e.decode_step(s, g.prompt[0], 0).unwrap();
+        for (got, want) in logits.iter().zip(g.first_logits_prefix.iter()) {
             assert!(
                 (got - want).abs() <= 1e-4 * want.abs().max(1.0),
                 "{got} vs {want}"
             );
         }
-        let l2: f64 = out
-            .logits
+        let l2: f64 = logits
             .iter()
             .map(|&x| (x as f64) * (x as f64))
             .sum::<f64>()
@@ -322,8 +463,11 @@ mod tests {
         // Two engines from the same artifacts must agree bitwise.
         let e1 = engine();
         let e2 = engine();
-        let o1 = e1.decode_step(e1.empty_caches().unwrap(), 42, 0).unwrap();
-        let o2 = e2.decode_step(e2.empty_caches().unwrap(), 42, 0).unwrap();
-        assert_eq!(o1.logits, o2.logits);
+        let s1 = e1.new_session().unwrap();
+        let s2 = e2.new_session().unwrap();
+        assert_eq!(
+            e1.decode_step(s1, 42, 0).unwrap(),
+            e2.decode_step(s2, 42, 0).unwrap()
+        );
     }
 }

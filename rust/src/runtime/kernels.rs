@@ -178,15 +178,66 @@ pub fn column_stripes(macs: usize, n_out: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
-/// Multi-head attention over the (already updated) KV caches of one
-/// layer — both matmuls through W8A8 qmatmul semantics, mirroring
-/// model.py::_attention. `k_cache`/`v_cache` are the flattened
-/// `(n_layers, h, max_ctx, d_head)` host tensors; `q` is this token's
-/// query vector (len `h * dh`); slots `[0, pos]` are attended (causal).
+/// One attention head over contiguous K/V rows — the single shared
+/// definition of the W8A8 attention numerics (mirrors
+/// model.py::_attention per head). `k_head`/`v_head` hold the `valid`
+/// attended rows back to back; `o` (len `dh`) must arrive zeroed.
 ///
-/// Shared by every host backend: attention reads per-sequence cache
-/// state, not weights, so there is nothing for the packed backend to
-/// repack — it calls this function unchanged.
+/// Both entry points funnel here: [`attention`] hands it slices of the
+/// contiguous `(n_layers, h, max_ctx, d_head)` tensor, and
+/// [`attention_paged`] hands it scratch gathered from the block-paged
+/// arena. Because the gathered scratch holds byte-for-byte the same
+/// rows in the same order, the two paths are bit-for-bit identical by
+/// construction (and by `tests/paged_equivalence.rs`).
+fn attention_head(q_head: &[f32], k_head: &[f32], v_head: &[f32], dh: usize, o: &mut [f32]) {
+    let valid = k_head.len() / dh;
+    debug_assert_eq!(k_head.len(), valid * dh);
+    debug_assert_eq!(v_head.len(), valid * dh);
+
+    // Score = q . K^T, both operands int8-quantized (W8A8).
+    let (q_q, q_s) = act_quant_int8(q_head);
+    let (k_q, k_s) = act_quant_int8(k_head);
+    let inv_scale = 1.0 / (q_s * k_s);
+    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0.0f32; valid];
+    for (t, s) in scores.iter_mut().enumerate() {
+        let row = &k_q[t * dh..(t + 1) * dh];
+        let mut acc = 0.0f32;
+        for (a, b) in q_q.iter().zip(row) {
+            acc += a * b;
+        }
+        *s = acc * inv_scale * inv_sqrt_dh;
+    }
+    softmax(&mut scores);
+
+    // Out = probs . V (W8A8 again).
+    let (p_q, p_s) = act_quant_int8(&scores);
+    let (v_q, v_s) = act_quant_int8(v_head);
+    let inv_scale = 1.0 / (p_s * v_s);
+    for (t, &pv) in p_q.iter().enumerate() {
+        if pv == 0.0 {
+            continue;
+        }
+        let row = &v_q[t * dh..(t + 1) * dh];
+        for (oj, &vj) in o.iter_mut().zip(row) {
+            *oj += pv * vj;
+        }
+    }
+    for oj in o.iter_mut() {
+        *oj *= inv_scale;
+    }
+}
+
+/// Multi-head attention over contiguous KV tensors of one layer —
+/// `k_cache`/`v_cache` are the flattened `(n_layers, h, max_ctx,
+/// d_head)` host tensors; `q` is this token's query vector (len
+/// `h * dh`); slots `[0, pos]` are attended (causal).
+///
+/// Since the paged-arena refactor the decode path reads K/V through
+/// [`attention_paged`]; this contiguous entry point remains THE numeric
+/// oracle — the `decode_step_contiguous` oracles in the reference and
+/// packed backends run it, and `tests/paged_equivalence.rs` holds the
+/// paged path to bitwise equality against it.
 pub fn attention(
     q: &[f32],
     k_cache: &[f32],
@@ -201,43 +252,45 @@ pub fn attention(
     let mut out = vec![0.0f32; h * dh];
     for head in 0..h {
         let base = (layer * h + head) * max_ctx * dh;
-        let k_head = &k_cache[base..base + valid * dh];
-        let v_head = &v_cache[base..base + valid * dh];
-        let q_head = &q[head * dh..(head + 1) * dh];
+        attention_head(
+            &q[head * dh..(head + 1) * dh],
+            &k_cache[base..base + valid * dh],
+            &v_cache[base..base + valid * dh],
+            dh,
+            &mut out[head * dh..(head + 1) * dh],
+        );
+    }
+    out
+}
 
-        // Score = q . K^T, both operands int8-quantized (W8A8).
-        let (q_q, q_s) = act_quant_int8(q_head);
-        let (k_q, k_s) = act_quant_int8(k_head);
-        let inv_scale = 1.0 / (q_s * k_s);
-        let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
-        let mut scores = vec![0.0f32; valid];
-        for (t, s) in scores.iter_mut().enumerate() {
-            let row = &k_q[t * dh..(t + 1) * dh];
-            let mut acc = 0.0f32;
-            for (a, b) in q_q.iter().zip(row) {
-                acc += a * b;
-            }
-            *s = acc * inv_scale * inv_sqrt_dh;
-        }
-        softmax(&mut scores);
-
-        // Out = probs . V (W8A8 again).
-        let (p_q, p_s) = act_quant_int8(&scores);
-        let (v_q, v_s) = act_quant_int8(v_head);
-        let inv_scale = 1.0 / (p_s * v_s);
-        let o = &mut out[head * dh..(head + 1) * dh];
-        for (t, &pv) in p_q.iter().enumerate() {
-            if pv == 0.0 {
-                continue;
-            }
-            let row = &v_q[t * dh..(t + 1) * dh];
-            for (oj, &vj) in o.iter_mut().zip(row) {
-                *oj += pv * vj;
-            }
-        }
-        for oj in o.iter_mut() {
-            *oj *= inv_scale;
-        }
+/// Multi-head attention reading K/V through a session's block table in
+/// the paged arena ([`crate::runtime::kvcache::CacheArena`]). Per
+/// `(layer, head)` the valid rows are gathered block by block into
+/// contiguous scratch — one copy per block, in position order, exactly
+/// the bytes the contiguous tensor would hold — and then run through
+/// the identical [`attention_head`] accumulation. Gather order never
+/// reorders rows, so the output is bit-for-bit equal to [`attention`]
+/// on the equivalent contiguous caches.
+pub fn attention_paged(
+    q: &[f32],
+    kv: &crate::runtime::kvcache::PagedKv<'_>,
+    layer: usize,
+    pos: usize,
+) -> Vec<f32> {
+    let (h, dh) = (kv.heads(), kv.head_dim());
+    let valid = pos + 1; // causal: slots [0, pos]
+    let mut out = vec![0.0f32; h * dh];
+    let mut k_scratch = Vec::with_capacity(valid * dh);
+    let mut v_scratch = Vec::with_capacity(valid * dh);
+    for head in 0..h {
+        kv.gather_head(layer, head, valid, &mut k_scratch, &mut v_scratch);
+        attention_head(
+            &q[head * dh..(head + 1) * dh],
+            &k_scratch,
+            &v_scratch,
+            dh,
+            &mut out[head * dh..(head + 1) * dh],
+        );
     }
     out
 }
@@ -324,5 +377,48 @@ mod tests {
         let again = attention(&q, &k_cache, &v_cache, 0, 1, h, max_ctx, dh);
         assert_eq!(at_pos1, again);
         assert!(at_pos1.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn paged_attention_matches_contiguous_bitwise() {
+        // Same K/V contents written both contiguously and through the
+        // paged arena (awkward block length 3, so positions straddle
+        // block boundaries): attention outputs must be identical bits.
+        use crate::runtime::artifacts::ModelInfo;
+        use crate::runtime::kvcache::{CacheArena, CacheLayout};
+        let m = ModelInfo {
+            vocab: 8,
+            d: 8,
+            h: 2,
+            d_ff: 8,
+            n_layers: 2,
+            max_ctx: 11,
+            eps: 1e-5,
+        };
+        let (h, dh, max_ctx) = (m.h, m.d / m.h, m.max_ctx);
+        let mut arena = CacheArena::new(CacheLayout::with_block_len(&m, 3), 16).unwrap();
+        let s = arena.alloc_session().unwrap();
+        let numel = m.n_layers * h * max_ctx * dh;
+        let (mut kc, mut vc) = (vec![0.0f32; numel], vec![0.0f32; numel]);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for pos in 0..max_ctx {
+            arena.ensure_capacity(s, pos).unwrap();
+            for layer in 0..m.n_layers {
+                let k_row: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+                let v_row: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+                arena.write_kv(s, layer, pos, &k_row, &v_row).unwrap();
+                for head in 0..h {
+                    let base = ((layer * h + head) * max_ctx + pos) * dh;
+                    kc[base..base + dh].copy_from_slice(&k_row[head * dh..(head + 1) * dh]);
+                    vc[base..base + dh].copy_from_slice(&v_row[head * dh..(head + 1) * dh]);
+                }
+            }
+            let q: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+            for layer in 0..m.n_layers {
+                let contiguous = attention(&q, &kc, &vc, layer, pos, h, max_ctx, dh);
+                let paged = attention_paged(&q, &arena.view(s).unwrap(), layer, pos);
+                assert_eq!(contiguous, paged, "layer {layer} pos {pos}");
+            }
+        }
     }
 }

@@ -1,0 +1,650 @@
+//! Block-paged KV-cache arena — shared cache storage for every decode
+//! session, replacing the per-session contiguous `Caches` values that
+//! were moved in and out of the backends before this refactor.
+//!
+//! Motivation (HPIM arxiv 2509.12993, PIM-AI arxiv 2411.17309, and the
+//! vLLM lineage they cite): when each session owns a private
+//! `(n_layers, h, max_ctx, d_head)` tensor, concurrency is capped by the
+//! WORST-CASE context length — a request that will generate 10 tokens
+//! reserves the same memory as one that fills the window. Paging the
+//! cache into fixed-size blocks lets the serving layer admit sessions
+//! against actual usage, preempt under pressure, and reuse freed
+//! capacity immediately, which is what the continuous-batching policy
+//! ([`crate::serving::Policy::Continuous`]) is built on.
+//!
+//! Layout: one block backs [`CacheLayout::block_len`] consecutive
+//! positions of ONE session across ALL layers and heads, stored
+//! `(n_layers, h, block_len, d_head)` row-major — the contiguous layout
+//! with `max_ctx` replaced by `block_len`. A session is a block table
+//! (`Vec<u32>` of block ids, position `p` lives in table entry
+//! `p / block_len` at in-block offset `p % block_len`). Within a block,
+//! the rows of one `(layer, head)` pair are contiguous, so the paged
+//! attention gather ([`crate::runtime::kernels::attention_paged`]) copies
+//! one contiguous run per block per head — and because the gathered
+//! scratch holds exactly the bytes the contiguous tensor would, the
+//! attention numerics are bit-for-bit identical to the pre-paging path
+//! (enforced by `tests/paged_equivalence.rs`).
+//!
+//! Handles ([`CacheHandle`]) are generation-checked indices: freeing a
+//! session bumps its slot's generation, so stale handles (use after
+//! free, double free) are rejected with an error instead of silently
+//! touching another session's cache. `tests/kvcache_properties.rs`
+//! churns the allocator to pin the no-leak / no-double-free / full-reuse
+//! invariants.
+
+use crate::util::error::{anyhow, ensure, Result};
+
+/// Default number of positions per cache block (vLLM-style granularity;
+/// clamped to `max_ctx` for tiny models).
+pub const DEFAULT_BLOCK_LEN: usize = 16;
+
+/// Default arena capacity, expressed in worst-case (full `max_ctx`)
+/// sessions, used when the caller does not size the arena explicitly.
+pub const DEFAULT_ARENA_SESSIONS: usize = 64;
+
+/// Geometry of the paged cache: model shape plus the block granularity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheLayout {
+    pub n_layers: usize,
+    pub h: usize,
+    pub dh: usize,
+    pub max_ctx: usize,
+    pub block_len: usize,
+}
+
+impl CacheLayout {
+    /// Layout for a model with the default block length.
+    pub fn from_model(m: &super::artifacts::ModelInfo) -> Self {
+        Self::with_block_len(m, DEFAULT_BLOCK_LEN)
+    }
+
+    /// Layout with an explicit block length (`0` selects the default);
+    /// clamped to `[1, max_ctx]` — a block longer than the context
+    /// window would only waste its tail.
+    pub fn with_block_len(m: &super::artifacts::ModelInfo, block_len: usize) -> Self {
+        let block_len = if block_len == 0 {
+            DEFAULT_BLOCK_LEN
+        } else {
+            block_len
+        };
+        CacheLayout {
+            n_layers: m.n_layers,
+            h: m.h,
+            dh: m.d / m.h,
+            max_ctx: m.max_ctx,
+            block_len: block_len.clamp(1, m.max_ctx.max(1)),
+        }
+    }
+
+    /// Floats per block in EACH of the K and V pools.
+    pub fn block_floats(&self) -> usize {
+        self.block_len * self.n_layers * self.h * self.dh
+    }
+
+    /// Blocks needed to back `n` positions (0 positions -> 0 blocks).
+    pub fn blocks_for_positions(&self, n: usize) -> usize {
+        n.div_ceil(self.block_len)
+    }
+
+    /// Blocks of one worst-case (full `max_ctx`) session.
+    pub fn blocks_per_session(&self) -> usize {
+        self.blocks_for_positions(self.max_ctx)
+    }
+}
+
+/// Opaque, generation-checked reference to one session's cache state.
+/// Obtained from [`CacheArena::alloc_session`] (via
+/// `Backend::new_session` / `Engine::new_session`); every arena
+/// operation validates it, so stale handles error instead of aliasing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheHandle {
+    index: u32,
+    generation: u32,
+}
+
+impl CacheHandle {
+    /// Stable unique key of this (slot, generation) pair — used by
+    /// backends that keep private per-session side state (the PJRT
+    /// contiguous shim keys its device buffers by this).
+    pub fn key(self) -> u64 {
+        (self.index as u64) << 32 | self.generation as u64
+    }
+}
+
+/// One session slot: its block table plus the generation counter that
+/// invalidates outstanding handles when the slot is freed and reused.
+#[derive(Debug)]
+struct Slot {
+    generation: u32,
+    live: bool,
+    table: Vec<u32>,
+}
+
+/// Point-in-time arena occupancy, for pressure-aware admission and
+/// reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStatus {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    pub used_blocks: usize,
+    pub block_len: usize,
+    pub live_sessions: usize,
+}
+
+/// The shared block-paged KV-cache pool. K and V live in two flat f32
+/// pools of `capacity_blocks * block_floats` each; a free list hands
+/// out block ids LIFO (deterministic given a deterministic operation
+/// sequence, which keeps serving runs reproducible).
+pub struct CacheArena {
+    layout: CacheLayout,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Free block ids, popped from the back.
+    free: Vec<u32>,
+    slots: Vec<Slot>,
+    /// Indices of dead slots available for reuse.
+    free_slots: Vec<u32>,
+}
+
+impl CacheArena {
+    /// Arena with an explicit block capacity (`>= 1`).
+    pub fn new(layout: CacheLayout, capacity_blocks: usize) -> Result<Self> {
+        ensure!(capacity_blocks >= 1, "arena needs at least one block");
+        ensure!(
+            layout.block_floats() > 0,
+            "degenerate cache layout {layout:?}"
+        );
+        let bf = layout.block_floats();
+        Ok(Self {
+            k: vec![0.0; capacity_blocks * bf],
+            v: vec![0.0; capacity_blocks * bf],
+            // Reversed so blocks are first handed out in 0, 1, 2... order.
+            free: (0..capacity_blocks as u32).rev().collect(),
+            layout,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+        })
+    }
+
+    /// Arena sized for `sessions` worst-case (full-context) sessions
+    /// (`0` selects [`DEFAULT_ARENA_SESSIONS`]).
+    pub fn with_sessions(layout: CacheLayout, sessions: usize) -> Result<Self> {
+        let sessions = if sessions == 0 {
+            DEFAULT_ARENA_SESSIONS
+        } else {
+            sessions
+        };
+        let blocks = layout.blocks_per_session().max(1) * sessions;
+        Self::new(layout, blocks)
+    }
+
+    pub fn layout(&self) -> &CacheLayout {
+        &self.layout
+    }
+
+    pub fn status(&self) -> ArenaStatus {
+        ArenaStatus {
+            total_blocks: self.k.len() / self.layout.block_floats(),
+            free_blocks: self.free.len(),
+            used_blocks: self.k.len() / self.layout.block_floats() - self.free.len(),
+            block_len: self.layout.block_len,
+            live_sessions: self.slots.iter().filter(|s| s.live).count(),
+        }
+    }
+
+    fn slot(&self, h: CacheHandle) -> Result<&Slot> {
+        let s = self
+            .slots
+            .get(h.index as usize)
+            .ok_or_else(|| anyhow!("unknown cache handle {h:?}"))?;
+        ensure!(
+            s.live && s.generation == h.generation,
+            "stale cache handle {h:?} (session freed)"
+        );
+        Ok(s)
+    }
+
+    fn slot_mut(&mut self, h: CacheHandle) -> Result<&mut Slot> {
+        let s = self
+            .slots
+            .get_mut(h.index as usize)
+            .ok_or_else(|| anyhow!("unknown cache handle {h:?}"))?;
+        ensure!(
+            s.live && s.generation == h.generation,
+            "stale cache handle {h:?} (session freed)"
+        );
+        Ok(s)
+    }
+
+    /// Whether `h` refers to a live session.
+    pub fn is_live(&self, h: CacheHandle) -> bool {
+        self.slot(h).is_ok()
+    }
+
+    /// Open a session with an empty block table. Never fails for lack
+    /// of blocks — blocks are claimed lazily by [`Self::ensure_capacity`].
+    pub fn alloc_session(&mut self) -> Result<CacheHandle> {
+        if let Some(i) = self.free_slots.pop() {
+            let s = &mut self.slots[i as usize];
+            debug_assert!(!s.live && s.table.is_empty());
+            s.live = true;
+            Ok(CacheHandle {
+                index: i,
+                generation: s.generation,
+            })
+        } else {
+            ensure!(
+                self.slots.len() < u32::MAX as usize,
+                "session slot space exhausted"
+            );
+            self.slots.push(Slot {
+                generation: 0,
+                live: true,
+                table: Vec::new(),
+            });
+            Ok(CacheHandle {
+                index: (self.slots.len() - 1) as u32,
+                generation: 0,
+            })
+        }
+    }
+
+    /// Free a session: return its blocks to the pool and invalidate the
+    /// handle (the slot's generation is bumped, so a retained copy of
+    /// `h` errors from now on). Eviction and normal retirement are the
+    /// same operation — an evicted session is simply re-prefilled into
+    /// a fresh session later, which is deterministic.
+    pub fn free_session(&mut self, h: CacheHandle) -> Result<()> {
+        self.slot(h)?; // validate first so `free` is untouched on error
+        let s = &mut self.slots[h.index as usize];
+        self.free.extend(s.table.drain(..));
+        s.live = false;
+        s.generation = s.generation.wrapping_add(1);
+        self.free_slots.push(h.index);
+        Ok(())
+    }
+
+    /// Ensure the session's table backs position `pos` (and everything
+    /// before it), claiming zeroed blocks from the free list as needed.
+    /// All-or-nothing: if the pool cannot cover the full need, an error
+    /// is returned and NOTHING is claimed — the session's table and the
+    /// free list are untouched, so the serving layer can turn the
+    /// pressure into preemption and simply retry.
+    pub fn ensure_capacity(&mut self, h: CacheHandle, pos: usize) -> Result<()> {
+        ensure!(
+            pos < self.layout.max_ctx,
+            "position {pos} >= max_ctx {}",
+            self.layout.max_ctx
+        );
+        let target = pos / self.layout.block_len + 1;
+        let bf = self.layout.block_floats();
+        let held = self.slot(h)?.table.len();
+        if target <= held {
+            return Ok(());
+        }
+        let needed = target - held;
+        if self.free.len() < needed {
+            let st = self.status();
+            crate::bail!(
+                "KV arena out of blocks (need {needed}, {} free of {} total, \
+                 {} sessions live) — raise the arena capacity or use the \
+                 continuous policy's preemption",
+                st.free_blocks,
+                st.total_blocks,
+                st.live_sessions
+            );
+        }
+        for _ in 0..needed {
+            let b = self.free.pop().expect("count checked above");
+            let base = b as usize * bf;
+            self.k[base..base + bf].fill(0.0);
+            self.v[base..base + bf].fill(0.0);
+            self.slots[h.index as usize].table.push(b);
+        }
+        Ok(())
+    }
+
+    /// Blocks currently held by the session.
+    pub fn session_blocks(&self, h: CacheHandle) -> Result<usize> {
+        Ok(self.slot(h)?.table.len())
+    }
+
+    /// Write one token's K/V rows (all heads of one layer, `h * dh`
+    /// floats each) at `pos`. The backing block must already exist
+    /// ([`Self::ensure_capacity`]); positions are written in place, so
+    /// re-running a step overwrites deterministically.
+    pub fn write_kv(
+        &mut self,
+        h: CacheHandle,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<()> {
+        let l = self.layout.clone();
+        ensure!(layer < l.n_layers, "layer {layer} out of range");
+        ensure!(pos < l.max_ctx, "position {pos} >= max_ctx {}", l.max_ctx);
+        ensure!(
+            k_row.len() == l.h * l.dh && v_row.len() == l.h * l.dh,
+            "K/V row length {} != h*dh {}",
+            k_row.len(),
+            l.h * l.dh
+        );
+        let slot = self.slot_mut(h)?;
+        let bi = pos / l.block_len;
+        let Some(&block) = slot.table.get(bi) else {
+            crate::bail!("position {pos} not backed by a block (table len {})", slot.table.len());
+        };
+        let pib = pos % l.block_len;
+        let bf = l.block_floats();
+        for head in 0..l.h {
+            let dst = block as usize * bf + ((layer * l.h + head) * l.block_len + pib) * l.dh;
+            self.k[dst..dst + l.dh].copy_from_slice(&k_row[head * l.dh..(head + 1) * l.dh]);
+            self.v[dst..dst + l.dh].copy_from_slice(&v_row[head * l.dh..(head + 1) * l.dh]);
+        }
+        Ok(())
+    }
+
+    /// Read-only paged view of one session, for the attention gather.
+    pub fn view(&self, h: CacheHandle) -> Result<PagedKv<'_>> {
+        let slot = self.slot(h)?;
+        Ok(PagedKv {
+            k: &self.k,
+            v: &self.v,
+            table: &slot.table,
+            layout: &self.layout,
+        })
+    }
+
+    /// Reassemble the session's cache as the contiguous
+    /// `(n_layers, h, max_ctx, d_head)` tensors the pre-paging backends
+    /// produced (unbacked positions read as zero — exactly what fresh
+    /// contiguous caches held). Used by the equivalence tests to compare
+    /// paged state against the contiguous oracle bit for bit.
+    pub fn gather_contiguous(&self, h: CacheHandle) -> Result<(Vec<f32>, Vec<f32>)> {
+        let slot = self.slot(h)?;
+        let l = &self.layout;
+        let numel = l.n_layers * l.h * l.max_ctx * l.dh;
+        let (mut kc, mut vc) = (vec![0.0f32; numel], vec![0.0f32; numel]);
+        let bf = l.block_floats();
+        for (bi, &block) in slot.table.iter().enumerate() {
+            let pos0 = bi * l.block_len;
+            let rows = l.block_len.min(l.max_ctx - pos0);
+            for layer in 0..l.n_layers {
+                for head in 0..l.h {
+                    let src = block as usize * bf + ((layer * l.h + head) * l.block_len) * l.dh;
+                    let dst = ((layer * l.h + head) * l.max_ctx + pos0) * l.dh;
+                    kc[dst..dst + rows * l.dh]
+                        .copy_from_slice(&self.k[src..src + rows * l.dh]);
+                    vc[dst..dst + rows * l.dh]
+                        .copy_from_slice(&self.v[src..src + rows * l.dh]);
+                }
+            }
+        }
+        Ok((kc, vc))
+    }
+
+    /// Full-arena invariant check, for the property tests: block
+    /// accounting must balance (every block is in the free list or in
+    /// exactly one live table), dead slots hold nothing, and every table
+    /// entry is a valid block id.
+    pub fn debug_validate(&self) -> Result<()> {
+        let total = self.k.len() / self.layout.block_floats();
+        let mut seen = vec![0u32; total];
+        for &b in &self.free {
+            ensure!((b as usize) < total, "free list holds bogus block {b}");
+            seen[b as usize] += 1;
+        }
+        for (i, s) in self.slots.iter().enumerate() {
+            ensure!(
+                s.live || s.table.is_empty(),
+                "dead slot {i} still owns blocks"
+            );
+            for &b in &s.table {
+                ensure!((b as usize) < total, "slot {i} holds bogus block {b}");
+                seen[b as usize] += 1;
+            }
+        }
+        for (b, &n) in seen.iter().enumerate() {
+            ensure!(
+                n == 1,
+                "block {b} owned {n} times (must be exactly once: free list or one live table)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed paged view of one session's K/V state: the block table plus
+/// the shared pools. [`crate::runtime::kernels::attention_paged`] reads
+/// through this.
+pub struct PagedKv<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    table: &'a [u32],
+    layout: &'a CacheLayout,
+}
+
+impl PagedKv<'_> {
+    pub fn heads(&self) -> usize {
+        self.layout.h
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.layout.dh
+    }
+
+    /// Gather the first `valid` positions of one `(layer, head)` pair
+    /// into contiguous scratch — exactly the bytes the contiguous
+    /// `(n_layers, h, max_ctx, d_head)` tensor holds at
+    /// `[layer, head, 0..valid, :]`, so running the attention math on
+    /// the gathered scratch is bit-for-bit the contiguous computation.
+    /// One contiguous copy per block (the per-`(layer, head)` rows of a
+    /// block are adjacent by layout).
+    pub fn gather_head(
+        &self,
+        layer: usize,
+        head: usize,
+        valid: usize,
+        out_k: &mut Vec<f32>,
+        out_v: &mut Vec<f32>,
+    ) {
+        let l = self.layout;
+        out_k.clear();
+        out_v.clear();
+        let bf = l.block_floats();
+        let mut row = 0usize;
+        for &block in self.table {
+            if row >= valid {
+                break;
+            }
+            let rows = (valid - row).min(l.block_len);
+            let base = block as usize * bf + ((layer * l.h + head) * l.block_len) * l.dh;
+            out_k.extend_from_slice(&self.k[base..base + rows * l.dh]);
+            out_v.extend_from_slice(&self.v[base..base + rows * l.dh]);
+            row += rows;
+        }
+        // A short gather means a caller skipped ensure_capacity — that
+        // is a backend bug, and silently attending over fewer positions
+        // would corrupt outputs, so fail loudly even in release builds.
+        assert_eq!(
+            row, valid,
+            "paged gather: table backs {row} of {valid} positions"
+        );
+    }
+}
+
+/// Reject duplicate handles in one batched call: two lanes advancing
+/// the same session in a single step would alias its cache writes.
+pub fn ensure_distinct(handles: &[CacheHandle]) -> Result<()> {
+    for (n, h) in handles.iter().enumerate() {
+        ensure!(
+            !handles[..n].contains(h),
+            "cache handle {h:?} listed twice in one batch"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ModelInfo;
+
+    // d = 4 with h = 2 heads -> dh = 2, so K/V rows are 4 floats.
+    fn model() -> ModelInfo {
+        ModelInfo {
+            vocab: 16,
+            d: 4,
+            h: 2,
+            d_ff: 16,
+            n_layers: 2,
+            max_ctx: 10,
+            eps: 1e-5,
+        }
+    }
+
+    fn layout(block_len: usize) -> CacheLayout {
+        CacheLayout::with_block_len(&model(), block_len)
+    }
+
+    #[test]
+    fn layout_math() {
+        let l = layout(4);
+        // block_len * n_layers * h * dh
+        assert_eq!(l.block_floats(), 4 * 2 * 2 * 2);
+        assert_eq!(l.blocks_for_positions(0), 0);
+        assert_eq!(l.blocks_for_positions(1), 1);
+        assert_eq!(l.blocks_for_positions(4), 1);
+        assert_eq!(l.blocks_for_positions(5), 2);
+        assert_eq!(l.blocks_per_session(), 3); // ceil(10 / 4)
+        // Block length is clamped to the context window; 0 = default.
+        assert_eq!(layout(64).block_len, 10);
+        assert_eq!(layout(0).block_len, DEFAULT_BLOCK_LEN.min(10));
+    }
+
+    #[test]
+    fn alloc_write_gather_round_trip() {
+        let mut a = CacheArena::new(layout(4), 6).unwrap();
+        let h = a.alloc_session().unwrap();
+        for pos in 0..7usize {
+            a.ensure_capacity(h, pos).unwrap();
+            let k: Vec<f32> = (0..4).map(|i| (pos * 10 + i) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            a.write_kv(h, 1, pos, &k, &v).unwrap();
+        }
+        assert_eq!(a.session_blocks(h).unwrap(), 2);
+        // The paged view gathers exactly the contiguous bytes.
+        let view = a.view(h).unwrap();
+        let (mut gk, mut gv) = (Vec::new(), Vec::new());
+        view.gather_head(1, 1, 7, &mut gk, &mut gv);
+        let expect: Vec<f32> = (0..7).flat_map(|p| [(p * 10 + 2) as f32, (p * 10 + 3) as f32]).collect();
+        assert_eq!(gk, expect);
+        assert_eq!(gv, expect.iter().map(|x| -x).collect::<Vec<_>>());
+        // Layer 0 was never written: all zero.
+        view.gather_head(0, 0, 7, &mut gk, &mut gv);
+        assert!(gk.iter().all(|&x| x == 0.0));
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn gather_contiguous_matches_dense_indexing() {
+        let l = layout(3);
+        let mut a = CacheArena::new(l.clone(), 8).unwrap();
+        let h = a.alloc_session().unwrap();
+        let mut dense_k = vec![0.0f32; l.n_layers * l.h * l.max_ctx * l.dh];
+        let mut dense_v = dense_k.clone();
+        for pos in 0..l.max_ctx {
+            a.ensure_capacity(h, pos).unwrap();
+            for layer in 0..l.n_layers {
+                let row: Vec<f32> = (0..l.h * l.dh)
+                    .map(|i| (layer * 1000 + pos * 10 + i) as f32)
+                    .collect();
+                let neg: Vec<f32> = row.iter().map(|x| -x).collect();
+                a.write_kv(h, layer, pos, &row, &neg).unwrap();
+                for head in 0..l.h {
+                    let dst = ((layer * l.h + head) * l.max_ctx + pos) * l.dh;
+                    dense_k[dst..dst + l.dh]
+                        .copy_from_slice(&row[head * l.dh..(head + 1) * l.dh]);
+                    dense_v[dst..dst + l.dh]
+                        .copy_from_slice(&neg[head * l.dh..(head + 1) * l.dh]);
+                }
+            }
+        }
+        assert_eq!(a.gather_contiguous(h).unwrap(), (dense_k, dense_v));
+    }
+
+    #[test]
+    fn handles_are_generation_checked() {
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        a.free_session(h).unwrap();
+        // Double free and every other op on a stale handle must error.
+        assert!(a.free_session(h).is_err());
+        assert!(a.ensure_capacity(h, 0).is_err());
+        assert!(a.view(h).is_err());
+        assert!(a.session_blocks(h).is_err());
+        assert!(!a.is_live(h));
+        // The freed slot's reuse yields a DIFFERENT handle.
+        let h2 = a.alloc_session().unwrap();
+        assert_ne!(h.key(), h2.key());
+        assert!(a.is_live(h2));
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_and_reuse() {
+        let mut a = CacheArena::new(layout(4), 2).unwrap();
+        let h1 = a.alloc_session().unwrap();
+        let h2 = a.alloc_session().unwrap();
+        a.ensure_capacity(h1, 3).unwrap(); // block 0
+        a.ensure_capacity(h2, 3).unwrap(); // block 1
+        assert_eq!(a.status().free_blocks, 0);
+        // Pool dry: growing either session fails...
+        assert!(a.ensure_capacity(h1, 4).is_err());
+        // ...but freeing returns capacity that is immediately reusable.
+        a.free_session(h2).unwrap();
+        assert_eq!(a.status().free_blocks, 1);
+        a.ensure_capacity(h1, 4).unwrap();
+        assert_eq!(a.session_blocks(h1).unwrap(), 2);
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn blocks_are_zeroed_on_reuse() {
+        let mut a = CacheArena::new(layout(4), 1).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        a.write_kv(h, 0, 0, &[7.0; 4], &[9.0; 4]).unwrap();
+        a.free_session(h).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        let (k, v) = a.gather_contiguous(h).unwrap();
+        assert!(k.iter().all(|&x| x == 0.0) && v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn duplicate_handles_rejected() {
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let h1 = a.alloc_session().unwrap();
+        let h2 = a.alloc_session().unwrap();
+        assert!(ensure_distinct(&[h1, h2]).is_ok());
+        assert!(ensure_distinct(&[h1, h2, h1]).is_err());
+    }
+
+    #[test]
+    fn write_requires_backing_block() {
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let h = a.alloc_session().unwrap();
+        assert!(a.write_kv(h, 0, 0, &[0.0; 4], &[0.0; 4]).is_err());
+        a.ensure_capacity(h, 0).unwrap();
+        a.write_kv(h, 0, 0, &[0.0; 4], &[0.0; 4]).unwrap();
+        // Position 4 lives in block 1, not yet claimed.
+        assert!(a.write_kv(h, 0, 4, &[0.0; 4], &[0.0; 4]).is_err());
+        // Bounds.
+        assert!(a.ensure_capacity(h, 10).is_err());
+        assert!(a.write_kv(h, 2, 0, &[0.0; 4], &[0.0; 4]).is_err());
+        assert!(a.write_kv(h, 0, 0, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+}

@@ -4,11 +4,14 @@
 //!
 //! * [`artifacts`] — manifest/weights/golden parsing + validation, plus
 //!   an offline synthetic artifact generator.
-//! * [`backend`]   — the `Backend` trait and the opaque `Caches` /
-//!   `StepOutput` types threaded between steps.
+//! * [`backend`]   — the `Backend` trait: decode sessions addressed by
+//!   opaque [`CacheHandle`]s, state updated in place through the arena.
+//! * [`kvcache`]   — the block-paged KV-cache arena shared by all
+//!   sessions: fixed-size blocks, per-session block tables,
+//!   alloc/free/evict with generation-checked handles.
 //! * [`kernels`]   — the shared dense f32 kernels (quantization,
-//!   RMSNorm/GELU/softmax, `bitlinear`, attention) both host backends
-//!   execute.
+//!   RMSNorm/GELU/softmax, `bitlinear`, attention — contiguous oracle
+//!   and paged block-table variants) both host backends execute.
 //! * [`reference`] — pure-Rust reference executor (ref.py semantics);
 //!   the DEFAULT backend, zero dependencies, runs offline.
 //! * [`packed`]    — bitplane popcount executor: ternary weights lowered
@@ -16,8 +19,10 @@
 //!   mask-select MVMs; bit-identical outputs to `reference`.
 //! * [`pjrt`]      — XLA/PJRT engine for the AOT-lowered HLO, behind
 //!   the off-by-default `pjrt` Cargo feature (the `xla` crate needs
-//!   network access to build — see Cargo.toml).
-//! * [`engine`]    — the facade callers use; picks a backend at load.
+//!   network access to build — see Cargo.toml); keeps contiguous
+//!   device-resident caches behind the same handle API.
+//! * [`engine`]    — the facade callers use; picks a backend and sizes
+//!   the arena at load.
 //! * [`decoder`]   — greedy generation loops (single-session
 //!   `TinyDecoder`, batched `BatchDecoder`) + golden validation.
 
@@ -26,12 +31,14 @@ pub mod backend;
 pub mod decoder;
 pub mod engine;
 pub mod kernels;
+pub mod kvcache;
 pub mod packed;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
 
 pub use artifacts::Artifacts;
-pub use backend::{Backend, Caches, StepOutput};
+pub use backend::Backend;
 pub use decoder::{BatchDecoder, TinyDecoder};
 pub use engine::{BackendKind, Engine};
+pub use kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};

@@ -7,19 +7,28 @@
 //! the model-level w_head) into two-u64-bitplane form — once, the way
 //! the paper programs its PIM crossbars once before serving. The decode
 //! step then routes every projection through
-//! [`bitlinear_packed`]/[`bitlinear_packed_batch`] while reusing the
-//! reference backend's attention/nonlinear path (shared
-//! [`super::kernels`]) and its resolved parameter table for everything
-//! that is not a ternary matrix (embedding, norm gammas).
+//! [`bitlinear_packed_batch`] while reusing the reference backend's
+//! attention/nonlinear path (shared [`super::kernels`], including the
+//! paged-arena attention gather) and its resolved parameter table for
+//! everything that is not a ternary matrix (embedding, norm gammas).
+//! Like the reference backend, a single decode step IS a batch of one
+//! (`bitlinear_packed_batch` at B=1 is bit-for-bit [`bitlinear_packed`],
+//! pinned by the quant kernel tests), so one orchestration serves both
+//! entry points.
 //!
 //! Outputs — logits AND KV caches — are bit-for-bit identical to the
 //! reference backend on every path (single step, full generation,
-//! ragged batches, batched serving); `tests/packed_equivalence.rs`
-//! enforces it. See [`crate::quant`] for why exactness holds.
+//! ragged batches, batched and continuous serving);
+//! `tests/packed_equivalence.rs` enforces it, and
+//! `tests/paged_equivalence.rs` additionally holds this backend's paged
+//! path to its own contiguous oracle
+//! ([`PackedBackend::decode_step_contiguous`]). See [`crate::quant`]
+//! for why exactness holds.
 
 use super::artifacts::Artifacts;
-use super::backend::{Backend, Caches, StepOutput};
-use super::kernels::{attention, gelu, rms_norm};
+use super::backend::Backend;
+use super::kernels::{attention, attention_paged, gelu, rms_norm};
+use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use super::reference::ReferenceBackend;
 use crate::quant::{bitlinear_packed, bitlinear_packed_batch, PackedModel};
 use crate::util::error::{ensure, Context, Result};
@@ -50,29 +59,17 @@ impl PackedBackend {
         let reference = ReferenceBackend::new(artifacts)?;
         Ok(Self { reference, model })
     }
-}
 
-impl Backend for PackedBackend {
-    fn name(&self) -> &'static str {
-        "packed"
-    }
-
-    fn platform(&self) -> String {
-        "cpu".to_string()
-    }
-
-    fn empty_caches(&self) -> Result<Caches> {
-        self.reference.empty_caches()
-    }
-
-    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
-        let (mut kc, mut vc) = match caches {
-            Caches::Host { k, v } => (k, v),
-            #[cfg(feature = "pjrt")]
-            Caches::Device { .. } => {
-                crate::bail!("packed backend received device-resident caches")
-            }
-        };
+    /// The pre-paging contiguous decode step over the bitplane kernels,
+    /// kept as this backend's bitwise ORACLE (see
+    /// `ReferenceBackend::decode_step_contiguous` for the contract).
+    pub fn decode_step_contiguous(
+        &self,
+        kc: &mut [f32],
+        vc: &mut [f32],
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
         let r = &self.reference;
         let m = r.artifacts.manifest.model.clone();
         let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
@@ -94,15 +91,13 @@ impl Backend for PackedBackend {
             let k = bitlinear_packed(&xn, &pl.wk);
             let v = bitlinear_packed(&xn, &pl.wv);
 
-            // Write this token's K/V into the caches at `pos` (same
-            // LPDDR-side concat as the reference backend).
             for head in 0..h {
                 let base = ((layer * h + head) * max_ctx + pos) * dh;
                 kc[base..base + dh].copy_from_slice(&k[head * dh..(head + 1) * dh]);
                 vc[base..base + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
             }
 
-            let att = attention(&q, &kc, &vc, layer, pos, h, max_ctx, dh);
+            let att = attention(&q, kc, vc, layer, pos, h, max_ctx, dh);
             let att = bitlinear_packed(&att, &pl.wx);
             for (xi, ai) in x.iter_mut().zip(&att) {
                 *xi += ai;
@@ -119,65 +114,62 @@ impl Backend for PackedBackend {
         }
 
         let x = rms_norm(&x, r.data(r.lnf_gamma), eps);
-        let logits = bitlinear_packed(&x, &self.model.w_head);
+        Ok(bitlinear_packed(&x, &self.model.w_head))
+    }
+}
 
-        Ok(StepOutput {
-            logits,
-            caches: Caches::Host { k: kc, v: vc },
-        })
+impl Backend for PackedBackend {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    fn decode_step(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        let mut out = self.decode_batch(arena, &[handle], &[token_id], &[pos])?;
+        Ok(out.pop().expect("one lane in, one lane out"))
     }
 
     /// Batched decode over the bitplanes: every matrix's mask words are
     /// traversed ONCE per call and applied to all B activation-plane
-    /// sets ([`bitlinear_packed_batch`]); attention runs per sequence,
-    /// exactly like the reference backend's batched path. Ragged
-    /// positions allowed; bit-identical to B sequential
-    /// [`Backend::decode_step`] calls.
+    /// sets ([`bitlinear_packed_batch`]); attention runs per session
+    /// through its block table, exactly like the reference backend's
+    /// batched path. Ragged positions allowed; bit-identical to B
+    /// sequential [`Backend::decode_step`] calls.
     fn decode_batch(
         &self,
-        caches: Vec<Caches>,
+        arena: &mut CacheArena,
+        handles: &[CacheHandle],
         tokens: &[i32],
         positions: &[i32],
-    ) -> Result<Vec<StepOutput>> {
+    ) -> Result<Vec<Vec<f32>>> {
         ensure!(
-            caches.len() == tokens.len() && caches.len() == positions.len(),
-            "decode_batch arity mismatch: {} caches, {} tokens, {} positions",
-            caches.len(),
+            handles.len() == tokens.len() && handles.len() == positions.len(),
+            "decode_batch arity mismatch: {} handles, {} tokens, {} positions",
+            handles.len(),
             tokens.len(),
             positions.len()
         );
-        if caches.is_empty() {
+        if handles.is_empty() {
             return Ok(Vec::new());
         }
+        ensure_distinct(handles)?;
         let r = &self.reference;
         let m = r.artifacts.manifest.model.clone();
         let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
         let dh = d / h;
         let eps = m.eps as f32;
+        let poss = ReferenceBackend::prepare_step(arena, handles, positions, max_ctx)?;
 
-        let mut kcs = Vec::with_capacity(caches.len());
-        let mut vcs = Vec::with_capacity(caches.len());
-        for c in caches {
-            match c {
-                Caches::Host { k, v } => {
-                    kcs.push(k);
-                    vcs.push(v);
-                }
-                #[cfg(feature = "pjrt")]
-                Caches::Device { .. } => {
-                    crate::bail!("packed backend received device-resident caches")
-                }
-            }
-        }
-        let mut poss = Vec::with_capacity(positions.len());
-        for &p in positions {
-            ensure!(p >= 0, "negative position {p}");
-            let p = p as usize;
-            ensure!(p < max_ctx, "position {p} >= max_ctx {max_ctx}");
-            poss.push(p);
-        }
-
-        // Embed every sequence's token (XLA-style clamped gather).
+        // Embed every session's token (XLA-style clamped gather).
         let embedding = r.data(r.embedding);
         let mut xs: Vec<Vec<f32>> = tokens
             .iter()
@@ -197,29 +189,21 @@ impl Backend for PackedBackend {
             let k = bitlinear_packed_batch(&xn, &pl.wk);
             let v = bitlinear_packed_batch(&xn, &pl.wv);
 
-            // Scatter each sequence's new K/V into its own cache at its
-            // own (ragged) position.
-            for (((kc, vc), &pos), (k_i, v_i)) in kcs
-                .iter_mut()
-                .zip(vcs.iter_mut())
-                .zip(&poss)
-                .zip(k.iter().zip(&v))
-            {
-                for head in 0..h {
-                    let base = ((layer * h + head) * max_ctx + pos) * dh;
-                    kc[base..base + dh].copy_from_slice(&k_i[head * dh..(head + 1) * dh]);
-                    vc[base..base + dh].copy_from_slice(&v_i[head * dh..(head + 1) * dh]);
-                }
+            // Scatter each session's new K/V through its block table at
+            // its own (ragged) position.
+            for (i, (&hd, &pos)) in handles.iter().zip(&poss).enumerate() {
+                arena.write_kv(hd, layer, pos, &k[i], &v[i])?;
             }
 
-            // Attention reads per-sequence KV state, not weights — there
-            // is nothing to amortize, so it runs per sequence.
-            let att: Vec<Vec<f32>> = q
+            // Attention reads per-session KV state, not weights — there
+            // is nothing to amortize, so it runs per session.
+            let att = q
                 .iter()
-                .zip(kcs.iter().zip(&vcs))
-                .zip(&poss)
-                .map(|((q_i, (kc, vc)), &pos)| attention(q_i, kc, vc, layer, pos, h, max_ctx, dh))
-                .collect();
+                .zip(handles.iter().zip(&poss))
+                .map(|(q_i, (&hd, &pos))| {
+                    Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
+                })
+                .collect::<Result<Vec<_>>>()?;
             let att = bitlinear_packed_batch(&att, &pl.wx);
             for (x, a) in xs.iter_mut().zip(&att) {
                 for (xi, ai) in x.iter_mut().zip(a) {
@@ -249,22 +233,14 @@ impl Backend for PackedBackend {
             .iter()
             .map(|x| rms_norm(x, r.data(r.lnf_gamma), eps))
             .collect();
-        let logits = bitlinear_packed_batch(&xs, &self.model.w_head);
-
-        Ok(logits
-            .into_iter()
-            .zip(kcs.into_iter().zip(vcs))
-            .map(|(lg, (kc, vc))| StepOutput {
-                logits: lg,
-                caches: Caches::Host { k: kc, v: vc },
-            })
-            .collect())
+        Ok(bitlinear_packed_batch(&xs, &self.model.w_head))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::kvcache::CacheLayout;
 
     fn backends() -> (ReferenceBackend, PackedBackend) {
         let a = Arc::new(Artifacts::synthetic(13).unwrap());
@@ -274,51 +250,81 @@ mod tests {
         )
     }
 
-    fn host(c: &Caches) -> (&[f32], &[f32]) {
-        match c {
-            Caches::Host { k, v } => (k, v),
-            #[cfg(feature = "pjrt")]
-            Caches::Device { .. } => panic!("expected host caches"),
-        }
+    fn arena_for(p: &PackedBackend) -> CacheArena {
+        CacheArena::with_sessions(
+            CacheLayout::from_model(&p.reference.artifacts.manifest.model),
+            8,
+        )
+        .unwrap()
     }
 
     #[test]
     fn single_step_matches_reference_bitwise_including_caches() {
         let (r, p) = backends();
-        let ro = r.decode_step(r.empty_caches().unwrap(), 9, 0).unwrap();
-        let po = p.decode_step(p.empty_caches().unwrap(), 9, 0).unwrap();
-        assert_eq!(ro.logits, po.logits);
-        let (rk, rv) = host(&ro.caches);
-        let (pk, pv) = host(&po.caches);
-        assert_eq!(rk, pk);
-        assert_eq!(rv, pv);
+        let mut ra = arena_for(&p);
+        let mut pa = arena_for(&p);
+        let rs = r.new_session(&mut ra).unwrap();
+        let ps = p.new_session(&mut pa).unwrap();
+        let ro = r.decode_step(&mut ra, rs, 9, 0).unwrap();
+        let po = p.decode_step(&mut pa, ps, 9, 0).unwrap();
+        assert_eq!(ro, po);
+        assert_eq!(
+            ra.gather_contiguous(rs).unwrap(),
+            pa.gather_contiguous(ps).unwrap()
+        );
     }
 
     #[test]
     fn decode_batch_matches_reference_bitwise() {
         let (r, p) = backends();
+        let mut ra = arena_for(&p);
+        let mut pa = arena_for(&p);
         let tokens = [3i32, 17, 60];
         let positions = [0i32, 0, 0];
-        let rc = tokens.iter().map(|_| r.empty_caches().unwrap()).collect();
-        let pc = tokens.iter().map(|_| p.empty_caches().unwrap()).collect();
-        let ro = r.decode_batch(rc, &tokens, &positions).unwrap();
-        let po = p.decode_batch(pc, &tokens, &positions).unwrap();
-        for (a, b) in ro.iter().zip(&po) {
-            assert_eq!(a.logits, b.logits);
-            assert_eq!(host(&a.caches), host(&b.caches));
+        let rh: Vec<_> = tokens.iter().map(|_| r.new_session(&mut ra).unwrap()).collect();
+        let ph: Vec<_> = tokens.iter().map(|_| p.new_session(&mut pa).unwrap()).collect();
+        let ro = r.decode_batch(&mut ra, &rh, &tokens, &positions).unwrap();
+        let po = p.decode_batch(&mut pa, &ph, &tokens, &positions).unwrap();
+        assert_eq!(ro, po);
+        for (a, b) in rh.iter().zip(&ph) {
+            assert_eq!(
+                ra.gather_contiguous(*a).unwrap(),
+                pa.gather_contiguous(*b).unwrap()
+            );
         }
+    }
+
+    #[test]
+    fn contiguous_oracle_matches_paged_path() {
+        let (_, p) = backends();
+        let m = p.reference.artifacts.manifest.model.clone();
+        let mut arena =
+            CacheArena::new(CacheLayout::with_block_len(&m, 5), 16).unwrap();
+        let s = p.new_session(&mut arena).unwrap();
+        let numel = m.n_layers * m.h * m.max_ctx * (m.d / m.h);
+        let (mut kc, mut vc) = (vec![0.0f32; numel], vec![0.0f32; numel]);
+        for (pos, tok) in [8i32, 3, 3, 11, 0, 6].into_iter().enumerate() {
+            let paged = p.decode_step(&mut arena, s, tok, pos as i32).unwrap();
+            let oracle = p
+                .decode_step_contiguous(&mut kc, &mut vc, tok, pos as i32)
+                .unwrap();
+            assert_eq!(paged, oracle, "pos {pos}");
+        }
+        assert_eq!(arena.gather_contiguous(s).unwrap(), (kc, vc));
     }
 
     #[test]
     fn bounds_enforced_like_reference() {
         let (_, p) = backends();
+        let mut arena = arena_for(&p);
         let max_ctx = p.reference.artifacts.manifest.model.max_ctx as i32;
-        assert!(p.decode_step(p.empty_caches().unwrap(), 0, -1).is_err());
-        assert!(p.decode_step(p.empty_caches().unwrap(), 0, max_ctx).is_err());
+        let s = p.new_session(&mut arena).unwrap();
+        assert!(p.decode_step(&mut arena, s, 0, -1).is_err());
+        assert!(p.decode_step(&mut arena, s, 0, max_ctx).is_err());
         assert!(p
-            .decode_batch(vec![p.empty_caches().unwrap()], &[1, 2], &[0, 0])
+            .decode_batch(&mut arena, &[s], &[1, 2], &[0, 0])
             .is_err());
-        assert!(p.decode_batch(Vec::new(), &[], &[]).unwrap().is_empty());
+        assert!(p.decode_batch(&mut arena, &[], &[], &[]).unwrap().is_empty());
     }
 
     #[test]

@@ -6,10 +6,22 @@
 //! semantics copy synchronously), and runs each generated token through
 //! `execute_b` with device-resident buffers.
 //!
+//! Cache model — the contiguous compatibility shim: the AOT-lowered HLO
+//! takes full contiguous `(n_layers, h, max_ctx, d_head)` cache
+//! operands, so this backend cannot read through the host arena's block
+//! tables. Instead it registers plain sessions with the arena (handle
+//! lifecycle and validation stay uniform with the host backends; the
+//! sessions never claim arena blocks) and keeps its device-resident
+//! K/V buffer pairs in a private side table keyed by
+//! [`CacheHandle::key`]. `reserve_session` is a no-op — the device
+//! buffers already hold the full window — so the serving layer's
+//! arena-pressure admission sees zero pressure from PJRT sessions,
+//! which is correct: their memory is device-managed.
+//!
 //! Perf note (EXPERIMENTS.md §Perf): the naive path executed with host
 //! literals, which re-uploads all ~6.8 MB of weights every decode step.
-//! Staging weights as PjRtBuffers at load time and threading the KV
-//! caches through as buffers removes that copy from the request path —
+//! Staging weights as PjRtBuffers at load time and keeping the KV
+//! caches device-resident removes that copy from the request path —
 //! only the two scalars (token, pos) are uploaded per step and only the
 //! logits are downloaded.
 //!
@@ -18,8 +30,11 @@
 //! xla_extension 0.5.1.
 
 use super::artifacts::Artifacts;
-use super::backend::{Backend, Caches, StepOutput};
+use super::backend::Backend;
+use super::kvcache::{CacheArena, CacheHandle};
 use crate::util::error::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::Arc;
 use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
@@ -30,6 +45,9 @@ pub struct PjrtBackend {
     /// Device-resident parameter buffers in manifest order (staged once).
     param_buffers: Vec<PjRtBuffer>,
     artifacts: Arc<Artifacts>,
+    /// The contiguous shim: device-resident (k, v) cache buffers per
+    /// live session, keyed by the handle's (slot, generation) key.
+    sessions: RefCell<HashMap<u64, (PjRtBuffer, PjRtBuffer)>>,
 }
 
 impl PjrtBackend {
@@ -64,7 +82,24 @@ impl PjrtBackend {
             exe,
             param_buffers,
             artifacts,
+            sessions: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// Fresh zeroed device-resident cache buffers.
+    fn empty_device_caches(&self) -> Result<(PjRtBuffer, PjRtBuffer)> {
+        let shape = self.artifacts.cache_shape();
+        let numel: usize = shape.iter().product();
+        let zeros = vec![0f32; numel];
+        let k = self
+            .client
+            .buffer_from_host_buffer(&zeros, &shape, None)
+            .map_err(|e| anyhow!("cache upload: {e}"))?;
+        let v = self
+            .client
+            .buffer_from_host_buffer(&zeros, &shape, None)
+            .map_err(|e| anyhow!("cache upload: {e}"))?;
+        Ok((k, v))
     }
 
     /// Upload a scalar i32 as a device buffer (synchronous copy).
@@ -76,8 +111,11 @@ impl PjrtBackend {
 
     /// PJRT may flatten the (logits, k, v) output tuple into three
     /// buffers or hand back a single tuple buffer depending on the
-    /// client; handle both.
-    fn unpack_outputs(&self, mut outputs: Vec<PjRtBuffer>) -> Result<StepOutput> {
+    /// client; handle both. Returns (logits, k, v).
+    fn unpack_outputs(
+        &self,
+        mut outputs: Vec<PjRtBuffer>,
+    ) -> Result<(Vec<f32>, PjRtBuffer, PjRtBuffer)> {
         match outputs.len() {
             3 => {
                 let v = outputs.pop().unwrap();
@@ -88,10 +126,7 @@ impl PjrtBackend {
                     .map_err(|e| anyhow!("logits fetch: {e}"))?
                     .to_vec::<f32>()
                     .map_err(|e| anyhow!("logits to_vec: {e}"))?;
-                Ok(StepOutput {
-                    logits,
-                    caches: Caches::Device { k, v },
-                })
+                Ok((logits, k, v))
             }
             1 => {
                 // Tuple buffer: download, split, re-upload the caches.
@@ -120,10 +155,7 @@ impl PjrtBackend {
                     .client
                     .buffer_from_host_buffer(&v_host, &shape, None)
                     .map_err(|e| anyhow!("cache re-upload: {e}"))?;
-                Ok(StepOutput {
-                    logits,
-                    caches: Caches::Device { k, v },
-                })
+                Ok((logits, k, v))
             }
             n => bail!("unexpected output arity {n}"),
         }
@@ -139,26 +171,57 @@ impl Backend for PjrtBackend {
         self.client.platform_name()
     }
 
-    fn empty_caches(&self) -> Result<Caches> {
-        let shape = self.artifacts.cache_shape();
-        let numel: usize = shape.iter().product();
-        let zeros = vec![0f32; numel];
-        let k = self
-            .client
-            .buffer_from_host_buffer(&zeros, &shape, None)
-            .map_err(|e| anyhow!("cache upload: {e}"))?;
-        let v = self
-            .client
-            .buffer_from_host_buffer(&zeros, &shape, None)
-            .map_err(|e| anyhow!("cache upload: {e}"))?;
-        Ok(Caches::Device { k, v })
+    fn new_session(&self, arena: &mut CacheArena) -> Result<CacheHandle> {
+        let handle = arena.alloc_session()?;
+        let caches = self.empty_device_caches()?;
+        self.sessions.borrow_mut().insert(handle.key(), caches);
+        Ok(handle)
     }
 
-    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
-        let (cache_k, cache_v) = match caches {
-            Caches::Device { k, v } => (k, v),
-            Caches::Host { .. } => bail!("pjrt backend received host-resident caches"),
-        };
+    fn drop_session(&self, arena: &mut CacheArena, handle: CacheHandle) -> Result<()> {
+        arena.free_session(handle)?;
+        self.sessions.borrow_mut().remove(&handle.key());
+        Ok(())
+    }
+
+    fn reserve_session(
+        &self,
+        _arena: &mut CacheArena,
+        _handle: CacheHandle,
+        _positions: usize,
+    ) -> Result<()> {
+        // Device caches are contiguous and already hold the full
+        // context window; there is nothing to reserve in the host arena.
+        Ok(())
+    }
+
+    fn session_needs_block(
+        &self,
+        arena: &CacheArena,
+        handle: CacheHandle,
+        _pos: usize,
+    ) -> Result<bool> {
+        // Validate the handle, but report no pressure: device caches
+        // never claim host arena blocks.
+        arena.session_blocks(handle)?;
+        Ok(false)
+    }
+
+    fn decode_step(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        // Validate the handle against the arena first so stale handles
+        // fail with the uniform error message.
+        arena.session_blocks(handle)?;
+        let (cache_k, cache_v) = self
+            .sessions
+            .borrow_mut()
+            .remove(&handle.key())
+            .ok_or_else(|| anyhow!("pjrt session {handle:?} has no device caches"))?;
         let tok = self.scalar_buffer(token_id)?;
         let p = self.scalar_buffer(pos)?;
         let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.param_buffers.len() + 4);
@@ -168,12 +231,17 @@ impl Backend for PjrtBackend {
         args.push(&tok);
         args.push(&p);
 
+        // An execute/unpack failure loses the in-flight device buffers:
+        // the session's next step will report the missing caches rather
+        // than silently restarting from zeros.
         let mut result = self
             .exe
             .execute_b::<&PjRtBuffer>(&args)
             .map_err(|e| anyhow!("decode_step execute: {e}"))?;
         let outputs = result.swap_remove(0);
-        self.unpack_outputs(outputs)
+        let (logits, k, v) = self.unpack_outputs(outputs)?;
+        self.sessions.borrow_mut().insert(handle.key(), (k, v));
+        Ok(logits)
     }
 }
 
@@ -181,6 +249,7 @@ impl Backend for PjrtBackend {
 mod tests {
     use super::*;
     use crate::runtime::artifacts::default_dir;
+    use crate::runtime::kvcache::CacheLayout;
 
     fn backend() -> Option<PjrtBackend> {
         if !default_dir().join("manifest.json").exists() {
@@ -191,30 +260,42 @@ mod tests {
         Some(PjrtBackend::new(artifacts).expect("pjrt backend"))
     }
 
+    fn arena_for(b: &PjrtBackend) -> CacheArena {
+        CacheArena::with_sessions(
+            CacheLayout::from_model(&b.artifacts.manifest.model),
+            4,
+        )
+        .unwrap()
+    }
+
     #[test]
     fn engine_compiles_and_steps() {
         let Some(b) = backend() else { return };
         assert_eq!(b.platform(), "cpu");
-        let caches = b.empty_caches().unwrap();
-        let out = b.decode_step(caches, 1, 0).unwrap();
-        assert_eq!(out.logits.len(), b.artifacts.manifest.model.vocab);
-        assert!(out.logits.iter().all(|x| x.is_finite()));
+        let mut arena = arena_for(&b);
+        let s = b.new_session(&mut arena).unwrap();
+        let logits = b.decode_step(&mut arena, s, 1, 0).unwrap();
+        assert_eq!(logits.len(), b.artifacts.manifest.model.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // The shim registers and retires device state with the handle.
+        b.drop_session(&mut arena, s).unwrap();
+        assert!(b.decode_step(&mut arena, s, 1, 1).is_err());
     }
 
     #[test]
     fn decode_step_matches_golden_first_logits() {
         let Some(b) = backend() else { return };
-        let caches = b.empty_caches().unwrap();
+        let mut arena = arena_for(&b);
+        let s = b.new_session(&mut arena).unwrap();
         let g = b.artifacts.golden.clone();
-        let out = b.decode_step(caches, g.prompt[0], 0).unwrap();
-        for (got, want) in out.logits.iter().zip(g.first_logits_prefix.iter()) {
+        let logits = b.decode_step(&mut arena, s, g.prompt[0], 0).unwrap();
+        for (got, want) in logits.iter().zip(g.first_logits_prefix.iter()) {
             assert!(
                 (got - want).abs() <= 1e-4 * want.abs().max(1.0),
                 "{got} vs {want}"
             );
         }
-        let l2: f64 = out
-            .logits
+        let l2: f64 = logits
             .iter()
             .map(|&x| (x as f64) * (x as f64))
             .sum::<f64>()

@@ -16,12 +16,26 @@
 //! * RMSNorm / tanh-GELU / softmax in f32, like the paper's nonlinear
 //!   functional units.
 //!
-//! KV caches are host `Vec<f32>` tensors of shape
-//! `(n_layers, h, max_ctx, d_head)`, threaded through [`Caches::Host`].
+//! KV caches live in the shared block-paged arena
+//! ([`super::kvcache::CacheArena`]); a decode step writes the token's
+//! K/V rows through the session's block table and attends through
+//! [`super::kernels::attention_paged`]. The single-session
+//! [`Backend::decode_step`] IS a batch of one — `bitlinear_batch` at
+//! B=1 is bit-for-bit `bitlinear` (pinned by the kernel tests), so one
+//! orchestration serves both entry points and single-vs-batched
+//! equivalence holds by construction.
+//!
+//! [`ReferenceBackend::decode_step_contiguous`] keeps the pre-paging
+//! contiguous path alive as the numeric ORACLE: the PR-2 decode-step
+//! numerics verbatim over caller-owned `(n_layers, h, max_ctx, d_head)`
+//! tensors. `tests/paged_equivalence.rs` holds the paged path — logits
+//! AND cache contents — to bitwise equality against it on every shape
+//! of workload, including evict→re-prefill cycles.
 
 use super::artifacts::Artifacts;
-use super::backend::{Backend, Caches, StepOutput};
-use super::kernels::{attention, bitlinear, bitlinear_batch, gelu, rms_norm};
+use super::backend::Backend;
+use super::kernels::{attention, attention_paged, bitlinear, bitlinear_batch, gelu, rms_norm};
+use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use crate::util::error::{anyhow, ensure, Context, Result};
 use std::sync::Arc;
 
@@ -122,33 +136,43 @@ impl ReferenceBackend {
     pub(crate) fn scalar(&self, idx: usize) -> f32 {
         self.data(idx)[0]
     }
-}
 
-impl Backend for ReferenceBackend {
-    fn name(&self) -> &'static str {
-        "reference"
+    /// Validate positions and claim the cache blocks every session needs
+    /// for this step — all allocation happens HERE, before any write, so
+    /// an out-of-blocks error consumes nothing numerically (re-running
+    /// the step after freeing capacity overwrites the same positions).
+    /// Shared with the packed backend.
+    pub(crate) fn prepare_step(
+        arena: &mut CacheArena,
+        handles: &[CacheHandle],
+        positions: &[i32],
+        max_ctx: usize,
+    ) -> Result<Vec<usize>> {
+        let mut poss = Vec::with_capacity(positions.len());
+        for &p in positions {
+            ensure!(p >= 0, "negative position {p}");
+            let p = p as usize;
+            ensure!(p < max_ctx, "position {p} >= max_ctx {max_ctx}");
+            poss.push(p);
+        }
+        for (&h, &pos) in handles.iter().zip(&poss) {
+            arena.ensure_capacity(h, pos)?;
+        }
+        Ok(poss)
     }
 
-    fn platform(&self) -> String {
-        "cpu".to_string()
-    }
-
-    fn empty_caches(&self) -> Result<Caches> {
-        let numel: usize = self.artifacts.cache_shape().iter().product();
-        Ok(Caches::Host {
-            k: vec![0.0; numel],
-            v: vec![0.0; numel],
-        })
-    }
-
-    fn decode_step(&self, caches: Caches, token_id: i32, pos: i32) -> Result<StepOutput> {
-        let (mut kc, mut vc) = match caches {
-            Caches::Host { k, v } => (k, v),
-            #[cfg(feature = "pjrt")]
-            Caches::Device { .. } => {
-                crate::bail!("reference backend received device-resident caches")
-            }
-        };
+    /// The pre-paging contiguous decode step, kept verbatim as the
+    /// bitwise ORACLE for the paged path: `kc`/`vc` are caller-owned
+    /// flattened `(n_layers, h, max_ctx, d_head)` tensors, updated in
+    /// place exactly as PR 2's `Caches::Host` path updated them.
+    /// `tests/paged_equivalence.rs` drives this against the arena path.
+    pub fn decode_step_contiguous(
+        &self,
+        kc: &mut [f32],
+        vc: &mut [f32],
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
         let m = self.artifacts.manifest.model.clone();
         let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
         let dh = d / h;
@@ -177,7 +201,7 @@ impl Backend for ReferenceBackend {
                 vc[base..base + dh].copy_from_slice(&v[head * dh..(head + 1) * dh]);
             }
 
-            let att = attention(&q, &kc, &vc, layer, pos, h, max_ctx, dh);
+            let att = attention(&q, kc, vc, layer, pos, h, max_ctx, dh);
             let att = bitlinear(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
             for (xi, ai) in x.iter_mut().zip(&att) {
                 *xi += ai;
@@ -194,67 +218,68 @@ impl Backend for ReferenceBackend {
         }
 
         let x = rms_norm(&x, self.data(self.lnf_gamma), eps);
-        let logits = bitlinear(&x, self.data(self.w_head), m.vocab, self.scalar(self.w_head_scale));
+        Ok(bitlinear(&x, self.data(self.w_head), m.vocab, self.scalar(self.w_head_scale)))
+    }
+}
 
-        Ok(StepOutput {
-            logits,
-            caches: Caches::Host { k: kc, v: vc },
-        })
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    /// A single step is a batch of one: `bitlinear_batch` at B=1 is
+    /// bit-for-bit `bitlinear` (pinned by the kernel tests), so the one
+    /// batched orchestration below serves both entry points.
+    fn decode_step(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        token_id: i32,
+        pos: i32,
+    ) -> Result<Vec<f32>> {
+        let mut out = self.decode_batch(arena, &[handle], &[token_id], &[pos])?;
+        Ok(out.pop().expect("one lane in, one lane out"))
     }
 
     /// The genuinely batched decode step: every weight matrix is
     /// traversed ONCE per call (via [`bitlinear_batch`]) and applied to
-    /// all B per-sequence activations; only the attention sub-block —
-    /// which reads per-sequence KV state, not weights — runs per
-    /// sequence. Ragged positions are allowed: sequence `i` decodes at
-    /// `positions[i]` against its own cache.
+    /// all B per-session activations; only the attention sub-block —
+    /// which reads per-session KV state through the block tables, not
+    /// weights — runs per session. Ragged positions are allowed:
+    /// session `i` decodes at `positions[i]` against its own table.
     ///
     /// Bit-for-bit equivalent to B sequential [`Backend::decode_step`]
-    /// calls (enforced by `tests/batch_equivalence.rs`).
+    /// calls (enforced by `tests/batch_equivalence.rs`) and to the
+    /// contiguous oracle (`tests/paged_equivalence.rs`).
     fn decode_batch(
         &self,
-        caches: Vec<Caches>,
+        arena: &mut CacheArena,
+        handles: &[CacheHandle],
         tokens: &[i32],
         positions: &[i32],
-    ) -> Result<Vec<StepOutput>> {
+    ) -> Result<Vec<Vec<f32>>> {
         ensure!(
-            caches.len() == tokens.len() && caches.len() == positions.len(),
-            "decode_batch arity mismatch: {} caches, {} tokens, {} positions",
-            caches.len(),
+            handles.len() == tokens.len() && handles.len() == positions.len(),
+            "decode_batch arity mismatch: {} handles, {} tokens, {} positions",
+            handles.len(),
             tokens.len(),
             positions.len()
         );
-        if caches.is_empty() {
+        if handles.is_empty() {
             return Ok(Vec::new());
         }
+        ensure_distinct(handles)?;
         let m = self.artifacts.manifest.model.clone();
         let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
         let dh = d / h;
         let eps = m.eps as f32;
+        let poss = Self::prepare_step(arena, handles, positions, max_ctx)?;
 
-        let mut kcs = Vec::with_capacity(caches.len());
-        let mut vcs = Vec::with_capacity(caches.len());
-        for c in caches {
-            match c {
-                Caches::Host { k, v } => {
-                    kcs.push(k);
-                    vcs.push(v);
-                }
-                #[cfg(feature = "pjrt")]
-                Caches::Device { .. } => {
-                    crate::bail!("reference backend received device-resident caches")
-                }
-            }
-        }
-        let mut poss = Vec::with_capacity(positions.len());
-        for &p in positions {
-            ensure!(p >= 0, "negative position {p}");
-            let p = p as usize;
-            ensure!(p < max_ctx, "position {p} >= max_ctx {max_ctx}");
-            poss.push(p);
-        }
-
-        // Embed every sequence's token (XLA-style clamped gather).
+        // Embed every session's token (XLA-style clamped gather).
         let embedding = self.data(self.embedding);
         let mut xs: Vec<Vec<f32>> = tokens
             .iter()
@@ -274,29 +299,22 @@ impl Backend for ReferenceBackend {
             let k = bitlinear_batch(&xn, self.data(lp.wk), d, self.scalar(lp.wk_scale));
             let v = bitlinear_batch(&xn, self.data(lp.wv), d, self.scalar(lp.wv_scale));
 
-            // Scatter each sequence's new K/V into its own cache at its
-            // own (ragged) position.
-            for (((kc, vc), &pos), (k_i, v_i)) in kcs
-                .iter_mut()
-                .zip(vcs.iter_mut())
-                .zip(&poss)
-                .zip(k.iter().zip(&v))
-            {
-                for head in 0..h {
-                    let base = ((layer * h + head) * max_ctx + pos) * dh;
-                    kc[base..base + dh].copy_from_slice(&k_i[head * dh..(head + 1) * dh]);
-                    vc[base..base + dh].copy_from_slice(&v_i[head * dh..(head + 1) * dh]);
-                }
+            // Scatter each session's new K/V through its block table at
+            // its own (ragged) position.
+            for (i, (&hd, &pos)) in handles.iter().zip(&poss).enumerate() {
+                arena.write_kv(hd, layer, pos, &k[i], &v[i])?;
             }
 
-            // Attention reads per-sequence KV state, not weights — there
-            // is nothing to amortize, so it runs per sequence.
-            let att: Vec<Vec<f32>> = q
+            // Attention reads per-session KV state, not weights — there
+            // is nothing to amortize, so it runs per session, gathering
+            // through the block table.
+            let att = q
                 .iter()
-                .zip(kcs.iter().zip(&vcs))
-                .zip(&poss)
-                .map(|((q_i, (kc, vc)), &pos)| attention(q_i, kc, vc, layer, pos, h, max_ctx, dh))
-                .collect();
+                .zip(handles.iter().zip(&poss))
+                .map(|(q_i, (&hd, &pos))| {
+                    Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
+                })
+                .collect::<Result<Vec<_>>>()?;
             let att = bitlinear_batch(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
             for (x, a) in xs.iter_mut().zip(&att) {
                 for (xi, ai) in x.iter_mut().zip(a) {
@@ -326,21 +344,12 @@ impl Backend for ReferenceBackend {
             .iter()
             .map(|x| rms_norm(x, self.data(self.lnf_gamma), eps))
             .collect();
-        let logits = bitlinear_batch(
+        Ok(bitlinear_batch(
             &xs,
             self.data(self.w_head),
             m.vocab,
             self.scalar(self.w_head_scale),
-        );
-
-        Ok(logits
-            .into_iter()
-            .zip(kcs.into_iter().zip(vcs))
-            .map(|(lg, (kc, vc))| StepOutput {
-                logits: lg,
-                caches: Caches::Host { k: kc, v: vc },
-            })
-            .collect())
+        ))
     }
 }
 
@@ -352,110 +361,162 @@ pub fn load(artifacts: Arc<Artifacts>) -> Result<ReferenceBackend> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::kvcache::CacheLayout;
 
     fn backend() -> ReferenceBackend {
         ReferenceBackend::new(Arc::new(Artifacts::synthetic(3).unwrap())).unwrap()
     }
 
+    fn arena_for(b: &ReferenceBackend) -> CacheArena {
+        CacheArena::with_sessions(CacheLayout::from_model(&b.artifacts.manifest.model), 8)
+            .unwrap()
+    }
+
     #[test]
     fn decode_step_is_deterministic_and_finite() {
         let b = backend();
+        let mut arena = arena_for(&b);
         let vocab = b.artifacts.manifest.model.vocab;
-        let o1 = b.decode_step(b.empty_caches().unwrap(), 5, 0).unwrap();
-        let o2 = b.decode_step(b.empty_caches().unwrap(), 5, 0).unwrap();
-        assert_eq!(o1.logits, o2.logits);
-        assert_eq!(o1.logits.len(), vocab);
-        assert!(o1.logits.iter().all(|x| x.is_finite()));
+        let s1 = b.new_session(&mut arena).unwrap();
+        let s2 = b.new_session(&mut arena).unwrap();
+        let o1 = b.decode_step(&mut arena, s1, 5, 0).unwrap();
+        let o2 = b.decode_step(&mut arena, s2, 5, 0).unwrap();
+        assert_eq!(o1, o2);
+        assert_eq!(o1.len(), vocab);
+        assert!(o1.iter().all(|x| x.is_finite()));
     }
 
     #[test]
     fn caches_carry_state() {
         // Feeding [1] then [2] must differ from feeding [2] fresh.
         let b = backend();
-        let s1 = b.decode_step(b.empty_caches().unwrap(), 1, 0).unwrap();
-        let s2 = b.decode_step(s1.caches, 2, 1).unwrap();
-        let fresh = b.decode_step(b.empty_caches().unwrap(), 2, 0).unwrap();
-        assert_ne!(s2.logits, fresh.logits);
+        let mut arena = arena_for(&b);
+        let s = b.new_session(&mut arena).unwrap();
+        b.decode_step(&mut arena, s, 1, 0).unwrap();
+        let continued = b.decode_step(&mut arena, s, 2, 1).unwrap();
+        let fresh_s = b.new_session(&mut arena).unwrap();
+        let fresh = b.decode_step(&mut arena, fresh_s, 2, 0).unwrap();
+        assert_ne!(continued, fresh);
     }
 
     #[test]
     fn position_bounds_enforced() {
         let b = backend();
+        let mut arena = arena_for(&b);
         let max_ctx = b.artifacts.manifest.model.max_ctx;
-        let r = b.decode_step(b.empty_caches().unwrap(), 0, max_ctx as i32);
-        assert!(r.is_err());
-        let r = b.decode_step(b.empty_caches().unwrap(), 0, -1);
-        assert!(r.is_err());
+        let s = b.new_session(&mut arena).unwrap();
+        assert!(b.decode_step(&mut arena, s, 0, max_ctx as i32).is_err());
+        assert!(b.decode_step(&mut arena, s, 0, -1).is_err());
     }
 
     #[test]
     fn out_of_range_token_clamped_like_xla_gather() {
         let b = backend();
+        let mut arena = arena_for(&b);
         let vocab = b.artifacts.manifest.model.vocab as i32;
-        let o = b
-            .decode_step(b.empty_caches().unwrap(), vocab + 500, 0)
-            .unwrap();
-        let edge = b
-            .decode_step(b.empty_caches().unwrap(), vocab - 1, 0)
-            .unwrap();
-        assert_eq!(o.logits, edge.logits);
+        let s1 = b.new_session(&mut arena).unwrap();
+        let o = b.decode_step(&mut arena, s1, vocab + 500, 0).unwrap();
+        let s2 = b.new_session(&mut arena).unwrap();
+        let edge = b.decode_step(&mut arena, s2, vocab - 1, 0).unwrap();
+        assert_eq!(o, edge);
     }
 
     #[test]
     fn decode_batch_bitwise_matches_decode_step() {
         let b = backend();
+        let mut arena = arena_for(&b);
         let tokens = [1i32, 9, 23, 4];
-        let seq: Vec<StepOutput> = tokens
+        let seq: Vec<Vec<f32>> = tokens
             .iter()
-            .map(|&t| b.decode_step(b.empty_caches().unwrap(), t, 0).unwrap())
+            .map(|&t| {
+                let s = b.new_session(&mut arena).unwrap();
+                b.decode_step(&mut arena, s, t, 0).unwrap()
+            })
             .collect();
-        let caches = tokens.iter().map(|_| b.empty_caches().unwrap()).collect();
-        let batch = b.decode_batch(caches, &tokens, &[0, 0, 0, 0]).unwrap();
-        for (s, bt) in seq.iter().zip(&batch) {
-            assert_eq!(s.logits, bt.logits);
-        }
+        let handles: Vec<_> = tokens
+            .iter()
+            .map(|_| b.new_session(&mut arena).unwrap())
+            .collect();
+        let batch = b
+            .decode_batch(&mut arena, &handles, &tokens, &[0, 0, 0, 0])
+            .unwrap();
+        assert_eq!(seq, batch);
     }
 
     #[test]
     fn decode_batch_allows_ragged_positions() {
-        // Sequence A at pos 2 (two tokens already cached), sequence B
+        // Session A at pos 2 (two tokens already cached), session B
         // fresh at pos 0, decoded in ONE batch: each must match its own
         // sequential continuation exactly.
         let b = backend();
-        let s1 = b.decode_step(b.empty_caches().unwrap(), 1, 0).unwrap();
-        let s2 = b.decode_step(s1.caches, 2, 1).unwrap();
-        let seq_a = b.decode_step(s2.caches, 3, 2).unwrap();
-        let seq_b = b.decode_step(b.empty_caches().unwrap(), 7, 0).unwrap();
+        let mut arena = arena_for(&b);
+        let a1 = b.new_session(&mut arena).unwrap();
+        b.decode_step(&mut arena, a1, 1, 0).unwrap();
+        b.decode_step(&mut arena, a1, 2, 1).unwrap();
+        let seq_a = b.decode_step(&mut arena, a1, 3, 2).unwrap();
+        let b1 = b.new_session(&mut arena).unwrap();
+        let seq_b = b.decode_step(&mut arena, b1, 7, 0).unwrap();
 
-        let s1 = b.decode_step(b.empty_caches().unwrap(), 1, 0).unwrap();
-        let s2 = b.decode_step(s1.caches, 2, 1).unwrap();
+        let a2 = b.new_session(&mut arena).unwrap();
+        b.decode_step(&mut arena, a2, 1, 0).unwrap();
+        b.decode_step(&mut arena, a2, 2, 1).unwrap();
+        let b2 = b.new_session(&mut arena).unwrap();
         let out = b
-            .decode_batch(
-                vec![s2.caches, b.empty_caches().unwrap()],
-                &[3, 7],
-                &[2, 0],
-            )
+            .decode_batch(&mut arena, &[a2, b2], &[3, 7], &[2, 0])
             .unwrap();
-        assert_eq!(out[0].logits, seq_a.logits);
-        assert_eq!(out[1].logits, seq_b.logits);
+        assert_eq!(out[0], seq_a);
+        assert_eq!(out[1], seq_b);
     }
 
     #[test]
-    fn decode_batch_rejects_arity_mismatch_and_bad_positions() {
+    fn decode_batch_rejects_bad_arguments() {
         let b = backend();
-        let r = b.decode_batch(vec![b.empty_caches().unwrap()], &[1, 2], &[0, 0]);
-        assert!(r.is_err());
+        let mut arena = arena_for(&b);
+        let s = b.new_session(&mut arena).unwrap();
+        // Arity mismatch.
+        assert!(b.decode_batch(&mut arena, &[s], &[1, 2], &[0, 0]).is_err());
+        // Out-of-range positions.
         let max_ctx = b.artifacts.manifest.model.max_ctx as i32;
-        let r = b.decode_batch(vec![b.empty_caches().unwrap()], &[1], &[max_ctx]);
-        assert!(r.is_err());
-        let r = b.decode_batch(vec![b.empty_caches().unwrap()], &[1], &[-1]);
-        assert!(r.is_err());
+        assert!(b.decode_batch(&mut arena, &[s], &[1], &[max_ctx]).is_err());
+        assert!(b.decode_batch(&mut arena, &[s], &[1], &[-1]).is_err());
+        // Duplicate session in one batch.
+        assert!(b
+            .decode_batch(&mut arena, &[s, s], &[1, 2], &[0, 1])
+            .is_err());
+        // Stale handle.
+        b.drop_session(&mut arena, s).unwrap();
+        assert!(b.decode_step(&mut arena, s, 1, 0).is_err());
     }
 
     #[test]
     fn decode_batch_empty_is_empty() {
         let b = backend();
-        assert!(b.decode_batch(Vec::new(), &[], &[]).unwrap().is_empty());
+        let mut arena = arena_for(&b);
+        assert!(b.decode_batch(&mut arena, &[], &[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn contiguous_oracle_matches_paged_path() {
+        // The in-module smoke version of tests/paged_equivalence.rs:
+        // logits and gathered caches bitwise equal over a short run.
+        let b = backend();
+        let m = b.artifacts.manifest.model.clone();
+        let mut arena = CacheArena::new(
+            CacheLayout::with_block_len(&m, 3), // awkward block length
+            16,
+        )
+        .unwrap();
+        let s = b.new_session(&mut arena).unwrap();
+        let numel = m.n_layers * m.h * m.max_ctx * (m.d / m.h);
+        let (mut kc, mut vc) = (vec![0.0f32; numel], vec![0.0f32; numel]);
+        for (pos, tok) in [5i32, 2, 9, 2, 7, 1, 1, 4].into_iter().enumerate() {
+            let paged = b.decode_step(&mut arena, s, tok, pos as i32).unwrap();
+            let oracle = b
+                .decode_step_contiguous(&mut kc, &mut vc, tok, pos as i32)
+                .unwrap();
+            assert_eq!(paged, oracle, "pos {pos}");
+        }
+        assert_eq!(arena.gather_contiguous(s).unwrap(), (kc, vc));
     }
 
     #[test]

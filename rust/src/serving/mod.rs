@@ -1,19 +1,33 @@
 //! Edge-serving front end: a request queue feeding the runtime engine,
-//! with FIFO admission, latency statistics, and three schedulers:
+//! with latency statistics and four schedulers:
 //!
 //! * [`Policy::Fifo`] — each request runs to completion alone.
 //! * [`Policy::RoundRobin`] — token-wise interleaving across up to
 //!   `max_active` sessions, one `decode_step` per session per tick.
-//! * [`Policy::Batched`] — the paper's regime: every scheduler tick
+//! * [`Policy::Batched`] — fixed-wave batching: every scheduler tick
 //!   issues ONE `decode_batch` over all active sessions (sessions still
 //!   prefilling and sessions generating advance together), so each
-//!   layer's weights are traversed once per tick for the whole batch
-//!   instead of once per session. The `batch` knob is the admission cap.
+//!   layer's weights are traversed once per tick for the whole batch.
+//!   The `batch` knob is the admission cap, and — like `Fifo` and
+//!   `RoundRobin` — admission RESERVES the request's worst-case KV-cache
+//!   blocks up front, so concurrency is bounded by worst-case context.
+//! * [`Policy::Continuous`] — continuous batching over the paged arena
+//!   (the HPIM/PIM-AI serving regime): sessions are admitted and
+//!   retired every tick against ACTUAL block usage, cache blocks are
+//!   claimed on demand as positions advance, and under arena pressure
+//!   the youngest session is preempted — its blocks freed, its request
+//!   requeued at the front for a deterministic re-prefill. Same one
+//!   `decode_batch` per tick as `Batched`, but more sessions fit the
+//!   same arena because nothing idles on a worst-case reservation.
 //!
-//! All three produce identical tokens for identical requests (enforced
-//! by `tests/batch_equivalence.rs`); they differ only in throughput and
-//! latency shape. A threaded front end (`serve_threaded_with`) drives
-//! multiple engine replicas; the offline build has no tokio, so
+//! All four produce identical tokens for identical requests (sessions
+//! are isolated and re-prefill is deterministic — enforced by
+//! `tests/batch_equivalence.rs` and `tests/paged_equivalence.rs`); they
+//! differ only in throughput and latency shape. Requests can arrive
+//! over time ([`Server::serve_arrivals`]) — with all offsets zero the
+//! schedule is a pure function of the request list, which is what the
+//! determinism suite pins. A threaded front end (`serve_threaded_with`)
+//! drives multiple engine replicas; the offline build has no tokio, so
 //! concurrency is std::thread-based (documented substitution — see
 //! Cargo.toml).
 
@@ -22,7 +36,7 @@ pub mod stats;
 pub use stats::LatencyStats;
 
 use crate::runtime::decoder::greedy_argmax;
-use crate::runtime::{Caches, Engine, StepOutput};
+use crate::runtime::{CacheHandle, Engine};
 use crate::util::error::{ensure, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -35,17 +49,29 @@ pub struct Request {
     pub n_new: usize,
 }
 
+impl Request {
+    /// Total tokens this request will feed (prompt + generated).
+    fn total_tokens(&self) -> usize {
+        self.prompt.len() + self.n_new
+    }
+}
+
 /// A finished request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<i32>,
-    /// Queueing delay before the first decode step.
+    /// Queueing delay before the FIRST admission (re-admissions after a
+    /// preemption do not reset it).
     pub queue_s: f64,
-    /// Time from arrival to completion.
+    /// Time from arrival to completion (end-to-end latency).
     pub service_s: f64,
-    /// Time to first generated token (prompt ingestion included).
+    /// Time from arrival to the first generated token (prompt ingestion
+    /// included; preserved across preemptions).
     pub ttft_s: f64,
+    /// How many times the continuous scheduler preempted this request
+    /// (0 under the fixed-wave policies).
+    pub evictions: u32,
 }
 
 /// Scheduler policy for the serving loop.
@@ -56,10 +82,98 @@ pub enum Policy {
     /// Interleave decode steps across up to `max_active` sessions, one
     /// engine call per session per tick.
     RoundRobin { max_active: usize },
-    /// Admit up to `batch` sessions and advance ALL of them with a
-    /// single `decode_batch` per tick — one weight traversal per tick
-    /// regardless of how many users are active.
+    /// Admit up to `batch` sessions (each with a worst-case block
+    /// reservation) and advance ALL of them with a single `decode_batch`
+    /// per tick — one weight traversal per tick regardless of how many
+    /// users are active.
     Batched { batch: usize },
+    /// Continuous batching: up to `max_active` sessions advanced by one
+    /// `decode_batch` per tick, blocks claimed on demand,
+    /// pressure-aware admission and youngest-first preemption.
+    Continuous { max_active: usize },
+}
+
+impl Policy {
+    /// Resolve the CLI surface (`--policy fifo|rr|batched|continuous`
+    /// plus the `--batch`/`--max-active` knobs). With no `--policy`,
+    /// the historical behavior is kept: `--batch B > 0` selects the
+    /// batched scheduler, otherwise round-robin.
+    pub fn from_flags(name: Option<&str>, batch: usize, max_active: usize) -> Result<Policy> {
+        let lanes = if batch > 0 { batch } else { max_active.max(1) };
+        match name {
+            None => Ok(if batch > 0 {
+                Policy::Batched { batch }
+            } else {
+                Policy::RoundRobin { max_active }
+            }),
+            Some("fifo") => Ok(Policy::Fifo),
+            Some("rr") | Some("round-robin") => Ok(Policy::RoundRobin { max_active }),
+            Some("batched") => Ok(Policy::Batched { batch: lanes }),
+            Some("continuous") => Ok(Policy::Continuous { max_active: lanes }),
+            Some(other) => {
+                crate::bail!("unknown policy '{other}' (fifo | rr | batched | continuous)")
+            }
+        }
+    }
+
+    /// Admission lane cap.
+    fn max_active(self) -> usize {
+        match self {
+            Policy::Fifo => 1,
+            Policy::RoundRobin { max_active } | Policy::Continuous { max_active } => {
+                max_active.max(1)
+            }
+            Policy::Batched { batch } => batch.max(1),
+        }
+    }
+
+    /// Whether admission pre-reserves the request's worst-case block
+    /// count (the fixed-wave policies) instead of claiming on demand.
+    fn reserves_worst_case(self) -> bool {
+        !matches!(self, Policy::Continuous { .. })
+    }
+}
+
+/// A request waiting for (re-)admission, with the latency bookkeeping
+/// that must survive preemption.
+struct Pending {
+    req: Request,
+    arrived: Instant,
+    first_admitted: Option<Instant>,
+    /// Seconds from arrival to the first generated token, if it was
+    /// produced before a preemption.
+    first_token_at: Option<f64>,
+    evictions: u32,
+}
+
+impl Pending {
+    fn new(req: Request, arrived: Instant) -> Self {
+        Self {
+            req,
+            arrived,
+            first_admitted: None,
+            first_token_at: None,
+            evictions: 0,
+        }
+    }
+
+    /// Complete without ever occupying a lane (zero-work requests).
+    fn finish_empty(self) -> Response {
+        let now = Instant::now();
+        let service_s = now.saturating_duration_since(self.arrived).as_secs_f64();
+        Response {
+            id: self.req.id,
+            tokens: Vec::new(),
+            queue_s: self
+                .first_admitted
+                .unwrap_or(now)
+                .saturating_duration_since(self.arrived)
+                .as_secs_f64(),
+            service_s,
+            ttft_s: self.first_token_at.unwrap_or(service_s),
+            evictions: self.evictions,
+        }
+    }
 }
 
 /// One admitted session: its decode state plus bookkeeping for the
@@ -68,33 +182,23 @@ pub enum Policy {
 /// in either phase.
 struct Active {
     req: Request,
-    caches: Option<Caches>,
+    handle: CacheHandle,
+    /// Admission order; the continuous scheduler preempts the HIGHEST
+    /// seq (youngest) first, so the oldest session always progresses.
+    seq: u64,
     pos: i32,
     tokens: Vec<i32>,
     last_logits: Vec<f32>,
     fed: usize,
-    admitted: Instant,
     arrived: Instant,
+    first_admitted: Instant,
     first_token_at: Option<f64>,
+    evictions: u32,
 }
 
 impl Active {
-    fn admit(req: Request, engine: &Engine, arrived: Instant) -> Result<Self> {
-        Ok(Self {
-            caches: Some(engine.empty_caches()?),
-            req,
-            pos: 0,
-            tokens: Vec::new(),
-            last_logits: Vec::new(),
-            fed: 0,
-            admitted: Instant::now(),
-            arrived,
-            first_token_at: None,
-        })
-    }
-
     fn done(&self) -> bool {
-        self.fed >= self.req.prompt.len() + self.req.n_new
+        self.fed >= self.req.total_tokens()
     }
 
     /// Token this session feeds next: its next prompt token while
@@ -109,26 +213,47 @@ impl Active {
     }
 
     /// Account one fed token + its engine output.
-    fn absorb(&mut self, token: i32, out: StepOutput) {
+    fn absorb(&mut self, token: i32, logits: Vec<f32>) {
         let generated = self.fed >= self.req.prompt.len();
-        self.caches = Some(out.caches);
-        self.last_logits = out.logits;
+        self.last_logits = logits;
         self.tokens.push(token);
         self.fed += 1;
         self.pos += 1;
         if generated && self.first_token_at.is_none() {
-            self.first_token_at = Some(self.arrived.elapsed().as_secs_f64());
+            self.first_token_at = Some(
+                Instant::now()
+                    .saturating_duration_since(self.arrived)
+                    .as_secs_f64(),
+            );
+        }
+    }
+
+    /// Preempt: discard decode progress (the re-prefill regenerates it
+    /// deterministically) but keep the latency bookkeeping.
+    fn into_pending(self) -> Pending {
+        Pending {
+            req: self.req,
+            arrived: self.arrived,
+            first_admitted: Some(self.first_admitted),
+            first_token_at: self.first_token_at,
+            evictions: self.evictions + 1,
         }
     }
 
     fn finish(self) -> Response {
-        let service_s = self.arrived.elapsed().as_secs_f64();
+        let service_s = Instant::now()
+            .saturating_duration_since(self.arrived)
+            .as_secs_f64();
         Response {
             id: self.req.id,
             tokens: self.tokens,
-            queue_s: (self.admitted - self.arrived).as_secs_f64(),
+            queue_s: self
+                .first_admitted
+                .saturating_duration_since(self.arrived)
+                .as_secs_f64(),
             service_s,
             ttft_s: self.first_token_at.unwrap_or(service_s),
+            evictions: self.evictions,
         }
     }
 }
@@ -145,83 +270,282 @@ impl<'e> Server<'e> {
         Self { engine, policy }
     }
 
-    /// Serve a batch of requests to completion, returning responses in
-    /// completion order.
+    /// Serve a batch of requests (all arriving at once) to completion,
+    /// returning responses in completion order.
     pub fn serve(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
-        let t0 = Instant::now();
-        let mut queue: VecDeque<(Request, Instant)> =
-            requests.into_iter().map(|r| (r, t0)).collect();
-        let mut active: Vec<Active> = Vec::new();
-        let mut done = Vec::new();
-        let max_active = match self.policy {
-            Policy::Fifo => 1,
-            Policy::RoundRobin { max_active } => max_active.max(1),
-            Policy::Batched { batch } => batch.max(1),
-        };
-        let max_ctx = self.engine.max_ctx();
+        let offsets = vec![0.0; requests.len()];
+        self.serve_arrivals(requests, &offsets)
+    }
 
-        while !queue.is_empty() || !active.is_empty() {
-            // Admission: top the active set up to the cap. Requests that
-            // cannot fit the context window are rejected here, not
-            // mid-decode; zero-work requests (empty prompt, n_new == 0)
-            // complete immediately without occupying a batch lane.
-            while active.len() < max_active {
-                let Some((req, arrived)) = queue.pop_front() else {
-                    break;
-                };
-                ensure!(
-                    req.prompt.len() + req.n_new <= max_ctx,
-                    "request {} needs {} tokens > max_ctx {max_ctx}",
-                    req.id,
-                    req.prompt.len() + req.n_new
-                );
-                let a = Active::admit(req, self.engine, arrived)?;
-                if a.done() {
-                    done.push(a.finish());
-                } else {
-                    active.push(a);
-                }
+    /// Serve requests arriving over time: request `i` becomes visible to
+    /// the scheduler `offsets[i]` seconds after the call (0 = at once).
+    /// With all offsets zero this is exactly [`Server::serve`] and the
+    /// schedule is wall-clock independent; staggered offsets are the
+    /// open-loop arrival benches' surface. Per-request tokens are
+    /// arrival-independent either way (sessions are isolated).
+    pub fn serve_arrivals(
+        &self,
+        requests: Vec<Request>,
+        offsets: &[f64],
+    ) -> Result<Vec<Response>> {
+        ensure!(
+            requests.len() == offsets.len(),
+            "serve_arrivals arity mismatch: {} requests, {} offsets",
+            requests.len(),
+            offsets.len()
+        );
+        for (r, &o) in requests.iter().zip(offsets) {
+            ensure!(
+                o.is_finite() && o >= 0.0,
+                "request {}: arrival offset {o} must be finite and >= 0",
+                r.id
+            );
+        }
+        let mut future: VecDeque<(Request, f64)> = {
+            let mut v: Vec<(Request, f64)> =
+                requests.into_iter().zip(offsets.iter().copied()).collect();
+            // Stable by arrival time, so same-time requests keep list order.
+            v.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite offsets"));
+            v.into_iter().collect()
+        };
+        let mut active: Vec<Active> = Vec::new();
+        let mut done: Vec<Response> = Vec::new();
+        let result = self.run_loop(&mut future, &mut active, &mut done);
+        // Never leak arena blocks, even on an admission error: retire
+        // whatever was still active so the engine stays usable.
+        for a in active.drain(..) {
+            let _ = self.engine.free_session(a.handle);
+        }
+        result.map(|()| done)
+    }
+
+    /// Whether the session lacks the block backing its NEXT position
+    /// (backend-aware: PJRT sessions report no arena pressure).
+    fn needs_block(&self, a: &Active) -> Result<bool> {
+        self.engine.session_needs_block(a.handle, a.pos as usize)
+    }
+
+    /// One pass over the active set: how many sessions lack the block
+    /// for their NEXT position (`needed`) and how many blocks they hold
+    /// in total (`held`). The two consumers gate differently on
+    /// purpose: admission requires strictly MORE free blocks than
+    /// `needed` (headroom for the newcomer), the preemption loop exactly
+    /// `free >= needed` (enough to tick) — an intentional pair, not
+    /// drift.
+    fn pressure(&self, active: &[Active]) -> Result<(usize, usize)> {
+        let (mut needed, mut held) = (0usize, 0usize);
+        for a in active {
+            if self.needs_block(a)? {
+                needed += 1;
             }
+            held += self.engine.session_blocks(a.handle)?;
+        }
+        Ok((needed, held))
+    }
+
+    fn run_loop(
+        &self,
+        future: &mut VecDeque<(Request, f64)>,
+        active: &mut Vec<Active>,
+        done: &mut Vec<Response>,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let mut ready: VecDeque<Pending> = VecDeque::new();
+        let max_active = self.policy.max_active();
+        let max_ctx = self.engine.max_ctx();
+        let total_blocks = self.engine.arena_status().total_blocks;
+        let mut next_seq = 0u64;
+
+        while !future.is_empty() || !ready.is_empty() || !active.is_empty() {
+            // ---- arrivals: surface requests whose offset has passed. ----
+            // The arrival timestamp is the NOMINAL instant `t0 + offset`,
+            // not the surfacing time — a request that arrives mid-tick
+            // must be charged the queueing it actually experienced while
+            // the tick ran (avoiding coordinated omission in the
+            // queue/TTFT/service latency stats).
+            let now_s = t0.elapsed().as_secs_f64();
+            while future.front().is_some_and(|&(_, off)| off <= now_s) {
+                let (req, off) = future.pop_front().expect("front checked");
+                let arrived = t0 + std::time::Duration::from_secs_f64(off);
+                ready.push_back(Pending::new(req, arrived));
+            }
+
+            // ---- admission: top the active set up to the lane cap, ----
+            // subject to arena capacity. Oversized requests (context
+            // window or arena) are rejected here, not mid-decode;
+            // zero-work requests complete immediately without occupying
+            // a lane or a block.
+            while active.len() < max_active {
+                let Some(front) = ready.front() else { break };
+                let total = front.req.total_tokens();
+                ensure!(
+                    total <= max_ctx,
+                    "request {} needs {} tokens > max_ctx {max_ctx}",
+                    front.req.id,
+                    total
+                );
+                if total == 0 {
+                    let p = ready.pop_front().expect("front checked");
+                    done.push(p.finish_empty());
+                    continue;
+                }
+                let need = self.engine.blocks_for_positions(total);
+                let free = self.engine.arena_status().free_blocks;
+                let (needed_now, held) = self.pressure(active)?;
+                // Blocks this serving loop can EVER obtain for the
+                // request: what is free now plus what its own sessions
+                // will release. Blocks held outside the loop (a live
+                // decoder on the same engine) are never coming back, so
+                // a request needing them must be rejected up front — not
+                // aborted mid-decode with a misleading pressure error.
+                let obtainable = free + held;
+                ensure!(
+                    need <= obtainable,
+                    "request {} needs {need} cache blocks but only {obtainable} of \
+                     {total_blocks} are obtainable by this serving loop ({} held \
+                     outside it)",
+                    front.req.id,
+                    total_blocks - obtainable
+                );
+                let admit = if self.policy.reserves_worst_case() {
+                    // Fixed-wave: the full worst-case reservation must
+                    // fit, so an admitted session can never stall.
+                    free >= need
+                } else {
+                    // Continuous: claim on demand, but leave headroom
+                    // for every running session's next block plus one
+                    // for the newcomer, so admission itself does not
+                    // force an immediate preemption.
+                    free > needed_now
+                };
+                if !admit {
+                    break;
+                }
+                let mut p = ready.pop_front().expect("front checked");
+                let handle = self.engine.new_session()?;
+                if self.policy.reserves_worst_case() {
+                    self.engine.reserve_session(handle, total)?;
+                }
+                if p.first_admitted.is_none() {
+                    p.first_admitted = Some(Instant::now());
+                }
+                active.push(Active {
+                    handle,
+                    seq: next_seq,
+                    pos: 0,
+                    tokens: Vec::new(),
+                    last_logits: Vec::new(),
+                    fed: 0,
+                    arrived: p.arrived,
+                    first_admitted: p.first_admitted.expect("just set"),
+                    first_token_at: p.first_token_at,
+                    evictions: p.evictions,
+                    req: p.req,
+                });
+                next_seq += 1;
+            }
+
             if active.is_empty() {
+                // Nothing runnable. With this server's sessions all
+                // retired, a request the admission loop still could not
+                // place means its blocks are held OUTSIDE this serving
+                // loop (e.g. a live decoder on the same engine) — error
+                // out rather than busy-spin waiting on blocks nobody
+                // here will free.
+                ensure!(
+                    ready.is_empty(),
+                    "request {} cannot be admitted: {} of {} arena blocks are held \
+                     outside this serving loop",
+                    ready.front().expect("non-empty").req.id,
+                    total_blocks - self.engine.arena_status().free_blocks,
+                    total_blocks
+                );
+                // Everything left is a future arrival. Nothing can
+                // change state before it (single-threaded loop, empty
+                // active set), so sleep the whole gap in one go.
+                if let Some(&(_, off)) = future.front() {
+                    let wait = off - t0.elapsed().as_secs_f64();
+                    if wait > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+                    }
+                }
                 continue;
             }
 
-            // One scheduler tick: every active session advances exactly
-            // one token (prefill or generate, mixed freely).
+            // ---- arena pressure (continuous only): make sure every ----
+            // active session's next position is backable, preempting the
+            // youngest until it is. Preemption frees the victim's blocks
+            // and requeues its request at the FRONT of the ready queue;
+            // the re-prefill is deterministic, so its tokens are
+            // unchanged. The oldest session is never evicted (victims
+            // are max-seq, and the single-session case always fits by
+            // the admission capacity check), so progress is guaranteed.
+            if !self.policy.reserves_worst_case() {
+                loop {
+                    let (needed, held) = self.pressure(active)?;
+                    let free = self.engine.arena_status().free_blocks;
+                    if free >= needed {
+                        break;
+                    }
+                    // A lone session always fits by the admission
+                    // obtainable check — unless blocks are held outside
+                    // this loop, which no amount of preemption can fix.
+                    ensure!(
+                        active.len() > 1,
+                        "request {} cannot claim its next cache block: {} of \
+                         {total_blocks} arena blocks are held outside this serving \
+                         loop",
+                        active[0].req.id,
+                        total_blocks - free - held
+                    );
+                    let victim = active
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, a)| a.seq)
+                        .map(|(i, _)| i)
+                        .expect("active non-empty");
+                    let a = active.remove(victim);
+                    self.engine.free_session(a.handle)?;
+                    ready.push_front(a.into_pending());
+                }
+            }
+
+            // ---- one scheduler tick: every active session advances ----
+            // exactly one token (prefill or generate, mixed freely).
             match self.policy {
-                Policy::Batched { .. } => {
+                Policy::Batched { .. } | Policy::Continuous { .. } => {
                     let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
                     let positions: Vec<i32> = active.iter().map(|a| a.pos).collect();
-                    let caches: Vec<Caches> = active
-                        .iter_mut()
-                        .map(|a| a.caches.take().expect("caches present"))
-                        .collect();
-                    let outs = self.engine.decode_batch(caches, &tokens, &positions)?;
-                    for ((a, out), &t) in active.iter_mut().zip(outs).zip(&tokens) {
-                        a.absorb(t, out);
+                    let handles: Vec<CacheHandle> =
+                        active.iter().map(|a| a.handle).collect();
+                    let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
+                    for ((a, logits), &t) in active.iter_mut().zip(outs).zip(&tokens) {
+                        a.absorb(t, logits);
                     }
                 }
                 Policy::Fifo | Policy::RoundRobin { .. } => {
                     for a in active.iter_mut() {
                         let t = a.next_token();
-                        let caches = a.caches.take().expect("caches present");
-                        let out = self.engine.decode_step(caches, t, a.pos)?;
-                        a.absorb(t, out);
+                        let logits = self.engine.decode_step(a.handle, t, a.pos)?;
+                        a.absorb(t, logits);
                     }
                 }
             }
 
-            // Sweep finished sessions (completion order).
+            // ---- sweep finished sessions (completion order), freeing ----
+            // their blocks for the next admission round.
             let mut i = 0;
             while i < active.len() {
                 if active[i].done() {
-                    done.push(active.swap_remove(i).finish());
+                    let a = active.swap_remove(i);
+                    self.engine.free_session(a.handle)?;
+                    done.push(a.finish());
                 } else {
                     i += 1;
                 }
             }
         }
-        Ok(done)
+        Ok(())
     }
 }
 
@@ -307,7 +631,7 @@ pub fn serve_threaded(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Artifacts;
+    use crate::runtime::{Artifacts, BackendKind};
 
     const SEED: u64 = 11;
 
@@ -335,6 +659,7 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2]);
         for r in &out {
             assert_eq!(r.tokens.len(), 3 + 4);
+            assert_eq!(r.evictions, 0);
         }
     }
 
@@ -353,23 +678,26 @@ mod tests {
     }
 
     #[test]
-    fn batched_matches_fifo_outputs() {
-        // The batched scheduler (one decode_batch per tick) must be
-        // token-for-token identical to per-session decoding.
+    fn batched_and_continuous_match_fifo_outputs() {
+        // Both decode_batch-per-tick schedulers must be token-for-token
+        // identical to per-session decoding.
         let e = engine();
         let fifo = Server::new(&e, Policy::Fifo).serve(reqs(5)).unwrap();
-        let batched = Server::new(&e, Policy::Batched { batch: 3 })
-            .serve(reqs(5))
-            .unwrap();
-        assert_eq!(batched.len(), 5);
-        for f in &fifo {
-            let b = batched.iter().find(|b| b.id == f.id).unwrap();
-            assert_eq!(f.tokens, b.tokens, "request {}", f.id);
+        for policy in [
+            Policy::Batched { batch: 3 },
+            Policy::Continuous { max_active: 3 },
+        ] {
+            let out = Server::new(&e, policy).serve(reqs(5)).unwrap();
+            assert_eq!(out.len(), 5, "{policy:?}");
+            for f in &fifo {
+                let b = out.iter().find(|b| b.id == f.id).unwrap();
+                assert_eq!(f.tokens, b.tokens, "request {} under {policy:?}", f.id);
+            }
         }
     }
 
     #[test]
-    fn batched_handles_ragged_and_degenerate_requests() {
+    fn schedulers_handle_ragged_and_degenerate_requests() {
         // Mixed prompt lengths, empty prompts, and zero-work requests in
         // one batch: everything completes, empty-prompt generation
         // starts from token 0, zero-work requests return no tokens.
@@ -390,8 +718,12 @@ mod tests {
         assert_eq!(by_id(1).tokens[0], 0);
         assert_eq!(by_id(2).tokens, vec![9]);
         assert!(by_id(3).tokens.is_empty());
-        // And identically under the sequential schedulers.
-        for policy in [Policy::Fifo, Policy::RoundRobin { max_active: 2 }] {
+        // And identically under the other schedulers.
+        for policy in [
+            Policy::Fifo,
+            Policy::RoundRobin { max_active: 2 },
+            Policy::Continuous { max_active: 4 },
+        ] {
             let seq = Server::new(&e, policy).serve(requests.clone()).unwrap();
             for r in &out {
                 let s = seq.iter().find(|s| s.id == r.id).unwrap();
@@ -401,27 +733,206 @@ mod tests {
     }
 
     #[test]
-    fn oversized_request_rejected_at_admission() {
+    fn continuous_under_pressure_preempts_and_still_matches() {
+        // An arena too small for every session's worst case: the
+        // continuous scheduler must preempt (youngest first), requeue,
+        // re-prefill, and still produce exactly the isolated tokens.
+        // 6 requests x 12 tokens = 3 blocks each (block_len 4) against a
+        // 10-block arena with 6 lanes forces evictions.
+        let tight = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            10,
+        )
+        .unwrap();
+        let requests: Vec<Request> = (0..6u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id % 5) as i32 + 1, 7, 2, 4],
+                n_new: 8,
+            })
+            .collect();
+        let out = Server::new(&tight, Policy::Continuous { max_active: 6 })
+            .serve(requests.clone())
+            .unwrap();
+        assert_eq!(out.len(), 6);
+        let total_evictions: u32 = out.iter().map(|r| r.evictions).sum();
+        assert!(
+            total_evictions > 0,
+            "10 blocks cannot hold 6 x 3-block sessions without preemption"
+        );
+        // All blocks returned after the run.
+        let st = tight.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks);
+        // Tokens identical to the isolated run on a roomy engine.
+        let fifo = Server::new(&engine(), Policy::Fifo).serve(requests).unwrap();
+        for f in &fifo {
+            let c = out.iter().find(|c| c.id == f.id).unwrap();
+            assert_eq!(f.tokens, c.tokens, "request {}", f.id);
+        }
+    }
+
+    #[test]
+    fn fixed_wave_reservation_defers_admission_but_completes() {
+        // 4 blocks, block_len 4, requests of 8 tokens = 2 blocks each:
+        // the batched policy can hold at most 2 reservations at a time
+        // but must still complete all 5 requests with correct tokens.
+        let tight = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            4,
+        )
+        .unwrap();
+        let requests: Vec<Request> = (0..5u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id % 3) as i32 + 1, 2],
+                n_new: 6,
+            })
+            .collect();
+        let out = Server::new(&tight, Policy::Batched { batch: 4 })
+            .serve(requests.clone())
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        for r in &out {
+            assert_eq!(r.tokens.len(), 8);
+            assert_eq!(r.evictions, 0, "fixed-wave policies never preempt");
+        }
+        let st = tight.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks);
+    }
+
+    #[test]
+    fn oversized_requests_rejected_and_leak_free() {
         let e = engine();
         let max_ctx = e.max_ctx();
+        // Context-window overflow.
         let out = Server::new(&e, Policy::Batched { batch: 2 }).serve(vec![Request {
             id: 0,
             prompt: vec![1; max_ctx],
             n_new: 1,
         }]);
         assert!(out.is_err());
+        // Arena-capacity overflow (request larger than the whole pool).
+        let tiny = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            2,
+        )
+        .unwrap();
+        for policy in [Policy::Batched { batch: 2 }, Policy::Continuous { max_active: 2 }] {
+            let out = Server::new(&tiny, policy).serve(vec![Request {
+                id: 0,
+                prompt: vec![1, 2, 3, 4, 5],
+                n_new: 5,
+            }]);
+            assert!(out.is_err(), "{policy:?}");
+            // The failed serve returned every block it touched.
+            let st = tiny.arena_status();
+            assert_eq!(st.free_blocks, st.total_blocks, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn blocks_held_outside_the_server_error_instead_of_spinning() {
+        // A live decoder on the same engine owns every arena block: the
+        // serving loop must surface that as an admission error, not
+        // busy-wait for blocks nobody in the loop will free.
+        let tight = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            2,
+        )
+        .unwrap();
+        let mut outside = crate::runtime::TinyDecoder::new(&tight).unwrap();
+        outside.generate(&[1, 2, 3, 4, 5], 3).unwrap(); // 8 tokens = both blocks
+        assert_eq!(tight.arena_status().free_blocks, 0);
+        for policy in [Policy::Batched { batch: 2 }, Policy::Continuous { max_active: 2 }] {
+            let out = Server::new(&tight, policy).serve(vec![Request {
+                id: 0,
+                prompt: vec![1],
+                n_new: 3,
+            }]);
+            assert!(out.is_err(), "{policy:?} must error, not spin");
+        }
+        // Dropping the outside decoder frees the blocks; serving works.
+        drop(outside);
+        let out = Server::new(&tight, Policy::Continuous { max_active: 2 })
+            .serve(vec![Request { id: 0, prompt: vec![1], n_new: 3 }])
+            .unwrap();
+        assert_eq!(out[0].tokens.len(), 4);
+    }
+
+    #[test]
+    fn staggered_arrivals_complete_with_identical_tokens() {
+        let e = engine();
+        let requests = reqs(4);
+        let instant = Server::new(&e, Policy::Continuous { max_active: 2 })
+            .serve(requests.clone())
+            .unwrap();
+        let staggered = Server::new(&e, Policy::Continuous { max_active: 2 })
+            .serve_arrivals(requests, &[0.0, 0.002, 0.004, 0.006])
+            .unwrap();
+        assert_eq!(staggered.len(), 4);
+        for s in &staggered {
+            let i = instant.iter().find(|i| i.id == s.id).unwrap();
+            assert_eq!(i.tokens, s.tokens, "request {}", s.id);
+        }
+        // Bad offsets are rejected.
+        assert!(Server::new(&e, Policy::Fifo)
+            .serve_arrivals(reqs(1), &[-1.0])
+            .is_err());
+        assert!(Server::new(&e, Policy::Fifo)
+            .serve_arrivals(reqs(2), &[0.0])
+            .is_err());
     }
 
     #[test]
     fn responses_have_sane_timing() {
         let e = engine();
-        let out = Server::new(&e, Policy::Batched { batch: 2 })
-            .serve(reqs(2))
-            .unwrap();
-        for r in out {
-            assert!(r.service_s > 0.0);
-            assert!(r.ttft_s <= r.service_s + 1e-9);
+        for policy in [
+            Policy::Batched { batch: 2 },
+            Policy::Continuous { max_active: 2 },
+        ] {
+            let out = Server::new(&e, policy).serve(reqs(2)).unwrap();
+            for r in out {
+                assert!(r.service_s > 0.0, "{policy:?}");
+                assert!(r.ttft_s <= r.service_s + 1e-9, "{policy:?}");
+                assert!(r.queue_s >= 0.0 && r.queue_s <= r.service_s + 1e-9, "{policy:?}");
+            }
         }
+    }
+
+    #[test]
+    fn policy_flag_resolution() {
+        // Historical default: --batch > 0 selects batched, else rr.
+        assert_eq!(
+            Policy::from_flags(None, 0, 4).unwrap(),
+            Policy::RoundRobin { max_active: 4 }
+        );
+        assert_eq!(
+            Policy::from_flags(None, 8, 4).unwrap(),
+            Policy::Batched { batch: 8 }
+        );
+        // Explicit names; lane count comes from --batch, else --max-active.
+        assert_eq!(Policy::from_flags(Some("fifo"), 8, 4).unwrap(), Policy::Fifo);
+        assert_eq!(
+            Policy::from_flags(Some("rr"), 8, 4).unwrap(),
+            Policy::RoundRobin { max_active: 4 }
+        );
+        assert_eq!(
+            Policy::from_flags(Some("batched"), 0, 4).unwrap(),
+            Policy::Batched { batch: 4 }
+        );
+        assert_eq!(
+            Policy::from_flags(Some("continuous"), 8, 4).unwrap(),
+            Policy::Continuous { max_active: 8 }
+        );
+        assert!(Policy::from_flags(Some("nope"), 0, 4).is_err());
     }
 
     #[test]
@@ -442,13 +953,15 @@ mod tests {
     fn threaded_replicas_match_single_engine() {
         // Worker replicas are deterministic copies: the sharded threaded
         // path must produce exactly the tokens the single-engine server
-        // produces — under both the round-robin and batched policies.
+        // produces — under the round-robin, batched, and continuous
+        // policies.
         let single = Server::new(&engine(), Policy::RoundRobin { max_active: 2 })
             .serve(reqs(4))
             .unwrap();
         for policy in [
             Policy::RoundRobin { max_active: 2 },
             Policy::Batched { batch: 2 },
+            Policy::Continuous { max_active: 2 },
         ] {
             let threaded = serve_threaded_policy(
                 || Engine::load(Artifacts::synthetic(SEED)?),

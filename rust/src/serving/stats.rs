@@ -1,5 +1,6 @@
-//! Latency statistics over served requests: mean / percentiles /
-//! throughput, the numbers the edge-serving example reports.
+//! Latency statistics over served requests: queue wait, time to first
+//! token, end-to-end percentiles, throughput, preemption counts — the
+//! numbers `repro serve` and the edge-serving example report.
 
 use super::Response;
 
@@ -8,11 +9,21 @@ use super::Response;
 pub struct LatencyStats {
     pub n: usize,
     pub total_tokens: usize,
+    /// End-to-end (arrival -> completion) latency.
     pub mean_service_s: f64,
     pub p50_service_s: f64,
     pub p95_service_s: f64,
     pub p99_service_s: f64,
+    /// Time to first generated token.
     pub mean_ttft_s: f64,
+    pub p50_ttft_s: f64,
+    pub p95_ttft_s: f64,
+    /// Queue wait before first admission.
+    pub mean_queue_s: f64,
+    pub p50_queue_s: f64,
+    pub p95_queue_s: f64,
+    /// Total continuous-scheduler preemptions across all requests.
+    pub evictions: usize,
     pub tokens_per_s: f64,
 }
 
@@ -24,23 +35,58 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// Sorted copy of one latency field across responses.
+fn sorted_field(responses: &[Response], f: impl Fn(&Response) -> f64) -> Vec<f64> {
+    let mut v: Vec<f64> = responses.iter().map(f).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
 impl LatencyStats {
     /// Compute stats. `wall_s` is the whole batch's wall-clock time.
     pub fn from_responses(responses: &[Response], wall_s: f64) -> Self {
-        let mut service: Vec<f64> = responses.iter().map(|r| r.service_s).collect();
-        service.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let service = sorted_field(responses, |r| r.service_s);
+        let ttft = sorted_field(responses, |r| r.ttft_s);
+        let queue = sorted_field(responses, |r| r.queue_s);
         let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
         let n = responses.len();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / n.max(1) as f64;
         LatencyStats {
             n,
             total_tokens,
-            mean_service_s: service.iter().sum::<f64>() / n.max(1) as f64,
+            mean_service_s: mean(&service),
             p50_service_s: percentile(&service, 50.0),
             p95_service_s: percentile(&service, 95.0),
             p99_service_s: percentile(&service, 99.0),
-            mean_ttft_s: responses.iter().map(|r| r.ttft_s).sum::<f64>() / n.max(1) as f64,
+            mean_ttft_s: mean(&ttft),
+            p50_ttft_s: percentile(&ttft, 50.0),
+            p95_ttft_s: percentile(&ttft, 95.0),
+            mean_queue_s: mean(&queue),
+            p50_queue_s: percentile(&queue, 50.0),
+            p95_queue_s: percentile(&queue, 95.0),
+            evictions: responses.iter().map(|r| r.evictions as usize).sum(),
             tokens_per_s: total_tokens as f64 / wall_s.max(f64::MIN_POSITIVE),
         }
+    }
+
+    /// One-line report of the headline numbers — `repro serve` prints
+    /// this as its summary line.
+    pub fn report(&self) -> String {
+        format!(
+            "throughput {:.1} tok/s | service p50/p95/p99 {:.3}/{:.3}/{:.3}s \
+             | ttft mean/p50/p95 {:.3}/{:.3}/{:.3}s | queue mean/p95 {:.3}/{:.3}s \
+             | {} preemptions",
+            self.tokens_per_s,
+            self.p50_service_s,
+            self.p95_service_s,
+            self.p99_service_s,
+            self.mean_ttft_s,
+            self.p50_ttft_s,
+            self.p95_ttft_s,
+            self.mean_queue_s,
+            self.p95_queue_s,
+            self.evictions
+        )
     }
 }
 
@@ -52,9 +98,10 @@ mod tests {
         Response {
             id,
             tokens: vec![0; 10],
-            queue_s: 0.0,
+            queue_s: service / 4.0,
             service_s: service,
             ttft_s: service / 2.0,
+            evictions: (id % 3 == 0) as u32,
         }
     }
 
@@ -68,6 +115,13 @@ mod tests {
         assert!((s.p95_service_s - 0.95).abs() < 0.02);
         assert!(s.p99_service_s >= s.p95_service_s);
         assert!((s.tokens_per_s - 1000.0).abs() < 1e-9);
+        // The new per-request dimensions track their fields.
+        assert!((s.p50_ttft_s - 0.25).abs() < 0.02);
+        assert!((s.p95_ttft_s - 0.475).abs() < 0.02);
+        assert!((s.p50_queue_s - 0.125).abs() < 0.01);
+        assert!((s.mean_queue_s - s.mean_service_s / 4.0).abs() < 1e-9);
+        assert_eq!(s.evictions, 34); // ids 0, 3, 6, ..., 99
+        assert!(s.report().contains("34 preemptions"));
     }
 
     #[test]
@@ -75,5 +129,7 @@ mod tests {
         let s = LatencyStats::from_responses(&[resp(0, 2.0)], 2.0);
         assert_eq!(s.p50_service_s, 2.0);
         assert_eq!(s.p99_service_s, 2.0);
+        assert_eq!(s.p95_ttft_s, 1.0);
+        assert_eq!(s.p95_queue_s, 0.5);
     }
 }

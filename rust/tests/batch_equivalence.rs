@@ -117,6 +117,8 @@ fn server_tokens_identical_across_all_schedulers() {
             Policy::RoundRobin { max_active: 3 },
             Policy::Batched { batch: 3 },
             Policy::Batched { batch: 8 },
+            Policy::Continuous { max_active: 3 },
+            Policy::Continuous { max_active: 8 },
         ] {
             let out = Server::new(&engine, policy).serve(requests.clone()).unwrap();
             assert_eq!(out.len(), reference.len(), "seed {seed} {policy:?}");

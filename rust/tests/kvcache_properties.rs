@@ -1,0 +1,230 @@
+//! Property tests for the block-paged KV-cache arena
+//! (`runtime::kvcache`): random alloc/grow/free churn must never leak
+//! or double-own a block, block tables must only reference live blocks,
+//! freed capacity must be fully reusable, and session data must never
+//! bleed across sessions. The offline build has no proptest; randomness
+//! comes from the in-crate SplitMix64 (`util::rng`) with fixed seeds,
+//! so every failure is reproducible.
+
+use pim_llm::runtime::artifacts::ModelInfo;
+use pim_llm::runtime::{CacheArena, CacheHandle, CacheLayout};
+use pim_llm::util::rng::Rng;
+
+fn model(max_ctx: usize) -> ModelInfo {
+    ModelInfo {
+        vocab: 16,
+        d: 8,
+        h: 2,
+        d_ff: 16,
+        n_layers: 2,
+        max_ctx,
+        eps: 1e-5,
+    }
+}
+
+#[test]
+fn random_churn_never_leaks_or_double_frees() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_97F4_A7C1));
+        let max_ctx = rng.range(8, 40);
+        let block_len = rng.range(1, 9);
+        let capacity = rng.range(4, 24);
+        let layout = CacheLayout::with_block_len(&model(max_ctx), block_len);
+        let mut arena = CacheArena::new(layout.clone(), capacity).unwrap();
+        let total = arena.status().total_blocks;
+        assert_eq!(total, capacity);
+
+        // (handle, highest ensured position) pairs for live sessions,
+        // plus a mirror count of blocks each session must hold.
+        let mut live: Vec<(CacheHandle, Option<usize>)> = Vec::new();
+        let mut freed: Vec<CacheHandle> = Vec::new();
+        for op in 0..400 {
+            match rng.range(0, 9) {
+                // Open a session (always succeeds; blocks come later).
+                0 | 1 => {
+                    live.push((arena.alloc_session().unwrap(), None));
+                }
+                // Grow a random live session to a random position.
+                2..=5 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range(0, live.len() - 1);
+                    let pos = rng.range(0, max_ctx - 1);
+                    let (h, ensured) = &mut live[i];
+                    let held = arena.session_blocks(*h).unwrap();
+                    let result = arena.ensure_capacity(*h, pos);
+                    if result.is_ok() {
+                        *ensured = Some(ensured.map_or(pos, |e| e.max(pos)));
+                    } else {
+                        // Only legitimate failure: not enough free
+                        // blocks for the FULL need — and the failed call
+                        // must have claimed nothing (all-or-nothing).
+                        let needed =
+                            layout.blocks_for_positions(pos + 1).saturating_sub(held);
+                        assert!(
+                            arena.status().free_blocks < needed,
+                            "seed {seed} op {op}: ensure failed with enough blocks"
+                        );
+                        assert_eq!(
+                            arena.session_blocks(*h).unwrap(),
+                            held,
+                            "seed {seed} op {op}: failed ensure claimed blocks"
+                        );
+                    }
+                }
+                // Free (evict) a random live session.
+                6 | 7 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range(0, live.len() - 1);
+                    let (h, _) = live.swap_remove(i);
+                    arena.free_session(h).unwrap();
+                    freed.push(h);
+                }
+                // Hammer stale handles: every op must error, and error
+                // without disturbing the accounting.
+                _ => {
+                    if let Some(&h) = freed.last() {
+                        assert!(arena.free_session(h).is_err());
+                        assert!(arena.ensure_capacity(h, 0).is_err());
+                        assert!(arena.view(h).is_err());
+                        assert!(arena.gather_contiguous(h).is_err());
+                    }
+                }
+            }
+            // Invariants after EVERY op.
+            arena.debug_validate().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: arena invariant broken: {e}")
+            });
+            let st = arena.status();
+            assert_eq!(st.total_blocks, total);
+            assert_eq!(st.live_sessions, live.len(), "seed {seed} op {op}");
+            let held: usize = live
+                .iter()
+                .map(|(h, _)| arena.session_blocks(*h).unwrap())
+                .sum();
+            assert_eq!(
+                st.free_blocks + held,
+                total,
+                "seed {seed} op {op}: blocks leaked"
+            );
+            // Each session holds exactly the blocks its positions need.
+            for (h, ensured) in &live {
+                let expect = ensured.map_or(0, |e| layout.blocks_for_positions(e + 1));
+                assert_eq!(
+                    arena.session_blocks(*h).unwrap(),
+                    expect,
+                    "seed {seed} op {op}: wrong block count"
+                );
+            }
+        }
+
+        // Freeing everything returns the arena to pristine capacity.
+        for (h, _) in live.drain(..) {
+            arena.free_session(h).unwrap();
+        }
+        assert_eq!(arena.status().free_blocks, total);
+        arena.debug_validate().unwrap();
+
+        // And the full capacity is reusable by one fresh session.
+        let h = arena.alloc_session().unwrap();
+        let usable = (total * layout.block_len).min(max_ctx);
+        arena.ensure_capacity(h, usable - 1).unwrap();
+        assert_eq!(
+            arena.session_blocks(h).unwrap(),
+            layout.blocks_for_positions(usable)
+        );
+    }
+}
+
+#[test]
+fn session_data_is_isolated_under_interleaving() {
+    // Two sessions written with distinguishable patterns in interleaved
+    // order, with a third churning alloc/free in between: each gather
+    // must return exactly its own writes.
+    let layout = CacheLayout::with_block_len(&model(12), 3);
+    let mut arena = CacheArena::new(layout.clone(), 12).unwrap();
+    let a = arena.alloc_session().unwrap();
+    let b = arena.alloc_session().unwrap();
+    let row = |tag: usize, layer: usize, pos: usize| -> Vec<f32> {
+        (0..layout.h * layout.dh)
+            .map(|i| (tag * 10000 + layer * 1000 + pos * 10 + i) as f32)
+            .collect()
+    };
+    for pos in 0..12usize {
+        // Churn: a short-lived session claims and releases blocks.
+        let tmp = arena.alloc_session().unwrap();
+        arena.ensure_capacity(tmp, pos.min(5)).unwrap();
+        for (tag, h) in [(1usize, a), (2usize, b)] {
+            arena.ensure_capacity(h, pos).unwrap();
+            for layer in 0..layout.n_layers {
+                let r = row(tag, layer, pos);
+                let neg: Vec<f32> = r.iter().map(|x| -x).collect();
+                arena.write_kv(h, layer, pos, &r, &neg).unwrap();
+            }
+        }
+        arena.free_session(tmp).unwrap();
+    }
+    for (tag, h) in [(1usize, a), (2usize, b)] {
+        let (k, v) = arena.gather_contiguous(h).unwrap();
+        for layer in 0..layout.n_layers {
+            for pos in 0..12usize {
+                let r = row(tag, layer, pos);
+                for head in 0..layout.h {
+                    let base = ((layer * layout.h + head) * layout.max_ctx + pos) * layout.dh;
+                    let want = &r[head * layout.dh..(head + 1) * layout.dh];
+                    assert_eq!(&k[base..base + layout.dh], want, "session {tag} K");
+                    let neg: Vec<f32> = want.iter().map(|x| -x).collect();
+                    assert_eq!(&v[base..base + layout.dh], &neg[..], "session {tag} V");
+                }
+            }
+        }
+    }
+    arena.debug_validate().unwrap();
+}
+
+#[test]
+fn exhaustion_is_an_error_not_a_corruption() {
+    // Drive the pool to empty, verify the error, free one session, and
+    // confirm the freed capacity is immediately usable by another.
+    let layout = CacheLayout::with_block_len(&model(16), 2);
+    let mut arena = CacheArena::new(layout, 4).unwrap();
+    let a = arena.alloc_session().unwrap();
+    let b = arena.alloc_session().unwrap();
+    arena.ensure_capacity(a, 3).unwrap(); // 2 blocks
+    arena.ensure_capacity(b, 3).unwrap(); // 2 blocks
+    assert_eq!(arena.status().free_blocks, 0);
+    let err = arena.ensure_capacity(a, 5).unwrap_err();
+    assert!(
+        format!("{err}").contains("out of blocks"),
+        "unexpected error: {err}"
+    );
+    // Partial-failure safety: a's table is unchanged (2 blocks).
+    assert_eq!(arena.session_blocks(a).unwrap(), 2);
+    arena.debug_validate().unwrap();
+    arena.free_session(b).unwrap();
+    arena.ensure_capacity(a, 5).unwrap();
+    assert_eq!(arena.session_blocks(a).unwrap(), 3);
+    arena.debug_validate().unwrap();
+}
+
+#[test]
+fn handle_reuse_changes_identity() {
+    // Slot reuse after free must produce handles that do not validate
+    // for the old session (generation bump), across many cycles.
+    let layout = CacheLayout::with_block_len(&model(8), 4);
+    let mut arena = CacheArena::new(layout, 2).unwrap();
+    let mut old: Vec<CacheHandle> = Vec::new();
+    for cycle in 0..50 {
+        let h = arena.alloc_session().unwrap();
+        arena.ensure_capacity(h, 0).unwrap();
+        for &stale in &old {
+            assert!(arena.view(stale).is_err(), "cycle {cycle}: stale validated");
+            assert_ne!(stale.key(), h.key(), "cycle {cycle}: key collision");
+        }
+        arena.free_session(h).unwrap();
+        old.push(h);
+    }
+}

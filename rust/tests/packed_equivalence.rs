@@ -19,7 +19,7 @@
 
 use pim_llm::quant::{pack_verified, unpack};
 use pim_llm::runtime::artifacts::ModelInfo;
-use pim_llm::runtime::{Artifacts, BackendKind, BatchDecoder, Caches, Engine, TinyDecoder};
+use pim_llm::runtime::{Artifacts, BackendKind, BatchDecoder, Engine, TinyDecoder};
 use pim_llm::serving::{Policy, Request, Server};
 use pim_llm::util::rng::Rng;
 
@@ -29,15 +29,6 @@ fn engine_pair(artifacts: Artifacts) -> (Engine, Engine) {
         Engine::load_with(artifacts.clone(), BackendKind::Reference).expect("reference engine");
     let packed = Engine::load_with(artifacts, BackendKind::Packed).expect("packed engine");
     (reference, packed)
-}
-
-/// Host cache tensors of a step output.
-fn host(c: &Caches) -> (&[f32], &[f32]) {
-    match c {
-        Caches::Host { k, v } => (k, v),
-        #[cfg(feature = "pjrt")]
-        Caches::Device { .. } => panic!("expected host caches"),
-    }
 }
 
 /// A random small-but-varied model shape. Dimensions deliberately avoid
@@ -70,18 +61,17 @@ fn packed_equals_reference_over_20_random_models() {
         let (reference, packed) = engine_pair(artifacts);
         let vocab = reference.vocab() as i32;
 
-        // Single step, bitwise, caches included.
+        // Single step, bitwise, caches included (compared through the
+        // arena's contiguous reassembly).
         let tok = rng.range(0, vocab as usize - 1) as i32;
-        let r = reference
-            .decode_step(reference.empty_caches().unwrap(), tok, 0)
-            .unwrap();
-        let p = packed
-            .decode_step(packed.empty_caches().unwrap(), tok, 0)
-            .unwrap();
-        assert_eq!(r.logits, p.logits, "seed {seed} {model:?}: step logits");
+        let rs = reference.new_session().unwrap();
+        let ps = packed.new_session().unwrap();
+        let r = reference.decode_step(rs, tok, 0).unwrap();
+        let p = packed.decode_step(ps, tok, 0).unwrap();
+        assert_eq!(r, p, "seed {seed} {model:?}: step logits");
         assert_eq!(
-            host(&r.caches),
-            host(&p.caches),
+            reference.gather_session(rs).unwrap(),
+            packed.gather_session(ps).unwrap(),
             "seed {seed} {model:?}: step caches"
         );
 
@@ -190,6 +180,7 @@ fn batched_serving_is_identical_across_backends() {
     ];
     for policy in [
         Policy::Batched { batch: 3 },
+        Policy::Continuous { max_active: 3 },
         Policy::RoundRobin { max_active: 2 },
         Policy::Fifo,
     ] {

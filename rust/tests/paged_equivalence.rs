@@ -1,0 +1,261 @@
+//! Equivalence tests for the paged KV-cache path: paging is a STORAGE
+//! refactor, never a numerics change. Both host backends keep their
+//! pre-paging contiguous decode step alive as an oracle
+//! (`decode_step_contiguous` — the PR-2 numerics verbatim over
+//! caller-owned `(n_layers, h, max_ctx, d_head)` tensors), and this
+//! suite holds the paged path to BITWISE equality against it:
+//!
+//! * logits AND cache contents, single-step and over full generations,
+//! * ragged `decode_batch` lanes at mixed positions,
+//! * across block lengths (1, 3, 5, default, max_ctx),
+//! * after an evict -> re-prefill cycle (the continuous scheduler's
+//!   preemption path),
+//! * and end to end: the continuous policy against FIFO on a
+//!   preemption-forcing arena.
+//!
+//! Since PR 2 proved batched == sequential and PR 3 proved packed ==
+//! reference bitwise, oracle equality here chains the paged/continuous
+//! stack all the way back to the original decode-step numerics.
+
+use pim_llm::runtime::artifacts::ModelInfo;
+use pim_llm::runtime::packed::PackedBackend;
+use pim_llm::runtime::reference::ReferenceBackend;
+use pim_llm::runtime::{
+    Artifacts, Backend, BackendKind, CacheArena, CacheHandle, CacheLayout, Engine,
+};
+use pim_llm::serving::{Policy, Request, Server};
+use pim_llm::util::rng::Rng;
+use std::sync::Arc;
+
+/// A contiguous-oracle decode step: both host backends expose the same
+/// shape, so the suite is generic over them.
+type Oracle<'a> = &'a dyn Fn(&mut [f32], &mut [f32], i32, i32) -> Vec<f32>;
+
+/// Run `steps` (token, position) pairs through the paged backend in one
+/// session and through the contiguous oracle, asserting bitwise logits
+/// at every step and bitwise cache contents at the end.
+fn assert_session_matches_oracle(
+    backend: &dyn Backend,
+    arena: &mut CacheArena,
+    oracle: Oracle<'_>,
+    cache_numel: usize,
+    steps: &[(i32, i32)],
+    label: &str,
+) {
+    let s = backend.new_session(arena).unwrap();
+    let (mut kc, mut vc) = (vec![0.0f32; cache_numel], vec![0.0f32; cache_numel]);
+    for &(tok, pos) in steps {
+        let paged = backend.decode_step(arena, s, tok, pos).unwrap();
+        let want = oracle(&mut kc, &mut vc, tok, pos);
+        assert_eq!(paged, want, "{label}: logits at pos {pos}");
+    }
+    assert_eq!(
+        arena.gather_contiguous(s).unwrap(),
+        (kc, vc),
+        "{label}: final caches"
+    );
+    backend.drop_session(arena, s).unwrap();
+}
+
+/// A random small-but-varied model shape (dimensions avoid multiples of
+/// the block length so block boundaries land mid-head).
+fn random_model(rng: &mut Rng) -> ModelInfo {
+    let h = [1usize, 2, 4][rng.range(0, 2)];
+    ModelInfo {
+        vocab: rng.range(8, 60),
+        d: h * [3usize, 5, 8][rng.range(0, 2)],
+        h,
+        d_ff: rng.range(9, 40),
+        n_layers: rng.range(1, 2),
+        max_ctx: rng.range(8, 20),
+        eps: 1e-5,
+    }
+}
+
+#[test]
+fn paged_matches_contiguous_oracle_across_block_lengths() {
+    // Both backends, several models, block lengths from degenerate (1
+    // position per block) through "one block holds the whole window".
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0xDEAD_BEEF).wrapping_add(3));
+        let model = random_model(&mut rng);
+        let artifacts = Arc::new(Artifacts::synthetic_with(seed, model.clone()).unwrap());
+        let cache_numel = model.n_layers * model.h * model.max_ctx * (model.d / model.h);
+        let n_steps = rng.range(3, model.max_ctx.min(10));
+        let steps: Vec<(i32, i32)> = (0..n_steps)
+            .map(|pos| (rng.range(0, model.vocab - 1) as i32, pos as i32))
+            .collect();
+
+        let reference = ReferenceBackend::new(Arc::clone(&artifacts)).unwrap();
+        let packed = PackedBackend::new(Arc::clone(&artifacts)).unwrap();
+        for block_len in [1usize, 3, 5, 0, model.max_ctx] {
+            let layout = CacheLayout::with_block_len(&model, block_len);
+            let mut arena = CacheArena::with_sessions(layout, 4).unwrap();
+            assert_session_matches_oracle(
+                &reference,
+                &mut arena,
+                &|kc, vc, t, p| reference.decode_step_contiguous(kc, vc, t, p).unwrap(),
+                cache_numel,
+                &steps,
+                &format!("seed {seed} bl {block_len} reference"),
+            );
+            assert_session_matches_oracle(
+                &packed,
+                &mut arena,
+                &|kc, vc, t, p| packed.decode_step_contiguous(kc, vc, t, p).unwrap(),
+                cache_numel,
+                &steps,
+                &format!("seed {seed} bl {block_len} packed"),
+            );
+        }
+    }
+}
+
+#[test]
+fn ragged_decode_batch_matches_oracle_lanes() {
+    // Lanes at mixed positions in ONE decode_batch call: each lane must
+    // match its own oracle continuation exactly — logits and caches.
+    for (kind, label) in [(BackendKind::Reference, "reference"), (BackendKind::Packed, "packed")]
+    {
+        let artifacts = Artifacts::synthetic(77).unwrap();
+        let model = artifacts.manifest.model.clone();
+        let cache_numel = model.n_layers * model.h * model.max_ctx * (model.d / model.h);
+        let engine = Engine::load_with_arena(artifacts.clone(), kind, 3, 64).unwrap();
+        let oracle_backend = ReferenceBackend::new(Arc::new(artifacts)).unwrap();
+        // (The packed oracle is bitwise-equal to the reference oracle by
+        // PR 3's guarantee, so one oracle serves both engines.)
+
+        // Three lanes, advanced to ragged depths first.
+        let prefixes: [&[i32]; 3] = [&[1, 2, 3], &[9], &[]];
+        let mut handles: Vec<CacheHandle> = Vec::new();
+        let mut oracles: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for prefix in prefixes {
+            let s = engine.new_session().unwrap();
+            let (mut kc, mut vc) = (vec![0.0f32; cache_numel], vec![0.0f32; cache_numel]);
+            for (pos, &t) in prefix.iter().enumerate() {
+                engine.decode_step(s, t, pos as i32).unwrap();
+                oracle_backend
+                    .decode_step_contiguous(&mut kc, &mut vc, t, pos as i32)
+                    .unwrap();
+            }
+            handles.push(s);
+            oracles.push((kc, vc));
+        }
+        // One ragged batch over all three lanes.
+        let tokens = [4i32, 8, 2];
+        let positions: Vec<i32> = prefixes.iter().map(|p| p.len() as i32).collect();
+        let outs = engine.decode_batch(&handles, &tokens, &positions).unwrap();
+        for (i, ((s, (kc, vc)), out)) in handles
+            .iter()
+            .zip(oracles.iter_mut())
+            .zip(&outs)
+            .enumerate()
+        {
+            let want = oracle_backend
+                .decode_step_contiguous(kc, vc, tokens[i], positions[i])
+                .unwrap();
+            assert_eq!(out, &want, "{label} lane {i}: batched logits");
+            assert_eq!(
+                engine.gather_session(*s).unwrap(),
+                (kc.clone(), vc.clone()),
+                "{label} lane {i}: batched caches"
+            );
+        }
+    }
+}
+
+#[test]
+fn evict_and_reprefill_is_bitwise_deterministic() {
+    // The continuous scheduler's preemption path in miniature: run a
+    // session, free it (evict), replay the same tokens into a fresh
+    // session (re-prefill), and continue — logits must be bitwise
+    // identical to the oracle's uninterrupted run at every step, and
+    // the final caches must match too.
+    for (kind, label) in [(BackendKind::Reference, "reference"), (BackendKind::Packed, "packed")]
+    {
+        let artifacts = Artifacts::synthetic(123).unwrap();
+        let model = artifacts.manifest.model.clone();
+        let cache_numel = model.n_layers * model.h * model.max_ctx * (model.d / model.h);
+        let engine = Engine::load_with_arena(artifacts.clone(), kind, 4, 16).unwrap();
+        let oracle_backend = ReferenceBackend::new(Arc::new(artifacts)).unwrap();
+        let full_free = engine.arena_status().free_blocks;
+
+        let tokens = [5i32, 2, 9, 14, 3, 3, 8, 1, 0, 11];
+        let split = 6usize; // evict after this many tokens
+
+        // Oracle: uninterrupted run, recording logits per step.
+        let (mut kc, mut vc) = (vec![0.0f32; cache_numel], vec![0.0f32; cache_numel]);
+        let oracle_logits: Vec<Vec<f32>> = tokens
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| {
+                oracle_backend
+                    .decode_step_contiguous(&mut kc, &mut vc, t, pos as i32)
+                    .unwrap()
+            })
+            .collect();
+
+        // Paged: run to `split`, evict, re-prefill from scratch, finish.
+        let s1 = engine.new_session().unwrap();
+        for (pos, &t) in tokens[..split].iter().enumerate() {
+            let got = engine.decode_step(s1, t, pos as i32).unwrap();
+            assert_eq!(got, oracle_logits[pos], "{label}: pre-evict pos {pos}");
+        }
+        engine.free_session(s1).unwrap();
+        assert_eq!(
+            engine.arena_status().free_blocks,
+            full_free,
+            "{label}: eviction must return every block"
+        );
+        let s2 = engine.new_session().unwrap();
+        for (pos, &t) in tokens.iter().enumerate() {
+            let got = engine.decode_step(s2, t, pos as i32).unwrap();
+            assert_eq!(got, oracle_logits[pos], "{label}: post-evict pos {pos}");
+        }
+        assert_eq!(
+            engine.gather_session(s2).unwrap(),
+            (kc, vc),
+            "{label}: caches after re-prefill"
+        );
+        engine.free_session(s2).unwrap();
+    }
+}
+
+#[test]
+fn continuous_serving_matches_fifo_under_forced_preemption() {
+    // End-to-end acceptance: on an arena too small for the concurrent
+    // worst case, the continuous policy must preempt and STILL produce
+    // exactly the tokens FIFO produces on a roomy engine — on both host
+    // backends.
+    let mut rng = Rng::new(0xC0FFEE);
+    let requests: Vec<Request> = (0..7u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..rng.range(1, 5))
+                .map(|_| rng.range(1, 60) as i32)
+                .collect(),
+            n_new: rng.range(4, 10),
+        })
+        .collect();
+    for kind in [BackendKind::Reference, BackendKind::Packed] {
+        let roomy = Engine::load_with(Artifacts::synthetic(9).unwrap(), kind).unwrap();
+        let fifo = Server::new(&roomy, Policy::Fifo).serve(requests.clone()).unwrap();
+        let tight =
+            Engine::load_with_arena(Artifacts::synthetic(9).unwrap(), kind, 4, 9).unwrap();
+        let out = Server::new(&tight, Policy::Continuous { max_active: 7 })
+            .serve(requests.clone())
+            .unwrap();
+        assert_eq!(out.len(), requests.len());
+        assert!(
+            out.iter().map(|r| r.evictions).sum::<u32>() > 0,
+            "{kind:?}: the 9-block arena must force preemption"
+        );
+        for f in &fifo {
+            let c = out.iter().find(|c| c.id == f.id).unwrap();
+            assert_eq!(f.tokens, c.tokens, "{kind:?} request {}", f.id);
+        }
+        // No leaks across the whole serve.
+        let st = tight.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}");
+    }
+}

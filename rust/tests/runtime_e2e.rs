@@ -146,9 +146,11 @@ fn logits_are_stable_across_engine_instances() {
     // Two engines built from the same artifacts must agree bitwise.
     let e1 = engine();
     let e2 = engine();
-    let o1 = e1.decode_step(e1.empty_caches().unwrap(), 42, 0).unwrap();
-    let o2 = e2.decode_step(e2.empty_caches().unwrap(), 42, 0).unwrap();
-    assert_eq!(o1.logits, o2.logits);
+    let s1 = e1.new_session().unwrap();
+    let s2 = e2.new_session().unwrap();
+    let o1 = e1.decode_step(s1, 42, 0).unwrap();
+    let o2 = e2.decode_step(s2, 42, 0).unwrap();
+    assert_eq!(o1, o2);
 }
 
 #[test]
@@ -172,8 +174,9 @@ fn out_of_range_token_still_safe() {
     // not crash the engine (XLA clamps gather indices; the reference
     // backend mirrors that).
     let e = engine();
-    let out = e.decode_step(e.empty_caches().unwrap(), (e.vocab() as i32) + 500, 0);
-    if let Ok(o) = out {
-        assert!(o.logits.iter().all(|x| x.is_finite()));
+    let s = e.new_session().unwrap();
+    let out = e.decode_step(s, (e.vocab() as i32) + 500, 0);
+    if let Ok(logits) = out {
+        assert!(logits.iter().all(|x| x.is_finite()));
     }
 }

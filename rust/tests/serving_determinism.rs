@@ -73,6 +73,46 @@ fn threaded_batched_byte_identical_across_10_runs() {
 }
 
 #[test]
+fn threaded_continuous_byte_identical_across_10_runs() {
+    let golden = run_threaded(Policy::Continuous { max_active: 3 });
+    assert_eq!(golden.len(), mixed_requests().len());
+    for run in 1..RUNS {
+        assert_eq!(
+            golden,
+            run_threaded(Policy::Continuous { max_active: 3 }),
+            "continuous run {run} diverged"
+        );
+    }
+}
+
+#[test]
+fn continuous_under_preemption_byte_identical_across_runs() {
+    // A deliberately tight arena (block_len 4, 8 blocks) so the
+    // continuous scheduler preempts mid-run: evict -> requeue ->
+    // re-prefill must be deterministic, token-for-token, every time.
+    let run = || {
+        let engine = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            pim_llm::runtime::BackendKind::Reference,
+            4,
+            8,
+        )
+        .unwrap();
+        let out = pim_llm::serving::Server::new(&engine, Policy::Continuous { max_active: 6 })
+            .serve(mixed_requests())
+            .unwrap();
+        let mut streams = token_streams(&out);
+        streams.sort_by_key(|(id, _)| *id);
+        streams
+    };
+    let golden = run();
+    assert_eq!(golden.len(), mixed_requests().len());
+    for r in 1..RUNS {
+        assert_eq!(golden, run(), "tight-arena continuous run {r} diverged");
+    }
+}
+
+#[test]
 fn schedulers_and_worker_counts_agree_on_the_mixed_set() {
     // Same tokens whatever the worker count or scheduler — determinism
     // is a property of the numerics, not the deployment shape.
@@ -82,6 +122,7 @@ fn schedulers_and_worker_counts_agree_on_the_mixed_set() {
             Policy::Fifo,
             Policy::RoundRobin { max_active: 4 },
             Policy::Batched { batch: 4 },
+            Policy::Continuous { max_active: 4 },
         ] {
             let out = serve_threaded_policy(
                 || Engine::load(Artifacts::synthetic(SEED)?),
