@@ -36,6 +36,7 @@ cargo test -q --offline --test packed_equivalence
 cargo test -q --offline --test batch_equivalence
 cargo test -q --offline --test paged_equivalence
 cargo test -q --offline --test kvcache_properties
+cargo test -q --offline --test prefix_equivalence
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -58,6 +59,18 @@ cargo run -q --release --offline --bin repro -- serve --backend reference \
 cargo run -q --release --offline --bin repro -- serve --backend packed \
   --policy continuous --requests 6 --prompt-len 4 --new-tokens 16 \
   --max-active 6 --arena-blocks 8
+
+echo "== smoke: copy-on-write prefix cache under arena pressure =="
+# The prefix cache on BOTH host backends against a deliberately tight
+# arena (10 requests sharing a 6-token system prefix, 10 blocks of 4
+# positions), so the shared-block preemption path — reclaim index pins,
+# preempt a sharer, re-admit and re-share — executes end to end in CI.
+cargo run -q --release --offline --bin repro -- serve --backend reference \
+  --policy continuous --prefix-cache --requests 10 --prompt-len 12 \
+  --new-tokens 8 --max-active 8 --arena-blocks 10 --block-len 4
+cargo run -q --release --offline --bin repro -- serve --backend packed \
+  --policy continuous --prefix-cache --requests 10 --prompt-len 12 \
+  --new-tokens 8 --max-active 8 --arena-blocks 10 --block-len 4
 
 echo "== bench + example targets compile (offline) =="
 cargo build --benches --offline

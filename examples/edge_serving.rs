@@ -18,10 +18,17 @@
 //! (0 = defaults) — a small arena is what makes `continuous` show its
 //! packing advantage (and its preemptions) on this tiny model.
 //!
+//! Prefix sharing: `--prefix-cache` (with optional `--prefix-cap E`)
+//! turns on the copy-on-write prefix cache — every request here shares
+//! one system prompt over the first half of its tokens, so matched
+//! prefill positions are served from cached blocks instead of being
+//! re-decoded, with bit-identical tokens (asserted below against the
+//! cache-off run).
+//!
 //! Run: `cargo run --release --example edge_serving -- \
 //!        --requests 32 --prompt-len 8 --new-tokens 16 --batch 8 \
 //!        [--policy continuous --arena-blocks 24] \
-//!        [--backend reference|packed]`
+//!        [--prefix-cache] [--backend reference|packed]`
 
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{token_loop, Arch};
@@ -47,6 +54,8 @@ fn main() -> Result<()> {
     let policy = Policy::from_flags(args.get("policy"), batch, max_active)?;
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
     let block_len = args.usize_or("block-len", 0)?;
+    let prefix_cache = args.flag("prefix-cache");
+    let prefix_cap = args.usize_or("prefix-cap", 0)?;
 
     // ----------------------------------------------------------------
     // Functional serving on the runtime backend (`--backend packed`
@@ -58,25 +67,39 @@ fn main() -> Result<()> {
         block_len,
         arena_blocks,
     )?;
+    if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
+        println!(
+            "note: backend {} cannot share arena blocks — prefix cache off",
+            engine.backend_name()
+        );
+    }
     let arena = engine.arena_status();
     println!(
         "engine up: backend={} platform={} tiny-1bit d={} ({} layers), policy={policy:?}, \
-         KV arena {} blocks x {} positions",
+         KV arena {} blocks x {} positions, prefix cache {}",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.n_layers,
         arena.total_blocks,
-        arena.block_len
+        arena.block_len,
+        if engine.prefix_enabled() { "on" } else { "off" }
     );
 
+    // One shared system prompt over the first half of every request's
+    // tokens (the prefix cache's target shape), per-request tail after.
     let mut rng = Rng::new(7);
     let vocab = engine.vocab();
+    let system: Vec<i32> = (0..prompt_len / 2)
+        .map(|_| rng.range(1, vocab - 1) as i32)
+        .collect();
     let requests: Vec<Request> = (0..n_requests as u64)
         .map(|id| Request {
             id,
-            prompt: (0..prompt_len)
-                .map(|_| rng.range(1, vocab - 1) as i32)
+            prompt: system
+                .iter()
+                .copied()
+                .chain((system.len()..prompt_len).map(|_| rng.range(1, vocab - 1) as i32))
                 .collect(),
             n_new: new_tokens,
         })
@@ -110,11 +133,34 @@ fn main() -> Result<()> {
         stats.mean_queue_s, stats.p95_queue_s
     );
     println!("  preemptions      : {}", stats.evictions);
+    if let Some(ps) = engine.prefix_stats() {
+        println!("  {}", ps.report());
+    }
 
     // All responses complete and deterministic per prompt.
     assert!(responses
         .iter()
         .all(|r| r.tokens.len() == prompt_len + new_tokens));
+
+    // The prefix cache is a pure scheduling/storage optimization: the
+    // tokens must be identical to a cache-off run of the same workload.
+    if engine.prefix_enabled() {
+        let off = Engine::load_default_with_arena(
+            BackendKind::resolve(args.backend())?,
+            block_len,
+            arena_blocks,
+        )?;
+        let cold = Server::new(&off, policy).serve(requests.clone())?;
+        for r in &responses {
+            let c = cold.iter().find(|c| c.id == r.id).expect("same ids");
+            assert_eq!(r.tokens, c.tokens, "prefix cache must not change tokens");
+        }
+        println!(
+            "  prefix cache saved {} of {} prompt tokens (identical tokens verified)",
+            stats.cached_tokens,
+            n_requests * prompt_len
+        );
+    }
 
     // Show the scheduling win over a baseline on the same workload —
     // same tokens, different batching regime: batched amortizes one

@@ -34,13 +34,23 @@ SUBCOMMANDS
   serve      --requests N --prompt-len P --new-tokens T [--batch B | --max-active A]
              [--policy fifo|rr|batched|continuous]
              [--arena-blocks K] [--block-len L]
+             [--prefix-cache] [--prefix-cap E]
              [--backend reference|packed|pjrt]
              (--policy continuous admits/retires sessions every tick
               against the paged KV-cache arena, preempting under
               pressure; batched reserves worst-case blocks per request
               and advances fixed lanes. Without --policy, --batch B > 0
               selects batched, else round-robin. --arena-blocks /
-              --block-len size the KV arena; 0 = defaults)
+              --block-len size the KV arena; 0 = defaults.
+              --prefix-cache shares identical prompt prefixes across
+              requests via copy-on-write cache blocks — matched prefill
+              positions are skipped with bit-identical outputs;
+              --prefix-cap bounds the index, 0 = default. The generated
+              workload gives every request a common system prefix over
+              the first half of its prompt, and without an explicit
+              --block-len the block length defaults to that prefix
+              length (the index caches whole blocks only), so hits
+              actually occur)
   validate   [--backend reference|packed|pjrt]
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
 
@@ -192,29 +202,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // KV-cache arena geometry (0 = defaults); small --arena-blocks is
     // how to see the continuous policy's preemption path live.
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
-    let block_len = args.usize_or("block-len", 0)?;
+    let prefix_cache = args.flag("prefix-cache");
+    let prefix_cap = args.usize_or("prefix-cap", 0)?;
+    // Without an explicit --block-len, --prefix-cache sizes blocks to
+    // the workload's shared system prefix (the first half of each
+    // prompt): the index only caches FULL blocks, so the default
+    // 16-position block would swallow a short prompt whole and the
+    // advertised hits could never occur.
+    let block_len = match args.get("block-len") {
+        Some(_) => args.usize_or("block-len", 0)?,
+        None if prefix_cache => (prompt_len / 2).clamp(1, 16),
+        None => 0,
+    };
 
     let engine = Engine::load_default_with_arena(
         BackendKind::resolve(args.backend())?,
         block_len,
         arena_blocks,
     )?;
+    if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
+        println!(
+            "note: backend {} keeps contiguous private caches — prefix \
+             sharing unavailable, serving with full prefill",
+            engine.backend_name()
+        );
+    }
     let arena = engine.arena_status();
     println!(
         "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?} \
-         arena={} blocks x {} positions",
+         arena={} blocks x {} positions prefix_cache={}",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.n_layers,
         arena.total_blocks,
-        arena.block_len
+        arena.block_len,
+        engine.prefix_enabled()
     );
+    // The first half of every prompt is a COMMON system prefix (id-
+    // independent), the second half is per-request — the shape the
+    // prefix cache is built for; without --prefix-cache it is simply a
+    // fixed workload.
     let reqs: Vec<Request> = (0..requests as u64)
         .map(|id| Request {
             id,
             prompt: (0..prompt_len)
-                .map(|i| ((id as usize * 31 + i * 7) % 255 + 1) as i32)
+                .map(|i| {
+                    if i < prompt_len / 2 {
+                        ((i * 7) % 255 + 1) as i32
+                    } else {
+                        ((id as usize * 31 + i * 7) % 255 + 1) as i32
+                    }
+                })
                 .collect(),
             n_new: new_tokens,
         })
@@ -229,6 +268,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.n, stats.total_tokens, wall, stats.mean_service_s
     );
     println!("  {}", stats.report());
+    if let Some(ps) = engine.prefix_stats() {
+        println!(
+            "  {} | {} entries live",
+            ps.report(),
+            engine.prefix_entries()
+        );
+    }
     Ok(())
 }
 

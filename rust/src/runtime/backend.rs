@@ -68,6 +68,17 @@ pub trait Backend {
         }
     }
 
+    /// Whether this backend's decode path reads K/V through the arena's
+    /// block tables, so a session can adopt shared (copy-on-write)
+    /// prefix blocks and skip the matched prefill positions. The host
+    /// backends do; backends with private contiguous caches (PJRT's
+    /// device buffers) override this to `false`, and the engine then
+    /// never offers them prefix sharing — they fall back to full
+    /// prefill, which is always correct.
+    fn supports_prefix_sharing(&self) -> bool {
+        true
+    }
+
     /// Whether decoding the session at position `pos` would claim a
     /// cache block it does not yet hold — the serving layer's arena
     /// pressure signal. Backends whose caches are not arena blocks

@@ -23,6 +23,7 @@
 use super::artifacts::Artifacts;
 use super::backend::Backend;
 use super::kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
+use super::prefixcache::{PrefixCache, PrefixStats};
 use crate::util::error::{Context, Result};
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -104,6 +105,9 @@ pub struct Engine {
     pub artifacts: Arc<Artifacts>,
     backend: Box<dyn Backend>,
     arena: RefCell<CacheArena>,
+    /// Copy-on-write prefix index over the arena, off until
+    /// [`Engine::enable_prefix_cache`] (the `--prefix-cache` knob).
+    prefix: RefCell<Option<PrefixCache>>,
 }
 
 impl Engine {
@@ -153,6 +157,7 @@ impl Engine {
             artifacts,
             backend,
             arena: RefCell::new(arena),
+            prefix: RefCell::new(None),
         })
     }
 
@@ -289,6 +294,179 @@ impl Engine {
     /// surface for the paged-vs-contiguous equivalence suites.
     pub fn gather_session(&self, handle: CacheHandle) -> Result<(Vec<f32>, Vec<f32>)> {
         self.arena.borrow().gather_contiguous(handle)
+    }
+
+    /// Cache positions per arena block.
+    pub fn block_len(&self) -> usize {
+        self.arena.borrow().layout().block_len
+    }
+
+    /// Run the arena's full invariant check (refcount accounting, free
+    /// list, pins) — test/diagnostic surface.
+    pub fn debug_validate(&self) -> Result<()> {
+        self.arena.borrow().debug_validate()
+    }
+
+    // ---- copy-on-write prefix cache --------------------------------
+
+    /// Switch on the prefix cache, bounded at `cap_entries` cached
+    /// blocks (`0` = [`super::prefixcache::DEFAULT_PREFIX_CAP`]).
+    /// Returns whether it is actually active: backends whose decode
+    /// path cannot read adopted arena blocks (PJRT's contiguous device
+    /// shim) report no support and the engine stays cache-less — every
+    /// request simply runs its full prefill, which is always correct.
+    /// Re-enabling replaces the index: the old one is cleared first
+    /// (every pin released), so its blocks return to the pool instead
+    /// of leaking behind an unreachable index.
+    pub fn enable_prefix_cache(&self, cap_entries: usize) -> bool {
+        if !self.backend.supports_prefix_sharing() {
+            return false;
+        }
+        let block_len = self.block_len();
+        let mut prefix = self.prefix.borrow_mut();
+        if let Some(old) = prefix.as_mut() {
+            old.clear(&mut self.arena.borrow_mut())
+                .expect("clearing prefix index: pin accounting corrupt");
+        }
+        *prefix = Some(PrefixCache::new(block_len, cap_entries));
+        true
+    }
+
+    /// Whether the prefix cache is active.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.borrow().is_some()
+    }
+
+    /// FULL index blocks the current index would let `prompt` adopt —
+    /// shared references that consume no free blocks, so admission can
+    /// subtract them from a request's worst-case free-block need
+    /// before reclaiming or gating. Touches the matched chain's LRU
+    /// stamps, so a reclaim that immediately follows evicts everything
+    /// ELSE first — the chain about to be adopted survives. Returns 0
+    /// with the cache off.
+    pub fn prefix_peek_blocks(&self, prompt: &[i32]) -> usize {
+        self.prefix
+            .borrow_mut()
+            .as_mut()
+            .map_or(0, |pc| pc.lookup(prompt).full_blocks.len())
+    }
+
+    /// Consult the prefix index for `prompt` and adopt the matched
+    /// blocks into the (freshly opened, still block-less) session: full
+    /// blocks are shared read-only; a partially matched tail block is
+    /// shared and immediately copied ([`CacheArena::cow_block`], the
+    /// matched rows kept) so the session's first write cannot touch the
+    /// donor. Returns the number of positions whose prefill decode the
+    /// caller may skip — the session's cache state at that point is
+    /// bitwise what cold prefill would have produced. Always `0` when
+    /// the cache is disabled. The eager tail copy consumes one free
+    /// block; if none is available the tail is skipped (the full-block
+    /// match still stands), so adoption never fails for lack of
+    /// capacity.
+    pub fn prefix_adopt(&self, handle: CacheHandle, prompt: &[i32]) -> Result<usize> {
+        let mut prefix = self.prefix.borrow_mut();
+        let Some(pc) = prefix.as_mut() else {
+            return Ok(0);
+        };
+        let mut arena = self.arena.borrow_mut();
+        crate::ensure!(
+            arena.session_blocks(handle)? == 0,
+            "prefix adoption requires a fresh session (it holds blocks)"
+        );
+        let m = pc.lookup(prompt);
+        let mut adopted = 0usize;
+        if !m.full_blocks.is_empty() {
+            arena.share_blocks(handle, &m.full_blocks)?;
+            adopted = m.full_blocks.len() * arena.layout().block_len;
+        }
+        if let Some((tail, rows)) = m.tail {
+            if arena.status().free_blocks > 0 {
+                arena.share_blocks(handle, &[tail])?;
+                arena.cow_block(handle, m.full_blocks.len(), rows)?;
+                adopted += rows;
+            }
+        }
+        if adopted > 0 {
+            pc.stats.hits += 1;
+            pc.stats.saved_tokens += adopted;
+        } else {
+            pc.stats.misses += 1;
+        }
+        Ok(adopted)
+    }
+
+    /// Record a finished prefill in the prefix index: the session's
+    /// blocks covering whole groups of `prompt` are pinned and keyed by
+    /// their tokens (existing entries are reused — contents are bitwise
+    /// identical by decode determinism). CONTRACT: the session must
+    /// have decoded (or adopted) at least all of `prompt`, so those
+    /// blocks are fully written. No-op while the cache is disabled.
+    pub fn prefix_insert(&self, handle: CacheHandle, prompt: &[i32]) -> Result<()> {
+        let mut prefix = self.prefix.borrow_mut();
+        let Some(pc) = prefix.as_mut() else {
+            return Ok(());
+        };
+        let mut arena = self.arena.borrow_mut();
+        let block_len = arena.layout().block_len;
+        let full = prompt.len() / block_len;
+        if full == 0 {
+            return Ok(());
+        }
+        let table = arena.session_table(handle)?;
+        crate::ensure!(
+            table.len() >= full,
+            "prefix insert: session holds {} blocks, prompt needs {full}",
+            table.len()
+        );
+        pc.insert(&mut arena, &prompt[..full * block_len], &table[..full])
+    }
+
+    /// Roll back the hit/miss/saved counters of an adoption whose
+    /// admission was abandoned before any decode happened (the serving
+    /// loop's deferred-admission path frees the session and requeues
+    /// the request, which will adopt — and count — again on retry).
+    /// Keeps engine-level [`PrefixStats`] equal to the sum of
+    /// response-level `cached_tokens`. `adopted` is what the rolled-back
+    /// `prefix_adopt` returned. No-op with the cache off.
+    pub fn prefix_unrecord(&self, adopted: usize) {
+        if let Some(pc) = self.prefix.borrow_mut().as_mut() {
+            if adopted > 0 {
+                pc.stats.hits = pc.stats.hits.saturating_sub(1);
+                pc.stats.saved_tokens = pc.stats.saved_tokens.saturating_sub(adopted);
+            } else {
+                pc.stats.misses = pc.stats.misses.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Evict least-recently-used prefix entries (unpinning their
+    /// blocks) until at least `want_free` arena blocks are free or the
+    /// index is empty — how the serving layer turns index pins back
+    /// into schedulable capacity under pressure. Returns blocks freed.
+    pub fn prefix_reclaim(&self, want_free: usize) -> Result<usize> {
+        let mut prefix = self.prefix.borrow_mut();
+        let Some(pc) = prefix.as_mut() else {
+            return Ok(0);
+        };
+        pc.reclaim(&mut self.arena.borrow_mut(), want_free)
+    }
+
+    /// Effectiveness counters of the prefix cache (None when disabled).
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        self.prefix.borrow().as_ref().map(|pc| pc.stats)
+    }
+
+    /// Live entries (pinned blocks) in the prefix index.
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.borrow().as_ref().map_or(0, |pc| pc.len())
+    }
+
+    /// Blocks a serving loop restricted to `handles` could ever obtain:
+    /// free blocks plus blocks held only by those sessions and/or
+    /// reclaimable prefix pins — shared blocks counted once. See
+    /// [`CacheArena::obtainable_with`].
+    pub fn obtainable_blocks(&self, handles: &[CacheHandle]) -> usize {
+        self.arena.borrow().obtainable_with(handles)
     }
 
     pub fn vocab(&self) -> usize {
@@ -456,6 +634,122 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!((l2 - g.first_logits_l2).abs() / g.first_logits_l2 < 1e-4);
+    }
+
+    #[test]
+    fn prefix_adoption_skips_prefill_bitwise() {
+        // Engine-level smoke of the COW prefix cache (the full sweep is
+        // tests/prefix_equivalence.rs): a donor prefills and indexes a
+        // prompt; an adopter skips the matched positions and must land
+        // on bitwise-identical logits and caches.
+        let e = Engine::load_with_arena(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            32,
+        )
+        .unwrap();
+        assert!(!e.prefix_enabled());
+        assert!(e.enable_prefix_cache(0));
+        assert!(e.prefix_enabled());
+
+        let prompt = [3i32, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let donor = e.new_session().unwrap();
+        let mut donor_logits = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            donor_logits.push(e.decode_step(donor, t, pos as i32).unwrap());
+        }
+        e.prefix_insert(donor, &prompt).unwrap();
+        assert_eq!(e.prefix_entries(), 2); // 8 of 10 tokens = 2 full blocks
+
+        // Adoption matches the two cached full blocks (the index holds
+        // only full blocks, so the partial 3rd block is re-decoded).
+        let s = e.new_session().unwrap();
+        let skipped = e.prefix_adopt(s, &prompt).unwrap();
+        assert_eq!(skipped, 8);
+        for (pos, &t) in prompt.iter().enumerate().skip(skipped) {
+            assert_eq!(
+                e.decode_step(s, t, pos as i32).unwrap(),
+                donor_logits[pos],
+                "adopted decode diverged at pos {pos}"
+            );
+        }
+        assert_eq!(
+            e.gather_session(s).unwrap(),
+            e.gather_session(donor).unwrap(),
+            "adopted caches must be bitwise the cold-prefill caches"
+        );
+        let stats = e.prefix_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses, stats.saved_tokens), (1, 0, 8));
+
+        // Freeing the donor keeps the indexed blocks alive (pins).
+        e.free_session(donor).unwrap();
+        e.debug_validate().unwrap();
+        let s2 = e.new_session().unwrap();
+        assert_eq!(e.prefix_adopt(s2, &prompt).unwrap(), 8);
+        e.free_session(s).unwrap();
+        e.free_session(s2).unwrap();
+        // Reclaim empties the index and returns the pinned blocks.
+        e.prefix_reclaim(usize::MAX).unwrap();
+        assert_eq!(e.prefix_entries(), 0);
+        let st = e.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks);
+        e.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn re_enabling_prefix_cache_releases_old_pins() {
+        // Swapping in a new index (resize/reset) must clear the old
+        // one: its pins would otherwise be orphaned — unreachable by
+        // reclaim, permanently stealing arena blocks.
+        let e = Engine::load_with_arena(
+            Artifacts::synthetic(2).unwrap(),
+            BackendKind::Reference,
+            4,
+            16,
+        )
+        .unwrap();
+        assert!(e.enable_prefix_cache(0));
+        let prompt: Vec<i32> = (1..=8).collect();
+        let s = e.new_session().unwrap();
+        for (pos, &t) in prompt.iter().enumerate() {
+            e.decode_step(s, t, pos as i32).unwrap();
+        }
+        e.prefix_insert(s, &prompt).unwrap();
+        e.free_session(s).unwrap();
+        assert_eq!(e.arena_status().pinned_blocks, 2);
+        assert!(e.enable_prefix_cache(8)); // resize: old index cleared
+        assert_eq!(e.arena_status().pinned_blocks, 0);
+        let st = e.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "old pins must be released");
+        assert_eq!(e.prefix_entries(), 0);
+        e.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn prefix_cache_disabled_is_inert() {
+        let e = engine();
+        let s = e.new_session().unwrap();
+        assert_eq!(e.prefix_adopt(s, &[1, 2, 3]).unwrap(), 0);
+        e.decode_step(s, 1, 0).unwrap();
+        e.prefix_insert(s, &[1]).unwrap();
+        assert_eq!(e.prefix_reclaim(4).unwrap(), 0);
+        assert!(e.prefix_stats().is_none());
+    }
+
+    #[test]
+    fn prefix_adoption_requires_a_fresh_session() {
+        let e = engine();
+        e.enable_prefix_cache(0);
+        let donor = e.new_session().unwrap();
+        for (pos, t) in (0..20).enumerate() {
+            e.decode_step(donor, t, pos as i32).unwrap();
+        }
+        let toks: Vec<i32> = (0..20).collect();
+        e.prefix_insert(donor, &toks).unwrap();
+        let s = e.new_session().unwrap();
+        e.decode_step(s, 0, 0).unwrap(); // session already has a block
+        assert!(e.prefix_adopt(s, &toks).is_err());
     }
 
     #[test]

@@ -31,6 +31,22 @@
 //! touching another session's cache. `tests/kvcache_properties.rs`
 //! churns the allocator to pin the no-leak / no-double-free / full-reuse
 //! invariants.
+//!
+//! Sharing (the copy-on-write prefix cache): every block carries a
+//! reference count — the number of live block tables it appears in plus
+//! the number of prefix-index pins ([`CacheArena::pin_block`]) holding
+//! it. A block returns to the free list only when its count reaches
+//! zero, so [`CacheArena::free_session`] on a session that adopted
+//! shared prefix blocks never hands a still-referenced block back.
+//! Sessions adopt matched prefix blocks read-only via
+//! [`CacheArena::share_blocks`]; before the first write into a shared
+//! block it must be made exclusive with [`CacheArena::cow_block`]
+//! (copy-on-write: the matched rows are copied, the rest zeroed so the
+//! block is bitwise what cold prefill would have produced).
+//! [`CacheArena::ensure_capacity`] performs that COW automatically for
+//! the position about to be written, and [`CacheArena::write_kv`]
+//! rejects writes into still-shared blocks, so a backend can never
+//! corrupt another session's (or the prefix index's) cached prefix.
 
 use crate::util::error::{anyhow, ensure, Result};
 
@@ -126,9 +142,15 @@ struct Slot {
 pub struct ArenaStatus {
     pub total_blocks: usize,
     pub free_blocks: usize,
+    /// Blocks referenced by at least one table or pin. A block shared by
+    /// several sessions (or a session and the prefix index) counts ONCE —
+    /// used + free always sums to total.
     pub used_blocks: usize,
     pub block_len: usize,
     pub live_sessions: usize,
+    /// Blocks currently pinned by the prefix index (each counted once,
+    /// however many pins it holds).
+    pub pinned_blocks: usize,
 }
 
 /// The shared block-paged KV-cache pool. K and V live in two flat f32
@@ -141,6 +163,13 @@ pub struct CacheArena {
     v: Vec<f32>,
     /// Free block ids, popped from the back.
     free: Vec<u32>,
+    /// Per-block reference count: table occurrences across live slots
+    /// plus prefix-index pins. 0 == the block is in the free list.
+    refs: Vec<u32>,
+    /// Per-block prefix-index pin count (a subset of `refs`, tracked
+    /// separately so `debug_validate` can balance the refcount equation
+    /// and `obtainable_with` can treat pins as reclaimable).
+    pins: Vec<u32>,
     slots: Vec<Slot>,
     /// Indices of dead slots available for reuse.
     free_slots: Vec<u32>,
@@ -160,6 +189,8 @@ impl CacheArena {
             v: vec![0.0; capacity_blocks * bf],
             // Reversed so blocks are first handed out in 0, 1, 2... order.
             free: (0..capacity_blocks as u32).rev().collect(),
+            refs: vec![0; capacity_blocks],
+            pins: vec![0; capacity_blocks],
             layout,
             slots: Vec::new(),
             free_slots: Vec::new(),
@@ -189,6 +220,7 @@ impl CacheArena {
             used_blocks: self.k.len() / self.layout.block_floats() - self.free.len(),
             block_len: self.layout.block_len,
             live_sessions: self.slots.iter().filter(|s| s.live).count(),
+            pinned_blocks: self.pins.iter().filter(|&&p| p > 0).count(),
         }
     }
 
@@ -249,37 +281,74 @@ impl CacheArena {
         }
     }
 
-    /// Free a session: return its blocks to the pool and invalidate the
-    /// handle (the slot's generation is bumped, so a retained copy of
-    /// `h` errors from now on). Eviction and normal retirement are the
-    /// same operation — an evicted session is simply re-prefilled into
-    /// a fresh session later, which is deterministic.
+    /// Free a session: release its references and invalidate the handle
+    /// (the slot's generation is bumped, so a retained copy of `h`
+    /// errors from now on). A block returns to the free pool only when
+    /// this was its LAST reference — blocks shared with another session
+    /// or pinned by the prefix index stay allocated, which is what makes
+    /// preempting a prefix-sharing session safe. Eviction and normal
+    /// retirement are the same operation — an evicted session is simply
+    /// re-prefilled into a fresh session later, which is deterministic.
     pub fn free_session(&mut self, h: CacheHandle) -> Result<()> {
         self.slot(h)?; // validate first so `free` is untouched on error
         let s = &mut self.slots[h.index as usize];
-        self.free.extend(s.table.drain(..));
+        let table = std::mem::take(&mut s.table);
         s.live = false;
         s.generation = s.generation.wrapping_add(1);
         self.free_slots.push(h.index);
+        for b in table {
+            self.release_ref(b);
+        }
         Ok(())
     }
 
-    /// Ensure the session's table backs position `pos` (and everything
-    /// before it), claiming zeroed blocks from the free list as needed.
-    /// All-or-nothing: if the pool cannot cover the full need, an error
-    /// is returned and NOTHING is claimed — the session's table and the
-    /// free list are untouched, so the serving layer can turn the
-    /// pressure into preemption and simply retry.
+    /// Drop one reference to `b`, returning it to the free list at zero.
+    fn release_ref(&mut self, b: u32) {
+        debug_assert!(self.refs[b as usize] > 0, "releasing unowned block {b}");
+        self.refs[b as usize] -= 1;
+        if self.refs[b as usize] == 0 {
+            self.free.push(b);
+        }
+    }
+
+    /// Pop a free block, zero its storage, and give it one reference.
+    /// Returns `None` when the pool is dry (callers report their own
+    /// context-rich errors).
+    fn claim_zeroed(&mut self) -> Option<u32> {
+        let b = self.free.pop()?;
+        let bf = self.layout.block_floats();
+        let base = b as usize * bf;
+        self.k[base..base + bf].fill(0.0);
+        self.v[base..base + bf].fill(0.0);
+        debug_assert_eq!(self.refs[b as usize], 0);
+        self.refs[b as usize] = 1;
+        Some(b)
+    }
+
+    /// Ensure the session can WRITE position `pos` (with everything
+    /// before it backed): claims zeroed blocks from the free list as
+    /// needed, and — if the block containing `pos` is shared (adopted
+    /// from the prefix cache) — copies it on write
+    /// ([`Self::cow_block`] with the rows before `pos` kept), so the
+    /// caller's subsequent [`Self::write_kv`] lands in an exclusive
+    /// block. All-or-nothing: if the pool cannot cover the full need
+    /// (new blocks plus a possible COW copy), an error is returned and
+    /// NOTHING is claimed — the session's table and the free list are
+    /// untouched, so the serving layer can turn the pressure into
+    /// preemption and simply retry.
     pub fn ensure_capacity(&mut self, h: CacheHandle, pos: usize) -> Result<()> {
         ensure!(
             pos < self.layout.max_ctx,
             "position {pos} >= max_ctx {}",
             self.layout.max_ctx
         );
-        let target = pos / self.layout.block_len + 1;
-        let bf = self.layout.block_floats();
+        let block_len = self.layout.block_len;
+        let target = pos / block_len + 1;
         let held = self.slot(h)?.table.len();
         if target <= held {
+            // Block exists; make it exclusive if a prefix share still
+            // holds it (the COW consumes one free block, checked inside).
+            self.cow_block(h, pos / block_len, pos % block_len)?;
             return Ok(());
         }
         let needed = target - held;
@@ -295,13 +364,152 @@ impl CacheArena {
             );
         }
         for _ in 0..needed {
-            let b = self.free.pop().expect("count checked above");
-            let base = b as usize * bf;
-            self.k[base..base + bf].fill(0.0);
-            self.v[base..base + bf].fill(0.0);
+            let b = self.claim_zeroed().expect("count checked above");
             self.slots[h.index as usize].table.push(b);
         }
         Ok(())
+    }
+
+    /// Adopt already-populated blocks into the session's table, read
+    /// only: each block's reference count is incremented and it is
+    /// appended to the table in order (backing the positions after the
+    /// session's current end). The blocks keep their contents — this is
+    /// how a session inherits a matched prompt prefix without re-running
+    /// a single MAC. Writing into a shared block requires
+    /// [`Self::cow_block`] first ([`Self::ensure_capacity`] does it
+    /// automatically; [`Self::write_kv`] rejects the write otherwise).
+    /// All-or-nothing: validation happens before any refcount changes.
+    pub fn share_blocks(&mut self, h: CacheHandle, blocks: &[u32]) -> Result<()> {
+        let total = self.refs.len();
+        let slot = self.slot(h)?;
+        for (n, &b) in blocks.iter().enumerate() {
+            ensure!((b as usize) < total, "shared block {b} out of range");
+            ensure!(
+                self.refs[b as usize] > 0,
+                "cannot share free block {b} (no live content)"
+            );
+            ensure!(
+                !slot.table.contains(&b) && !blocks[..n].contains(&b),
+                "block {b} already in the session's table"
+            );
+        }
+        for &b in blocks {
+            self.refs[b as usize] += 1;
+            self.slots[h.index as usize].table.push(b);
+        }
+        Ok(())
+    }
+
+    /// Make table entry `block_idx` exclusive to the session via copy on
+    /// write: if the block is shared (refcount > 1), a fresh block is
+    /// claimed, the first `keep_rows` positions of every (layer, head)
+    /// pair are copied, the remaining rows are zeroed (bitwise what cold
+    /// prefill would hold there), and the table entry is repointed —
+    /// the donor keeps its copy untouched. Exclusive blocks are left
+    /// alone. Returns whether a copy happened.
+    pub fn cow_block(
+        &mut self,
+        h: CacheHandle,
+        block_idx: usize,
+        keep_rows: usize,
+    ) -> Result<bool> {
+        let l = self.layout.clone();
+        ensure!(
+            keep_rows <= l.block_len,
+            "keep_rows {keep_rows} > block_len {}",
+            l.block_len
+        );
+        let slot = self.slot(h)?;
+        let Some(&old) = slot.table.get(block_idx) else {
+            crate::bail!(
+                "cow_block: table entry {block_idx} out of range (len {})",
+                slot.table.len()
+            );
+        };
+        if self.refs[old as usize] == 1 {
+            return Ok(false); // already exclusive
+        }
+        let Some(fresh) = self.claim_zeroed() else {
+            let st = self.status();
+            crate::bail!(
+                "KV arena out of blocks for a prefix copy-on-write \
+                 ({} free of {} total) — raise the arena capacity or use \
+                 the continuous policy's preemption",
+                st.free_blocks,
+                st.total_blocks
+            );
+        };
+        let bf = l.block_floats();
+        let (ob, nb) = (old as usize * bf, fresh as usize * bf);
+        for lh in 0..l.n_layers * l.h {
+            let off = lh * l.block_len * l.dh;
+            let n = keep_rows * l.dh;
+            self.k.copy_within(ob + off..ob + off + n, nb + off);
+            self.v.copy_within(ob + off..ob + off + n, nb + off);
+        }
+        self.slots[h.index as usize].table[block_idx] = fresh;
+        self.release_ref(old);
+        Ok(true)
+    }
+
+    /// Add a prefix-index pin to `b`, keeping it alive independent of
+    /// any session table. The block must currently be live (referenced).
+    pub fn pin_block(&mut self, b: u32) -> Result<()> {
+        ensure!((b as usize) < self.refs.len(), "pin: block {b} out of range");
+        ensure!(
+            self.refs[b as usize] > 0,
+            "cannot pin free block {b} (no live content)"
+        );
+        self.refs[b as usize] += 1;
+        self.pins[b as usize] += 1;
+        Ok(())
+    }
+
+    /// Drop one prefix-index pin from `b`; the block returns to the
+    /// free pool if this was its last reference.
+    pub fn unpin_block(&mut self, b: u32) -> Result<()> {
+        ensure!((b as usize) < self.refs.len(), "unpin: block {b} out of range");
+        ensure!(self.pins[b as usize] > 0, "block {b} is not pinned");
+        self.pins[b as usize] -= 1;
+        self.release_ref(b);
+        Ok(())
+    }
+
+    /// Reference count of one block (0 = free). Test/diagnostic surface.
+    pub fn block_refs(&self, b: u32) -> u32 {
+        self.refs.get(b as usize).copied().unwrap_or(0)
+    }
+
+    /// The session's block table (ids in position order) — what the
+    /// prefix index records for a finished prefill.
+    pub fn session_table(&self, h: CacheHandle) -> Result<Vec<u32>> {
+        Ok(self.slot(h)?.table.clone())
+    }
+
+    /// Blocks a serving loop could EVER obtain for a new request: the
+    /// free list plus every block whose references are entirely held by
+    /// the given sessions and/or prefix-index pins (freeing those
+    /// sessions and reclaiming the index would release it). Blocks also
+    /// referenced by a session OUTSIDE `handles` are not counted — they
+    /// are never coming back to this loop. Shared blocks are counted
+    /// once, so this never overstates capacity the way summing
+    /// per-session table lengths would.
+    pub fn obtainable_with(&self, handles: &[CacheHandle]) -> usize {
+        let mut counted = vec![0u32; self.refs.len()];
+        for &h in handles {
+            if let Ok(slot) = self.slot(h) {
+                for &b in &slot.table {
+                    counted[b as usize] += 1;
+                }
+            }
+        }
+        let reclaimable = self
+            .refs
+            .iter()
+            .zip(counted.iter().zip(&self.pins))
+            .filter(|(&r, (&c, &p))| r > 0 && r == c + p)
+            .count();
+        self.free.len() + reclaimable
     }
 
     /// Blocks currently held by the session.
@@ -335,6 +543,13 @@ impl CacheArena {
         let Some(&block) = slot.table.get(bi) else {
             crate::bail!("position {pos} not backed by a block (table len {})", slot.table.len());
         };
+        ensure!(
+            self.refs[block as usize] == 1,
+            "write at position {pos} targets shared block {block} \
+             (refcount {}) — copy-on-write required first (ensure_capacity \
+             does this); writing would corrupt another session's prefix",
+            self.refs[block as usize]
+        );
         let pib = pos % l.block_len;
         let bf = l.block_floats();
         for head in 0..l.h {
@@ -384,17 +599,20 @@ impl CacheArena {
         Ok((kc, vc))
     }
 
-    /// Full-arena invariant check, for the property tests: block
-    /// accounting must balance (every block is in the free list or in
-    /// exactly one live table), dead slots hold nothing, and every table
-    /// entry is a valid block id.
+    /// Full-arena invariant check, for the property tests: refcount
+    /// accounting must balance — every block's reference count equals
+    /// its table occurrences across live slots plus its prefix-index
+    /// pins, blocks with zero references sit in the free list exactly
+    /// once, referenced blocks are never in the free list, dead slots
+    /// hold nothing, and every table entry is a valid block id.
     pub fn debug_validate(&self) -> Result<()> {
         let total = self.k.len() / self.layout.block_floats();
-        let mut seen = vec![0u32; total];
+        let mut in_free = vec![0u32; total];
         for &b in &self.free {
             ensure!((b as usize) < total, "free list holds bogus block {b}");
-            seen[b as usize] += 1;
+            in_free[b as usize] += 1;
         }
+        let mut occurrences = vec![0u32; total];
         for (i, s) in self.slots.iter().enumerate() {
             ensure!(
                 s.live || s.table.is_empty(),
@@ -402,14 +620,20 @@ impl CacheArena {
             );
             for &b in &s.table {
                 ensure!((b as usize) < total, "slot {i} holds bogus block {b}");
-                seen[b as usize] += 1;
+                occurrences[b as usize] += 1;
             }
         }
-        for (b, &n) in seen.iter().enumerate() {
+        for b in 0..total {
+            let (r, t, p, f) = (self.refs[b], occurrences[b], self.pins[b], in_free[b]);
             ensure!(
-                n == 1,
-                "block {b} owned {n} times (must be exactly once: free list or one live table)"
+                r == t + p,
+                "block {b}: refcount {r} != {t} table occurrences + {p} pins"
             );
+            if r == 0 {
+                ensure!(f == 1, "free block {b} in free list {f} times (expect 1)");
+            } else {
+                ensure!(f == 0, "referenced block {b} (refcount {r}) in free list");
+            }
         }
         Ok(())
     }
@@ -631,6 +855,161 @@ mod tests {
         let h2 = a.alloc_session().unwrap();
         assert!(ensure_distinct(&[h1, h2]).is_ok());
         assert!(ensure_distinct(&[h1, h2, h1]).is_err());
+    }
+
+    #[test]
+    fn shared_blocks_return_to_free_only_at_refcount_zero() {
+        // The preemption regression: a session that adopted shared
+        // prefix blocks is freed — the still-referenced blocks must NOT
+        // land in the free list.
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let donor = a.alloc_session().unwrap();
+        a.ensure_capacity(donor, 7).unwrap(); // blocks 0, 1
+        let chain = a.session_table(donor).unwrap();
+        a.pin_block(chain[0]).unwrap(); // prefix index pins block 0
+
+        let s = a.alloc_session().unwrap();
+        a.share_blocks(s, &chain).unwrap();
+        assert_eq!(a.block_refs(chain[0]), 3); // donor + pin + s
+        assert_eq!(a.block_refs(chain[1]), 2); // donor + s
+        let free_before = a.status().free_blocks;
+        a.free_session(s).unwrap(); // preempt the sharer
+        assert_eq!(
+            a.status().free_blocks,
+            free_before,
+            "freeing a sharer must not release still-referenced blocks"
+        );
+        a.debug_validate().unwrap();
+
+        a.free_session(donor).unwrap();
+        // Block 1's last ref was the donor; block 0 is still pinned.
+        assert_eq!(a.status().free_blocks, free_before + 1);
+        assert_eq!(a.block_refs(chain[0]), 1);
+        a.unpin_block(chain[0]).unwrap();
+        assert_eq!(a.status().free_blocks, free_before + 2);
+        assert!(a.unpin_block(chain[0]).is_err(), "double unpin must error");
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn cow_copies_kept_rows_and_zeroes_the_rest() {
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let donor = a.alloc_session().unwrap();
+        for pos in 0..4usize {
+            a.ensure_capacity(donor, pos).unwrap();
+            for layer in 0..2 {
+                let row: Vec<f32> =
+                    (0..4).map(|i| (layer * 100 + pos * 10 + i) as f32).collect();
+                let neg: Vec<f32> = row.iter().map(|x| -x).collect();
+                a.write_kv(donor, layer, pos, &row, &neg).unwrap();
+            }
+        }
+        let chain = a.session_table(donor).unwrap();
+        let s = a.alloc_session().unwrap();
+        a.share_blocks(s, &chain).unwrap();
+        // Copy keeping 2 of 4 rows: rows 0-1 must be the donor's bytes,
+        // rows 2-3 must be zero (cold-prefill state), donor untouched.
+        assert!(a.cow_block(s, 0, 2).unwrap());
+        let (dk, dv) = a.gather_contiguous(donor).unwrap();
+        let (sk, sv) = a.gather_contiguous(s).unwrap();
+        let l = a.layout().clone();
+        for layer in 0..l.n_layers {
+            for head in 0..l.h {
+                for pos in 0..4usize {
+                    let at = ((layer * l.h + head) * l.max_ctx + pos) * l.dh;
+                    if pos < 2 {
+                        assert_eq!(sk[at..at + l.dh], dk[at..at + l.dh]);
+                        assert_eq!(sv[at..at + l.dh], dv[at..at + l.dh]);
+                    } else {
+                        assert!(sk[at..at + l.dh].iter().all(|&x| x == 0.0));
+                        assert!(sv[at..at + l.dh].iter().all(|&x| x == 0.0));
+                    }
+                }
+            }
+        }
+        // The copy made the entry exclusive: a second cow is a no-op.
+        assert!(!a.cow_block(s, 0, 2).unwrap());
+        assert_eq!(a.block_refs(chain[0]), 1); // donor only again
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn writes_into_shared_blocks_are_rejected_until_cow() {
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let donor = a.alloc_session().unwrap();
+        a.ensure_capacity(donor, 3).unwrap();
+        let chain = a.session_table(donor).unwrap();
+        let s = a.alloc_session().unwrap();
+        a.share_blocks(s, &chain).unwrap();
+        // Direct write into the shared block: rejected.
+        assert!(a.write_kv(s, 0, 1, &[1.0; 4], &[1.0; 4]).is_err());
+        // ensure_capacity for a position INSIDE the shared block
+        // performs the COW (keeping the rows before it), unblocking it.
+        a.ensure_capacity(s, 1).unwrap();
+        a.write_kv(s, 0, 1, &[1.0; 4], &[1.0; 4]).unwrap();
+        // The donor still owns the original, unmodified block.
+        let (dk, _) = a.gather_contiguous(donor).unwrap();
+        assert!(dk.iter().all(|&x| x == 0.0));
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn cow_failure_is_all_or_nothing() {
+        // 2-block arena: donor owns both; sharer adopts both; a COW has
+        // no free block to copy into — the error must leave the table,
+        // refcounts and free list untouched.
+        let mut a = CacheArena::new(layout(4), 2).unwrap();
+        let donor = a.alloc_session().unwrap();
+        a.ensure_capacity(donor, 7).unwrap();
+        let chain = a.session_table(donor).unwrap();
+        let s = a.alloc_session().unwrap();
+        a.share_blocks(s, &chain).unwrap();
+        assert!(a.cow_block(s, 0, 2).is_err());
+        assert!(a.ensure_capacity(s, 1).is_err()); // same via the write path
+        assert_eq!(a.session_table(s).unwrap(), chain);
+        assert_eq!(a.block_refs(chain[0]), 2);
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn share_rejects_free_duplicate_and_bogus_blocks() {
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let donor = a.alloc_session().unwrap();
+        a.ensure_capacity(donor, 3).unwrap();
+        let chain = a.session_table(donor).unwrap();
+        let s = a.alloc_session().unwrap();
+        assert!(a.share_blocks(s, &[99]).is_err(), "bogus id");
+        assert!(a.share_blocks(s, &[3]).is_err(), "free block");
+        assert!(
+            a.share_blocks(s, &[chain[0], chain[0]]).is_err(),
+            "duplicate in one call"
+        );
+        a.share_blocks(s, &chain).unwrap();
+        assert!(
+            a.share_blocks(s, &chain).is_err(),
+            "already in the session's table"
+        );
+        // Failed shares left the accounting clean.
+        a.debug_validate().unwrap();
+        // Pinning a free block is rejected too.
+        assert!(a.pin_block(3).is_err());
+    }
+
+    #[test]
+    fn obtainable_counts_shared_blocks_once() {
+        let mut a = CacheArena::new(layout(4), 6).unwrap();
+        let s1 = a.alloc_session().unwrap();
+        a.ensure_capacity(s1, 7).unwrap(); // 2 exclusive blocks
+        let chain = a.session_table(s1).unwrap();
+        let s2 = a.alloc_session().unwrap();
+        a.share_blocks(s2, &chain).unwrap();
+        a.pin_block(chain[0]).unwrap();
+        // 4 free + 2 shared-but-fully-held-by-{s1, s2, pins} = 6.
+        assert_eq!(a.obtainable_with(&[s1, s2]), 6);
+        // With only s2 in the loop, s1's references make both blocks
+        // unobtainable (a naive free + table-len sum would say 6).
+        assert_eq!(a.obtainable_with(&[s2]), 4);
+        assert_eq!(a.obtainable_with(&[]), 4);
     }
 
     #[test]

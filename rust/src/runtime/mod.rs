@@ -8,7 +8,12 @@
 //!   opaque [`CacheHandle`]s, state updated in place through the arena.
 //! * [`kvcache`]   — the block-paged KV-cache arena shared by all
 //!   sessions: fixed-size blocks, per-session block tables,
-//!   alloc/free/evict with generation-checked handles.
+//!   alloc/free/evict with generation-checked handles, and refcounted
+//!   copy-on-write block sharing.
+//! * [`prefixcache`] — token-keyed radix index mapping prompt prefixes
+//!   to chains of cached blocks; sessions adopt matched prefixes
+//!   read-only and skip their prefill decode entirely (bit-identical
+//!   to cold prefill — `tests/prefix_equivalence.rs`).
 //! * [`kernels`]   — the shared dense f32 kernels (quantization,
 //!   RMSNorm/GELU/softmax, `bitlinear`, attention — contiguous oracle
 //!   and paged block-table variants) both host backends execute.
@@ -35,6 +40,7 @@ pub mod kvcache;
 pub mod packed;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod prefixcache;
 pub mod reference;
 
 pub use artifacts::Artifacts;
@@ -42,3 +48,4 @@ pub use backend::Backend;
 pub use decoder::{BatchDecoder, TinyDecoder};
 pub use engine::{BackendKind, Engine};
 pub use kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
+pub use prefixcache::{PrefixCache, PrefixMatch, PrefixStats};

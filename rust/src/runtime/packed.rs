@@ -18,7 +18,9 @@
 //!
 //! Outputs — logits AND KV caches — are bit-for-bit identical to the
 //! reference backend on every path (single step, full generation,
-//! ragged batches, batched and continuous serving);
+//! ragged batches, batched and continuous serving, and decode over
+//! prefix-cache-adopted shared blocks — `tests/prefix_equivalence.rs`
+//! holds this backend to cold-prefill equality too);
 //! `tests/packed_equivalence.rs` enforces it, and
 //! `tests/paged_equivalence.rs` additionally holds this backend's paged
 //! path to its own contiguous oracle

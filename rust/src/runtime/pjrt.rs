@@ -195,6 +195,14 @@ impl Backend for PjrtBackend {
         Ok(())
     }
 
+    fn supports_prefix_sharing(&self) -> bool {
+        // The contiguous device-buffer shim cannot read through arena
+        // block tables, so adopted prefix blocks would never reach the
+        // device caches. Report no support; the engine then skips
+        // adoption and this backend always runs the full prefill.
+        false
+    }
+
     fn session_needs_block(
         &self,
         arena: &CacheArena,

@@ -1,0 +1,505 @@
+//! Token-keyed prefix index over the paged KV-cache arena — the lookup
+//! side of copy-on-write prefix sharing.
+//!
+//! Motivation (the ROADMAP's "millions of users" serving story, and the
+//! system-level-reuse point HPIM and PIM-AI both make): in high-traffic
+//! serving, many requests share a system prompt or few-shot prefix, and
+//! re-running prefill MACs over the shared part is pure waste. This
+//! index maps prompt-token prefixes to chains of FULL, immutable cache
+//! blocks already computed by an earlier session. An admitted request
+//! adopts the matched chain read-only ([`crate::runtime::kvcache::
+//! CacheArena::share_blocks`]) plus — when the match ends mid-block — a
+//! copy-on-write adoption of the partially matched tail block, and its
+//! prefill starts AFTER the matched positions. Because the decode step
+//! is bit-deterministic, the adopted K/V bytes are exactly what cold
+//! prefill would have written, so shared-prefix decode is bit-for-bit
+//! identical to cold decode (`tests/prefix_equivalence.rs` enforces
+//! this on both host backends).
+//!
+//! Structure: a radix trie whose edges are `block_len`-token groups —
+//! one node per cached block, child lists kept in insertion order so
+//! lookup is deterministic. Nodes pin their block in the arena
+//! ([`crate::runtime::kvcache::CacheArena::pin_block`]), which keeps
+//! the chain alive after the producing session retires; eviction (LRU,
+//! leaf-first, driven by the [`PrefixCache::cap`] entry bound or by
+//! [`PrefixCache::reclaim`] under arena pressure) unpins, returning the
+//! block to the free pool once no session shares it. All bookkeeping is
+//! logical (a monotonic clock, no wall time), so serving runs stay
+//! reproducible.
+
+use super::kvcache::CacheArena;
+use crate::util::error::{ensure, Result};
+
+/// Default bound on index entries (cached blocks) when the caller does
+/// not size the index explicitly (`--prefix-cap 0`).
+pub const DEFAULT_PREFIX_CAP: usize = 256;
+
+/// Counters of the prefix cache's effectiveness, reported by
+/// `repro serve --prefix-cache` and the edge-serving example.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Adoptions that reused at least one cached position.
+    pub hits: usize,
+    /// Adoptions that found nothing reusable.
+    pub misses: usize,
+    /// Prompt positions whose prefill decode was skipped entirely.
+    pub saved_tokens: usize,
+    /// Blocks inserted into the index over its lifetime.
+    pub insertions: usize,
+    /// Entries evicted (LRU cap or arena-pressure reclaim).
+    pub evictions: usize,
+}
+
+impl PrefixStats {
+    /// One-line report for the serving CLIs.
+    pub fn report(&self) -> String {
+        format!(
+            "prefix cache: {} hits / {} misses | {} prefill tokens saved \
+             | {} blocks inserted | {} evicted",
+            self.hits, self.misses, self.saved_tokens, self.insertions, self.evictions
+        )
+    }
+}
+
+/// Result of a prefix lookup: the chain of fully matched immutable
+/// blocks, plus (optionally) a partially matched tail block and how many
+/// of its leading positions matched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// Fully matched blocks, in position order — adopt via
+    /// `share_blocks`, never written again.
+    pub full_blocks: Vec<u32>,
+    /// A block whose first `rows` positions match the prompt — adopt
+    /// shared, then `cow_block(.., rows)` before the first write.
+    pub tail: Option<(u32, usize)>,
+    /// Total matched positions: `full_blocks.len() * block_len + rows`.
+    pub positions: usize,
+}
+
+impl PrefixMatch {
+    fn empty() -> Self {
+        PrefixMatch {
+            full_blocks: Vec::new(),
+            tail: None,
+            positions: 0,
+        }
+    }
+}
+
+/// One trie node: a cached block and the `block_len` tokens it covers.
+struct Node {
+    tokens: Vec<i32>,
+    block: u32,
+    /// Logical LRU stamp (monotonic clock, not wall time).
+    last_used: u64,
+    parent: usize,
+    children: Vec<usize>,
+}
+
+/// The trie. Node storage is a slab with a free list; index 0 is the
+/// root sentinel (no block, empty tokens).
+pub struct PrefixCache {
+    block_len: usize,
+    /// Maximum non-root nodes (= pinned blocks) the index may hold.
+    cap: usize,
+    clock: u64,
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    len: usize,
+    pub stats: PrefixStats,
+}
+
+impl PrefixCache {
+    /// Index over blocks of `block_len` positions, bounded at `cap`
+    /// entries (`0` selects [`DEFAULT_PREFIX_CAP`]).
+    pub fn new(block_len: usize, cap: usize) -> Self {
+        let cap = if cap == 0 { DEFAULT_PREFIX_CAP } else { cap };
+        PrefixCache {
+            block_len,
+            cap,
+            clock: 0,
+            nodes: vec![Some(Node {
+                tokens: Vec::new(),
+                block: u32::MAX,
+                last_used: 0,
+                parent: usize::MAX,
+                children: Vec::new(),
+            })],
+            free_nodes: Vec::new(),
+            len: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// Live entries (cached blocks) in the index.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Entry bound the index enforces.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node")
+    }
+
+    fn touch(&mut self, i: usize) {
+        self.clock += 1;
+        self.nodes[i].as_mut().expect("live node").last_used = self.clock;
+    }
+
+    /// Longest cached match for `prompt`, capped at `prompt.len() - 1`
+    /// positions: at least the last prompt token is always decoded so
+    /// the session has logits to generate from. Touches every node on
+    /// the matched path (LRU). Deterministic: children are scanned in
+    /// insertion order and full matches win over partial ones.
+    pub fn lookup(&mut self, prompt: &[i32]) -> PrefixMatch {
+        let usable = prompt.len().saturating_sub(1);
+        let mut m = PrefixMatch::empty();
+        let mut at = 0usize; // root
+        loop {
+            let covered = m.full_blocks.len() * self.block_len;
+            let remaining = &prompt[covered..usable];
+            // A full-block match requires a whole group inside the
+            // usable window.
+            let mut next = None;
+            if remaining.len() >= self.block_len {
+                let group = &prompt[covered..covered + self.block_len];
+                next = self
+                    .node(at)
+                    .children
+                    .iter()
+                    .copied()
+                    .find(|&c| self.node(c).tokens == group);
+            }
+            match next {
+                Some(c) => {
+                    self.touch(c);
+                    m.full_blocks.push(self.node(c).block);
+                    at = c;
+                }
+                None => {
+                    // No full match: the best PARTIAL child match (>= 1
+                    // leading token) becomes the copy-on-write tail.
+                    let limit = remaining.len().min(self.block_len);
+                    let mut best: Option<(usize, usize)> = None; // (node, rows)
+                    for &c in &self.node(at).children {
+                        let rows = self
+                            .node(c)
+                            .tokens
+                            .iter()
+                            .zip(remaining)
+                            .take(limit)
+                            .take_while(|(a, b)| a == b)
+                            .count();
+                        // Strictly-greater keeps the first (oldest
+                        // insertion) on ties — deterministic.
+                        if rows >= 1 && best.map_or(true, |(_, r)| rows > r) {
+                            best = Some((c, rows));
+                        }
+                    }
+                    if let Some((c, rows)) = best {
+                        self.touch(c);
+                        m.tail = Some((self.node(c).block, rows));
+                        m.positions = m.full_blocks.len() * self.block_len + rows;
+                    } else {
+                        m.positions = m.full_blocks.len() * self.block_len;
+                    }
+                    return m;
+                }
+            }
+        }
+    }
+
+    /// Record a finished prefill: `tokens` must cover whole blocks
+    /// (`blocks.len() * block_len` tokens) that are FULLY WRITTEN in the
+    /// arena — the caller (the serving loop, once a session's prefill
+    /// completes) guarantees this. Existing nodes are reused (their
+    /// pinned block has bitwise-identical content, decode being
+    /// deterministic); new nodes pin their block. Enforces the LRU cap
+    /// afterwards.
+    pub fn insert(
+        &mut self,
+        arena: &mut CacheArena,
+        tokens: &[i32],
+        blocks: &[u32],
+    ) -> Result<()> {
+        ensure!(
+            tokens.len() == blocks.len() * self.block_len,
+            "prefix insert: {} tokens does not cover {} blocks of {} positions",
+            tokens.len(),
+            blocks.len(),
+            self.block_len
+        );
+        let mut at = 0usize;
+        for (group, &block) in tokens.chunks(self.block_len).zip(blocks) {
+            let existing = self
+                .node(at)
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.node(c).tokens == group);
+            at = match existing {
+                Some(c) => c,
+                None => {
+                    arena.pin_block(block)?;
+                    let node = Node {
+                        tokens: group.to_vec(),
+                        block,
+                        last_used: 0,
+                        parent: at,
+                        children: Vec::new(),
+                    };
+                    let idx = match self.free_nodes.pop() {
+                        Some(i) => {
+                            self.nodes[i] = Some(node);
+                            i
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    self.nodes[at].as_mut().expect("live node").children.push(idx);
+                    self.len += 1;
+                    self.stats.insertions += 1;
+                    idx
+                }
+            };
+            self.touch(at);
+        }
+        self.enforce_cap(arena)
+    }
+
+    /// Evict the least-recently-used LEAF node (leaf-first keeps chains
+    /// adoptable: an inner node without its children is still a valid,
+    /// shorter chain, but a child without its parent would be
+    /// unreachable). Returns whether anything was evicted.
+    fn evict_lru_leaf(&mut self, arena: &mut CacheArena) -> Result<bool> {
+        let mut victim: Option<(usize, u64)> = None;
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            if let Some(n) = n {
+                if n.children.is_empty()
+                    && victim.map_or(true, |(_, t)| n.last_used < t)
+                {
+                    victim = Some((i, n.last_used));
+                }
+            }
+        }
+        let Some((i, _)) = victim else { return Ok(false) };
+        let node = self.nodes[i].take().expect("victim is live");
+        let parent = self.nodes[node.parent].as_mut().expect("parent is live");
+        parent.children.retain(|&c| c != i);
+        self.free_nodes.push(i);
+        self.len -= 1;
+        self.stats.evictions += 1;
+        arena.unpin_block(node.block)?;
+        Ok(true)
+    }
+
+    fn enforce_cap(&mut self, arena: &mut CacheArena) -> Result<()> {
+        while self.len > self.cap {
+            ensure!(self.evict_lru_leaf(arena)?, "cap eviction found no leaf");
+        }
+        Ok(())
+    }
+
+    /// Arena-pressure reclaim: evict LRU entries (unpinning their
+    /// blocks) until the arena has at least `want_free` free blocks or
+    /// the index is empty. Unpinning a block still shared with a live
+    /// session frees nothing immediately — the loop keeps evicting, so
+    /// whatever CAN be reclaimed is. Returns blocks actually freed.
+    pub fn reclaim(&mut self, arena: &mut CacheArena, want_free: usize) -> Result<usize> {
+        let before = arena.status().free_blocks;
+        while arena.status().free_blocks < want_free && self.len > 0 {
+            self.evict_lru_leaf(arena)?;
+        }
+        Ok(arena.status().free_blocks - before)
+    }
+
+    /// Drop every entry, unpinning all blocks.
+    pub fn clear(&mut self, arena: &mut CacheArena) -> Result<()> {
+        while self.len > 0 {
+            ensure!(self.evict_lru_leaf(arena)?, "clear found no leaf");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ModelInfo;
+    use crate::runtime::kvcache::CacheLayout;
+
+    const BL: usize = 4;
+
+    fn arena(blocks: usize) -> CacheArena {
+        let m = ModelInfo {
+            vocab: 16,
+            d: 4,
+            h: 2,
+            d_ff: 16,
+            n_layers: 1,
+            max_ctx: 32,
+            eps: 1e-5,
+        };
+        CacheArena::new(CacheLayout::with_block_len(&m, BL), blocks).unwrap()
+    }
+
+    /// A session holding `n` fully-claimed blocks, as insertion fodder.
+    fn donor(a: &mut CacheArena, n: usize) -> Vec<u32> {
+        let s = a.alloc_session().unwrap();
+        a.ensure_capacity(s, n * BL - 1).unwrap();
+        a.session_table(s).unwrap()
+    }
+
+    #[test]
+    fn lookup_matches_full_blocks_then_partial_tail() {
+        let mut a = arena(8);
+        let chain = donor(&mut a, 3);
+        let mut pc = PrefixCache::new(BL, 0);
+        let tokens: Vec<i32> = (1..=12).collect(); // 3 full groups
+        pc.insert(&mut a, &tokens, &chain).unwrap();
+        assert_eq!(pc.len(), 3);
+
+        // Identical prompt, longer than the chain: all 3 blocks match.
+        let mut p: Vec<i32> = (1..=14).collect();
+        let m = pc.lookup(&p);
+        assert_eq!(m.full_blocks, chain);
+        assert_eq!(m.tail, None);
+        assert_eq!(m.positions, 12);
+
+        // Prompt diverging mid-second-block: 1 full + 2-row tail.
+        p = vec![1, 2, 3, 4, 5, 6, 99, 99, 99];
+        let m = pc.lookup(&p);
+        assert_eq!(m.full_blocks, chain[..1]);
+        assert_eq!(m.tail, Some((chain[1], 2)));
+        assert_eq!(m.positions, 6);
+
+        // No overlap at all.
+        let m = pc.lookup(&[7, 7, 7, 7]);
+        assert_eq!(m.positions, 0);
+        assert!(m.full_blocks.is_empty() && m.tail.is_none());
+    }
+
+    #[test]
+    fn lookup_always_leaves_one_token_to_decode() {
+        let mut a = arena(8);
+        let chain = donor(&mut a, 2);
+        let mut pc = PrefixCache::new(BL, 0);
+        let tokens: Vec<i32> = (1..=8).collect();
+        pc.insert(&mut a, &tokens, &chain).unwrap();
+
+        // Prompt exactly equal to the cached chain: the last position
+        // must stay undecoded, so the match is 1 full block + 3 rows.
+        let m = pc.lookup(&tokens);
+        assert_eq!(m.full_blocks, chain[..1]);
+        assert_eq!(m.tail, Some((chain[1], 3)));
+        assert_eq!(m.positions, 7);
+
+        // Prompt one past a block boundary: full block + nothing (the
+        // only remaining usable token is position 4, matched... and
+        // capped). prompt len 5 -> usable 4 -> exactly one full block.
+        let m = pc.lookup(&tokens[..5]);
+        assert_eq!(m.full_blocks, chain[..1]);
+        assert_eq!(m.tail, None);
+        assert_eq!(m.positions, 4);
+
+        // Single-token and empty prompts never match.
+        assert_eq!(pc.lookup(&tokens[..1]).positions, 0);
+        assert_eq!(pc.lookup(&[]).positions, 0);
+    }
+
+    #[test]
+    fn insert_reuses_existing_nodes_and_branches() {
+        let mut a = arena(12);
+        let c1 = donor(&mut a, 2);
+        let mut pc = PrefixCache::new(BL, 0);
+        pc.insert(&mut a, &[1, 2, 3, 4, 5, 6, 7, 8], &c1).unwrap();
+        // Same first group from a different session: node reused, the
+        // second group branches.
+        let c2 = donor(&mut a, 2);
+        pc.insert(&mut a, &[1, 2, 3, 4, 9, 9, 9, 9], &c2).unwrap();
+        assert_eq!(pc.len(), 3, "shared first group must not duplicate");
+        // The shared node kept the FIRST block; c2's first block is
+        // unpinned (refcount back to its donor session only).
+        assert_eq!(a.block_refs(c1[0]), 2); // donor + pin
+        assert_eq!(a.block_refs(c2[0]), 1); // donor only
+        let m = pc.lookup(&[1, 2, 3, 4, 9, 9, 9, 9, 0]);
+        assert_eq!(m.full_blocks, vec![c1[0], c2[1]]);
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn lru_cap_evicts_leaf_first_and_unpins() {
+        let mut a = arena(16);
+        let mut pc = PrefixCache::new(BL, 2);
+        let c1 = donor(&mut a, 2);
+        pc.insert(&mut a, &[1, 2, 3, 4, 5, 6, 7, 8], &c1).unwrap();
+        assert_eq!(pc.len(), 2);
+        // A third entry overflows the cap: the LRU LEAF goes (c1[1] — a
+        // leaf and older than the new chain), never the inner node.
+        let c2 = donor(&mut a, 1);
+        pc.insert(&mut a, &[9, 9, 9, 9], &c2).unwrap();
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc.stats.evictions, 1);
+        assert_eq!(a.block_refs(c1[1]), 1, "evicted entry must unpin");
+        // The surviving prefix still matches.
+        assert_eq!(pc.lookup(&[1, 2, 3, 4, 0]).full_blocks, vec![c1[0]]);
+        assert_eq!(pc.lookup(&[9, 9, 9, 9, 0]).full_blocks, vec![c2[0]]);
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn reclaim_frees_pinned_blocks_under_pressure() {
+        let mut a = arena(4);
+        let s = a.alloc_session().unwrap();
+        a.ensure_capacity(s, 2 * BL - 1).unwrap();
+        let chain = a.session_table(s).unwrap();
+        let mut pc = PrefixCache::new(BL, 0);
+        pc.insert(&mut a, &[1, 2, 3, 4, 5, 6, 7, 8], &chain).unwrap();
+        // Retire the producer: blocks survive on index pins alone.
+        a.free_session(s).unwrap();
+        assert_eq!(a.status().free_blocks, 2);
+        assert_eq!(a.status().pinned_blocks, 2);
+        // Pressure for 3 free blocks: one eviction suffices.
+        let freed = pc.reclaim(&mut a, 3).unwrap();
+        assert_eq!(freed, 1);
+        assert_eq!(pc.len(), 1);
+        // Pressure for everything: the index empties.
+        let freed = pc.reclaim(&mut a, 4).unwrap();
+        assert_eq!(freed, 1);
+        assert!(pc.is_empty());
+        assert_eq!(a.status().free_blocks, 4);
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn clear_unpins_everything() {
+        let mut a = arena(8);
+        let chain = donor(&mut a, 3);
+        let mut pc = PrefixCache::new(BL, 0);
+        pc.insert(&mut a, &(1..=12).collect::<Vec<i32>>(), &chain).unwrap();
+        pc.clear(&mut a).unwrap();
+        assert!(pc.is_empty());
+        assert_eq!(a.status().pinned_blocks, 0);
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn insert_arity_is_validated() {
+        let mut a = arena(4);
+        let chain = donor(&mut a, 1);
+        let mut pc = PrefixCache::new(BL, 0);
+        assert!(pc.insert(&mut a, &[1, 2, 3], &chain).is_err());
+        assert!(pc.insert(&mut a, &[1, 2, 3, 4, 5], &chain).is_err());
+        assert_eq!(pc.len(), 0);
+    }
+}

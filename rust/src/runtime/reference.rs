@@ -142,6 +142,14 @@ impl ReferenceBackend {
     /// an out-of-blocks error consumes nothing numerically (re-running
     /// the step after freeing capacity overwrites the same positions).
     /// Shared with the packed backend.
+    ///
+    /// Prefix sharing rides through transparently: `ensure_capacity`
+    /// copy-on-writes a shared (prefix-adopted) block before this step's
+    /// `write_kv` touches it, and the attention gather reads adopted
+    /// blocks through the block table like any other — so both host
+    /// backends serve shared prefixes with zero changes to their decode
+    /// orchestration (`tests/prefix_equivalence.rs` pins the bitwise
+    /// guarantee on each).
     pub(crate) fn prepare_step(
         arena: &mut CacheArena,
         handles: &[CacheHandle],

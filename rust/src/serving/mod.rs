@@ -23,7 +23,18 @@
 //! All four produce identical tokens for identical requests (sessions
 //! are isolated and re-prefill is deterministic — enforced by
 //! `tests/batch_equivalence.rs` and `tests/paged_equivalence.rs`); they
-//! differ only in throughput and latency shape. Requests can arrive
+//! differ only in throughput and latency shape.
+//!
+//! Prefix sharing: with the engine's copy-on-write prefix cache enabled
+//! ([`crate::runtime::Engine::enable_prefix_cache`], the
+//! `--prefix-cache` knob), admission consults the token-keyed index
+//! before reserving or claiming blocks — matched prompt positions are
+//! adopted as shared read-only blocks and their prefill decode is
+//! skipped entirely; completed prefills are recorded back into the
+//! index. Under every policy the cache changes no token (adopted state
+//! is bitwise cold-prefill state — `tests/prefix_equivalence.rs`), and
+//! under block pressure index pins are reclaimed LRU-first, before any
+//! session is preempted. Requests can arrive
 //! over time ([`Server::serve_arrivals`]) — with all offsets zero the
 //! schedule is a pure function of the request list, which is what the
 //! determinism suite pins. A threaded front end (`serve_threaded_with`)
@@ -72,6 +83,11 @@ pub struct Response {
     /// How many times the continuous scheduler preempted this request
     /// (0 under the fixed-wave policies).
     pub evictions: u32,
+    /// Prompt positions served from the copy-on-write prefix cache
+    /// instead of prefill decode — summed across re-admissions (a
+    /// preempted request that re-shares its prefix saves the work
+    /// again). 0 with the cache off.
+    pub cached_tokens: usize,
 }
 
 /// Scheduler policy for the serving loop.
@@ -144,6 +160,8 @@ struct Pending {
     /// produced before a preemption.
     first_token_at: Option<f64>,
     evictions: u32,
+    /// Prefix-cache positions adopted so far (kept across preemptions).
+    cached: usize,
 }
 
 impl Pending {
@@ -154,6 +172,7 @@ impl Pending {
             first_admitted: None,
             first_token_at: None,
             evictions: 0,
+            cached: 0,
         }
     }
 
@@ -172,6 +191,7 @@ impl Pending {
             service_s,
             ttft_s: self.first_token_at.unwrap_or(service_s),
             evictions: self.evictions,
+            cached_tokens: self.cached,
         }
     }
 }
@@ -194,6 +214,11 @@ struct Active {
     first_admitted: Instant,
     first_token_at: Option<f64>,
     evictions: u32,
+    /// Prefix-cache positions adopted (across all admissions).
+    cached: usize,
+    /// Whether this session's prompt blocks have been recorded in the
+    /// prefix index (once, at prefill completion).
+    indexed: bool,
 }
 
 impl Active {
@@ -237,6 +262,7 @@ impl Active {
             first_admitted: Some(self.first_admitted),
             first_token_at: self.first_token_at,
             evictions: self.evictions + 1,
+            cached: self.cached,
         }
     }
 
@@ -254,6 +280,7 @@ impl Active {
             service_s,
             ttft_s: self.first_token_at.unwrap_or(service_s),
             evictions: self.evictions,
+            cached_tokens: self.cached,
         }
     }
 }
@@ -325,22 +352,30 @@ impl<'e> Server<'e> {
         self.engine.session_needs_block(a.handle, a.pos as usize)
     }
 
-    /// One pass over the active set: how many sessions lack the block
-    /// for their NEXT position (`needed`) and how many blocks they hold
-    /// in total (`held`). The two consumers gate differently on
-    /// purpose: admission requires strictly MORE free blocks than
-    /// `needed` (headroom for the newcomer), the preemption loop exactly
-    /// `free >= needed` (enough to tick) — an intentional pair, not
-    /// drift.
-    fn pressure(&self, active: &[Active]) -> Result<(usize, usize)> {
-        let (mut needed, mut held) = (0usize, 0usize);
+    /// How many active sessions lack the block for their NEXT position.
+    /// The two consumers gate differently on purpose: admission
+    /// requires strictly MORE free blocks than this (headroom for the
+    /// newcomer), the preemption loop exactly `free >= needed` (enough
+    /// to tick) — an intentional pair, not drift.
+    fn pressure(&self, active: &[Active]) -> Result<usize> {
+        let mut needed = 0usize;
         for a in active {
             if self.needs_block(a)? {
                 needed += 1;
             }
-            held += self.engine.session_blocks(a.handle)?;
         }
-        Ok((needed, held))
+        Ok(needed)
+    }
+
+    /// Blocks this serving loop could EVER obtain: the free list plus
+    /// blocks held only by its own sessions and/or reclaimable prefix
+    /// pins. Shared blocks are counted once (summing per-session table
+    /// lengths would double-count a shared prefix); blocks held outside
+    /// the loop — a live decoder on the same engine — are excluded, as
+    /// they are never coming back.
+    fn obtainable(&self, active: &[Active]) -> usize {
+        let handles: Vec<CacheHandle> = active.iter().map(|a| a.handle).collect();
+        self.engine.obtainable_blocks(&handles)
     }
 
     fn run_loop(
@@ -390,15 +425,45 @@ impl<'e> Server<'e> {
                     continue;
                 }
                 let need = self.engine.blocks_for_positions(total);
+                // Fixed-wave sessions hold their worst-case reservation,
+                // so the per-session next-block scan always reports 0 —
+                // only the continuous gates read it. Skip the O(active)
+                // walk on the reserving policies' admission path.
+                let needed_now = if self.policy.reserves_worst_case() {
+                    0
+                } else {
+                    self.pressure(active)?
+                };
+                // Full index blocks this request would adopt SHARED —
+                // they consume no free blocks, so the reservation's
+                // free-block need shrinks by them. Peeking also
+                // LRU-touches the matched chain, so the reclaim below
+                // evicts everything else first instead of the very
+                // chain the request is about to hit. 0 with the cache
+                // off.
+                let peeked = self.engine.prefix_peek_blocks(&front.req.prompt);
+                // Under block shortage, reclaim prefix-index pins
+                // (LRU): cached prefixes are pure opportunity, running
+                // sessions and admissions are work. No-op without the
+                // prefix cache.
+                let want = if self.policy.reserves_worst_case() {
+                    need.saturating_sub(peeked)
+                } else {
+                    needed_now + 1
+                };
+                if self.engine.arena_status().free_blocks < want {
+                    self.engine.prefix_reclaim(want)?;
+                }
                 let free = self.engine.arena_status().free_blocks;
-                let (needed_now, held) = self.pressure(active)?;
                 // Blocks this serving loop can EVER obtain for the
-                // request: what is free now plus what its own sessions
-                // will release. Blocks held outside the loop (a live
-                // decoder on the same engine) are never coming back, so
-                // a request needing them must be rejected up front — not
-                // aborted mid-decode with a misleading pressure error.
-                let obtainable = free + held;
+                // request: the free list plus blocks held only by its
+                // own sessions and reclaimable prefix pins (shared
+                // blocks counted once). Blocks held outside the loop (a
+                // live decoder on the same engine) are never coming
+                // back, so a request needing them must be rejected up
+                // front — not aborted mid-decode with a misleading
+                // pressure error.
+                let obtainable = self.obtainable(active);
                 ensure!(
                     need <= obtainable,
                     "request {} needs {need} cache blocks but only {obtainable} of \
@@ -408,9 +473,15 @@ impl<'e> Server<'e> {
                     total_blocks - obtainable
                 );
                 let admit = if self.policy.reserves_worst_case() {
-                    // Fixed-wave: the full worst-case reservation must
-                    // fit, so an admitted session can never stall.
-                    free >= need
+                    // Fixed-wave: everything BEYOND the shared prefix
+                    // blocks must fit as a worst-case reservation, so
+                    // an admitted session can never stall (shared
+                    // blocks are already materialized; the partial
+                    // tail's copy-on-write block is part of the
+                    // non-peeked remainder). A post-adoption re-check
+                    // below keeps this exact even if the match changes
+                    // between peek and adoption.
+                    free >= need.saturating_sub(peeked)
                 } else {
                     // Continuous: claim on demand, but leave headroom
                     // for every running session's next block plus one
@@ -423,8 +494,48 @@ impl<'e> Server<'e> {
                 }
                 let mut p = ready.pop_front().expect("front checked");
                 let handle = self.engine.new_session()?;
+                // Consult the prefix index BEFORE reserving/claiming:
+                // matched positions arrive as shared (copy-on-write)
+                // blocks and their prefill decode is skipped outright —
+                // the cache state is bitwise what cold prefill would
+                // produce, so tokens cannot change. Returns 0 with the
+                // cache off or on backends without block-table reads.
+                let cached_now = match self.engine.prefix_adopt(handle, &p.req.prompt) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        // Never leak the half-admitted session's blocks.
+                        let _ = self.engine.free_session(handle);
+                        return Err(e);
+                    }
+                };
                 if self.policy.reserves_worst_case() {
-                    self.engine.reserve_session(handle, total)?;
+                    // Exact no-stall re-check: the blocks NOT already in
+                    // the session's table must come from the free list.
+                    // If the actual match came up shorter than the peek
+                    // (only possible if the reclaim above was forced
+                    // through the touched chain), defer the admission
+                    // rather than letting the reservation hard-error —
+                    // active sessions will free blocks as they finish.
+                    let held = self.engine.session_blocks(handle)?;
+                    let short = self.engine.arena_status().free_blocks
+                        < need.saturating_sub(held);
+                    if short && !active.is_empty() {
+                        // Roll back the adoption's hit/saved counters —
+                        // the retry will adopt and count again, and the
+                        // engine stats must keep matching the sum of
+                        // response-level cached_tokens.
+                        self.engine.prefix_unrecord(cached_now);
+                        self.engine.free_session(handle)?;
+                        ready.push_front(p);
+                        break;
+                    }
+                    // With no active session to wait on, fall through:
+                    // reserve_session's out-of-blocks error carries the
+                    // accurate diagnosis.
+                    if let Err(e) = self.engine.reserve_session(handle, total) {
+                        let _ = self.engine.free_session(handle);
+                        return Err(e);
+                    }
                 }
                 if p.first_admitted.is_none() {
                     p.first_admitted = Some(Instant::now());
@@ -432,14 +543,16 @@ impl<'e> Server<'e> {
                 active.push(Active {
                     handle,
                     seq: next_seq,
-                    pos: 0,
-                    tokens: Vec::new(),
+                    pos: cached_now as i32,
+                    tokens: p.req.prompt[..cached_now].to_vec(),
                     last_logits: Vec::new(),
-                    fed: 0,
+                    fed: cached_now,
                     arrived: p.arrived,
                     first_admitted: p.first_admitted.expect("just set"),
                     first_token_at: p.first_token_at,
                     evictions: p.evictions,
+                    cached: p.cached + cached_now,
+                    indexed: false,
                     req: p.req,
                 });
                 next_seq += 1;
@@ -482,7 +595,14 @@ impl<'e> Server<'e> {
             // the admission capacity check), so progress is guaranteed.
             if !self.policy.reserves_worst_case() {
                 loop {
-                    let (needed, held) = self.pressure(active)?;
+                    let needed = self.pressure(active)?;
+                    if self.engine.arena_status().free_blocks >= needed {
+                        break;
+                    }
+                    // Reclaim prefix-index pins before touching running
+                    // sessions: evicting a cached prefix costs future
+                    // hits, preempting a session costs a re-prefill.
+                    self.engine.prefix_reclaim(needed)?;
                     let free = self.engine.arena_status().free_blocks;
                     if free >= needed {
                         break;
@@ -496,7 +616,7 @@ impl<'e> Server<'e> {
                          {total_blocks} arena blocks are held outside this serving \
                          loop",
                         active[0].req.id,
-                        total_blocks - free - held
+                        total_blocks.saturating_sub(self.obtainable(active))
                     );
                     let victim = active
                         .iter()
@@ -505,6 +625,12 @@ impl<'e> Server<'e> {
                         .map(|(i, _)| i)
                         .expect("active non-empty");
                     let a = active.remove(victim);
+                    // Freeing releases only the victim's EXCLUSIVE
+                    // blocks — blocks shared with the prefix index or
+                    // another session keep their remaining references
+                    // (the refcount invariant tests/kvcache_properties
+                    // pins), so no still-referenced block can reach the
+                    // free list here.
                     self.engine.free_session(a.handle)?;
                     ready.push_front(a.into_pending());
                 }
@@ -528,6 +654,19 @@ impl<'e> Server<'e> {
                         let t = a.next_token();
                         let logits = self.engine.decode_step(a.handle, t, a.pos)?;
                         a.absorb(t, logits);
+                    }
+                }
+            }
+
+            // ---- prefix index: record each completed prefill (once ----
+            // per admission, before the sweep can retire it) so later
+            // requests with the same system prompt share these blocks.
+            // No-op with the cache off.
+            if self.engine.prefix_enabled() {
+                for a in active.iter_mut() {
+                    if !a.indexed && a.fed >= a.req.prompt.len() {
+                        a.indexed = true;
+                        self.engine.prefix_insert(a.handle, &a.req.prompt)?;
                     }
                 }
             }
@@ -889,6 +1028,148 @@ mod tests {
         assert!(Server::new(&e, Policy::Fifo)
             .serve_arrivals(reqs(2), &[0.0])
             .is_err());
+    }
+
+    /// Requests with a heavily shared system prompt (few distinct
+    /// prefixes, many requests) — the prefix cache's target workload.
+    fn shared_prefix_reqs(n: u64) -> Vec<Request> {
+        (0..n)
+            .map(|id| {
+                let mut prompt = vec![11, 7, 3, 9, 2, 8, 4, 6, 1, 12, 10, 5];
+                prompt[0] = (id % 2) as i32 + 11; // 2 distinct system prompts
+                prompt.push(id as i32 + 1); // per-request suffix
+                Request { id, prompt, n_new: 4 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefix_cache_changes_no_token_and_saves_prefill() {
+        let e = engine();
+        let requests = shared_prefix_reqs(8);
+        let cold = Server::new(&e, Policy::Fifo).serve(requests.clone()).unwrap();
+        for policy in [
+            Policy::Fifo,
+            Policy::Batched { batch: 3 },
+            Policy::Continuous { max_active: 3 },
+        ] {
+            // Block length 4 so the 12-token shared prefix spans whole
+            // blocks (the default 16-position block would swallow it).
+            let warm_engine = Engine::load_with_arena(
+                Artifacts::synthetic(SEED).unwrap(),
+                BackendKind::Reference,
+                4,
+                64,
+            )
+            .unwrap();
+            assert!(warm_engine.enable_prefix_cache(0));
+            let out = Server::new(&warm_engine, policy)
+                .serve(requests.clone())
+                .unwrap();
+            for c in &cold {
+                let w = out.iter().find(|w| w.id == c.id).unwrap();
+                assert_eq!(c.tokens, w.tokens, "request {} under {policy:?}", c.id);
+            }
+            // Some request after the first must have reused the shared
+            // prefix (FIFO serializes, so later requests always hit;
+            // the wave policies hit across waves or not at all — but
+            // saved_tokens is response-visible either way).
+            let saved: usize = out.iter().map(|r| r.cached_tokens).sum();
+            if policy == Policy::Fifo {
+                assert!(saved > 0, "FIFO must hit on the shared prefix");
+            }
+            let stats = warm_engine.prefix_stats().unwrap();
+            assert_eq!(
+                saved, stats.saved_tokens,
+                "response accounting must match engine counters ({policy:?})"
+            );
+            // All arena invariants hold; only index pins remain.
+            warm_engine.debug_validate().unwrap();
+            let st = warm_engine.arena_status();
+            assert_eq!(st.free_blocks + st.pinned_blocks, st.total_blocks);
+        }
+    }
+
+    #[test]
+    fn tight_arena_reclaim_spares_the_chain_about_to_be_adopted() {
+        // Fixed-wave admission in an arena sized near one worst-case
+        // request: the free-block want is computed AFTER peeking the
+        // index (shared blocks need no free blocks), so admitting a
+        // request whose prefix is cached must NOT reclaim — and
+        // certainly not evict — the very chain it is about to adopt.
+        let sys: Vec<i32> = vec![9, 3, 7, 1, 5, 2, 8, 4, 6, 11, 13, 10]; // 12 = 3 blocks
+        let reqs: Vec<Request> = (0..2u64)
+            .map(|id| {
+                let mut prompt = sys.clone();
+                prompt.push(90 + id as i32);
+                Request { id, prompt, n_new: 3 } // 16 tokens = 4 blocks
+            })
+            .collect();
+        // 5 blocks: request 0 runs cold (4 blocks), retires leaving its
+        // 3-block chain pinned + 2 free; request 1 needs only 1 fresh
+        // block thanks to the shared chain.
+        let tight = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            5,
+        )
+        .unwrap();
+        assert!(tight.enable_prefix_cache(0));
+        let out = Server::new(&tight, Policy::Fifo).serve(reqs.clone()).unwrap();
+        let r1 = out.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(
+            r1.cached_tokens, 12,
+            "request 1 must adopt the full cached system prompt — a \
+             need-sized reclaim would have evicted it"
+        );
+        let stats = tight.prefix_stats().unwrap();
+        assert_eq!(stats.evictions, 0, "no reclaim should have been needed");
+        // And tokens still equal the cold run.
+        let cold = Server::new(&engine(), Policy::Fifo).serve(reqs).unwrap();
+        for c in &cold {
+            let w = out.iter().find(|w| w.id == c.id).unwrap();
+            assert_eq!(c.tokens, w.tokens, "request {}", c.id);
+        }
+        tight.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn preempted_prefix_sharer_returns_no_still_referenced_block() {
+        // The free-list regression test: a tight arena forces the
+        // continuous scheduler to preempt sessions that ADOPTED shared
+        // prefix blocks; freeing them must only release exclusive
+        // blocks (refcount invariant), tokens must still match the
+        // isolated run, and the arena must validate after every serve.
+        let tight = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            10,
+        )
+        .unwrap();
+        assert!(tight.enable_prefix_cache(0));
+        let requests = shared_prefix_reqs(6); // 13 prompt + 4 new = 5 blocks each
+        let out = Server::new(&tight, Policy::Continuous { max_active: 6 })
+            .serve(requests.clone())
+            .unwrap();
+        assert_eq!(out.len(), 6);
+        assert!(
+            out.iter().map(|r| r.evictions).sum::<u32>() > 0,
+            "10 blocks cannot hold 6 x 5-block sessions without preemption"
+        );
+        tight.debug_validate().unwrap();
+        let st = tight.arena_status();
+        assert_eq!(
+            st.free_blocks + st.pinned_blocks,
+            st.total_blocks,
+            "every non-pinned block must be back in the free list"
+        );
+        let fifo = Server::new(&engine(), Policy::Fifo).serve(requests).unwrap();
+        for f in &fifo {
+            let c = out.iter().find(|c| c.id == f.id).unwrap();
+            assert_eq!(f.tokens, c.tokens, "request {}", f.id);
+        }
     }
 
     #[test]

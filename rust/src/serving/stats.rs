@@ -24,6 +24,10 @@ pub struct LatencyStats {
     pub p95_queue_s: f64,
     /// Total continuous-scheduler preemptions across all requests.
     pub evictions: usize,
+    /// Prompt positions served from the copy-on-write prefix cache
+    /// instead of prefill decode, across all requests (0 with the
+    /// cache off).
+    pub cached_tokens: usize,
     pub tokens_per_s: f64,
 }
 
@@ -65,6 +69,7 @@ impl LatencyStats {
             p50_queue_s: percentile(&queue, 50.0),
             p95_queue_s: percentile(&queue, 95.0),
             evictions: responses.iter().map(|r| r.evictions as usize).sum(),
+            cached_tokens: responses.iter().map(|r| r.cached_tokens).sum(),
             tokens_per_s: total_tokens as f64 / wall_s.max(f64::MIN_POSITIVE),
         }
     }
@@ -75,7 +80,7 @@ impl LatencyStats {
         format!(
             "throughput {:.1} tok/s | service p50/p95/p99 {:.3}/{:.3}/{:.3}s \
              | ttft mean/p50/p95 {:.3}/{:.3}/{:.3}s | queue mean/p95 {:.3}/{:.3}s \
-             | {} preemptions",
+             | {} preemptions | {} prefix-cached tokens",
             self.tokens_per_s,
             self.p50_service_s,
             self.p95_service_s,
@@ -85,7 +90,8 @@ impl LatencyStats {
             self.p95_ttft_s,
             self.mean_queue_s,
             self.p95_queue_s,
-            self.evictions
+            self.evictions,
+            self.cached_tokens
         )
     }
 }
@@ -102,6 +108,7 @@ mod tests {
             service_s: service,
             ttft_s: service / 2.0,
             evictions: (id % 3 == 0) as u32,
+            cached_tokens: (id % 2) as usize * 3,
         }
     }
 
@@ -121,7 +128,9 @@ mod tests {
         assert!((s.p50_queue_s - 0.125).abs() < 0.01);
         assert!((s.mean_queue_s - s.mean_service_s / 4.0).abs() < 1e-9);
         assert_eq!(s.evictions, 34); // ids 0, 3, 6, ..., 99
+        assert_eq!(s.cached_tokens, 150); // 50 odd ids x 3
         assert!(s.report().contains("34 preemptions"));
+        assert!(s.report().contains("150 prefix-cached tokens"));
     }
 
     #[test]

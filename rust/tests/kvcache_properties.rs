@@ -2,9 +2,14 @@
 //! (`runtime::kvcache`): random alloc/grow/free churn must never leak
 //! or double-own a block, block tables must only reference live blocks,
 //! freed capacity must be fully reusable, and session data must never
-//! bleed across sessions. The offline build has no proptest; randomness
-//! comes from the in-crate SplitMix64 (`util::rng`) with fixed seeds,
-//! so every failure is reproducible.
+//! bleed across sessions. Since the copy-on-write prefix cache, blocks
+//! are REFCOUNTED (table occurrences + prefix-index pins), so the churn
+//! also hammers share/cow/pin/unpin sequences: a block may only reach
+//! the free list at refcount zero, never twice, and `debug_validate`
+//! must balance the refcount equation after every operation. The
+//! offline build has no proptest; randomness comes from the in-crate
+//! SplitMix64 (`util::rng`) with fixed seeds, so every failure is
+//! reproducible.
 
 use pim_llm::runtime::artifacts::ModelInfo;
 use pim_llm::runtime::{CacheArena, CacheHandle, CacheLayout};
@@ -137,6 +142,203 @@ fn random_churn_never_leaks_or_double_frees() {
             layout.blocks_for_positions(usable)
         );
     }
+}
+
+#[test]
+fn refcounted_share_cow_pin_churn_never_leaks_or_double_frees() {
+    // Randomized share/cow/free/pin/unpin sequences across 5 seeds. An
+    // external mirror tracks the pin multiset and which (session,
+    // block) shares exist; after EVERY op the arena must validate
+    // (refcount == table occurrences + pins, free exactly at zero) and
+    // the free count must match the mirror's conservation equation.
+    for seed in [11u64, 12, 13, 14, 15] {
+        let mut rng = Rng::new(seed.wrapping_mul(0xB5E5_5E5B_0F0F_F0F0));
+        let max_ctx = rng.range(12, 40);
+        let block_len = rng.range(1, 6);
+        let capacity = rng.range(6, 24);
+        let layout = CacheLayout::with_block_len(&model(max_ctx), block_len);
+        let mut arena = CacheArena::new(layout.clone(), capacity).unwrap();
+        let total = arena.status().total_blocks;
+
+        let mut live: Vec<CacheHandle> = Vec::new();
+        let mut freed: Vec<CacheHandle> = Vec::new();
+        // Mirror of every pin issued (block ids, with multiplicity).
+        let mut pins: Vec<u32> = Vec::new();
+        for op in 0..500 {
+            match rng.range(0, 11) {
+                0 | 1 => {
+                    live.push(arena.alloc_session().unwrap());
+                }
+                2 | 3 => {
+                    // Grow a random session (may COW a shared block —
+                    // ensure_capacity handles both).
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let h = live[rng.range(0, live.len() - 1)];
+                    let _ = arena.ensure_capacity(h, rng.range(0, max_ctx - 1));
+                }
+                4 | 5 => {
+                    // Share a random prefix of one session's table into
+                    // a FRESH session (the adoption shape).
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let donor = live[rng.range(0, live.len() - 1)];
+                    let table = arena.session_table(donor).unwrap();
+                    if table.is_empty() {
+                        continue;
+                    }
+                    let n = rng.range(1, table.len());
+                    let s = arena.alloc_session().unwrap();
+                    arena.share_blocks(s, &table[..n]).unwrap();
+                    live.push(s);
+                }
+                6 => {
+                    // COW a random table entry with a random keep count.
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let h = live[rng.range(0, live.len() - 1)];
+                    let held = arena.session_blocks(h).unwrap();
+                    if held == 0 {
+                        continue;
+                    }
+                    let _ = arena.cow_block(
+                        h,
+                        rng.range(0, held - 1),
+                        rng.range(0, block_len),
+                    );
+                }
+                7 => {
+                    // Pin a random live block (what the prefix index
+                    // does at insert).
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let h = live[rng.range(0, live.len() - 1)];
+                    let table = arena.session_table(h).unwrap();
+                    if table.is_empty() {
+                        continue;
+                    }
+                    let b = table[rng.range(0, table.len() - 1)];
+                    arena.pin_block(b).unwrap();
+                    pins.push(b);
+                }
+                8 => {
+                    // Unpin (LRU eviction / reclaim).
+                    if pins.is_empty() {
+                        continue;
+                    }
+                    let b = pins.swap_remove(rng.range(0, pins.len() - 1));
+                    arena.unpin_block(b).unwrap();
+                }
+                9 => {
+                    // Free a random session; shared blocks must survive.
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let h = live.swap_remove(rng.range(0, live.len() - 1));
+                    arena.free_session(h).unwrap();
+                    freed.push(h);
+                }
+                _ => {
+                    // Stale handles: every op — including the sharing
+                    // ops — must error without touching the accounting.
+                    if let Some(&h) = freed.last() {
+                        assert!(arena.free_session(h).is_err());
+                        assert!(arena.share_blocks(h, &[0]).is_err());
+                        assert!(arena.cow_block(h, 0, 0).is_err());
+                        assert!(arena.session_table(h).is_err());
+                    }
+                }
+            }
+            arena.debug_validate().unwrap_or_else(|e| {
+                panic!("seed {seed} op {op}: arena invariant broken: {e}")
+            });
+            let st = arena.status();
+            assert_eq!(st.total_blocks, total, "seed {seed} op {op}");
+            assert_eq!(st.free_blocks + st.used_blocks, total, "seed {seed} op {op}");
+            assert_eq!(st.live_sessions, live.len(), "seed {seed} op {op}");
+            // Conservation from the mirror: every block referenced by a
+            // live table or a pin is used; everything else is free.
+            let mut used = vec![false; total];
+            for &h in &live {
+                for b in arena.session_table(h).unwrap() {
+                    used[b as usize] = true;
+                }
+            }
+            for &b in &pins {
+                used[b as usize] = true;
+            }
+            let expect_used = used.iter().filter(|&&u| u).count();
+            assert_eq!(
+                st.used_blocks, expect_used,
+                "seed {seed} op {op}: used-block mirror diverged"
+            );
+            // Free only at refcount zero: no pinned or table-held block
+            // may have refcount 0.
+            for (b, &u) in used.iter().enumerate() {
+                if u {
+                    assert!(
+                        arena.block_refs(b as u32) > 0,
+                        "seed {seed} op {op}: referenced block {b} has refcount 0"
+                    );
+                }
+            }
+        }
+
+        // Drain: free every session and pin; the arena must return to
+        // pristine capacity with no block lost or freed twice.
+        for h in live.drain(..) {
+            arena.free_session(h).unwrap();
+        }
+        for b in pins.drain(..) {
+            arena.unpin_block(b).unwrap();
+        }
+        assert_eq!(arena.status().free_blocks, total, "seed {seed}: leak at drain");
+        arena.debug_validate().unwrap();
+    }
+}
+
+#[test]
+fn preempted_sharer_never_returns_referenced_blocks_to_free_list() {
+    // The eviction regression (CacheArena::free_session used to assume
+    // exclusive ownership): free a session that shares blocks with a
+    // pinned prefix chain and a sibling session, and verify — by
+    // claiming every remaining free block — that no shared block was
+    // handed out again while still referenced.
+    let layout = CacheLayout::with_block_len(&model(16), 2);
+    let mut arena = CacheArena::new(layout, 8).unwrap();
+    let donor = arena.alloc_session().unwrap();
+    arena.ensure_capacity(donor, 5).unwrap(); // 3 blocks
+    let chain = arena.session_table(donor).unwrap();
+    for &b in &chain[..2] {
+        arena.pin_block(b).unwrap(); // "prefix index" pins 2 of them
+    }
+    let sharer = arena.alloc_session().unwrap();
+    arena.share_blocks(sharer, &chain).unwrap();
+    // Preempt the sharer: only its references drop; nothing frees.
+    let free_before = arena.status().free_blocks;
+    arena.free_session(sharer).unwrap();
+    assert_eq!(arena.status().free_blocks, free_before);
+    // Preempt the donor too: block 2 (unpinned, now unreferenced) is
+    // the ONLY one that may come back.
+    arena.free_session(donor).unwrap();
+    assert_eq!(arena.status().free_blocks, free_before + 1);
+    // Exhaust the free list: none of the handed-out blocks may be a
+    // still-pinned chain block.
+    let grabber = arena.alloc_session().unwrap();
+    let usable = arena.status().free_blocks * 2; // block_len = 2
+    arena.ensure_capacity(grabber, usable - 1).unwrap();
+    assert_eq!(arena.status().free_blocks, 0);
+    for b in arena.session_table(grabber).unwrap() {
+        assert!(
+            !chain[..2].contains(&b),
+            "still-pinned block {b} reached the free list"
+        );
+    }
+    arena.debug_validate().unwrap();
 }
 
 #[test]

@@ -1,0 +1,329 @@
+//! Differential harness for copy-on-write prefix sharing: adopting a
+//! cached prompt prefix and skipping its prefill decode must be
+//! BIT-FOR-BIT identical — logits at every remaining step AND the
+//! final gathered caches — to cold prefill, on both host backends.
+//!
+//! Why exactness holds: K/V rows at position `p` depend only on tokens
+//! `0..=p`, the decode step is bit-deterministic (PR 2/3/4 chains), and
+//! adoption hands the session either the very blocks an identical
+//! prefix wrote (full blocks, shared read-only) or a copy whose matched
+//! rows are those bytes and whose remaining rows are zeroed — exactly
+//! cold-prefill state. This suite pins that argument over random
+//! models, block lengths {1, 3, default}, prefix lengths straddling
+//! block boundaries (0, 1, block_len-1, block_len, block_len+1, and
+//! beyond), and evict -> re-admit -> re-share cycles, plus end-to-end
+//! serving equivalence with the cache on vs off.
+
+use pim_llm::runtime::artifacts::ModelInfo;
+use pim_llm::runtime::{Artifacts, BackendKind, Engine};
+use pim_llm::serving::{Policy, Request, Server};
+use pim_llm::util::rng::Rng;
+
+const HOST_BACKENDS: [BackendKind; 2] = [BackendKind::Reference, BackendKind::Packed];
+
+/// A random small-but-varied model shape (dims chosen so block
+/// boundaries land mid-head, like the paged-equivalence suite).
+fn random_model(rng: &mut Rng) -> ModelInfo {
+    let h = [1usize, 2, 4][rng.range(0, 2)];
+    ModelInfo {
+        vocab: rng.range(8, 60),
+        d: h * [3usize, 5, 8][rng.range(0, 2)],
+        h,
+        d_ff: rng.range(9, 40),
+        n_layers: rng.range(1, 2),
+        max_ctx: rng.range(12, 24),
+        eps: 1e-5,
+    }
+}
+
+/// Cold-prefill oracle: a fresh session decoding `tokens` from zero on
+/// a cache-less engine; returns per-step logits and the final caches.
+fn cold_run(engine: &Engine, tokens: &[i32]) -> (Vec<Vec<f32>>, (Vec<f32>, Vec<f32>)) {
+    let s = engine.new_session().unwrap();
+    let logits: Vec<Vec<f32>> = tokens
+        .iter()
+        .enumerate()
+        .map(|(pos, &t)| engine.decode_step(s, t, pos as i32).unwrap())
+        .collect();
+    let caches = engine.gather_session(s).unwrap();
+    engine.free_session(s).unwrap();
+    (logits, caches)
+}
+
+/// Warm a prefix-cached engine with `donor` (full prefill + index
+/// insert), then run `prompt` through adoption and assert bitwise
+/// equality with the cold oracle from `oracle_engine`.
+fn assert_adopted_matches_cold(
+    warm: &Engine,
+    oracle_engine: &Engine,
+    prompt: &[i32],
+    label: &str,
+) {
+    let (want_logits, want_caches) = cold_run(oracle_engine, prompt);
+    let s = warm.new_session().unwrap();
+    let skipped = warm.prefix_adopt(s, prompt).unwrap();
+    assert!(
+        skipped < prompt.len().max(1),
+        "{label}: adoption must leave at least one token to decode \
+         (skipped {skipped} of {})",
+        prompt.len()
+    );
+    for (pos, &t) in prompt.iter().enumerate().skip(skipped) {
+        let got = warm.decode_step(s, t, pos as i32).unwrap();
+        assert_eq!(
+            got, want_logits[pos],
+            "{label}: logits diverged at pos {pos} (skipped {skipped})"
+        );
+    }
+    assert_eq!(
+        warm.gather_session(s).unwrap(),
+        want_caches,
+        "{label}: gathered caches diverged (skipped {skipped})"
+    );
+    warm.free_session(s).unwrap();
+    warm.debug_validate().unwrap();
+}
+
+#[test]
+fn shared_prefix_decode_is_bitwise_cold_prefill() {
+    // The core sweep: random models x block lens x prefix lengths that
+    // straddle block boundaries, on both host backends.
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0xA5A5_5A5A).wrapping_add(17));
+        let model = random_model(&mut rng);
+        let max_ctx = model.max_ctx;
+        for kind in HOST_BACKENDS {
+            for block_len in [1usize, 3, 0] {
+                let artifacts = || Artifacts::synthetic_with(seed, model.clone()).unwrap();
+                let warm =
+                    Engine::load_with_arena(artifacts(), kind, block_len, 64).unwrap();
+                assert!(warm.enable_prefix_cache(0));
+                let cold =
+                    Engine::load_with_arena(artifacts(), kind, block_len, 64).unwrap();
+                let bl = warm.block_len();
+
+                // Donor prompt: long enough for several full blocks.
+                let donor_len = (3 * bl + 2).min(max_ctx - 1);
+                let donor: Vec<i32> = (0..donor_len)
+                    .map(|_| rng.range(0, model.vocab - 1) as i32)
+                    .collect();
+                let ds = warm.new_session().unwrap();
+                for (pos, &t) in donor.iter().enumerate() {
+                    warm.decode_step(ds, t, pos as i32).unwrap();
+                }
+                warm.prefix_insert(ds, &donor).unwrap();
+
+                // Shared-prefix lengths straddling block boundaries: the
+                // adopter's prompt agrees with the donor for `shared`
+                // tokens, then diverges (token +1 mod vocab).
+                for shared in [0usize, 1, bl.saturating_sub(1), bl, bl + 1, donor_len] {
+                    let shared = shared.min(donor_len);
+                    let total = (shared + bl + 1).min(max_ctx - 1).max(1);
+                    let prompt: Vec<i32> = (0..total)
+                        .map(|i| {
+                            if i < shared {
+                                donor[i]
+                            } else {
+                                let base = donor.get(i).copied().unwrap_or(0);
+                                (base + 1).rem_euclid(model.vocab as i32)
+                            }
+                        })
+                        .collect();
+                    assert_adopted_matches_cold(
+                        &warm,
+                        &cold,
+                        &prompt,
+                        &format!(
+                            "seed {seed} {kind:?} bl {bl} shared {shared}"
+                        ),
+                    );
+                }
+                warm.free_session(ds).unwrap();
+                warm.debug_validate().unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn evict_readmit_reshare_cycles_stay_bitwise() {
+    // The continuous scheduler's life cycle in miniature, repeated:
+    // adopt a shared prefix, decode partway, evict (free the session),
+    // re-admit with a fresh adoption, run to completion — every cycle
+    // must reproduce the cold logits and caches exactly, and the arena
+    // must stay balanced throughout.
+    for kind in HOST_BACKENDS {
+        let artifacts = || Artifacts::synthetic(0xE1).unwrap();
+        let warm = Engine::load_with_arena(artifacts(), kind, 4, 32).unwrap();
+        assert!(warm.enable_prefix_cache(0));
+        let cold = Engine::load_with_arena(artifacts(), kind, 4, 32).unwrap();
+
+        let donor: Vec<i32> = vec![9, 2, 7, 7, 1, 30, 12, 5, 44, 3];
+        let ds = warm.new_session().unwrap();
+        for (pos, &t) in donor.iter().enumerate() {
+            warm.decode_step(ds, t, pos as i32).unwrap();
+        }
+        warm.prefix_insert(ds, &donor).unwrap();
+        warm.free_session(ds).unwrap(); // donor retires; index pins live on
+
+        let mut prompt = donor.clone();
+        prompt.extend([13, 21, 34]); // shared prefix + fresh tail
+        let (want_logits, want_caches) = cold_run(&cold, &prompt);
+
+        for cycle in 0..3 {
+            // Partial run, evicted mid-flight.
+            let s = warm.new_session().unwrap();
+            let skipped = warm.prefix_adopt(s, &prompt).unwrap();
+            assert_eq!(skipped, 8, "cycle {cycle}: 2 full blocks cached");
+            let stop = skipped + 2;
+            for (pos, &t) in prompt.iter().enumerate().take(stop).skip(skipped) {
+                assert_eq!(
+                    warm.decode_step(s, t, pos as i32).unwrap(),
+                    want_logits[pos],
+                    "cycle {cycle} pre-evict pos {pos}"
+                );
+            }
+            warm.free_session(s).unwrap(); // evict
+            warm.debug_validate().unwrap();
+
+            // Re-admit: re-share and run to completion.
+            let s = warm.new_session().unwrap();
+            assert_eq!(warm.prefix_adopt(s, &prompt).unwrap(), skipped);
+            for (pos, &t) in prompt.iter().enumerate().skip(skipped) {
+                assert_eq!(
+                    warm.decode_step(s, t, pos as i32).unwrap(),
+                    want_logits[pos],
+                    "cycle {cycle} post-readmit pos {pos}"
+                );
+            }
+            assert_eq!(
+                warm.gather_session(s).unwrap(),
+                want_caches,
+                "cycle {cycle}: caches after re-share"
+            );
+            warm.free_session(s).unwrap();
+            warm.debug_validate().unwrap();
+        }
+
+        // Reclaiming the whole index returns every pinned block.
+        warm.prefix_reclaim(usize::MAX).unwrap();
+        let st = warm.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}");
+        assert_eq!(st.pinned_blocks, 0, "{kind:?}");
+
+        // With the index empty the same prompt is a clean miss and the
+        // cold path still reproduces the oracle (re-insertable after).
+        let s = warm.new_session().unwrap();
+        assert_eq!(warm.prefix_adopt(s, &prompt).unwrap(), 0);
+        for (pos, &t) in prompt.iter().enumerate() {
+            assert_eq!(
+                warm.decode_step(s, t, pos as i32).unwrap(),
+                want_logits[pos],
+                "post-reclaim pos {pos}"
+            );
+        }
+        warm.prefix_insert(s, &prompt).unwrap();
+        warm.free_session(s).unwrap();
+        let s2 = warm.new_session().unwrap();
+        assert!(warm.prefix_adopt(s2, &prompt).unwrap() > 0, "re-share after re-insert");
+        warm.free_session(s2).unwrap();
+        warm.debug_validate().unwrap();
+    }
+}
+
+#[test]
+fn partial_tail_adoption_copies_exactly_once() {
+    // A prompt ending mid-block adopts the donor's tail block via COW:
+    // the copy must not disturb the donor, and both sessions' caches
+    // must equal their own cold runs bitwise.
+    for kind in HOST_BACKENDS {
+        let artifacts = || Artifacts::synthetic(0x7A11).unwrap();
+        let warm = Engine::load_with_arena(artifacts(), kind, 4, 32).unwrap();
+        assert!(warm.enable_prefix_cache(0));
+        let cold = Engine::load_with_arena(artifacts(), kind, 4, 32).unwrap();
+
+        // Donor: 12 tokens = 3 full blocks indexed.
+        let donor: Vec<i32> = vec![5, 1, 8, 2, 9, 9, 4, 7, 3, 6, 1, 2];
+        let ds = warm.new_session().unwrap();
+        for (pos, &t) in donor.iter().enumerate() {
+            warm.decode_step(ds, t, pos as i32).unwrap();
+        }
+        warm.prefix_insert(ds, &donor).unwrap();
+        let donor_caches = warm.gather_session(ds).unwrap();
+
+        // Adopter shares 2 full blocks + 2 rows of the third (prompt
+        // len 11 -> usable 10 = 2*4 + 2), then generates.
+        let prompt = donor[..11].to_vec();
+        let (want_logits, want_caches) = cold_run(&cold, &prompt);
+        let s = warm.new_session().unwrap();
+        let skipped = warm.prefix_adopt(s, &prompt).unwrap();
+        assert_eq!(skipped, 10, "{kind:?}: 2 full blocks + 2 tail rows");
+        for (pos, &t) in prompt.iter().enumerate().skip(skipped) {
+            assert_eq!(warm.decode_step(s, t, pos as i32).unwrap(), want_logits[pos]);
+        }
+        assert_eq!(warm.gather_session(s).unwrap(), want_caches, "{kind:?}");
+        // The donor's own blocks are untouched by the adopter's COW.
+        assert_eq!(warm.gather_session(ds).unwrap(), donor_caches, "{kind:?}");
+        warm.free_session(s).unwrap();
+        warm.free_session(ds).unwrap();
+        warm.debug_validate().unwrap();
+    }
+}
+
+#[test]
+fn serving_with_prefix_cache_matches_cache_off_end_to_end() {
+    // Whole-stack acceptance on both host backends and both batch-wave
+    // schedulers: a prefix-heavy request stream (few distinct system
+    // prompts) served with the cache on must produce exactly the
+    // cache-off tokens, while actually saving prefill work.
+    let mut rng = Rng::new(0x5EED);
+    let systems: [Vec<i32>; 2] = [
+        (0..9).map(|_| rng.range(1, 60) as i32).collect(),
+        (0..9).map(|_| rng.range(1, 60) as i32).collect(),
+    ];
+    let requests: Vec<Request> = (0..10u64)
+        .map(|id| {
+            let mut prompt = systems[(id % 2) as usize].clone();
+            prompt.push(id as i32 + 1);
+            Request { id, prompt, n_new: rng.range(2, 6) }
+        })
+        .collect();
+    for kind in HOST_BACKENDS {
+        let engine_with = |cache: bool| {
+            let e = Engine::load_with_arena(
+                Artifacts::synthetic(0x5EED).unwrap(),
+                kind,
+                3,
+                64,
+            )
+            .unwrap();
+            if cache {
+                assert!(e.enable_prefix_cache(0));
+            }
+            e
+        };
+        let off = engine_with(false);
+        let baseline = Server::new(&off, Policy::Fifo).serve(requests.clone()).unwrap();
+        for policy in [
+            Policy::Batched { batch: 4 },
+            Policy::Continuous { max_active: 4 },
+        ] {
+            let on = engine_with(true);
+            let out = Server::new(&on, policy).serve(requests.clone()).unwrap();
+            for b in &baseline {
+                let r = out.iter().find(|r| r.id == b.id).unwrap();
+                assert_eq!(b.tokens, r.tokens, "{kind:?} {policy:?} request {}", b.id);
+            }
+            let stats = on.prefix_stats().unwrap();
+            assert!(
+                stats.saved_tokens > 0,
+                "{kind:?} {policy:?}: the shared system prompts must hit \
+                 (saved {} / hits {} / misses {})",
+                stats.saved_tokens,
+                stats.hits,
+                stats.misses
+            );
+            on.debug_validate().unwrap();
+        }
+    }
+}

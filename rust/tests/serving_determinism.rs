@@ -140,6 +140,126 @@ fn schedulers_and_worker_counts_agree_on_the_mixed_set() {
     }
 }
 
+/// Prefix-heavy workload: many requests, FEW distinct system prompts
+/// (the shape the copy-on-write prefix cache serves), with ragged
+/// suffixes and generation budgets plus a couple of degenerate shapes.
+fn prefix_heavy_requests() -> Vec<Request> {
+    let systems: [Vec<i32>; 2] = [
+        vec![31, 7, 19, 2, 44, 5, 23, 11, 3, 16],
+        vec![8, 8, 60, 1, 12, 39, 4, 27, 50, 9],
+    ];
+    (0..12u64)
+        .map(|id| {
+            let sys = &systems[(id % 2) as usize];
+            let mut prompt = sys.clone();
+            for j in 0..(id % 3) {
+                prompt.push((id * 5 + j + 1) as i32);
+            }
+            Request {
+                id,
+                prompt,
+                n_new: (id % 4) as usize + 1,
+            }
+        })
+        .collect()
+}
+
+/// Engine replica factory with the prefix cache ON (block length 4 so
+/// the 10-token system prompts span whole blocks) and a tight-ish arena
+/// so the continuous runs also traverse reclaim/preemption.
+fn prefix_engine(arena_blocks: usize) -> pim_llm::util::error::Result<Engine> {
+    let e = Engine::load_with_arena(
+        Artifacts::synthetic(SEED)?,
+        pim_llm::runtime::BackendKind::Reference,
+        4,
+        arena_blocks,
+    )?;
+    assert!(e.enable_prefix_cache(0));
+    Ok(e)
+}
+
+#[test]
+fn prefix_cache_threaded_byte_identical_across_10_runs() {
+    // The prefix cache introduces new scheduler state (index hits
+    // change which positions prefill); determinism must survive it
+    // under both decode_batch-per-tick policies, threaded, 10x.
+    for policy in [Policy::Batched { batch: 4 }, Policy::Continuous { max_active: 4 }] {
+        let run = || {
+            let out = serve_threaded_policy(
+                || prefix_engine(64),
+                prefix_heavy_requests(),
+                3,
+                policy,
+            )
+            .expect("threaded prefix serve");
+            token_streams(&out)
+        };
+        let golden = run();
+        assert_eq!(golden.len(), prefix_heavy_requests().len());
+        for r in 1..RUNS {
+            assert_eq!(golden, run(), "{policy:?} prefix run {r} diverged");
+        }
+    }
+}
+
+#[test]
+fn prefix_cache_on_and_off_produce_identical_tokens() {
+    // The cache may only change WHEN work happens, never its result:
+    // token streams with the cache on must equal the cache-off streams
+    // under both policies, and the on-runs must actually save prefill.
+    let off = serve_threaded_policy(
+        || Engine::load(Artifacts::synthetic(SEED)?),
+        prefix_heavy_requests(),
+        2,
+        Policy::Batched { batch: 4 },
+    )
+    .expect("cache-off serve");
+    let golden = token_streams(&off);
+    for policy in [Policy::Batched { batch: 4 }, Policy::Continuous { max_active: 4 }] {
+        let on = serve_threaded_policy(
+            || prefix_engine(64),
+            prefix_heavy_requests(),
+            2,
+            policy,
+        )
+        .expect("cache-on serve");
+        assert_eq!(golden, token_streams(&on), "{policy:?} tokens changed");
+        let saved: usize = on.iter().map(|r| r.cached_tokens).sum();
+        assert!(saved > 0, "{policy:?}: shared system prompts must hit");
+    }
+}
+
+#[test]
+fn prefix_cache_under_preemption_byte_identical_across_runs() {
+    // Tight arena + prefix cache + continuous scheduling: admission
+    // reclaims index pins, preempts sharers, re-admissions re-share —
+    // and the token streams must still be byte-identical every run and
+    // equal to the roomy cache-off run.
+    let roomy = serve_threaded_policy(
+        || Engine::load(Artifacts::synthetic(SEED)?),
+        prefix_heavy_requests(),
+        1,
+        Policy::Fifo,
+    )
+    .expect("roomy serve");
+    let golden = token_streams(&roomy);
+    let run = || {
+        let engine = prefix_engine(12).unwrap();
+        let out = pim_llm::serving::Server::new(&engine, Policy::Continuous { max_active: 8 })
+            .serve(prefix_heavy_requests())
+            .unwrap();
+        engine.debug_validate().unwrap();
+        let mut streams = token_streams(&out);
+        streams.sort_by_key(|(id, _)| *id);
+        streams
+    };
+    let first = run();
+    assert_eq!(golden, first, "tight prefix run diverged from roomy FIFO");
+    for r in 1..RUNS {
+        assert_eq!(first, run(), "tight prefix run {r} diverged");
+    }
+}
+
 #[test]
 fn degenerate_requests_complete_with_correct_shapes() {
     let out = serve_threaded_with(
