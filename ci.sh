@@ -37,6 +37,7 @@ cargo test -q --offline --test batch_equivalence
 cargo test -q --offline --test paged_equivalence
 cargo test -q --offline --test kvcache_properties
 cargo test -q --offline --test prefix_equivalence
+cargo test -q --offline --test shard_determinism
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -71,6 +72,17 @@ cargo run -q --release --offline --bin repro -- serve --backend reference \
 cargo run -q --release --offline --bin repro -- serve --backend packed \
   --policy continuous --prefix-cache --requests 10 --prompt-len 12 \
   --new-tokens 8 --max-active 8 --arena-blocks 10 --block-len 4
+
+echo "== smoke: sharded multi-worker serving against a tight arena =="
+# Four workers over ONE partitioned arena (24 blocks total = 6 per
+# shard) on BOTH host backends: hash placement, per-shard continuous
+# ticks, work stealing, and per-shard preemption all run end to end.
+cargo run -q --release --offline --bin repro -- serve --backend reference \
+  --policy sharded --workers 4 --requests 12 --prompt-len 4 \
+  --new-tokens 12 --max-active 3 --arena-blocks 24
+cargo run -q --release --offline --bin repro -- serve --backend packed \
+  --policy sharded --workers 4 --requests 12 --prompt-len 4 \
+  --new-tokens 12 --max-active 3 --arena-blocks 24
 
 echo "== bench + example targets compile (offline) =="
 cargo build --benches --offline

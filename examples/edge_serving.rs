@@ -18,6 +18,15 @@
 //! (0 = defaults) — a small arena is what makes `continuous` show its
 //! packing advantage (and its preemptions) on this tiny model.
 //!
+//! `--policy sharded --workers W` switches to the multi-worker engine:
+//! the SAME total arena capacity is partitioned into W `Send`-able
+//! shards, each owned by one continuous-batching worker thread
+//! (`--max-active` lanes PER worker), with deterministic hash placement
+//! and cross-shard work stealing. The example then runs the identical
+//! workload on a 1-worker engine at equal total capacity and asserts
+//! the tokens are byte-identical — worker count is a throughput knob,
+//! never a numerics knob.
+//!
 //! Prefix sharing: `--prefix-cache` (with optional `--prefix-cap E`)
 //! turns on the copy-on-write prefix cache — every request here shares
 //! one system prompt over the first half of its tokens, so matched
@@ -33,8 +42,10 @@
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{token_loop, Arch};
 use pim_llm::models;
-use pim_llm::runtime::{BackendKind, Engine};
-use pim_llm::serving::{LatencyStats, Policy, Request, Server};
+use pim_llm::runtime::{BackendKind, Engine, ShardedEngine};
+use pim_llm::serving::{
+    serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server,
+};
 use pim_llm::util::cli::Args;
 use pim_llm::util::error::Result;
 use pim_llm::util::rng::Rng;
@@ -51,11 +62,33 @@ fn main() -> Result<()> {
     // governs the lane count unless --batch is passed too — the same
     // precedence `repro serve` uses.
     let batch = args.usize_or("batch", if args.get("policy").is_some() { 0 } else { 8 })?;
-    let policy = Policy::from_flags(args.get("policy"), batch, max_active)?;
+    let workers = args.usize_or("workers", 1)?;
+    let policy = Policy::from_flags(args.get("policy"), batch, max_active, workers)?;
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
     let block_len = args.usize_or("block-len", 0)?;
     let prefix_cache = args.flag("prefix-cache");
     let prefix_cap = args.usize_or("prefix-cap", 0)?;
+
+    // The sharded policy partitions ONE arena across worker threads and
+    // has its own 1-vs-N scaling demonstration.
+    if let Policy::Sharded {
+        workers,
+        max_active,
+    } = policy
+    {
+        return sharded_scaling(
+            &args,
+            workers,
+            max_active,
+            n_requests,
+            prompt_len,
+            new_tokens,
+            arena_blocks,
+            block_len,
+            prefix_cache,
+            prefix_cap,
+        );
+    }
 
     // ----------------------------------------------------------------
     // Functional serving on the runtime backend (`--backend packed`
@@ -86,24 +119,7 @@ fn main() -> Result<()> {
         if engine.prefix_enabled() { "on" } else { "off" }
     );
 
-    // One shared system prompt over the first half of every request's
-    // tokens (the prefix cache's target shape), per-request tail after.
-    let mut rng = Rng::new(7);
-    let vocab = engine.vocab();
-    let system: Vec<i32> = (0..prompt_len / 2)
-        .map(|_| rng.range(1, vocab - 1) as i32)
-        .collect();
-    let requests: Vec<Request> = (0..n_requests as u64)
-        .map(|id| Request {
-            id,
-            prompt: system
-                .iter()
-                .copied()
-                .chain((system.len()..prompt_len).map(|_| rng.range(1, vocab - 1) as i32))
-                .collect(),
-            n_new: new_tokens,
-        })
-        .collect();
+    let requests = workload(engine.vocab(), n_requests, prompt_len, new_tokens);
 
     let t0 = Instant::now();
     let server = Server::new(&engine, policy);
@@ -210,5 +226,104 @@ fn main() -> Result<()> {
             base.total_latency_s / hybrid.total_latency_s
         );
     }
+    Ok(())
+}
+
+/// One shared system prompt over the first half of every request's
+/// tokens (the prefix cache's target shape), per-request tail after.
+fn workload(vocab: usize, n_requests: usize, prompt_len: usize, new_tokens: usize) -> Vec<Request> {
+    let mut rng = Rng::new(7);
+    let system: Vec<i32> = (0..prompt_len / 2)
+        .map(|_| rng.range(1, vocab - 1) as i32)
+        .collect();
+    (0..n_requests as u64)
+        .map(|id| Request {
+            id,
+            prompt: system
+                .iter()
+                .copied()
+                .chain((system.len()..prompt_len).map(|_| rng.range(1, vocab - 1) as i32))
+                .collect(),
+            n_new: new_tokens,
+        })
+        .collect()
+}
+
+/// `--policy sharded`: serve the workload on a W-worker sharded engine,
+/// then rerun it on a 1-worker engine at EQUAL total arena capacity and
+/// assert byte-identical tokens — the scaling demonstration plus the
+/// determinism guarantee in one pass.
+#[allow(clippy::too_many_arguments)]
+fn sharded_scaling(
+    args: &Args,
+    workers: usize,
+    max_active: usize,
+    n_requests: usize,
+    prompt_len: usize,
+    new_tokens: usize,
+    arena_blocks: usize,
+    block_len: usize,
+    prefix_cache: bool,
+    prefix_cap: usize,
+) -> Result<()> {
+    let kind = BackendKind::resolve(args.backend())?;
+    let mut engine = ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?;
+    if prefix_cache {
+        engine.enable_prefix_cache(prefix_cap);
+    }
+    let arena = engine.arena_status();
+    println!(
+        "engine up: backend={} platform={}, sharded x{} workers ({} lanes each), \
+         KV arena {} blocks x {} positions total, prefix cache {}",
+        engine.backend_name(),
+        engine.platform(),
+        engine.workers(),
+        max_active,
+        arena.total_blocks,
+        arena.block_len,
+        if engine.prefix_enabled() { "on" } else { "off" }
+    );
+    let requests = workload(engine.vocab(), n_requests, prompt_len, new_tokens);
+    let offsets = vec![0.0; requests.len()];
+
+    let t0 = Instant::now();
+    let (out, shards) = serve_sharded_stats(&mut engine, requests.clone(), &offsets, max_active)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = LatencyStats::from_responses(&out, wall);
+    println!(
+        "\nserved {} requests ({} tokens) in {:.2}s across {} shards",
+        stats.n, stats.total_tokens, wall, workers
+    );
+    println!("  throughput       : {:8.1} tok/s", stats.tokens_per_s);
+    println!(
+        "  TTFT mean/p50/p95: {:.3} / {:.3} / {:.3} s",
+        stats.mean_ttft_s, stats.p50_ttft_s, stats.p95_ttft_s
+    );
+    for line in shard_report(&shards).lines() {
+        println!("  {line}");
+    }
+    if let Some(ps) = engine.prefix_stats() {
+        println!("  {}", ps.report());
+    }
+    engine.debug_validate()?;
+
+    // 1-worker oracle at the SAME total capacity and per-worker lanes.
+    let total = arena.total_blocks;
+    let mut one = ShardedEngine::load_default(kind, block_len, total, 1)?;
+    if prefix_cache {
+        one.enable_prefix_cache(prefix_cap);
+    }
+    let t0 = Instant::now();
+    let (base, _) = serve_sharded_stats(&mut one, requests, &offsets, max_active)?;
+    let base_wall = t0.elapsed().as_secs_f64();
+    for r in &out {
+        let b = base.iter().find(|b| b.id == r.id).expect("same ids");
+        assert_eq!(r.tokens, b.tokens, "worker count must not change tokens");
+    }
+    println!(
+        "\n1-worker oracle: {base_wall:.2}s — {workers}-worker speedup {:.2}x \
+         (byte-identical tokens verified)",
+        base_wall / wall.max(f64::MIN_POSITIVE)
+    );
     Ok(())
 }

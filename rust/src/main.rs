@@ -17,8 +17,8 @@ use pim_llm::analysis::{figures, report};
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, token_loop, Arch};
 use pim_llm::models;
-use pim_llm::runtime::{decoder, BackendKind, Engine};
-use pim_llm::serving::{LatencyStats, Policy, Request, Server};
+use pim_llm::runtime::{decoder, BackendKind, Engine, ShardedEngine};
+use pim_llm::serving::{serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server};
 use pim_llm::util::cli::Args;
 use pim_llm::util::error::{anyhow, Result};
 use std::time::Instant;
@@ -32,16 +32,22 @@ SUBCOMMANDS
   simulate   --model <name> --context <l> --arch <pim-llm|tpu-llm>
   sweep      --figure <fig1b|fig4|fig5|fig6|fig7|fig8|table3|all>
   serve      --requests N --prompt-len P --new-tokens T [--batch B | --max-active A]
-             [--policy fifo|rr|batched|continuous]
+             [--policy fifo|rr|batched|continuous|sharded] [--workers W]
              [--arena-blocks K] [--block-len L]
              [--prefix-cache] [--prefix-cap E]
              [--backend reference|packed|pjrt]
              (--policy continuous admits/retires sessions every tick
               against the paged KV-cache arena, preempting under
               pressure; batched reserves worst-case blocks per request
-              and advances fixed lanes. Without --policy, --batch B > 0
+              and advances fixed lanes; sharded partitions the arena
+              into --workers W Send-able shards, one continuous-batching
+              worker thread each (max-active lanes PER worker), with
+              deterministic hash placement and cross-shard work
+              stealing — same tokens as every other policy, host
+              backends only. Without --policy, --batch B > 0
               selects batched, else round-robin. --arena-blocks /
-              --block-len size the KV arena; 0 = defaults.
+              --block-len size the KV arena (total across shards);
+              0 = defaults.
               --prefix-cache shares identical prompt prefixes across
               requests via copy-on-write cache blocks — matched prefill
               positions are skipped with bit-identical outputs;
@@ -198,7 +204,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the batched scheduler (one decode_batch over all active sessions
     // per tick); 0 keeps round-robin.
     let batch = args.usize_or("batch", 0)?;
-    let policy = Policy::from_flags(args.get("policy"), batch, max_active)?;
+    let workers = args.usize_or("workers", 1)?;
+    let policy = Policy::from_flags(args.get("policy"), batch, max_active, workers)?;
     // KV-cache arena geometry (0 = defaults); small --arena-blocks is
     // how to see the continuous policy's preemption path live.
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
@@ -215,30 +222,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => 0,
     };
 
-    let engine = Engine::load_default_with_arena(
-        BackendKind::resolve(args.backend())?,
-        block_len,
-        arena_blocks,
-    )?;
-    if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
-        println!(
-            "note: backend {} keeps contiguous private caches — prefix \
-             sharing unavailable, serving with full prefill",
-            engine.backend_name()
-        );
-    }
-    let arena = engine.arena_status();
-    println!(
-        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?} \
-         arena={} blocks x {} positions prefix_cache={}",
-        engine.backend_name(),
-        engine.platform(),
-        engine.artifacts.manifest.model.d,
-        engine.artifacts.manifest.model.n_layers,
-        arena.total_blocks,
-        arena.block_len,
-        engine.prefix_enabled()
-    );
     // The first half of every prompt is a COMMON system prefix (id-
     // independent), the second half is per-request — the shape the
     // prefix cache is built for; without --prefix-cache it is simply a
@@ -258,6 +241,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
             n_new: new_tokens,
         })
         .collect();
+    let kind = BackendKind::resolve(args.backend())?;
+
+    // Sharded serving partitions ONE arena across worker-owned shards
+    // and runs its own multi-threaded front end; everything else drives
+    // the classic single-engine server.
+    if let Policy::Sharded {
+        workers,
+        max_active,
+    } = policy
+    {
+        let mut engine = ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?;
+        if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
+            println!(
+                "note: backend {} keeps contiguous private caches — prefix \
+                 sharing unavailable, serving with full prefill",
+                engine.backend_name()
+            );
+        }
+        let arena = engine.arena_status();
+        println!(
+            "engine: backend={} platform={} model=tiny-1bit policy={policy:?} \
+             arena={} blocks x {} positions across {} shards prefix_cache={}",
+            engine.backend_name(),
+            engine.platform(),
+            arena.total_blocks,
+            arena.block_len,
+            engine.workers(),
+            engine.prefix_enabled()
+        );
+        let offsets = vec![0.0; reqs.len()];
+        let t0 = Instant::now();
+        let (out, shards) = serve_sharded_stats(&mut engine, reqs, &offsets, max_active)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = LatencyStats::from_responses(&out, wall);
+        println!(
+            "served {} requests / {} tokens in {:.2}s (mean latency {:.3}s)",
+            stats.n, stats.total_tokens, wall, stats.mean_service_s
+        );
+        println!("  {}", stats.report());
+        for line in shard_report(&shards).lines() {
+            println!("  {line}");
+        }
+        if let Some(ps) = engine.prefix_stats() {
+            println!(
+                "  {} | {} entries live",
+                ps.report(),
+                engine.prefix_entries()
+            );
+        }
+        return Ok(());
+    }
+
+    let engine = Engine::load_default_with_arena(kind, block_len, arena_blocks)?;
+    if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
+        println!(
+            "note: backend {} keeps contiguous private caches — prefix \
+             sharing unavailable, serving with full prefill",
+            engine.backend_name()
+        );
+    }
+    let arena = engine.arena_status();
+    println!(
+        "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?} \
+         arena={} blocks x {} positions prefix_cache={}",
+        engine.backend_name(),
+        engine.platform(),
+        engine.artifacts.manifest.model.d,
+        engine.artifacts.manifest.model.n_layers,
+        arena.total_blocks,
+        arena.block_len,
+        engine.prefix_enabled()
+    );
     let t0 = Instant::now();
     let server = Server::new(&engine, policy);
     let out = server.serve(reqs)?;

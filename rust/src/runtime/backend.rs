@@ -25,6 +25,16 @@
 //! [`CacheHandle::key`] (the contiguous compatibility shim) while still
 //! registering handles with the arena so handle lifecycle and
 //! validation stay uniform.
+//!
+//! Thread topology: the trait deliberately has NO `Send` supertrait —
+//! PJRT's device handles need not be movable. Both host backends are
+//! plain data over an immutable `Arc<Artifacts>` (the reference
+//! executor resolves parameter indices; the packed executor additionally
+//! re-packs its bitplanes at construction), so they are `Send` by
+//! structure, and the sharded serving engine boxes them as
+//! `dyn Backend + Send` to move one instance into each worker thread
+//! (see `runtime::engine::ShardedEngine`). Each worker gets its OWN
+//! backend instance; only the `Arc`'d weights are shared.
 
 use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use crate::util::error::{ensure, Result};

@@ -93,22 +93,40 @@ impl BackendKind {
     }
 }
 
-/// Loaded model + execution backend + the shared KV-cache arena; one
-/// `decode_step`/`decode_batch` per generated token.
+/// Loaded model + execution backend + a block-paged KV-cache arena; one
+/// `decode_step`/`decode_batch` per generated token. Generic over the
+/// boxed backend's trait-object type so the same implementation serves
+/// two concrete facades:
+///
+/// * [`Engine`] (`B = dyn Backend`) — the single-threaded engine every
+///   caller has always seen, able to hold any backend including PJRT;
+/// * [`EngineShard`] (`B = dyn Backend + Send`) — one shard of a
+///   [`ShardedEngine`], movable into a worker thread because every
+///   field is `Send` (host backends are plain data; the arena and
+///   prefix index are plain `Vec` storage).
 ///
 /// The arena sits behind a `RefCell`: engine calls are already
-/// single-threaded per engine (backends are not `Sync`; the threaded
-/// serving front end replicates one engine per worker), and interior
-/// mutability is what lets many sessions share one `&Engine` the way
-/// they shared it before the paging refactor.
-pub struct Engine {
+/// single-threaded per engine/shard (backends are not `Sync`; the
+/// threaded serving front ends give each worker its own engine or
+/// shard), and interior mutability is what lets many sessions share one
+/// `&Engine` the way they shared it before the paging refactor.
+pub struct EngineImpl<B: ?Sized + Backend = dyn Backend> {
     pub artifacts: Arc<Artifacts>,
-    backend: Box<dyn Backend>,
+    backend: Box<B>,
     arena: RefCell<CacheArena>,
     /// Copy-on-write prefix index over the arena, off until
     /// [`Engine::enable_prefix_cache`] (the `--prefix-cache` knob).
     prefix: RefCell<Option<PrefixCache>>,
 }
+
+/// The classic single-threaded engine facade (any backend).
+pub type Engine = EngineImpl;
+
+/// One worker-owned shard of a [`ShardedEngine`]: a host backend plus a
+/// private slice of the total arena capacity. `Send` by construction —
+/// no locks anywhere on its decode path, because no other thread can
+/// reach its blocks.
+pub type EngineShard = EngineImpl<dyn Backend + Send>;
 
 impl Engine {
     /// Load with the backend selected by `PIM_LLM_BACKEND` (reference by
@@ -174,27 +192,7 @@ impl Engine {
         block_len: usize,
         capacity_blocks: usize,
     ) -> Result<Self> {
-        let dir = super::artifacts::default_dir();
-        if dir.join("manifest.json").exists() {
-            let artifacts = Artifacts::load(dir)
-                .context("loading artifacts (run `make artifacts`)")?;
-            Self::load_with_arena(artifacts, kind, block_len, capacity_blocks)
-        } else if kind.requires_aot_artifacts() {
-            crate::bail!(
-                "backend {kind:?} requires real AOT artifacts at {} — run `make \
-                 artifacts` first (only the host backends have a synthetic \
-                 fallback)",
-                dir.display()
-            )
-        } else {
-            eprintln!(
-                "note: no AOT artifacts at {} — using the built-in synthetic tiny \
-                 model on the {kind:?} backend (run `make artifacts` for the real \
-                 AOT decoder)",
-                dir.display()
-            );
-            Self::load_with_arena(Artifacts::synthetic(0)?, kind, block_len, capacity_blocks)
-        }
+        Self::load_with_arena(default_artifacts(kind)?, kind, block_len, capacity_blocks)
     }
 
     /// Load from the default `artifacts/` directory; if no AOT artifacts
@@ -206,7 +204,35 @@ impl Engine {
     pub fn load_default_with(kind: BackendKind) -> Result<Self> {
         Self::load_default_with_arena(kind, 0, 0)
     }
+}
 
+/// Artifacts from the default `artifacts/` directory, with the
+/// synthetic tiny-model fallback for host backends — the shared loading
+/// rule behind [`Engine::load_default_with_arena`] and
+/// [`ShardedEngine::load_default`].
+pub fn default_artifacts(kind: BackendKind) -> Result<Artifacts> {
+    let dir = super::artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        Artifacts::load(dir).context("loading artifacts (run `make artifacts`)")
+    } else if kind.requires_aot_artifacts() {
+        crate::bail!(
+            "backend {kind:?} requires real AOT artifacts at {} — run `make \
+             artifacts` first (only the host backends have a synthetic \
+             fallback)",
+            dir.display()
+        )
+    } else {
+        eprintln!(
+            "note: no AOT artifacts at {} — using the built-in synthetic tiny \
+             model on the {kind:?} backend (run `make artifacts` for the real \
+             AOT decoder)",
+            dir.display()
+        );
+        Artifacts::synthetic(0)
+    }
+}
+
+impl<B: ?Sized + Backend> EngineImpl<B> {
     /// Open a fresh decode session; retire it with
     /// [`Engine::free_session`] (the decoders do this on drop).
     pub fn new_session(&self) -> Result<CacheHandle> {
@@ -487,6 +513,222 @@ impl Engine {
     }
 }
 
+// ---- sharded engine ------------------------------------------------
+
+/// A host backend boxed as `dyn Backend + Send`, one per worker. Both
+/// host executors are plain data over `Arc<Artifacts>` (the weights are
+/// shared immutably; the packed backend re-packs its bitplanes per
+/// worker at load time), so the compiler derives `Send` structurally.
+/// PJRT keeps device-resident session state and cannot be sharded.
+fn host_backend(artifacts: &Arc<Artifacts>, kind: BackendKind) -> Result<Box<dyn Backend + Send>> {
+    match kind {
+        BackendKind::Reference => Ok(Box::new(super::reference::ReferenceBackend::new(
+            Arc::clone(artifacts),
+        )?)),
+        BackendKind::Packed => Ok(Box::new(super::packed::PackedBackend::new(Arc::clone(
+            artifacts,
+        ))?)),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => crate::bail!(
+            "sharded serving needs a host backend (reference | packed); the PJRT \
+             backend keeps device-resident session state and cannot move to a \
+             worker thread"
+        ),
+    }
+}
+
+/// Deterministic request→shard placement: a SplitMix64 hash of the
+/// request id modulo the shard count. Never use `std`'s `DefaultHasher`
+/// here — `RandomState` is seeded per process, which would break the
+/// headline guarantee that placement (and therefore every shard-local
+/// schedule) is reproducible across runs.
+pub fn shard_for(request_id: u64, shards: usize) -> usize {
+    debug_assert!(shards >= 1);
+    (crate::util::rng::Rng::new(request_id).next_u64() % shards.max(1) as u64) as usize
+}
+
+/// A session handle carrying the shard that owns it. Block indices and
+/// COW refcounts are shard-local, so a `CacheHandle` alone no longer
+/// names a session once the arena is partitioned — the pair does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardHandle {
+    pub shard: usize,
+    pub handle: CacheHandle,
+}
+
+/// N worker-owned [`EngineShard`]s behind one facade: the total arena
+/// capacity is partitioned deterministically across shards
+/// ([`CacheArena::split`]), each shard gets its own backend instance and
+/// its own prefix-cache index, and nothing is shared between shards but
+/// the immutable `Arc<Artifacts>`. The sharded serving loop
+/// ([`crate::serving::serve_sharded`]) moves `&mut` shard references
+/// into scoped worker threads; single-threaded callers can instead
+/// drive sessions through the [`ShardHandle`] API below, which routes
+/// each call to the owning shard.
+pub struct ShardedEngine {
+    shards: Vec<EngineShard>,
+}
+
+impl ShardedEngine {
+    /// Build `workers` shards over `total_blocks` of arena capacity
+    /// (`0` selects the same default total as [`Engine::load_with_arena`];
+    /// either way the TOTAL is fixed and then split, so comparing worker
+    /// counts compares schedulers, not memory budgets).
+    pub fn load(
+        artifacts: Artifacts,
+        kind: BackendKind,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        crate::ensure!(workers >= 1, "sharded engine needs at least one worker");
+        let artifacts = Arc::new(artifacts);
+        let layout = CacheLayout::with_block_len(&artifacts.manifest.model, block_len);
+        let total = if total_blocks == 0 {
+            layout.blocks_per_session().max(1) * super::kvcache::DEFAULT_ARENA_SESSIONS
+        } else {
+            total_blocks
+        };
+        let shards = CacheArena::split(layout, total, workers)?
+            .into_iter()
+            .map(|arena| {
+                Ok(EngineImpl {
+                    artifacts: Arc::clone(&artifacts),
+                    backend: host_backend(&artifacts, kind)?,
+                    arena: RefCell::new(arena),
+                    prefix: RefCell::new(None),
+                })
+            })
+            .collect::<Result<Vec<EngineShard>>>()?;
+        Ok(Self { shards })
+    }
+
+    /// [`ShardedEngine::load`] over the default artifacts directory
+    /// (synthetic fallback for host backends) — what `repro serve
+    /// --policy sharded` maps to.
+    pub fn load_default(
+        kind: BackendKind,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        Self::load(default_artifacts(kind)?, kind, block_len, total_blocks, workers)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, shard: usize) -> &EngineShard {
+        &self.shards[shard]
+    }
+
+    /// Exclusive shard access — the sharded serving loop `iter_mut`s
+    /// this to move one `&mut EngineShard` into each worker thread.
+    pub fn shards_mut(&mut self) -> &mut [EngineShard] {
+        &mut self.shards
+    }
+
+    /// The shard this request id is placed on ([`shard_for`]).
+    pub fn placement(&self, request_id: u64) -> usize {
+        shard_for(request_id, self.shards.len())
+    }
+
+    /// Open a session on the shard that owns `request_id`.
+    pub fn new_session(&self, request_id: u64) -> Result<ShardHandle> {
+        self.new_session_on(self.placement(request_id))
+    }
+
+    /// Open a session on an explicit shard.
+    pub fn new_session_on(&self, shard: usize) -> Result<ShardHandle> {
+        crate::ensure!(shard < self.shards.len(), "no shard {shard}");
+        Ok(ShardHandle {
+            shard,
+            handle: self.shards[shard].new_session()?,
+        })
+    }
+
+    pub fn free_session(&self, h: ShardHandle) -> Result<()> {
+        self.shards[h.shard].free_session(h.handle)
+    }
+
+    pub fn decode_step(&self, h: ShardHandle, token_id: i32, pos: i32) -> Result<Vec<f32>> {
+        self.shards[h.shard].decode_step(h.handle, token_id, pos)
+    }
+
+    /// Enable every shard's private prefix index, each bounded at
+    /// `cap_entries` (the per-shard cap; indices never share blocks
+    /// because blocks never cross shards). Returns whether the backend
+    /// supports prefix sharing at all.
+    pub fn enable_prefix_cache(&self, cap_entries: usize) -> bool {
+        self.shards.iter().all(|s| s.enable_prefix_cache(cap_entries))
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.shards.iter().any(|s| s.prefix_enabled())
+    }
+
+    /// Prefix-cache counters summed across shards (None when disabled).
+    pub fn prefix_stats(&self) -> Option<PrefixStats> {
+        let mut merged: Option<PrefixStats> = None;
+        for s in &self.shards {
+            if let Some(st) = s.prefix_stats() {
+                merged.get_or_insert_with(PrefixStats::default).absorb(st);
+            }
+        }
+        merged
+    }
+
+    /// Live prefix-index entries summed across shards.
+    pub fn prefix_entries(&self) -> usize {
+        self.shards.iter().map(|s| s.prefix_entries()).sum()
+    }
+
+    /// Arena occupancy merged across shards (block counts summed; the
+    /// block length is uniform by construction).
+    pub fn arena_status(&self) -> ArenaStatus {
+        let mut merged = self.shards[0].arena_status();
+        for s in &self.shards[1..] {
+            let st = s.arena_status();
+            merged.total_blocks += st.total_blocks;
+            merged.free_blocks += st.free_blocks;
+            merged.used_blocks += st.used_blocks;
+            merged.live_sessions += st.live_sessions;
+            merged.pinned_blocks += st.pinned_blocks;
+        }
+        merged
+    }
+
+    /// Run every shard's full arena invariant check.
+    pub fn debug_validate(&self) -> Result<()> {
+        for (i, s) in self.shards.iter().enumerate() {
+            s.debug_validate()
+                .with_context(|| format!("shard {i} accounting"))?;
+        }
+        Ok(())
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.shards[0].block_len()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.shards[0].vocab()
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.shards[0].max_ctx()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.shards[0].backend_name()
+    }
+
+    pub fn platform(&self) -> String {
+        self.shards[0].platform()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -763,5 +1005,107 @@ mod tests {
             e1.decode_step(s1, 42, 0).unwrap(),
             e2.decode_step(s2, 42, 0).unwrap()
         );
+    }
+
+    fn sharded(workers: usize) -> ShardedEngine {
+        ShardedEngine::load(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            16,
+            workers,
+        )
+        .expect("sharded engine")
+    }
+
+    #[test]
+    fn shards_are_send_and_split_the_total_capacity() {
+        fn assert_send<T: Send>() {}
+        assert_send::<EngineShard>();
+        assert_send::<&mut EngineShard>();
+
+        let se = sharded(4);
+        assert_eq!(se.workers(), 4);
+        // 16 blocks over 4 shards: equal total capacity, split evenly.
+        assert_eq!(se.arena_status().total_blocks, 16);
+        for i in 0..4 {
+            assert_eq!(se.shard(i).arena_status().total_blocks, 4);
+        }
+        // Worker count changes the partition, never the total.
+        assert_eq!(sharded(3).arena_status().total_blocks, 16);
+        assert!(ShardedEngine::load(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            16,
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_uses_every_shard() {
+        let se = sharded(4);
+        let mut hit = [false; 4];
+        for id in 0..64u64 {
+            let p = se.placement(id);
+            assert_eq!(p, shard_for(id, 4), "placement must be the pure hash");
+            assert_eq!(p, se.placement(id), "repeated placement must agree");
+            hit[p] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 ids should touch all 4 shards");
+        // Single shard: everything lands on shard 0.
+        assert!((0..16u64).all(|id| shard_for(id, 1) == 0));
+    }
+
+    #[test]
+    fn shard_handles_route_to_their_owning_shard() {
+        let se = sharded(2);
+        let e = engine();
+        // A session decoded through the facade must agree bitwise with
+        // the monolithic engine, on whichever shard placement picks.
+        let h = se.new_session(7).unwrap();
+        let s = e.new_session().unwrap();
+        assert_eq!(
+            se.decode_step(h, 5, 0).unwrap(),
+            e.decode_step(s, 5, 0).unwrap()
+        );
+        // The blocks live on the owning shard only.
+        assert_eq!(se.shard(h.shard).arena_status().used_blocks, 1);
+        assert_eq!(se.shard(1 - h.shard).arena_status().used_blocks, 0);
+        se.free_session(h).unwrap();
+        assert_eq!(se.arena_status().used_blocks, 0);
+        se.debug_validate().unwrap();
+        assert!(se.new_session_on(2).is_err());
+    }
+
+    #[test]
+    fn sharded_prefix_indices_stay_shard_local() {
+        let se = sharded(2);
+        assert!(se.enable_prefix_cache(0));
+        assert!(se.prefix_enabled());
+        let prompt: Vec<i32> = (1..=8).collect();
+        let h = se.new_session_on(0).unwrap();
+        for (pos, &t) in prompt.iter().enumerate() {
+            se.decode_step(h, t, pos as i32).unwrap();
+        }
+        se.shard(0).prefix_insert(h.handle, &prompt).unwrap();
+        se.free_session(h).unwrap();
+        // The index pinned blocks on shard 0 only; merged stats see it.
+        assert_eq!(se.prefix_entries(), 2);
+        assert_eq!(se.shard(1).prefix_entries(), 0);
+        assert_eq!(se.shard(0).arena_status().pinned_blocks, 2);
+        assert_eq!(se.shard(1).arena_status().pinned_blocks, 0);
+        // Adoption on shard 0 hits; the same prompt on shard 1 misses —
+        // shard-local indices never answer for another shard's blocks.
+        let a0 = se.new_session_on(0).unwrap();
+        assert_eq!(se.shard(0).prefix_adopt(a0.handle, &prompt).unwrap(), 8);
+        let a1 = se.new_session_on(1).unwrap();
+        assert_eq!(se.shard(1).prefix_adopt(a1.handle, &prompt).unwrap(), 0);
+        let merged = se.prefix_stats().unwrap();
+        assert_eq!((merged.hits, merged.misses, merged.saved_tokens), (1, 1, 8));
+        se.free_session(a0).unwrap();
+        se.free_session(a1).unwrap();
+        se.debug_validate().unwrap();
     }
 }

@@ -209,6 +209,31 @@ impl CacheArena {
         Self::new(layout, blocks)
     }
 
+    /// Partition `total_blocks` of capacity into `shards` independent
+    /// arenas — the storage layer of the sharded serving engine. Each
+    /// shard is a self-contained [`CacheArena`] (own K/V storage, free
+    /// list, refcounts, slots), so a shard is `Send` and can be owned
+    /// exclusively by one worker thread with no locking; block indices
+    /// are shard-local and COW refcounts never cross a shard boundary.
+    ///
+    /// The split is deterministic: every shard gets
+    /// `total_blocks / shards` blocks and the remainder goes to the
+    /// lowest shard ids, so equal `total_blocks` always produces the
+    /// same partition. Per-shard accounting is checked by calling
+    /// [`CacheArena::debug_validate`] on each returned arena.
+    pub fn split(layout: CacheLayout, total_blocks: usize, shards: usize) -> Result<Vec<Self>> {
+        ensure!(shards >= 1, "need at least one shard");
+        ensure!(
+            total_blocks >= shards,
+            "cannot split {total_blocks} blocks into {shards} shards (each shard needs >= 1 block)"
+        );
+        let base = total_blocks / shards;
+        let rem = total_blocks % shards;
+        (0..shards)
+            .map(|i| Self::new(layout.clone(), base + usize::from(i < rem)))
+            .collect()
+    }
+
     pub fn layout(&self) -> &CacheLayout {
         &self.layout
     }
@@ -1010,6 +1035,57 @@ mod tests {
         // unobtainable (a naive free + table-len sum would say 6).
         assert_eq!(a.obtainable_with(&[s2]), 4);
         assert_eq!(a.obtainable_with(&[]), 4);
+    }
+
+    #[test]
+    fn split_partitions_deterministically() {
+        // 14 blocks over 4 shards: base 3, remainder to the lowest ids.
+        let shards = CacheArena::split(layout(4), 14, 4).unwrap();
+        let caps: Vec<usize> = shards.iter().map(|a| a.status().total_blocks).collect();
+        assert_eq!(caps, vec![4, 4, 3, 3]);
+        assert_eq!(caps.iter().sum::<usize>(), 14);
+        // Even split stays even; a second split of the same inputs is
+        // byte-for-byte the same partition.
+        let again: Vec<usize> = CacheArena::split(layout(4), 14, 4)
+            .unwrap()
+            .iter()
+            .map(|a| a.status().total_blocks)
+            .collect();
+        assert_eq!(caps, again);
+        assert_eq!(
+            CacheArena::split(layout(4), 8, 2)
+                .unwrap()
+                .iter()
+                .map(|a| a.status().total_blocks)
+                .collect::<Vec<_>>(),
+            vec![4, 4]
+        );
+        // Degenerate splits are rejected up front.
+        assert!(CacheArena::split(layout(4), 3, 4).is_err());
+        assert!(CacheArena::split(layout(4), 4, 0).is_err());
+    }
+
+    #[test]
+    fn split_shards_are_independent_arenas() {
+        // Blocks allocated on one shard never appear in another shard's
+        // accounting: each shard's free list, refcounts and sessions are
+        // self-contained, which is what makes a shard safe to move to a
+        // worker thread without any locking.
+        let mut shards = CacheArena::split(layout(4), 8, 2).unwrap();
+        let h0 = shards[0].alloc_session().unwrap();
+        shards[0].ensure_capacity(h0, 7).unwrap(); // 2 blocks on shard 0
+        assert_eq!(shards[0].status().used_blocks, 2);
+        assert_eq!(shards[1].status().used_blocks, 0);
+        // Shard-local block ids start at 0 on every shard.
+        let h1 = shards[1].alloc_session().unwrap();
+        shards[1].ensure_capacity(h1, 0).unwrap();
+        assert_eq!(shards[1].session_table(h1).unwrap(), vec![0]);
+        for s in &shards {
+            s.debug_validate().unwrap();
+        }
+        // A shard is Send by construction (plain Vec storage).
+        fn assert_send<T: Send>() {}
+        assert_send::<CacheArena>();
     }
 
     #[test]

@@ -26,8 +26,13 @@
 //!   the off-by-default `pjrt` Cargo feature (the `xla` crate needs
 //!   network access to build — see Cargo.toml); keeps contiguous
 //!   device-resident caches behind the same handle API.
-//! * [`engine`]    — the facade callers use; picks a backend and sizes
-//!   the arena at load.
+//! * [`engine`]    — the facades callers use; picks a backend and sizes
+//!   the arena at load. [`Engine`] is the single-threaded facade;
+//!   [`ShardedEngine`] partitions the same total arena capacity into N
+//!   `Send`-able [`EngineShard`]s (own backend instance, own arena
+//!   slice, own prefix index — nothing shared but the `Arc`'d weights),
+//!   each owned exclusively by one serving worker thread, with
+//!   deterministic request→shard placement ([`engine::shard_for`]).
 //! * [`decoder`]   — greedy generation loops (single-session
 //!   `TinyDecoder`, batched `BatchDecoder`) + golden validation.
 
@@ -46,6 +51,8 @@ pub mod reference;
 pub use artifacts::Artifacts;
 pub use backend::Backend;
 pub use decoder::{BatchDecoder, TinyDecoder};
-pub use engine::{BackendKind, Engine};
+pub use engine::{
+    shard_for, BackendKind, Engine, EngineImpl, EngineShard, ShardHandle, ShardedEngine,
+};
 pub use kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 pub use prefixcache::{PrefixCache, PrefixMatch, PrefixStats};

@@ -336,4 +336,13 @@ mod tests {
         assert_eq!(p.platform(), "cpu");
         assert!(p.model.packed_bytes() > 0);
     }
+
+    #[test]
+    fn packed_backend_is_send() {
+        // Sharded serving constructs one packed backend per worker (the
+        // bitplane re-pack is a load-time cost) and moves it into the
+        // worker thread; that requires the struct to stay `Send`.
+        fn assert_send<T: Send>() {}
+        assert_send::<PackedBackend>();
+    }
 }

@@ -51,6 +51,18 @@ pub struct PrefixStats {
 }
 
 impl PrefixStats {
+    /// Fold another counter set into this one — how the sharded engine
+    /// merges its per-shard indices into one report. Each shard owns a
+    /// private index (blocks never cross shards, so neither do pins or
+    /// hits); the fleet-wide picture is the plain sum.
+    pub fn absorb(&mut self, other: PrefixStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.saved_tokens += other.saved_tokens;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+    }
+
     /// One-line report for the serving CLIs.
     pub fn report(&self) -> String {
         format!(
@@ -501,5 +513,37 @@ mod tests {
         assert!(pc.insert(&mut a, &[1, 2, 3], &chain).is_err());
         assert!(pc.insert(&mut a, &[1, 2, 3, 4, 5], &chain).is_err());
         assert_eq!(pc.len(), 0);
+    }
+
+    #[test]
+    fn stats_absorb_sums_per_shard_counters() {
+        let mut merged = PrefixStats::default();
+        merged.absorb(PrefixStats {
+            hits: 2,
+            misses: 1,
+            saved_tokens: 16,
+            insertions: 4,
+            evictions: 0,
+        });
+        merged.absorb(PrefixStats {
+            hits: 1,
+            misses: 3,
+            saved_tokens: 8,
+            insertions: 2,
+            evictions: 5,
+        });
+        assert_eq!(
+            merged,
+            PrefixStats {
+                hits: 3,
+                misses: 4,
+                saved_tokens: 24,
+                insertions: 6,
+                evictions: 5,
+            }
+        );
+        // A shard-local index is plain data: safe to move to a worker.
+        fn assert_send<T: Send>() {}
+        assert_send::<PrefixCache>();
     }
 }

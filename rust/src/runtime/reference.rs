@@ -528,6 +528,15 @@ mod tests {
     }
 
     #[test]
+    fn reference_backend_is_send() {
+        // The sharded serving engine moves one backend instance into
+        // each worker thread as `Box<dyn Backend + Send>`; this compiles
+        // only while the struct stays plain data over `Arc<Artifacts>`.
+        fn assert_send<T: Send>() {}
+        assert_send::<ReferenceBackend>();
+    }
+
+    #[test]
     fn missing_parameter_rejected_at_load() {
         let mut a = Artifacts::synthetic(4).unwrap();
         let idx = a

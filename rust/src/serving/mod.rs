@@ -20,10 +20,27 @@
 //!   `decode_batch` per tick as `Batched`, but more sessions fit the
 //!   same arena because nothing idles on a worst-case reservation.
 //!
-//! All four produce identical tokens for identical requests (sessions
+//! * [`Policy::Sharded`] — N worker threads, each owning one
+//!   [`EngineShard`] (a private slice of the total arena capacity) and
+//!   running its own continuous-batching tick over its resident
+//!   sessions. Requests are placed deterministically
+//!   (`shard_for(id) % workers`), idle workers steal whole
+//!   not-yet-prefilled requests from backlogged shards, and each shard
+//!   keeps a private prefix index — no block, refcount, or lock is ever
+//!   shared between threads. Driven by [`serve_sharded`] over a
+//!   [`ShardedEngine`]; the single-thread policies above are its
+//!   `workers = 1` oracle.
+//!
+//! All five produce identical tokens for identical requests (sessions
 //! are isolated and re-prefill is deterministic — enforced by
 //! `tests/batch_equivalence.rs` and `tests/paged_equivalence.rs`); they
-//! differ only in throughput and latency shape.
+//! differ only in throughput and latency shape. That purity is also the
+//! sharded determinism proof: a request's tokens depend on nothing but
+//! the request, and stealing only moves requests that have not started
+//! (or have been preempted back to nothing), so worker count, placement
+//! and steal timing can change WHO decodes a request but never WHAT it
+//! decodes — `tests/shard_determinism.rs` pins byte-identical responses
+//! across `workers ∈ {1, 2, 4, 8}`.
 //!
 //! Prefix sharing: with the engine's copy-on-write prefix cache enabled
 //! ([`crate::runtime::Engine::enable_prefix_cache`], the
@@ -37,20 +54,24 @@
 //! session is preempted. Requests can arrive
 //! over time ([`Server::serve_arrivals`]) — with all offsets zero the
 //! schedule is a pure function of the request list, which is what the
-//! determinism suite pins. A threaded front end (`serve_threaded_with`)
-//! drives multiple engine replicas; the offline build has no tokio, so
-//! concurrency is std::thread-based (documented substitution — see
-//! Cargo.toml).
+//! determinism suite pins. Two threaded front ends exist: the
+//! [`ThreadedServe`] builder replicates one full engine per worker (the
+//! only sound topology for non-`Send` backends like PJRT), and
+//! [`serve_sharded`] partitions ONE arena across worker-owned shards.
+//! The offline build has no tokio, so concurrency is std::thread-based
+//! (documented substitution — see Cargo.toml).
 
 pub mod stats;
 
-pub use stats::LatencyStats;
+pub use stats::{shard_report, LatencyStats, ShardStats};
 
 use crate::runtime::decoder::greedy_argmax;
-use crate::runtime::{CacheHandle, Engine};
+use crate::runtime::engine::{shard_for, EngineImpl, EngineShard, ShardedEngine};
+use crate::runtime::{Backend, CacheHandle, Engine};
 use crate::util::error::{ensure, Result};
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -107,46 +128,82 @@ pub enum Policy {
     /// `decode_batch` per tick, blocks claimed on demand,
     /// pressure-aware admission and youngest-first preemption.
     Continuous { max_active: usize },
+    /// `workers` threads, each running the continuous tick over its own
+    /// [`EngineShard`] with up to `max_active` resident sessions PER
+    /// shard. Only meaningful through [`serve_sharded`] on a
+    /// [`ShardedEngine`]; handing it to a single-engine [`Server`] or
+    /// the replica front end is an error, not a silent fallback.
+    Sharded { workers: usize, max_active: usize },
 }
 
 impl Policy {
-    /// Resolve the CLI surface (`--policy fifo|rr|batched|continuous`
-    /// plus the `--batch`/`--max-active` knobs). With no `--policy`,
-    /// the historical behavior is kept: `--batch B > 0` selects the
-    /// batched scheduler, otherwise round-robin.
-    pub fn from_flags(name: Option<&str>, batch: usize, max_active: usize) -> Result<Policy> {
+    /// Resolve an explicit `--policy` NAME. `batch`/`max_active` size
+    /// the admission lanes exactly as [`Policy::from_flags`] does, and
+    /// `workers` only matters for `sharded`. Unrecognized names get an
+    /// error that lists every valid spelling — the CLI shows it
+    /// verbatim, so a typo is a one-glance fix.
+    pub fn from_name(
+        name: &str,
+        batch: usize,
+        max_active: usize,
+        workers: usize,
+    ) -> Result<Policy> {
         let lanes = if batch > 0 { batch } else { max_active.max(1) };
+        match name {
+            "fifo" => Ok(Policy::Fifo),
+            "rr" | "round-robin" => Ok(Policy::RoundRobin { max_active }),
+            "batched" => Ok(Policy::Batched { batch: lanes }),
+            "continuous" => Ok(Policy::Continuous { max_active: lanes }),
+            "sharded" => Ok(Policy::Sharded {
+                workers: workers.max(1),
+                max_active: lanes,
+            }),
+            other => {
+                crate::bail!(
+                    "unknown policy '{other}' — valid policies are: fifo | rr | \
+                     batched | continuous | sharded"
+                )
+            }
+        }
+    }
+
+    /// Resolve the CLI surface (`--policy` plus the `--batch` /
+    /// `--max-active` / `--workers` knobs). With no `--policy`, the
+    /// historical behavior is kept: `--batch B > 0` selects the batched
+    /// scheduler, otherwise round-robin.
+    pub fn from_flags(
+        name: Option<&str>,
+        batch: usize,
+        max_active: usize,
+        workers: usize,
+    ) -> Result<Policy> {
         match name {
             None => Ok(if batch > 0 {
                 Policy::Batched { batch }
             } else {
                 Policy::RoundRobin { max_active }
             }),
-            Some("fifo") => Ok(Policy::Fifo),
-            Some("rr") | Some("round-robin") => Ok(Policy::RoundRobin { max_active }),
-            Some("batched") => Ok(Policy::Batched { batch: lanes }),
-            Some("continuous") => Ok(Policy::Continuous { max_active: lanes }),
-            Some(other) => {
-                crate::bail!("unknown policy '{other}' (fifo | rr | batched | continuous)")
-            }
+            Some(name) => Self::from_name(name, batch, max_active, workers),
         }
     }
 
-    /// Admission lane cap.
+    /// Admission lane cap (per worker under [`Policy::Sharded`]).
     fn max_active(self) -> usize {
         match self {
             Policy::Fifo => 1,
-            Policy::RoundRobin { max_active } | Policy::Continuous { max_active } => {
-                max_active.max(1)
-            }
+            Policy::RoundRobin { max_active }
+            | Policy::Continuous { max_active }
+            | Policy::Sharded { max_active, .. } => max_active.max(1),
             Policy::Batched { batch } => batch.max(1),
         }
     }
 
     /// Whether admission pre-reserves the request's worst-case block
     /// count (the fixed-wave policies) instead of claiming on demand.
+    /// A shard's tick is the continuous tick, so `Sharded` claims on
+    /// demand too.
     fn reserves_worst_case(self) -> bool {
-        !matches!(self, Policy::Continuous { .. })
+        !matches!(self, Policy::Continuous { .. } | Policy::Sharded { .. })
     }
 }
 
@@ -285,15 +342,21 @@ impl Active {
     }
 }
 
-/// Synchronous serving engine (the threaded front end drives one of
-/// these per worker; the engine call itself is blocking).
-pub struct Server<'e> {
-    engine: &'e Engine,
+/// Synchronous serving engine (the threaded front ends drive one of
+/// these per worker; the engine call itself is blocking). Generic over
+/// the engine's backend-box type for the same reason
+/// [`EngineImpl`] is: `Server<'e>` (the default, `B = dyn Backend`)
+/// is the classic single-engine server, while the sharded worker loop
+/// instantiates `Server<'_, dyn Backend + Send>` over its
+/// [`EngineShard`] and reuses the exact admission / pressure / tick /
+/// sweep stages below — one battle-tested scheduler, two topologies.
+pub struct Server<'e, B: ?Sized + Backend = dyn Backend> {
+    engine: &'e EngineImpl<B>,
     policy: Policy,
 }
 
-impl<'e> Server<'e> {
-    pub fn new(engine: &'e Engine, policy: Policy) -> Self {
+impl<'e, B: ?Sized + Backend> Server<'e, B> {
+    pub fn new(engine: &'e EngineImpl<B>, policy: Policy) -> Self {
         Self { engine, policy }
     }
 
@@ -316,18 +379,11 @@ impl<'e> Server<'e> {
         offsets: &[f64],
     ) -> Result<Vec<Response>> {
         ensure!(
-            requests.len() == offsets.len(),
-            "serve_arrivals arity mismatch: {} requests, {} offsets",
-            requests.len(),
-            offsets.len()
+            !matches!(self.policy, Policy::Sharded { .. }),
+            "Policy::Sharded partitions a ShardedEngine across worker threads — \
+             drive it through serving::serve_sharded, not a single-engine Server"
         );
-        for (r, &o) in requests.iter().zip(offsets) {
-            ensure!(
-                o.is_finite() && o >= 0.0,
-                "request {}: arrival offset {o} must be finite and >= 0",
-                r.id
-            );
-        }
+        validate_arrivals(&requests, offsets)?;
         let mut future: VecDeque<(Request, f64)> = {
             let mut v: Vec<(Request, f64)> =
                 requests.into_iter().zip(offsets.iter().copied()).collect();
@@ -386,9 +442,6 @@ impl<'e> Server<'e> {
     ) -> Result<()> {
         let t0 = Instant::now();
         let mut ready: VecDeque<Pending> = VecDeque::new();
-        let max_active = self.policy.max_active();
-        let max_ctx = self.engine.max_ctx();
-        let total_blocks = self.engine.arena_status().total_blocks;
         let mut next_seq = 0u64;
 
         while !future.is_empty() || !ready.is_empty() || !active.is_empty() {
@@ -401,162 +454,10 @@ impl<'e> Server<'e> {
             let now_s = t0.elapsed().as_secs_f64();
             while future.front().is_some_and(|&(_, off)| off <= now_s) {
                 let (req, off) = future.pop_front().expect("front checked");
-                let arrived = t0 + std::time::Duration::from_secs_f64(off);
-                ready.push_back(Pending::new(req, arrived));
+                ready.push_back(Pending::new(req, t0 + Duration::from_secs_f64(off)));
             }
 
-            // ---- admission: top the active set up to the lane cap, ----
-            // subject to arena capacity. Oversized requests (context
-            // window or arena) are rejected here, not mid-decode;
-            // zero-work requests complete immediately without occupying
-            // a lane or a block.
-            while active.len() < max_active {
-                let Some(front) = ready.front() else { break };
-                let total = front.req.total_tokens();
-                ensure!(
-                    total <= max_ctx,
-                    "request {} needs {} tokens > max_ctx {max_ctx}",
-                    front.req.id,
-                    total
-                );
-                if total == 0 {
-                    let p = ready.pop_front().expect("front checked");
-                    done.push(p.finish_empty());
-                    continue;
-                }
-                let need = self.engine.blocks_for_positions(total);
-                // Fixed-wave sessions hold their worst-case reservation,
-                // so the per-session next-block scan always reports 0 —
-                // only the continuous gates read it. Skip the O(active)
-                // walk on the reserving policies' admission path.
-                let needed_now = if self.policy.reserves_worst_case() {
-                    0
-                } else {
-                    self.pressure(active)?
-                };
-                // Full index blocks this request would adopt SHARED —
-                // they consume no free blocks, so the reservation's
-                // free-block need shrinks by them. Peeking also
-                // LRU-touches the matched chain, so the reclaim below
-                // evicts everything else first instead of the very
-                // chain the request is about to hit. 0 with the cache
-                // off.
-                let peeked = self.engine.prefix_peek_blocks(&front.req.prompt);
-                // Under block shortage, reclaim prefix-index pins
-                // (LRU): cached prefixes are pure opportunity, running
-                // sessions and admissions are work. No-op without the
-                // prefix cache.
-                let want = if self.policy.reserves_worst_case() {
-                    need.saturating_sub(peeked)
-                } else {
-                    needed_now + 1
-                };
-                if self.engine.arena_status().free_blocks < want {
-                    self.engine.prefix_reclaim(want)?;
-                }
-                let free = self.engine.arena_status().free_blocks;
-                // Blocks this serving loop can EVER obtain for the
-                // request: the free list plus blocks held only by its
-                // own sessions and reclaimable prefix pins (shared
-                // blocks counted once). Blocks held outside the loop (a
-                // live decoder on the same engine) are never coming
-                // back, so a request needing them must be rejected up
-                // front — not aborted mid-decode with a misleading
-                // pressure error.
-                let obtainable = self.obtainable(active);
-                ensure!(
-                    need <= obtainable,
-                    "request {} needs {need} cache blocks but only {obtainable} of \
-                     {total_blocks} are obtainable by this serving loop ({} held \
-                     outside it)",
-                    front.req.id,
-                    total_blocks - obtainable
-                );
-                let admit = if self.policy.reserves_worst_case() {
-                    // Fixed-wave: everything BEYOND the shared prefix
-                    // blocks must fit as a worst-case reservation, so
-                    // an admitted session can never stall (shared
-                    // blocks are already materialized; the partial
-                    // tail's copy-on-write block is part of the
-                    // non-peeked remainder). A post-adoption re-check
-                    // below keeps this exact even if the match changes
-                    // between peek and adoption.
-                    free >= need.saturating_sub(peeked)
-                } else {
-                    // Continuous: claim on demand, but leave headroom
-                    // for every running session's next block plus one
-                    // for the newcomer, so admission itself does not
-                    // force an immediate preemption.
-                    free > needed_now
-                };
-                if !admit {
-                    break;
-                }
-                let mut p = ready.pop_front().expect("front checked");
-                let handle = self.engine.new_session()?;
-                // Consult the prefix index BEFORE reserving/claiming:
-                // matched positions arrive as shared (copy-on-write)
-                // blocks and their prefill decode is skipped outright —
-                // the cache state is bitwise what cold prefill would
-                // produce, so tokens cannot change. Returns 0 with the
-                // cache off or on backends without block-table reads.
-                let cached_now = match self.engine.prefix_adopt(handle, &p.req.prompt) {
-                    Ok(c) => c,
-                    Err(e) => {
-                        // Never leak the half-admitted session's blocks.
-                        let _ = self.engine.free_session(handle);
-                        return Err(e);
-                    }
-                };
-                if self.policy.reserves_worst_case() {
-                    // Exact no-stall re-check: the blocks NOT already in
-                    // the session's table must come from the free list.
-                    // If the actual match came up shorter than the peek
-                    // (only possible if the reclaim above was forced
-                    // through the touched chain), defer the admission
-                    // rather than letting the reservation hard-error —
-                    // active sessions will free blocks as they finish.
-                    let held = self.engine.session_blocks(handle)?;
-                    let short = self.engine.arena_status().free_blocks
-                        < need.saturating_sub(held);
-                    if short && !active.is_empty() {
-                        // Roll back the adoption's hit/saved counters —
-                        // the retry will adopt and count again, and the
-                        // engine stats must keep matching the sum of
-                        // response-level cached_tokens.
-                        self.engine.prefix_unrecord(cached_now);
-                        self.engine.free_session(handle)?;
-                        ready.push_front(p);
-                        break;
-                    }
-                    // With no active session to wait on, fall through:
-                    // reserve_session's out-of-blocks error carries the
-                    // accurate diagnosis.
-                    if let Err(e) = self.engine.reserve_session(handle, total) {
-                        let _ = self.engine.free_session(handle);
-                        return Err(e);
-                    }
-                }
-                if p.first_admitted.is_none() {
-                    p.first_admitted = Some(Instant::now());
-                }
-                active.push(Active {
-                    handle,
-                    seq: next_seq,
-                    pos: cached_now as i32,
-                    tokens: p.req.prompt[..cached_now].to_vec(),
-                    last_logits: Vec::new(),
-                    fed: cached_now,
-                    arrived: p.arrived,
-                    first_admitted: p.first_admitted.expect("just set"),
-                    first_token_at: p.first_token_at,
-                    evictions: p.evictions,
-                    cached: p.cached + cached_now,
-                    indexed: false,
-                    req: p.req,
-                });
-                next_seq += 1;
-            }
+            self.admit(&mut ready, active, done, &mut next_seq)?;
 
             if active.is_empty() {
                 // Nothing runnable. With this server's sessions all
@@ -565,6 +466,7 @@ impl<'e> Server<'e> {
                 // loop (e.g. a live decoder on the same engine) — error
                 // out rather than busy-spin waiting on blocks nobody
                 // here will free.
+                let total_blocks = self.engine.arena_status().total_blocks;
                 ensure!(
                     ready.is_empty(),
                     "request {} cannot be admitted: {} of {} arena blocks are held \
@@ -579,162 +481,418 @@ impl<'e> Server<'e> {
                 if let Some(&(_, off)) = future.front() {
                     let wait = off - t0.elapsed().as_secs_f64();
                     if wait > 0.0 {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+                        std::thread::sleep(Duration::from_secs_f64(wait));
                     }
                 }
                 continue;
             }
 
-            // ---- arena pressure (continuous only): make sure every ----
-            // active session's next position is backable, preempting the
-            // youngest until it is. Preemption frees the victim's blocks
-            // and requeues its request at the FRONT of the ready queue;
-            // the re-prefill is deterministic, so its tokens are
-            // unchanged. The oldest session is never evicted (victims
-            // are max-seq, and the single-session case always fits by
-            // the admission capacity check), so progress is guaranteed.
-            if !self.policy.reserves_worst_case() {
-                loop {
-                    let needed = self.pressure(active)?;
-                    if self.engine.arena_status().free_blocks >= needed {
-                        break;
-                    }
-                    // Reclaim prefix-index pins before touching running
-                    // sessions: evicting a cached prefix costs future
-                    // hits, preempting a session costs a re-prefill.
-                    self.engine.prefix_reclaim(needed)?;
-                    let free = self.engine.arena_status().free_blocks;
-                    if free >= needed {
-                        break;
-                    }
-                    // A lone session always fits by the admission
-                    // obtainable check — unless blocks are held outside
-                    // this loop, which no amount of preemption can fix.
-                    ensure!(
-                        active.len() > 1,
-                        "request {} cannot claim its next cache block: {} of \
-                         {total_blocks} arena blocks are held outside this serving \
-                         loop",
-                        active[0].req.id,
-                        total_blocks.saturating_sub(self.obtainable(active))
-                    );
-                    let victim = active
-                        .iter()
-                        .enumerate()
-                        .max_by_key(|(_, a)| a.seq)
-                        .map(|(i, _)| i)
-                        .expect("active non-empty");
-                    let a = active.remove(victim);
-                    // Freeing releases only the victim's EXCLUSIVE
-                    // blocks — blocks shared with the prefix index or
-                    // another session keep their remaining references
-                    // (the refcount invariant tests/kvcache_properties
-                    // pins), so no still-referenced block can reach the
-                    // free list here.
-                    self.engine.free_session(a.handle)?;
-                    ready.push_front(a.into_pending());
+            self.relieve_pressure(&mut ready, active)?;
+            self.tick(active, done)?;
+        }
+        Ok(())
+    }
+
+    /// Admission stage: top the active set up to the lane cap, subject
+    /// to arena capacity. Oversized requests (context window or arena)
+    /// are rejected here, not mid-decode; zero-work requests complete
+    /// immediately without occupying a lane or a block. Shared verbatim
+    /// by [`Server::run_loop`] and the sharded worker loop — a stolen
+    /// request enters here exactly like a placed one, so where a request
+    /// runs can never change what it decodes.
+    fn admit(
+        &self,
+        ready: &mut VecDeque<Pending>,
+        active: &mut Vec<Active>,
+        done: &mut Vec<Response>,
+        next_seq: &mut u64,
+    ) -> Result<()> {
+        let max_active = self.policy.max_active();
+        let max_ctx = self.engine.max_ctx();
+        let total_blocks = self.engine.arena_status().total_blocks;
+        while active.len() < max_active {
+            let Some(front) = ready.front() else { break };
+            let total = front.req.total_tokens();
+            ensure!(
+                total <= max_ctx,
+                "request {} needs {} tokens > max_ctx {max_ctx}",
+                front.req.id,
+                total
+            );
+            if total == 0 {
+                let p = ready.pop_front().expect("front checked");
+                done.push(p.finish_empty());
+                continue;
+            }
+            let need = self.engine.blocks_for_positions(total);
+            // Fixed-wave sessions hold their worst-case reservation,
+            // so the per-session next-block scan always reports 0 —
+            // only the continuous gates read it. Skip the O(active)
+            // walk on the reserving policies' admission path.
+            let needed_now = if self.policy.reserves_worst_case() {
+                0
+            } else {
+                self.pressure(active)?
+            };
+            // Full index blocks this request would adopt SHARED —
+            // they consume no free blocks, so the reservation's
+            // free-block need shrinks by them. Peeking also
+            // LRU-touches the matched chain, so the reclaim below
+            // evicts everything else first instead of the very
+            // chain the request is about to hit. 0 with the cache
+            // off.
+            let peeked = self.engine.prefix_peek_blocks(&front.req.prompt);
+            // Under block shortage, reclaim prefix-index pins
+            // (LRU): cached prefixes are pure opportunity, running
+            // sessions and admissions are work. No-op without the
+            // prefix cache.
+            let want = if self.policy.reserves_worst_case() {
+                need.saturating_sub(peeked)
+            } else {
+                needed_now + 1
+            };
+            if self.engine.arena_status().free_blocks < want {
+                self.engine.prefix_reclaim(want)?;
+            }
+            let free = self.engine.arena_status().free_blocks;
+            // Blocks this serving loop can EVER obtain for the
+            // request: the free list plus blocks held only by its
+            // own sessions and reclaimable prefix pins (shared
+            // blocks counted once). Blocks held outside the loop (a
+            // live decoder on the same engine) are never coming
+            // back, so a request needing them must be rejected up
+            // front — not aborted mid-decode with a misleading
+            // pressure error.
+            let obtainable = self.obtainable(active);
+            ensure!(
+                need <= obtainable,
+                "request {} needs {need} cache blocks but only {obtainable} of \
+                 {total_blocks} are obtainable by this serving loop ({} held \
+                 outside it)",
+                front.req.id,
+                total_blocks - obtainable
+            );
+            let admit = if self.policy.reserves_worst_case() {
+                // Fixed-wave: everything BEYOND the shared prefix
+                // blocks must fit as a worst-case reservation, so
+                // an admitted session can never stall (shared
+                // blocks are already materialized; the partial
+                // tail's copy-on-write block is part of the
+                // non-peeked remainder). A post-adoption re-check
+                // below keeps this exact even if the match changes
+                // between peek and adoption.
+                free >= need.saturating_sub(peeked)
+            } else {
+                // Continuous: claim on demand, but leave headroom
+                // for every running session's next block plus one
+                // for the newcomer, so admission itself does not
+                // force an immediate preemption.
+                free > needed_now
+            };
+            if !admit {
+                break;
+            }
+            let mut p = ready.pop_front().expect("front checked");
+            let handle = self.engine.new_session()?;
+            // Consult the prefix index BEFORE reserving/claiming:
+            // matched positions arrive as shared (copy-on-write)
+            // blocks and their prefill decode is skipped outright —
+            // the cache state is bitwise what cold prefill would
+            // produce, so tokens cannot change. Returns 0 with the
+            // cache off or on backends without block-table reads.
+            let cached_now = match self.engine.prefix_adopt(handle, &p.req.prompt) {
+                Ok(c) => c,
+                Err(e) => {
+                    // Never leak the half-admitted session's blocks.
+                    let _ = self.engine.free_session(handle);
+                    return Err(e);
+                }
+            };
+            if self.policy.reserves_worst_case() {
+                // Exact no-stall re-check: the blocks NOT already in
+                // the session's table must come from the free list.
+                // If the actual match came up shorter than the peek
+                // (only possible if the reclaim above was forced
+                // through the touched chain), defer the admission
+                // rather than letting the reservation hard-error —
+                // active sessions will free blocks as they finish.
+                let held = self.engine.session_blocks(handle)?;
+                let short = self.engine.arena_status().free_blocks
+                    < need.saturating_sub(held);
+                if short && !active.is_empty() {
+                    // Roll back the adoption's hit/saved counters —
+                    // the retry will adopt and count again, and the
+                    // engine stats must keep matching the sum of
+                    // response-level cached_tokens.
+                    self.engine.prefix_unrecord(cached_now);
+                    self.engine.free_session(handle)?;
+                    ready.push_front(p);
+                    break;
+                }
+                // With no active session to wait on, fall through:
+                // reserve_session's out-of-blocks error carries the
+                // accurate diagnosis.
+                if let Err(e) = self.engine.reserve_session(handle, total) {
+                    let _ = self.engine.free_session(handle);
+                    return Err(e);
                 }
             }
+            if p.first_admitted.is_none() {
+                p.first_admitted = Some(Instant::now());
+            }
+            active.push(Active {
+                handle,
+                seq: *next_seq,
+                pos: cached_now as i32,
+                tokens: p.req.prompt[..cached_now].to_vec(),
+                last_logits: Vec::new(),
+                fed: cached_now,
+                arrived: p.arrived,
+                first_admitted: p.first_admitted.expect("just set"),
+                first_token_at: p.first_token_at,
+                evictions: p.evictions,
+                cached: p.cached + cached_now,
+                indexed: false,
+                req: p.req,
+            });
+            *next_seq += 1;
+        }
+        Ok(())
+    }
 
-            // ---- one scheduler tick: every active session advances ----
-            // exactly one token (prefill or generate, mixed freely).
-            match self.policy {
-                Policy::Batched { .. } | Policy::Continuous { .. } => {
-                    let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
-                    let positions: Vec<i32> = active.iter().map(|a| a.pos).collect();
-                    let handles: Vec<CacheHandle> =
-                        active.iter().map(|a| a.handle).collect();
-                    let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
-                    for ((a, logits), &t) in active.iter_mut().zip(outs).zip(&tokens) {
-                        a.absorb(t, logits);
-                    }
-                }
-                Policy::Fifo | Policy::RoundRobin { .. } => {
-                    for a in active.iter_mut() {
-                        let t = a.next_token();
-                        let logits = self.engine.decode_step(a.handle, t, a.pos)?;
-                        a.absorb(t, logits);
-                    }
+    /// Pressure stage (on-demand policies only): make sure every active
+    /// session's next position is backable, preempting the youngest
+    /// until it is. Preemption frees the victim's blocks and requeues
+    /// its request at the FRONT of the ready queue; the re-prefill is
+    /// deterministic, so its tokens are unchanged. The oldest session is
+    /// never evicted (victims are max-seq, and the single-session case
+    /// always fits by the admission capacity check), so progress is
+    /// guaranteed. Returns the number of sessions preempted (the sharded
+    /// stats report surfaces the sum per shard). No-op on the
+    /// worst-case-reserving policies.
+    fn relieve_pressure(
+        &self,
+        ready: &mut VecDeque<Pending>,
+        active: &mut Vec<Active>,
+    ) -> Result<usize> {
+        if self.policy.reserves_worst_case() {
+            return Ok(0);
+        }
+        let total_blocks = self.engine.arena_status().total_blocks;
+        let mut preempted = 0usize;
+        loop {
+            let needed = self.pressure(active)?;
+            if self.engine.arena_status().free_blocks >= needed {
+                break;
+            }
+            // Reclaim prefix-index pins before touching running
+            // sessions: evicting a cached prefix costs future
+            // hits, preempting a session costs a re-prefill.
+            self.engine.prefix_reclaim(needed)?;
+            let free = self.engine.arena_status().free_blocks;
+            if free >= needed {
+                break;
+            }
+            // A lone session always fits by the admission
+            // obtainable check — unless blocks are held outside
+            // this loop, which no amount of preemption can fix.
+            ensure!(
+                active.len() > 1,
+                "request {} cannot claim its next cache block: {} of \
+                 {total_blocks} arena blocks are held outside this serving \
+                 loop",
+                active[0].req.id,
+                total_blocks.saturating_sub(self.obtainable(active))
+            );
+            let victim = active
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, a)| a.seq)
+                .map(|(i, _)| i)
+                .expect("active non-empty");
+            let a = active.remove(victim);
+            // Freeing releases only the victim's EXCLUSIVE
+            // blocks — blocks shared with the prefix index or
+            // another session keep their remaining references
+            // (the refcount invariant tests/kvcache_properties
+            // pins), so no still-referenced block can reach the
+            // free list here.
+            self.engine.free_session(a.handle)?;
+            ready.push_front(a.into_pending());
+            preempted += 1;
+        }
+        Ok(preempted)
+    }
+
+    /// One scheduler tick: every active session advances exactly one
+    /// token (prefill or generate, mixed freely), completed prefills are
+    /// recorded into the prefix index, and finished sessions are swept
+    /// out (completion order), freeing their blocks for the next
+    /// admission round.
+    fn tick(&self, active: &mut Vec<Active>, done: &mut Vec<Response>) -> Result<()> {
+        match self.policy {
+            Policy::Batched { .. } | Policy::Continuous { .. } | Policy::Sharded { .. } => {
+                let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
+                let positions: Vec<i32> = active.iter().map(|a| a.pos).collect();
+                let handles: Vec<CacheHandle> =
+                    active.iter().map(|a| a.handle).collect();
+                let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
+                for ((a, logits), &t) in active.iter_mut().zip(outs).zip(&tokens) {
+                    a.absorb(t, logits);
                 }
             }
-
-            // ---- prefix index: record each completed prefill (once ----
-            // per admission, before the sweep can retire it) so later
-            // requests with the same system prompt share these blocks.
-            // No-op with the cache off.
-            if self.engine.prefix_enabled() {
+            Policy::Fifo | Policy::RoundRobin { .. } => {
                 for a in active.iter_mut() {
-                    if !a.indexed && a.fed >= a.req.prompt.len() {
-                        a.indexed = true;
-                        self.engine.prefix_insert(a.handle, &a.req.prompt)?;
-                    }
+                    let t = a.next_token();
+                    let logits = self.engine.decode_step(a.handle, t, a.pos)?;
+                    a.absorb(t, logits);
                 }
             }
+        }
 
-            // ---- sweep finished sessions (completion order), freeing ----
-            // their blocks for the next admission round.
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].done() {
-                    let a = active.swap_remove(i);
-                    self.engine.free_session(a.handle)?;
-                    done.push(a.finish());
-                } else {
-                    i += 1;
+        // ---- prefix index: record each completed prefill (once ----
+        // per admission, before the sweep can retire it) so later
+        // requests with the same system prompt share these blocks.
+        // No-op with the cache off.
+        if self.engine.prefix_enabled() {
+            for a in active.iter_mut() {
+                if !a.indexed && a.fed >= a.req.prompt.len() {
+                    a.indexed = true;
+                    self.engine.prefix_insert(a.handle, &a.req.prompt)?;
                 }
+            }
+        }
+
+        // ---- sweep finished sessions (completion order), freeing ----
+        // their blocks for the next admission round.
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].done() {
+                let a = active.swap_remove(i);
+                self.engine.free_session(a.handle)?;
+                done.push(a.finish());
+            } else {
+                i += 1;
             }
         }
         Ok(())
     }
 }
 
-/// Threaded front end: shard the request list across `workers` threads,
-/// each driving its **own engine replica** built by `make_engine`
-/// (engine backends are not `Sync` — the pjrt feature's PJRT handles in
-/// particular — so replication, one engine per worker, is the sound
-/// multi-worker topology; it also mirrors a real deployment where each
-/// accelerator instance holds its own programmed crossbars). Each worker
-/// runs the given scheduling `policy` over its shard.
-pub fn serve_threaded_policy<F>(
+/// Offset-list validation shared by [`Server::serve_arrivals`] and the
+/// sharded front end: one offset per request, each finite and >= 0.
+fn validate_arrivals(requests: &[Request], offsets: &[f64]) -> Result<()> {
+    ensure!(
+        requests.len() == offsets.len(),
+        "serve_arrivals arity mismatch: {} requests, {} offsets",
+        requests.len(),
+        offsets.len()
+    );
+    for (r, &o) in requests.iter().zip(offsets) {
+        ensure!(
+            o.is_finite() && o >= 0.0,
+            "request {}: arrival offset {o} must be finite and >= 0",
+            r.id
+        );
+    }
+    Ok(())
+}
+
+/// Replicated threaded front end, builder-style: shard the request list
+/// across `workers` threads, each driving its **own engine replica**
+/// built by `make_engine` (engine backends are not `Sync` — the pjrt
+/// feature's PJRT handles in particular — so replication, one engine
+/// per worker, is the sound multi-worker topology for an arbitrary
+/// backend; it also mirrors a real deployment where each accelerator
+/// instance holds its own programmed crossbars). Each worker runs the
+/// configured scheduling policy over its shard of the request list;
+/// responses come back sorted by request id.
+///
+/// ```ignore
+/// let out = ThreadedServe::new(|| Engine::load(artifacts()?))
+///     .workers(4)
+///     .policy(Policy::Continuous { max_active: 8 })
+///     .run(requests)?;
+/// ```
+///
+/// For partitioning ONE arena across worker-owned shards instead of
+/// replicating the whole engine, see [`serve_sharded`].
+pub struct ThreadedServe<F> {
     make_engine: F,
-    requests: Vec<Request>,
     workers: usize,
     policy: Policy,
-) -> Result<Vec<Response>>
+}
+
+impl<F> ThreadedServe<F>
 where
     F: Fn() -> Result<Engine> + Sync,
 {
-    let workers = workers.clamp(1, requests.len().max(1));
-    // Shard round-robin so load is balanced even with mixed lengths.
-    let mut shards: Vec<Vec<Request>> = (0..workers).map(|_| Vec::new()).collect();
-    for (i, r) in requests.into_iter().enumerate() {
-        shards[i % workers].push(r);
+    /// Front end over engine replicas built by `make_engine`, with the
+    /// historical defaults: one worker, round-robin over 2 lanes.
+    pub fn new(make_engine: F) -> Self {
+        Self {
+            make_engine,
+            workers: 1,
+            policy: Policy::RoundRobin { max_active: 2 },
+        }
     }
-    let results: Vec<Result<Vec<Response>>> = std::thread::scope(|scope| {
-        let make_engine = &make_engine;
-        let handles: Vec<_> = shards
-            .into_iter()
-            .map(|shard| {
-                scope.spawn(move || {
-                    let engine = make_engine()?;
-                    Server::new(&engine, policy).serve(shard)
+
+    /// Number of worker threads (each builds its own engine replica).
+    /// Clamped at run time to the request count; 0 means 1.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Scheduling policy each worker runs over its shard of the request
+    /// list. [`Policy::Sharded`] is rejected at run time — it partitions
+    /// ONE engine's arena and is driven by [`serve_sharded`], not by
+    /// replicas.
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Run the request list to completion across the replicas.
+    pub fn run(self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        ensure!(
+            !matches!(self.policy, Policy::Sharded { .. }),
+            "Policy::Sharded partitions one ShardedEngine — drive it through \
+             serving::serve_sharded, not through engine replicas"
+        );
+        let workers = self.workers.clamp(1, requests.len().max(1));
+        // Shard round-robin so load is balanced even with mixed lengths.
+        let mut shards: Vec<Vec<Request>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, r) in requests.into_iter().enumerate() {
+            shards[i % workers].push(r);
+        }
+        let policy = self.policy;
+        let results: Vec<Result<Vec<Response>>> = std::thread::scope(|scope| {
+            let make_engine = &self.make_engine;
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|shard| {
+                    scope.spawn(move || {
+                        let engine = make_engine()?;
+                        Server::new(&engine, policy).serve(shard)
+                    })
                 })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
-            .collect()
-    });
-    let mut out = Vec::new();
-    for r in results {
-        out.extend(r?);
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect()
+        });
+        let mut out = Vec::new();
+        for r in results {
+            out.extend(r?);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
     }
-    out.sort_by_key(|r| r.id);
-    Ok(out)
 }
 
-/// [`serve_threaded_policy`] with the historical round-robin policy.
+/// [`ThreadedServe`] with the historical round-robin policy.
 pub fn serve_threaded_with<F>(
     make_engine: F,
     requests: Vec<Request>,
@@ -744,15 +902,13 @@ pub fn serve_threaded_with<F>(
 where
     F: Fn() -> Result<Engine> + Sync,
 {
-    serve_threaded_policy(
-        make_engine,
-        requests,
-        workers,
-        Policy::RoundRobin { max_active },
-    )
+    ThreadedServe::new(make_engine)
+        .workers(workers)
+        .policy(Policy::RoundRobin { max_active })
+        .run(requests)
 }
 
-/// Threaded front end loading each replica from an artifact directory.
+/// [`ThreadedServe`] loading each replica from an artifact directory.
 pub fn serve_threaded(
     artifacts_dir: &std::path::Path,
     requests: Vec<Request>,
@@ -765,6 +921,257 @@ pub fn serve_threaded(
         workers,
         max_active,
     )
+}
+
+// ---------------------------------------------------------------------
+// Sharded serving: N worker threads over ONE partitioned arena.
+// ---------------------------------------------------------------------
+
+/// The shared admission queues of a sharded run: one FIFO per shard,
+/// holding that shard's not-yet-admitted `(request, offset)` entries in
+/// arrival order. An entry is popped under its queue's mutex exactly
+/// once — by its home worker, or by an idle worker stealing it — and
+/// never returns to a shared queue (a preempted session requeues into
+/// its worker's PRIVATE ready queue), so every request is served
+/// exactly once. The mutexes guard only these `VecDeque`s: no cache
+/// block, refcount, or engine state is ever behind a lock.
+struct ShardQueues {
+    queues: Vec<Mutex<VecDeque<(Request, f64)>>>,
+}
+
+impl ShardQueues {
+    /// Partition offset-sorted `(request, offset)` pairs by the
+    /// deterministic placement rule ([`shard_for`]`(id) % workers`),
+    /// preserving order within each shard — so each queue is itself
+    /// offset-sorted. Returns the queue set plus per-shard placement
+    /// counts.
+    fn place(sorted: Vec<(Request, f64)>, workers: usize) -> (Self, Vec<usize>) {
+        let mut queues: Vec<VecDeque<(Request, f64)>> =
+            (0..workers).map(|_| VecDeque::new()).collect();
+        let mut placed = vec![0usize; workers];
+        for (req, off) in sorted {
+            let s = shard_for(req.id, workers);
+            placed[s] += 1;
+            queues[s].push_back((req, off));
+        }
+        let queues = queues.into_iter().map(Mutex::new).collect();
+        (Self { queues }, placed)
+    }
+
+    /// Pop the front entry of shard `s`'s queue if it has ARRIVED
+    /// (offset elapsed). Both home-queue draining and stealing go
+    /// through this, so a steal respects arrival order and arrival time
+    /// exactly like home admission does.
+    fn pop_visible(&self, s: usize, now_s: f64) -> Option<(Request, f64)> {
+        let mut q = self.queues[s].lock().expect("shard queue poisoned");
+        if q.front().is_some_and(|&(_, off)| off <= now_s) {
+            q.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Earliest pending arrival offset across ALL queues (`None` = every
+    /// queue drained). The idle worker's sleep target: a future arrival
+    /// may land on its own shard or need stealing, so nobody exits while
+    /// any queue is non-empty.
+    fn earliest(&self) -> Option<f64> {
+        self.queues
+            .iter()
+            .filter_map(|q| {
+                let q = q.lock().expect("shard queue poisoned");
+                q.front().map(|&(_, off)| off)
+            })
+            .min_by(|a, b| a.partial_cmp(b).expect("finite offsets"))
+    }
+}
+
+/// One sharded worker: continuous batching over its own [`EngineShard`]
+/// — admission, decode, retirement, preemption, and prefix adoption are
+/// the very same [`Server`] stages the single-thread policies run, just
+/// instantiated over the shard's `dyn Backend + Send` box. Drains its
+/// home queue first; when it would otherwise idle a lane, it steals the
+/// front-most ARRIVED entry from the other shards (scanning `w+1, w+2,
+/// …` wrapping — a deterministic victim order). A stolen request has by
+/// construction not started (stealing moves whole queued requests
+/// only), so it prefills from nothing on the thief's shard — its tokens
+/// cannot differ from a home run.
+fn shard_worker(
+    shard: &EngineShard,
+    w: usize,
+    shared: &ShardQueues,
+    t0: Instant,
+    max_active: usize,
+) -> Result<(Vec<Response>, ShardStats)> {
+    let workers = shared.queues.len();
+    let server = Server::new(shard, Policy::Continuous { max_active });
+    let mut ready: VecDeque<Pending> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut done: Vec<Response> = Vec::new();
+    let mut next_seq = 0u64;
+    let mut stats = ShardStats::new(w);
+
+    let result = (|| -> Result<()> {
+        loop {
+            // ---- arrivals: drain every ARRIVED entry of the home ----
+            // queue into the private ready queue, in arrival order.
+            let now_s = t0.elapsed().as_secs_f64();
+            while let Some((req, off)) = shared.pop_visible(w, now_s) {
+                ready.push_back(Pending::new(req, t0 + Duration::from_secs_f64(off)));
+            }
+
+            // ---- steal: only when this worker would otherwise idle ----
+            // a lane — no arrived home work and lanes free. One whole
+            // request per round, from the first backlogged victim in
+            // scan order; it prefills here, on this shard's blocks
+            // (copy-on-write refcounts never cross a shard boundary).
+            if ready.is_empty() && active.len() < max_active {
+                for victim in (1..workers).map(|d| (w + d) % workers) {
+                    if let Some((req, off)) = shared.pop_visible(victim, now_s) {
+                        stats.stolen += 1;
+                        ready.push_back(Pending::new(req, t0 + Duration::from_secs_f64(off)));
+                        break;
+                    }
+                }
+            }
+
+            if ready.is_empty() && active.is_empty() {
+                // Nothing runnable here. The run is over for this worker
+                // only when EVERY shared queue is drained; otherwise
+                // sleep until the earliest future arrival and rescan.
+                match shared.earliest() {
+                    None => break,
+                    Some(off) => {
+                        let wait = off - t0.elapsed().as_secs_f64();
+                        if wait > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(wait));
+                        }
+                        continue;
+                    }
+                }
+            }
+
+            server.admit(&mut ready, &mut active, &mut done, &mut next_seq)?;
+
+            if active.is_empty() {
+                // With no session running, every shard block should be
+                // free (modulo reclaimable prefix pins, which admission
+                // reclaims) — a request that still cannot be placed
+                // needs blocks held OUTSIDE this serving loop, e.g. a
+                // live decoder driving the shard directly. Error out
+                // rather than busy-spin. An empty ready queue here just
+                // means the round's work was zero-token requests.
+                let st = shard.arena_status();
+                ensure!(
+                    ready.is_empty(),
+                    "request {} cannot be admitted on shard {w}: {} of {} arena \
+                     blocks are held outside this serving loop",
+                    ready.front().expect("non-empty").req.id,
+                    st.total_blocks - st.free_blocks,
+                    st.total_blocks
+                );
+                continue;
+            }
+
+            stats.peak_active = stats.peak_active.max(active.len());
+            stats.evictions += server.relieve_pressure(&mut ready, &mut active)?;
+            server.tick(&mut active, &mut done)?;
+        }
+        Ok(())
+    })();
+
+    // Never leak shard blocks, even on an admission error: retire
+    // whatever was still active so the engine stays usable. Entries
+    // left in the shared queues stay stealable by healthy workers.
+    if result.is_err() {
+        for a in active.drain(..) {
+            let _ = shard.free_session(a.handle);
+        }
+    }
+    result?;
+    stats.served = done.len();
+    Ok((done, stats))
+}
+
+/// Serve a batch of requests (all arriving at once) across the shards
+/// of a [`ShardedEngine`]: each worker thread owns one shard and runs
+/// continuous batching over it with up to `max_active` lanes PER
+/// WORKER. Placement is the deterministic [`shard_for`] hash; idle
+/// workers steal whole queued requests from backlogged shards. The
+/// responses are byte-identical to a single-worker run of the same
+/// requests (`tests/shard_determinism.rs`), sorted by request id.
+pub fn serve_sharded(
+    engine: &mut ShardedEngine,
+    requests: Vec<Request>,
+    max_active: usize,
+) -> Result<Vec<Response>> {
+    let offsets = vec![0.0; requests.len()];
+    serve_sharded_arrivals(engine, requests, &offsets, max_active)
+}
+
+/// [`serve_sharded`] with per-request arrival offsets (seconds after
+/// the call; 0 = at once), the open-loop bench surface.
+pub fn serve_sharded_arrivals(
+    engine: &mut ShardedEngine,
+    requests: Vec<Request>,
+    offsets: &[f64],
+    max_active: usize,
+) -> Result<Vec<Response>> {
+    serve_sharded_stats(engine, requests, offsets, max_active).map(|(out, _)| out)
+}
+
+/// [`serve_sharded_arrivals`] additionally returning the per-shard
+/// counters (placement, steals, completions, preemptions, peak
+/// occupancy) — one [`ShardStats`] per worker, in shard order.
+pub fn serve_sharded_stats(
+    engine: &mut ShardedEngine,
+    requests: Vec<Request>,
+    offsets: &[f64],
+    max_active: usize,
+) -> Result<(Vec<Response>, Vec<ShardStats>)> {
+    validate_arrivals(&requests, offsets)?;
+    ensure!(max_active >= 1, "sharded serving needs max_active >= 1");
+    let workers = engine.workers();
+    let sorted: Vec<(Request, f64)> = {
+        let mut v: Vec<(Request, f64)> =
+            requests.into_iter().zip(offsets.iter().copied()).collect();
+        // Stable by arrival time, so same-time requests keep list order.
+        v.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite offsets"));
+        v
+    };
+    let (shared, placed) = ShardQueues::place(sorted, workers);
+    let t0 = Instant::now();
+    // `&mut EngineShard` is `Send` (the shard owns its backend, arena
+    // and prefix index outright), so each worker thread gets exclusive
+    // access to exactly one shard — the only shared state is the queue
+    // set above and the `Arc`'d weights inside the shards.
+    let results: Vec<Result<(Vec<Response>, ShardStats)>> = std::thread::scope(|scope| {
+        let shared = &shared;
+        let handles: Vec<_> = engine
+            .shards_mut()
+            .iter_mut()
+            .enumerate()
+            .map(|(w, shard)| {
+                scope.spawn(move || shard_worker(&*shard, w, shared, t0, max_active))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sharded worker panicked"))
+            .collect()
+    });
+    let mut out = Vec::new();
+    let mut stats = Vec::with_capacity(workers);
+    for r in results {
+        let (responses, st) = r?;
+        out.extend(responses);
+        stats.push(st);
+    }
+    for (st, &p) in stats.iter_mut().zip(&placed) {
+        st.placed = p;
+    }
+    out.sort_by_key(|r| r.id);
+    Ok((out, stats))
 }
 
 #[cfg(test)]
@@ -1192,28 +1599,55 @@ mod tests {
     fn policy_flag_resolution() {
         // Historical default: --batch > 0 selects batched, else rr.
         assert_eq!(
-            Policy::from_flags(None, 0, 4).unwrap(),
+            Policy::from_flags(None, 0, 4, 1).unwrap(),
             Policy::RoundRobin { max_active: 4 }
         );
         assert_eq!(
-            Policy::from_flags(None, 8, 4).unwrap(),
+            Policy::from_flags(None, 8, 4, 1).unwrap(),
             Policy::Batched { batch: 8 }
         );
         // Explicit names; lane count comes from --batch, else --max-active.
-        assert_eq!(Policy::from_flags(Some("fifo"), 8, 4).unwrap(), Policy::Fifo);
         assert_eq!(
-            Policy::from_flags(Some("rr"), 8, 4).unwrap(),
+            Policy::from_flags(Some("fifo"), 8, 4, 1).unwrap(),
+            Policy::Fifo
+        );
+        assert_eq!(
+            Policy::from_flags(Some("rr"), 8, 4, 1).unwrap(),
             Policy::RoundRobin { max_active: 4 }
         );
         assert_eq!(
-            Policy::from_flags(Some("batched"), 0, 4).unwrap(),
+            Policy::from_flags(Some("batched"), 0, 4, 1).unwrap(),
             Policy::Batched { batch: 4 }
         );
         assert_eq!(
-            Policy::from_flags(Some("continuous"), 8, 4).unwrap(),
+            Policy::from_flags(Some("continuous"), 8, 4, 1).unwrap(),
             Policy::Continuous { max_active: 8 }
         );
-        assert!(Policy::from_flags(Some("nope"), 0, 4).is_err());
+        assert_eq!(
+            Policy::from_flags(Some("sharded"), 0, 3, 4).unwrap(),
+            Policy::Sharded {
+                workers: 4,
+                max_active: 3
+            }
+        );
+        // --workers 0 is clamped, not an error.
+        assert_eq!(
+            Policy::from_name("sharded", 2, 0, 0).unwrap(),
+            Policy::Sharded {
+                workers: 1,
+                max_active: 2
+            }
+        );
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_the_valid_names() {
+        let err = Policy::from_flags(Some("nope"), 0, 4, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown policy 'nope'"), "got: {msg}");
+        for name in ["fifo", "rr", "batched", "continuous", "sharded"] {
+            assert!(msg.contains(name), "error must list '{name}', got: {msg}");
+        }
     }
 
     #[test]
@@ -1244,17 +1678,70 @@ mod tests {
             Policy::Batched { batch: 2 },
             Policy::Continuous { max_active: 2 },
         ] {
-            let threaded = serve_threaded_policy(
-                || Engine::load(Artifacts::synthetic(SEED)?),
-                reqs(4),
-                2,
-                policy,
-            )
-            .unwrap();
+            let threaded = ThreadedServe::new(|| Engine::load(Artifacts::synthetic(SEED)?))
+                .workers(2)
+                .policy(policy)
+                .run(reqs(4))
+                .unwrap();
             for t in &threaded {
                 let s = single.iter().find(|s| s.id == t.id).unwrap();
                 assert_eq!(s.tokens, t.tokens, "request {} under {policy:?}", t.id);
             }
+        }
+    }
+
+    #[test]
+    fn replica_front_end_rejects_the_sharded_policy() {
+        let err = ThreadedServe::new(|| Engine::load(Artifacts::synthetic(SEED)?))
+            .policy(Policy::Sharded {
+                workers: 2,
+                max_active: 2,
+            })
+            .run(reqs(2))
+            .unwrap_err();
+        assert!(err.to_string().contains("serve_sharded"), "got: {err}");
+        let e = engine();
+        let err = Server::new(&e, Policy::Sharded {
+            workers: 2,
+            max_active: 2,
+        })
+        .serve(reqs(2))
+        .unwrap_err();
+        assert!(err.to_string().contains("serve_sharded"), "got: {err}");
+    }
+
+    #[test]
+    fn sharded_serving_matches_single_engine() {
+        use crate::runtime::ShardedEngine;
+
+        let single = Server::new(&engine(), Policy::Continuous { max_active: 4 })
+            .serve(reqs(6))
+            .unwrap();
+        for workers in [1, 2, 3] {
+            let mut se = ShardedEngine::load(
+                Artifacts::synthetic(SEED).unwrap(),
+                BackendKind::Reference,
+                4,
+                6 * workers,
+                workers,
+            )
+            .unwrap();
+            let (out, stats) = serve_sharded_stats(&mut se, reqs(6), &[0.0; 6], 2).unwrap();
+            // Sorted by id, tokens byte-identical to the single engine.
+            let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+            for o in &out {
+                let s = single.iter().find(|s| s.id == o.id).unwrap();
+                assert_eq!(o.tokens, s.tokens, "request {} x{workers}", o.id);
+            }
+            // Counters balance: every request placed once, served once.
+            assert_eq!(stats.len(), workers);
+            assert_eq!(stats.iter().map(|s| s.placed).sum::<usize>(), 6);
+            assert_eq!(stats.iter().map(|s| s.served).sum::<usize>(), 6);
+            // Nothing leaks: all shard blocks return to the free lists.
+            let st = se.arena_status();
+            assert_eq!(st.free_blocks, st.total_blocks);
+            se.debug_validate().unwrap();
         }
     }
 }

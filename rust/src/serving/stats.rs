@@ -96,6 +96,63 @@ impl LatencyStats {
     }
 }
 
+/// Per-shard counters from one sharded serving run
+/// ([`super::serve_sharded_stats`]): where the placement hash landed
+/// each request, how much work stealing rebalanced them, and how hard
+/// the shard's arena slice worked. `served` can differ from `placed` in
+/// both directions — by `stolen` on the thief's side and by the
+/// requests stolen AWAY on the victim's — but the totals balance:
+/// summed over shards, `served == placed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardStats {
+    /// Shard / worker index.
+    pub shard: usize,
+    /// Requests the deterministic placement hash routed here.
+    pub placed: usize,
+    /// Requests this worker stole from other shards' queues.
+    pub stolen: usize,
+    /// Responses this worker completed.
+    pub served: usize,
+    /// Sessions preempted under arena pressure on this shard.
+    pub evictions: usize,
+    /// Peak concurrently-active sessions on this shard.
+    pub peak_active: usize,
+}
+
+impl ShardStats {
+    pub fn new(shard: usize) -> Self {
+        Self {
+            shard,
+            ..Self::default()
+        }
+    }
+
+    /// One-line per-shard summary, e.g.
+    /// `shard 2: placed 5 | stole 1 | served 6 | 0 preemptions | peak 4 active`.
+    pub fn report(&self) -> String {
+        format!(
+            "shard {}: placed {} | stole {} | served {} | {} preemptions | peak {} active",
+            self.shard, self.placed, self.stolen, self.served, self.evictions, self.peak_active
+        )
+    }
+}
+
+/// Multi-line report over a whole worker set, one shard per line plus a
+/// steal/served totals line — `repro serve --policy sharded` prints
+/// this under the latency summary.
+pub fn shard_report(stats: &[ShardStats]) -> String {
+    let mut lines: Vec<String> = stats.iter().map(ShardStats::report).collect();
+    let stolen: usize = stats.iter().map(|s| s.stolen).sum();
+    let served: usize = stats.iter().map(|s| s.served).sum();
+    lines.push(format!(
+        "{} workers | {} served | {} stolen",
+        stats.len(),
+        served,
+        stolen
+    ));
+    lines.join("\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +188,31 @@ mod tests {
         assert_eq!(s.cached_tokens, 150); // 50 odd ids x 3
         assert!(s.report().contains("34 preemptions"));
         assert!(s.report().contains("150 prefix-cached tokens"));
+    }
+
+    #[test]
+    fn shard_stats_report_and_totals() {
+        let a = ShardStats {
+            shard: 0,
+            placed: 5,
+            stolen: 0,
+            served: 4,
+            evictions: 1,
+            peak_active: 3,
+        };
+        let b = ShardStats {
+            stolen: 1,
+            served: 2,
+            ..ShardStats::new(1)
+        };
+        assert_eq!(b.shard, 1);
+        assert_eq!(
+            a.report(),
+            "shard 0: placed 5 | stole 0 | served 4 | 1 preemptions | peak 3 active"
+        );
+        let merged = shard_report(&[a, b]);
+        assert!(merged.contains("shard 1: placed 0 | stole 1 | served 2"));
+        assert!(merged.ends_with("2 workers | 6 served | 1 stolen"));
     }
 
     #[test]

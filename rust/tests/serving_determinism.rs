@@ -7,7 +7,7 @@
 //! and zero-work admission hang of the pre-batching serving loop.
 
 use pim_llm::runtime::{Artifacts, Engine};
-use pim_llm::serving::{serve_threaded_policy, serve_threaded_with, Policy, Request, Response};
+use pim_llm::serving::{serve_threaded_with, Policy, Request, Response, ThreadedServe};
 
 const SEED: u64 = 0xDE7;
 const RUNS: usize = 10;
@@ -36,13 +36,11 @@ fn token_streams(responses: &[Response]) -> Vec<(u64, Vec<i32>)> {
 }
 
 fn run_threaded(policy: Policy) -> Vec<(u64, Vec<i32>)> {
-    let out = serve_threaded_policy(
-        || Engine::load(Artifacts::synthetic(SEED)?),
-        mixed_requests(),
-        3,
-        policy,
-    )
-    .expect("threaded serve");
+    let out = ThreadedServe::new(|| Engine::load(Artifacts::synthetic(SEED)?))
+        .workers(3)
+        .policy(policy)
+        .run(mixed_requests())
+        .expect("threaded serve");
     token_streams(&out)
 }
 
@@ -124,13 +122,11 @@ fn schedulers_and_worker_counts_agree_on_the_mixed_set() {
             Policy::Batched { batch: 4 },
             Policy::Continuous { max_active: 4 },
         ] {
-            let out = serve_threaded_policy(
-                || Engine::load(Artifacts::synthetic(SEED)?),
-                mixed_requests(),
-                workers,
-                policy,
-            )
-            .expect("threaded serve");
+            let out = ThreadedServe::new(|| Engine::load(Artifacts::synthetic(SEED)?))
+                .workers(workers)
+                .policy(policy)
+                .run(mixed_requests())
+                .expect("threaded serve");
             assert_eq!(
                 golden,
                 token_streams(&out),
@@ -185,13 +181,11 @@ fn prefix_cache_threaded_byte_identical_across_10_runs() {
     // under both decode_batch-per-tick policies, threaded, 10x.
     for policy in [Policy::Batched { batch: 4 }, Policy::Continuous { max_active: 4 }] {
         let run = || {
-            let out = serve_threaded_policy(
-                || prefix_engine(64),
-                prefix_heavy_requests(),
-                3,
-                policy,
-            )
-            .expect("threaded prefix serve");
+            let out = ThreadedServe::new(|| prefix_engine(64))
+                .workers(3)
+                .policy(policy)
+                .run(prefix_heavy_requests())
+                .expect("threaded prefix serve");
             token_streams(&out)
         };
         let golden = run();
@@ -207,22 +201,18 @@ fn prefix_cache_on_and_off_produce_identical_tokens() {
     // The cache may only change WHEN work happens, never its result:
     // token streams with the cache on must equal the cache-off streams
     // under both policies, and the on-runs must actually save prefill.
-    let off = serve_threaded_policy(
-        || Engine::load(Artifacts::synthetic(SEED)?),
-        prefix_heavy_requests(),
-        2,
-        Policy::Batched { batch: 4 },
-    )
-    .expect("cache-off serve");
+    let off = ThreadedServe::new(|| Engine::load(Artifacts::synthetic(SEED)?))
+        .workers(2)
+        .policy(Policy::Batched { batch: 4 })
+        .run(prefix_heavy_requests())
+        .expect("cache-off serve");
     let golden = token_streams(&off);
     for policy in [Policy::Batched { batch: 4 }, Policy::Continuous { max_active: 4 }] {
-        let on = serve_threaded_policy(
-            || prefix_engine(64),
-            prefix_heavy_requests(),
-            2,
-            policy,
-        )
-        .expect("cache-on serve");
+        let on = ThreadedServe::new(|| prefix_engine(64))
+            .workers(2)
+            .policy(policy)
+            .run(prefix_heavy_requests())
+            .expect("cache-on serve");
         assert_eq!(golden, token_streams(&on), "{policy:?} tokens changed");
         let saved: usize = on.iter().map(|r| r.cached_tokens).sum();
         assert!(saved > 0, "{policy:?}: shared system prompts must hit");
@@ -235,13 +225,11 @@ fn prefix_cache_under_preemption_byte_identical_across_runs() {
     // reclaims index pins, preempts sharers, re-admissions re-share —
     // and the token streams must still be byte-identical every run and
     // equal to the roomy cache-off run.
-    let roomy = serve_threaded_policy(
-        || Engine::load(Artifacts::synthetic(SEED)?),
-        prefix_heavy_requests(),
-        1,
-        Policy::Fifo,
-    )
-    .expect("roomy serve");
+    let roomy = ThreadedServe::new(|| Engine::load(Artifacts::synthetic(SEED)?))
+        .workers(1)
+        .policy(Policy::Fifo)
+        .run(prefix_heavy_requests())
+        .expect("roomy serve");
     let golden = token_streams(&roomy);
     let run = || {
         let engine = prefix_engine(12).unwrap();

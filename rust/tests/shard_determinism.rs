@@ -1,0 +1,331 @@
+//! Determinism suite for the sharded multi-worker serving engine: the
+//! headline guarantee of `serving::serve_sharded` is that every
+//! response is BYTE-IDENTICAL across `workers ∈ {1, 2, 4, 8}` and
+//! across repeated runs — worker count, hash placement, and steal
+//! timing may change which shard decodes a request, never what it
+//! decodes. The suite pins that guarantee on a mixed ragged workload
+//! (empty prompts, zero-generation requests) under both host backends,
+//! with the prefix cache on and off, and under tight-arena preemption
+//! churn; a final property test hammers `CacheArena::split` shards
+//! with 500 random alloc/grow/free/steal ops, validating every shard's
+//! refcount accounting after every operation.
+
+use pim_llm::runtime::artifacts::ModelInfo;
+use pim_llm::runtime::{
+    Artifacts, BackendKind, CacheArena, CacheHandle, CacheLayout, Engine, ShardedEngine,
+};
+use pim_llm::serving::{serve_sharded_stats, Policy, Request, Response, Server};
+use pim_llm::util::rng::Rng;
+
+const SEED: u64 = 0x5AAD;
+const RUNS: usize = 5;
+
+/// Ragged request mix with degenerate shapes — ids chosen densely so
+/// the placement hash actually spreads them across up to 8 shards.
+fn mixed_requests() -> Vec<Request> {
+    let mut reqs = vec![
+        Request { id: 0, prompt: vec![1, 2, 3, 4, 5, 6], n_new: 5 },
+        Request { id: 1, prompt: vec![], n_new: 4 },
+        Request { id: 2, prompt: vec![7], n_new: 0 },
+        Request { id: 3, prompt: vec![], n_new: 0 },
+        Request { id: 4, prompt: vec![9, 8, 7], n_new: 7 },
+        Request { id: 5, prompt: vec![2; 10], n_new: 1 },
+        Request { id: 6, prompt: vec![5, 5], n_new: 6 },
+        Request { id: 7, prompt: vec![63, 1], n_new: 3 },
+    ];
+    for id in 8..20u64 {
+        reqs.push(Request {
+            id,
+            prompt: (0..(id % 5) as i32 + 1).map(|i| (id as i32 * 3 + i) % 60 + 1).collect(),
+            n_new: (id % 6) as usize + 1,
+        });
+    }
+    reqs
+}
+
+/// Prefix-heavy mix: many requests, two distinct 8-token system
+/// prompts, ragged suffixes — the copy-on-write prefix cache's shape.
+fn prefix_requests() -> Vec<Request> {
+    let systems: [Vec<i32>; 2] = [
+        vec![31, 7, 19, 2, 44, 5, 23, 11],
+        vec![8, 8, 60, 1, 12, 39, 4, 27],
+    ];
+    (0..16u64)
+        .map(|id| {
+            let mut prompt = systems[(id % 2) as usize].clone();
+            for j in 0..(id % 3) {
+                prompt.push((id * 5 + j + 1) as i32);
+            }
+            Request {
+                id,
+                prompt,
+                n_new: (id % 4) as usize + 1,
+            }
+        })
+        .collect()
+}
+
+/// The byte-comparable part of a response set, sorted by id.
+fn token_streams(responses: &[Response]) -> Vec<(u64, Vec<i32>)> {
+    let mut v: Vec<(u64, Vec<i32>)> = responses
+        .iter()
+        .map(|r| (r.id, r.tokens.clone()))
+        .collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+/// Single-engine FIFO on a roomy arena — the oracle every sharded
+/// configuration must match byte-for-byte.
+fn golden(requests: Vec<Request>) -> Vec<(u64, Vec<i32>)> {
+    let engine = Engine::load(Artifacts::synthetic(SEED).unwrap()).unwrap();
+    let out = Server::new(&engine, Policy::Fifo).serve(requests).unwrap();
+    token_streams(&out)
+}
+
+/// One sharded run: `workers` shards over `total_blocks` TOTAL arena
+/// blocks (block length 4), `max_active` lanes per worker, prefix cache
+/// on request. Returns the sorted token streams after validating shard
+/// accounting and that nothing leaked.
+fn sharded_run(
+    kind: BackendKind,
+    requests: Vec<Request>,
+    workers: usize,
+    total_blocks: usize,
+    max_active: usize,
+    prefix: bool,
+) -> Vec<(u64, Vec<i32>)> {
+    let n = requests.len();
+    let mut engine = ShardedEngine::load(
+        Artifacts::synthetic(SEED).unwrap(),
+        kind,
+        4,
+        total_blocks,
+        workers,
+    )
+    .unwrap();
+    if prefix {
+        assert!(engine.enable_prefix_cache(0));
+    }
+    let offsets = vec![0.0; n];
+    let (out, stats) =
+        serve_sharded_stats(&mut engine, requests, &offsets, max_active).unwrap();
+    // Exactly-once: every request placed on one shard and served once.
+    assert_eq!(stats.iter().map(|s| s.placed).sum::<usize>(), n);
+    assert_eq!(stats.iter().map(|s| s.served).sum::<usize>(), n);
+    // Per-shard refcount accounting holds and no block leaked.
+    engine.debug_validate().unwrap();
+    let st = engine.arena_status();
+    assert_eq!(
+        st.free_blocks, st.total_blocks,
+        "{workers}-worker run leaked blocks"
+    );
+    token_streams(&out)
+}
+
+#[test]
+fn byte_identical_across_worker_counts_reference() {
+    let oracle = golden(mixed_requests());
+    for workers in [1usize, 2, 4, 8] {
+        // Equal TOTAL capacity at every worker count: 64 blocks.
+        let streams = sharded_run(
+            BackendKind::Reference,
+            mixed_requests(),
+            workers,
+            64,
+            2,
+            false,
+        );
+        assert_eq!(oracle, streams, "{workers} workers diverged (reference)");
+    }
+}
+
+#[test]
+fn byte_identical_across_worker_counts_packed() {
+    let oracle = golden(mixed_requests());
+    for workers in [1usize, 2, 4, 8] {
+        let streams = sharded_run(
+            BackendKind::Packed,
+            mixed_requests(),
+            workers,
+            64,
+            2,
+            false,
+        );
+        assert_eq!(oracle, streams, "{workers} workers diverged (packed)");
+    }
+}
+
+#[test]
+fn byte_identical_across_repeated_runs() {
+    // Steal timing varies run to run (it races on wall clock); the
+    // tokens must not.
+    let first = sharded_run(BackendKind::Reference, mixed_requests(), 4, 64, 2, false);
+    for run in 1..RUNS {
+        let again = sharded_run(BackendKind::Reference, mixed_requests(), 4, 64, 2, false);
+        assert_eq!(first, again, "4-worker run {run} diverged");
+    }
+}
+
+#[test]
+fn prefix_cache_on_changes_no_token_across_worker_counts() {
+    // Shard-local prefix indices: requests sharing a system prompt only
+    // share blocks when they land on the SAME shard, and stolen
+    // requests re-prefill on the thief's shard — either way the tokens
+    // must equal the cache-off oracle at every worker count.
+    let oracle = golden(prefix_requests());
+    for workers in [1usize, 2, 4, 8] {
+        for prefix in [false, true] {
+            let streams = sharded_run(
+                BackendKind::Reference,
+                prefix_requests(),
+                workers,
+                64,
+                2,
+                prefix,
+            );
+            assert_eq!(
+                oracle, streams,
+                "{workers} workers prefix={prefix} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn tight_arena_preemption_byte_identical() {
+    // 6 blocks per shard and 4 lanes per worker: admission defers,
+    // pressure preempts, preempted requests re-prefill — on every
+    // shard independently. Tokens must still equal the roomy oracle,
+    // every worker count, every repetition.
+    let oracle = golden(mixed_requests());
+    for workers in [1usize, 2, 4] {
+        for run in 0..2 {
+            let streams = sharded_run(
+                BackendKind::Reference,
+                mixed_requests(),
+                workers,
+                6 * workers,
+                4,
+                false,
+            );
+            assert_eq!(
+                oracle, streams,
+                "tight arena x{workers} run {run} diverged"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property test: shard arenas under random churn with steals.
+// ---------------------------------------------------------------------
+
+fn model(max_ctx: usize) -> ModelInfo {
+    ModelInfo {
+        vocab: 16,
+        d: 8,
+        h: 2,
+        d_ff: 16,
+        n_layers: 2,
+        max_ctx,
+        eps: 1e-5,
+    }
+}
+
+#[test]
+fn split_shards_survive_500_op_churn_with_steals() {
+    // Shards from one `CacheArena::split` are fully independent arenas:
+    // random per-shard alloc/grow/free plus "steals" (a session freed on
+    // its home shard and re-begun from scratch on another — exactly what
+    // serving's work stealing does to a preempted-or-queued request)
+    // must keep every shard's refcount equation balanced after EVERY op,
+    // and a full drain must return every shard to all-free.
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_97F4_A7C1));
+        let max_ctx = 24;
+        let layout = CacheLayout::with_block_len(&model(max_ctx), 4);
+        let shards = 4usize;
+        let mut arenas = CacheArena::split(layout, 26, shards).unwrap();
+        // Live session registry: (shard, handle).
+        let mut live: Vec<(usize, CacheHandle)> = Vec::new();
+        for _op in 0..500 {
+            match rng.range(0, 7) {
+                // Open a session on a random shard.
+                0 | 1 => {
+                    let s = rng.range(0, shards - 1);
+                    live.push((s, arenas[s].alloc_session().unwrap()));
+                }
+                // Grow a random session on ITS OWN shard (block ids are
+                // shard-local; a handle is meaningless elsewhere).
+                2 | 3 | 4 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range(0, live.len() - 1);
+                    let (s, h) = live[i];
+                    let pos = rng.range(0, max_ctx - 1);
+                    let need = arenas[s].layout().blocks_for_positions(pos + 1);
+                    let held = arenas[s].session_blocks(h).unwrap();
+                    let free = arenas[s].status().free_blocks;
+                    if need.saturating_sub(held) <= free {
+                        arenas[s].ensure_capacity(h, pos).unwrap();
+                    } else {
+                        // Shard full: per-shard pressure. Retire the
+                        // session instead (serving would preempt here).
+                        arenas[s].free_session(h).unwrap();
+                        live.swap_remove(i);
+                    }
+                }
+                // Retire a random session.
+                5 => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range(0, live.len() - 1);
+                    let (s, h) = live.swap_remove(i);
+                    arenas[s].free_session(h).unwrap();
+                }
+                // Steal: move a session's REQUEST to another shard —
+                // free it at home, restart it from nothing on the
+                // thief (no block, table entry, or refcount crosses
+                // the boundary; the thief re-prefills).
+                _ => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let i = rng.range(0, live.len() - 1);
+                    let (victim, h) = live.swap_remove(i);
+                    arenas[victim].free_session(h).unwrap();
+                    let thief = (victim + rng.range(1, shards - 1)) % shards;
+                    let nh = arenas[thief].alloc_session().unwrap();
+                    let pos = rng.range(0, 7);
+                    let need = arenas[thief].layout().blocks_for_positions(pos + 1);
+                    if need <= arenas[thief].status().free_blocks {
+                        arenas[thief].ensure_capacity(nh, pos).unwrap();
+                    }
+                    live.push((thief, nh));
+                }
+            }
+            // Every shard's accounting must balance after every op,
+            // and the shard totals must stay disjoint and constant.
+            let mut total = 0;
+            for (s, a) in arenas.iter().enumerate() {
+                a.debug_validate()
+                    .unwrap_or_else(|e| panic!("shard {s} seed {seed}: {e}"));
+                total += a.status().total_blocks;
+            }
+            assert_eq!(total, 26);
+        }
+        // Drain: every shard returns to fully free.
+        for (s, h) in live.drain(..) {
+            arenas[s].free_session(h).unwrap();
+        }
+        for a in &arenas {
+            let st = a.status();
+            assert_eq!(st.free_blocks, st.total_blocks);
+            assert_eq!(st.live_sessions, 0);
+            a.debug_validate().unwrap();
+        }
+    }
+}
