@@ -38,6 +38,7 @@ cargo test -q --offline --test paged_equivalence
 cargo test -q --offline --test kvcache_properties
 cargo test -q --offline --test prefix_equivalence
 cargo test -q --offline --test shard_determinism
+cargo test -q --offline --test artifact_roundtrip
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -84,8 +85,43 @@ cargo run -q --release --offline --bin repro -- serve --backend packed \
   --policy sharded --workers 4 --requests 12 --prompt-len 4 \
   --new-tokens 12 --max-active 3 --arena-blocks 24
 
+echo "== smoke: .tpk packed-artifact round trip =="
+# `repro pack` writes the versioned packed artifact; validate must then
+# reproduce the golden generation bit-exactly from the mmap'd planes
+# (no per-matrix re-pack), with the plain packed backend alongside as
+# the reference point; finally sharded serving starts all its workers
+# from the ONE loaded artifact.
+TPK_TMP="$(mktemp -d)"
+trap 'rm -rf "$TPK_TMP"' EXIT
+cargo run -q --release --offline --bin repro -- pack --out "$TPK_TMP/model.tpk"
+test -s "$TPK_TMP/model.tpk"
+cargo run -q --release --offline --bin repro -- validate --backend packed \
+  --artifact "$TPK_TMP/model.tpk"
+cargo run -q --release --offline --bin repro -- validate --backend packed
+cargo run -q --release --offline --bin repro -- serve --backend packed \
+  --policy sharded --workers 4 --requests 12 --prompt-len 4 \
+  --new-tokens 12 --max-active 3 --arena-blocks 24 \
+  --artifact "$TPK_TMP/model.tpk"
+# --artifact on a non-packed backend must be refused, not ignored.
+if cargo run -q --release --offline --bin repro -- validate \
+  --backend reference --artifact "$TPK_TMP/model.tpk" 2>/dev/null; then
+  echo "ERROR: --artifact with --backend reference should have failed"
+  exit 1
+fi
+
 echo "== bench + example targets compile (offline) =="
 cargo build --benches --offline
 cargo build --examples --offline
+
+echo "== bench manifests: every advertised BENCH_*.json is checked in =="
+# A bench that claims to emit a trajectory file at the repo root must
+# have that file committed (provisional first points included), so the
+# README's bench map never dangles.
+for f in $(grep -ho 'BENCH_[A-Za-z0-9_]*\.json' rust/benches/*.rs | sort -u); do
+  if [ ! -f "$f" ]; then
+    echo "ERROR: rust/benches advertises $f but it is not checked in"
+    exit 1
+  fi
+done
 
 echo "ci.sh: all green"

@@ -58,3 +58,10 @@ pub mod workload;
 
 pub use config::ArchConfig;
 pub use models::LlmConfig;
+
+// Unit tests run under a counting allocator so kernel tests can assert
+// zero-allocation invariants (see util::testalloc). Test-only: release
+// binaries, benches and integration tests keep the stock allocator.
+#[cfg(test)]
+#[global_allocator]
+static TEST_ALLOC: util::testalloc::CountingAlloc = util::testalloc::CountingAlloc;

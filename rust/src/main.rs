@@ -10,6 +10,9 @@
 //!   model) through the configured runtime backend.
 //! * `validate`  — golden-token check: the runtime must reproduce the
 //!   recorded golden generation exactly.
+//! * `pack`      — lower the model's ternary matrices to bitplanes once
+//!   and serialize them as a versioned `.tpk` packed artifact that
+//!   `serve`/`validate --artifact` mmap back with no re-packing.
 //! * `generate`  — latency/energy of a full autoregressive generation on
 //!   the simulated hardware.
 
@@ -17,7 +20,8 @@ use pim_llm::analysis::{figures, report};
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, token_loop, Arch};
 use pim_llm::models;
-use pim_llm::runtime::{decoder, BackendKind, Engine, ShardedEngine};
+use pim_llm::quant::{write_tpk, PackedModel};
+use pim_llm::runtime::{decoder, default_artifacts, BackendKind, Engine, ShardedEngine};
 use pim_llm::serving::{serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server};
 use pim_llm::util::cli::Args;
 use pim_llm::util::error::{anyhow, Result};
@@ -57,13 +61,21 @@ SUBCOMMANDS
               --block-len the block length defaults to that prefix
               length (the index caches whole blocks only), so hits
               actually occur)
-  validate   [--backend reference|packed|pjrt]
+             [--artifact <file.tpk>] (packed backend only)
+  validate   [--backend reference|packed|pjrt] [--artifact <file.tpk>]
+  pack       [--out <file.tpk>] (default packed.tpk)
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
 
 --backend selects the runtime executor (default: the PIM_LLM_BACKEND
 env var, else the pure-Rust reference executor; `packed` runs the same
 numerics over 2-bit ternary bitplanes with popcount kernels —
 bit-identical outputs, ~16x less weight traffic).
+
+--artifact points serve/validate at a `.tpk` file written by `repro
+pack`: the bitplanes are mmap'd zero-copy, so engine start skips the
+per-matrix re-pack and concurrent serving processes share one page-cache
+copy of the weights. Requires --backend packed; the file is validated
+against the current model's manifest before any weight is trusted.
 
 Models (paper Table II): GPT2-355M GPT2-774M GPT2-1.5B OPT-1.3B OPT-2.7B
 OPT-6.7B LLaMA-7B (+ OPT-350M, GPT2-Small, GPT2-Medium)";
@@ -96,6 +108,23 @@ fn lookup_model(name: &str) -> Result<models::LlmConfig> {
     models::by_name(name).ok_or_else(|| anyhow!("unknown model '{name}'\n\n{USAGE}"))
 }
 
+/// The `--artifact <file.tpk>` flag, validated against the chosen
+/// backend: a packed artifact only loads on the packed backend.
+fn artifact_path(args: &Args, kind: BackendKind) -> Result<Option<std::path::PathBuf>> {
+    match args.get("artifact") {
+        None => Ok(None),
+        Some(p) => {
+            if kind != BackendKind::Packed {
+                return Err(anyhow!(
+                    "--artifact requires --backend packed (a .tpk holds packed \
+                     ternary bitplanes, which only that backend executes)"
+                ));
+            }
+            Ok(Some(std::path::PathBuf::from(p)))
+        }
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let arch_cfg = load_arch(&args)?;
@@ -105,6 +134,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&args, &arch_cfg),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
+        Some("pack") => cmd_pack(&args),
         Some("generate") => cmd_generate(&args, &arch_cfg),
         _ => {
             println!("{USAGE}");
@@ -242,6 +272,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let kind = BackendKind::resolve(args.backend())?;
+    let artifact = artifact_path(args, kind)?;
 
     // Sharded serving partitions ONE arena across worker-owned shards
     // and runs its own multi-threaded front end; everything else drives
@@ -251,7 +282,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_active,
     } = policy
     {
-        let mut engine = ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?;
+        let mut engine = match &artifact {
+            Some(p) => ShardedEngine::load_default_packed_artifact(
+                p,
+                block_len,
+                arena_blocks,
+                workers,
+            )?,
+            None => ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?,
+        };
         if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
             println!(
                 "note: backend {} keeps contiguous private caches — prefix \
@@ -293,7 +332,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let engine = Engine::load_default_with_arena(kind, block_len, arena_blocks)?;
+    let engine = match &artifact {
+        Some(p) => Engine::load_default_packed_artifact(p, block_len, arena_blocks)?,
+        None => Engine::load_default_with_arena(kind, block_len, arena_blocks)?,
+    };
     if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
         println!(
             "note: backend {} keeps contiguous private caches — prefix \
@@ -334,7 +376,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    let engine = Engine::load_default_with(BackendKind::resolve(args.backend())?)?;
+    let kind = BackendKind::resolve(args.backend())?;
+    let engine = match artifact_path(args, kind)? {
+        Some(p) => Engine::load_default_packed_artifact(&p, 0, 0)?,
+        None => Engine::load_default_with(kind)?,
+    };
     let timing = decoder::validate_golden(&engine)?;
     println!(
         "golden OK: {} tokens reproduced exactly on {} backend={} (decode {:.1} tok/s, \
@@ -344,6 +390,37 @@ fn cmd_validate(args: &Args) -> Result<()> {
         engine.backend_name(),
         timing.decode_tokens_per_s(),
         timing.prefill_tokens_per_s()
+    );
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let out = std::path::PathBuf::from(args.str_or("out", "packed.tpk"));
+    let artifacts = default_artifacts(BackendKind::Packed)?;
+    let t0 = Instant::now();
+    let model = PackedModel::lower(&artifacts)?;
+    let lower_s = t0.elapsed().as_secs_f64();
+    write_tpk(&out, &model, &artifacts.manifest)?;
+    let file_bytes = std::fs::metadata(&out)?.len();
+    let m = &artifacts.manifest.model;
+    println!(
+        "packed {} ternary matrices ({} layers, d={}) in {:.3}s",
+        m.n_layers * 6 + 1,
+        m.n_layers,
+        m.d,
+        lower_s
+    );
+    println!(
+        "  planes: {} bytes ({:.1}x smaller than dense f32 {})",
+        model.packed_bytes(),
+        model.dense_f32_bytes() as f64 / model.packed_bytes() as f64,
+        model.dense_f32_bytes()
+    );
+    println!(
+        "  wrote {} ({file_bytes} bytes) — load with \
+         `repro serve|validate --backend packed --artifact {}`",
+        out.display(),
+        out.display()
     );
     Ok(())
 }

@@ -1,0 +1,531 @@
+//! `.tpk` — the versioned on-disk packed-artifact format: every
+//! [`TernaryPlanes`] of a [`PackedModel`] serialized in its exact
+//! in-memory layout, so engine start is a header validation plus an
+//! mmap instead of an O(weights) re-pack of every matrix, and N serving
+//! processes loading the same file share one physical copy of the
+//! planes through the kernel page cache.
+//!
+//! ## File layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0     8  magic  "PIMLLTPK"
+//!      8     4  format version (u32) = 1
+//!     12     4  endian tag (u32) = 0x1B17_C0DE — readable only when
+//!               file and host agree on byte order
+//!     16    48  model geometry: vocab, d, h, d_ff, n_layers, max_ctx
+//!               (six u64s; must match the manifest exactly)
+//!     64     8  model eps as f64 bit pattern
+//!     72     8  artifact seed (u64)
+//!     80     8  n_matrices (u64) = n_layers * 6 + 1
+//!     88    88  matrix record 0        ┐  one per matrix, the lowering
+//!    176    88  matrix record 1        ┘  order: layer{i}.{wq,wk,wv,
+//!    ...            wx,w_in,w_out} ascending, then w_head
+//!    ...        zero padding to a 64-byte boundary
+//!      P  8*W   plus-plane words of matrix 0 (column-major u64s)
+//!    ...        zero padding to a 64-byte boundary
+//!     P'  8*W   minus-plane words of matrix 0
+//!    ...        ... and so on for every matrix
+//! ```
+//!
+//! Each 88-byte matrix record:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//!      0    32  parameter name, zero-padded UTF-8 (<= 31 bytes)
+//!     32     8  k (rows), u64
+//!     40     8  n (columns), u64
+//!     48     8  words_per_col = ceil(k / 64), u64
+//!     56     4  weight scale as f32 bit pattern
+//!     60     4  reserved (0)
+//!     64     8  plus-plane byte offset (64-byte aligned)
+//!     72     8  minus-plane byte offset (64-byte aligned)
+//!     80     8  words per plane = n * words_per_col, u64
+//! ```
+//!
+//! ## Versioning and alignment rules
+//!
+//! * Any layout change bumps [`TPK_VERSION`]; readers reject other
+//!   versions outright (no migration shims — repack with `repro pack`).
+//! * Plane sections start on 64-byte boundaries within the file. An
+//!   mmap base is page-aligned, so every section is 64-byte aligned in
+//!   memory too: `u64` loads are aligned, and sections never straddle
+//!   a cache line they don't own.
+//! * The payload is exactly the words the kernels consume — the loader
+//!   hands out [`PlaneWords::Mapped`] windows into the mapping
+//!   (zero-copy) when the host is little-endian and the file mmaps;
+//!   otherwise it falls back to byte-swapping reads into owned
+//!   vectors. Neither path re-packs: dense weights are never touched.
+//!
+//! ## What the loader validates vs what `repro validate` covers
+//!
+//! [`load_tpk`] checks structure exhaustively — magic/version/endian,
+//! geometry + eps bits + seed against the manifest, record names and
+//! shapes against the manifest parameters, scale bit patterns, word
+//! counts, alignment, bounds, and section disjointness — and returns a
+//! `util::error` chain on every violation (never a panic, never an
+//! out-of-bounds read; pinned by `tests/artifact_roundtrip.rs`). It
+//! deliberately does NOT scan plane contents (e.g. plus&minus bit
+//! overlap): that would cost the O(weights) walk the format exists to
+//! avoid. End-to-end content integrity is what `repro validate
+//! --backend packed --artifact <tpk>` establishes by reproducing the
+//! golden generation bit-exactly — wired into ci.sh.
+
+use super::model::{PackedLayer, PackedModel};
+use super::planes::{PlaneWords, TernaryPlanes};
+use crate::runtime::artifacts::{Artifacts, Manifest};
+use crate::util::error::{ensure, Context, Result};
+use crate::util::mmap::FileBytes;
+use std::path::Path;
+use std::sync::Arc;
+
+/// File magic, bytes 0..8.
+pub const TPK_MAGIC: [u8; 8] = *b"PIMLLTPK";
+/// Current format version.
+pub const TPK_VERSION: u32 = 1;
+/// Endianness canary: written little-endian, so a wrong-endian or
+/// corrupted file cannot read back as this value.
+pub const TPK_ENDIAN_TAG: u32 = 0x1B17_C0DE;
+/// Header size in bytes.
+pub const TPK_HEADER_BYTES: usize = 88;
+/// Per-matrix record size in bytes.
+pub const TPK_RECORD_BYTES: usize = 88;
+/// Alignment of every plane section (and of the payload start).
+pub const TPK_ALIGN: usize = 64;
+/// Longest serializable parameter name (one byte short of the field so
+/// the name is always zero-terminated inside it).
+pub const TPK_NAME_MAX: usize = 31;
+
+fn align_up(x: usize, a: usize) -> usize {
+    x.div_ceil(a) * a
+}
+
+/// The matrix serialization order — identical to
+/// [`PackedModel::matrices`]: per layer `wq wk wv wx w_in w_out`, then
+/// `w_head`.
+fn expected_names(n_layers: usize) -> Vec<String> {
+    let mut names = Vec::with_capacity(n_layers * 6 + 1);
+    for i in 0..n_layers {
+        for m in ["wq", "wk", "wv", "wx", "w_in", "w_out"] {
+            names.push(format!("layer{i}.{m}"));
+        }
+    }
+    names.push("w_head".to_string());
+    names
+}
+
+/// Serialize a lowered model to `path` in `.tpk` form. The manifest
+/// supplies the geometry/seed header fields that bind the artifact to
+/// the model it was packed from.
+pub fn write_tpk(path: &Path, model: &PackedModel, manifest: &Manifest) -> Result<()> {
+    let matrices = model.matrices();
+    let n_matrices = matrices.len();
+    ensure!(
+        n_matrices == manifest.model.n_layers * 6 + 1,
+        "write_tpk: {} matrices for a {}-layer model",
+        n_matrices,
+        manifest.model.n_layers
+    );
+
+    // Lay out the plane sections: 64-byte aligned, in record order,
+    // plus then minus per matrix.
+    let records_end = TPK_HEADER_BYTES + n_matrices * TPK_RECORD_BYTES;
+    let mut cursor = align_up(records_end, TPK_ALIGN);
+    let mut sections = Vec::with_capacity(n_matrices);
+    for (name, m) in &matrices {
+        ensure!(
+            name.len() <= TPK_NAME_MAX,
+            "write_tpk: name '{name}' exceeds {TPK_NAME_MAX} bytes"
+        );
+        let words = m.n * m.words_per_col;
+        let plus_off = cursor;
+        cursor = align_up(plus_off + words * 8, TPK_ALIGN);
+        let minus_off = cursor;
+        cursor = align_up(minus_off + words * 8, TPK_ALIGN);
+        sections.push((plus_off, minus_off, words));
+    }
+
+    let mut buf = vec![0u8; cursor];
+    let put = |buf: &mut [u8], off: usize, bytes: &[u8]| {
+        buf[off..off + bytes.len()].copy_from_slice(bytes);
+    };
+
+    put(&mut buf, 0, &TPK_MAGIC);
+    put(&mut buf, 8, &TPK_VERSION.to_le_bytes());
+    put(&mut buf, 12, &TPK_ENDIAN_TAG.to_le_bytes());
+    let g = &manifest.model;
+    for (i, v) in [g.vocab, g.d, g.h, g.d_ff, g.n_layers, g.max_ctx]
+        .iter()
+        .enumerate()
+    {
+        put(&mut buf, 16 + i * 8, &(*v as u64).to_le_bytes());
+    }
+    put(&mut buf, 64, &g.eps.to_bits().to_le_bytes());
+    put(&mut buf, 72, &manifest.seed.to_le_bytes());
+    put(&mut buf, 80, &(n_matrices as u64).to_le_bytes());
+
+    for (i, ((name, m), &(plus_off, minus_off, words))) in
+        matrices.iter().zip(&sections).enumerate()
+    {
+        let r = TPK_HEADER_BYTES + i * TPK_RECORD_BYTES;
+        put(&mut buf, r, name.as_bytes());
+        put(&mut buf, r + 32, &(m.k as u64).to_le_bytes());
+        put(&mut buf, r + 40, &(m.n as u64).to_le_bytes());
+        put(&mut buf, r + 48, &(m.words_per_col as u64).to_le_bytes());
+        put(&mut buf, r + 56, &m.scale.to_bits().to_le_bytes());
+        // r + 60..64 reserved, already zero.
+        put(&mut buf, r + 64, &(plus_off as u64).to_le_bytes());
+        put(&mut buf, r + 72, &(minus_off as u64).to_le_bytes());
+        put(&mut buf, r + 80, &(words as u64).to_le_bytes());
+        debug_assert_eq!(m.plus_words().len(), words);
+        for (w, (&pw, &mw)) in m.plus_words().iter().zip(m.minus_words()).enumerate() {
+            put(&mut buf, plus_off + w * 8, &pw.to_le_bytes());
+            put(&mut buf, minus_off + w * 8, &mw.to_le_bytes());
+        }
+    }
+
+    std::fs::write(path, &buf).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Bounds-checked little-endian field reads — every byte the loader
+/// touches goes through these, so a truncated or lying file can only
+/// produce an error, never a panic or an out-of-bounds read.
+fn rd_u64(buf: &[u8], off: usize, what: &str) -> Result<u64> {
+    let b = buf
+        .get(off..off + 8)
+        .ok_or_else(|| crate::anyhow!("tpk truncated reading {what} at byte {off}"))?;
+    Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+}
+
+fn rd_u32(buf: &[u8], off: usize, what: &str) -> Result<u32> {
+    let b = buf
+        .get(off..off + 4)
+        .ok_or_else(|| crate::anyhow!("tpk truncated reading {what} at byte {off}"))?;
+    Ok(u32::from_le_bytes(b.try_into().expect("4-byte slice")))
+}
+
+/// Load a `.tpk` packed artifact, validating it structurally against
+/// `artifacts`' manifest (the same model the engine is serving). On a
+/// little-endian host with a successful mmap the returned planes are
+/// zero-copy windows into the mapping; otherwise they are owned words
+/// decoded from the same bytes. Neither path re-packs any matrix.
+pub fn load_tpk(path: &Path, artifacts: &Artifacts) -> Result<PackedModel> {
+    let fb = FileBytes::open(path)
+        .with_context(|| format!("opening packed artifact {}", path.display()))?;
+    let buf = fb.bytes();
+    let ctx = || format!("loading packed artifact {}", path.display());
+
+    (|| -> Result<PackedModel> {
+        ensure!(
+            buf.len() >= TPK_HEADER_BYTES,
+            "file is {} bytes, smaller than the {TPK_HEADER_BYTES}-byte header",
+            buf.len()
+        );
+        ensure!(
+            buf[..8] == TPK_MAGIC,
+            "bad magic {:02x?} (expected {:02x?} — not a .tpk file?)",
+            &buf[..8.min(buf.len())],
+            TPK_MAGIC
+        );
+        let version = rd_u32(buf, 8, "version")?;
+        ensure!(
+            version == TPK_VERSION,
+            "format version {version}, this build reads only {TPK_VERSION} \
+             (repack with `repro pack`)"
+        );
+        let endian = rd_u32(buf, 12, "endian tag")?;
+        ensure!(
+            endian == TPK_ENDIAN_TAG,
+            "endian tag {endian:#x} != {TPK_ENDIAN_TAG:#x} — corrupt or \
+             wrong-endian file"
+        );
+
+        let m = &artifacts.manifest.model;
+        let geom = [
+            ("vocab", m.vocab),
+            ("d", m.d),
+            ("h", m.h),
+            ("d_ff", m.d_ff),
+            ("n_layers", m.n_layers),
+            ("max_ctx", m.max_ctx),
+        ];
+        for (i, (field, expect)) in geom.iter().enumerate() {
+            let got = rd_u64(buf, 16 + i * 8, field)?;
+            ensure!(
+                got == *expect as u64,
+                "model geometry mismatch: {field} = {got} in file, {expect} in manifest"
+            );
+        }
+        let eps_bits = rd_u64(buf, 64, "eps")?;
+        ensure!(
+            eps_bits == m.eps.to_bits(),
+            "model eps bit pattern mismatch ({:e} in file, {:e} in manifest)",
+            f64::from_bits(eps_bits),
+            m.eps
+        );
+        let seed = rd_u64(buf, 72, "seed")?;
+        ensure!(
+            seed == artifacts.manifest.seed,
+            "artifact seed {seed} != manifest seed {} — packed from a \
+             different model instance",
+            artifacts.manifest.seed
+        );
+        let n_matrices = rd_u64(buf, 80, "n_matrices")? as usize;
+        let expected = m.n_layers * 6 + 1;
+        ensure!(
+            n_matrices == expected,
+            "{n_matrices} matrices in file, {expected} expected for \
+             {} layers",
+            m.n_layers
+        );
+
+        let records_end = TPK_HEADER_BYTES
+            .checked_add(
+                n_matrices
+                    .checked_mul(TPK_RECORD_BYTES)
+                    .ok_or_else(|| crate::anyhow!("record table size overflows"))?,
+            )
+            .ok_or_else(|| crate::anyhow!("record table size overflows"))?;
+        ensure!(
+            buf.len() >= records_end,
+            "file is {} bytes, record table needs {records_end}",
+            buf.len()
+        );
+
+        let names = expected_names(m.n_layers);
+        let file_len = buf.len() as u64;
+        let mut planes = Vec::with_capacity(n_matrices);
+        let mut spans: Vec<(u64, u64)> = Vec::with_capacity(n_matrices * 2);
+
+        for (i, name) in names.iter().enumerate() {
+            let r = TPK_HEADER_BYTES + i * TPK_RECORD_BYTES;
+            let name_bytes = &buf[r..r + 32];
+            let end = name_bytes
+                .iter()
+                .position(|&b| b == 0)
+                .unwrap_or(name_bytes.len());
+            let got_name = std::str::from_utf8(&name_bytes[..end])
+                .map_err(|_| crate::anyhow!("record {i}: name is not UTF-8"))?;
+            ensure!(
+                got_name == name,
+                "record {i}: matrix '{got_name}' where '{name}' was expected \
+                 (records must follow lowering order)"
+            );
+
+            let k = rd_u64(buf, r + 32, "k")? as usize;
+            let n = rd_u64(buf, r + 40, "n")? as usize;
+            let words_per_col = rd_u64(buf, r + 48, "words_per_col")? as usize;
+            let scale_bits = rd_u32(buf, r + 56, "scale")?;
+            let plus_off = rd_u64(buf, r + 64, "plus offset")?;
+            let minus_off = rd_u64(buf, r + 72, "minus offset")?;
+            let words = rd_u64(buf, r + 80, "words")? as usize;
+
+            let p = artifacts
+                .manifest
+                .params
+                .iter()
+                .find(|p| p.name == *name)
+                .ok_or_else(|| crate::anyhow!("manifest missing parameter '{name}'"))?;
+            ensure!(
+                p.shape.len() == 2 && p.shape[0] == k && p.shape[1] == n,
+                "'{name}': file shape {k}x{n} != manifest shape {:?}",
+                p.shape
+            );
+            ensure!(k > 0 && n > 0, "'{name}': degenerate shape {k}x{n}");
+            ensure!(
+                k <= super::pack::MAX_EXACT_K,
+                "'{name}': k={k} exceeds the f32-exact window"
+            );
+            ensure!(
+                words_per_col == k.div_ceil(64),
+                "'{name}': words_per_col {words_per_col} != ceil({k}/64)"
+            );
+            let expect_words = n
+                .checked_mul(words_per_col)
+                .ok_or_else(|| crate::anyhow!("'{name}': word count overflows"))?;
+            ensure!(
+                words == expect_words,
+                "'{name}': {words} words per plane, header shape implies {expect_words}"
+            );
+            let scale = f32::from_bits(scale_bits);
+            ensure!(
+                scale.is_finite() && scale > 0.0,
+                "'{name}': bad weight scale {scale}"
+            );
+            let scale_param = artifacts
+                .manifest
+                .params
+                .iter()
+                .find(|s| s.name == format!("{name}_scale"))
+                .ok_or_else(|| crate::anyhow!("manifest missing '{name}_scale'"))?;
+            let manifest_scale = artifacts.param_data(scale_param)[0];
+            ensure!(
+                scale_bits == manifest_scale.to_bits(),
+                "'{name}': scale {scale} != manifest scale {manifest_scale}"
+            );
+
+            let bytes_per_plane = (words as u64)
+                .checked_mul(8)
+                .ok_or_else(|| crate::anyhow!("'{name}': plane size overflows"))?;
+            for (plane, off) in [("plus", plus_off), ("minus", minus_off)] {
+                ensure!(
+                    off % TPK_ALIGN as u64 == 0,
+                    "'{name}': {plane} section at byte {off} is not \
+                     {TPK_ALIGN}-byte aligned"
+                );
+                ensure!(
+                    off >= records_end as u64,
+                    "'{name}': {plane} section at byte {off} overlaps the \
+                     header/record region (ends at {records_end})"
+                );
+                let end = off
+                    .checked_add(bytes_per_plane)
+                    .ok_or_else(|| crate::anyhow!("'{name}': {plane} section end overflows"))?;
+                ensure!(
+                    end <= file_len,
+                    "'{name}': {plane} section [{off}, {end}) runs past the \
+                     {file_len}-byte file"
+                );
+                spans.push((off, end));
+            }
+            planes.push((k, n, words_per_col, scale, plus_off, minus_off, words));
+        }
+
+        // No two plane sections may overlap: a section aliasing another
+        // (or a record lying about its extent) must be rejected, not
+        // silently served as weights.
+        let mut sorted = spans.clone();
+        sorted.sort_unstable();
+        for pair in sorted.windows(2) {
+            ensure!(
+                pair[0].1 <= pair[1].0,
+                "plane sections [{}, {}) and [{}, {}) overlap",
+                pair[0].0,
+                pair[0].1,
+                pair[1].0,
+                pair[1].1
+            );
+        }
+
+        // Structure is fully validated: materialize the planes.
+        // Zero-copy needs both an actual mapping AND a little-endian
+        // host (the file stores little-endian words).
+        let mapping = if cfg!(target_endian = "little") {
+            fb.mapping()
+        } else {
+            None
+        };
+        let make_plane = |off: u64, words: usize| -> PlaneWords {
+            let off = off as usize;
+            match mapping {
+                Some(map) => PlaneWords::Mapped {
+                    map: Arc::clone(map),
+                    word_off: off / 8,
+                    words,
+                },
+                None => PlaneWords::Owned(
+                    buf[off..off + words * 8]
+                        .chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                        .collect(),
+                ),
+            }
+        };
+
+        let mut matrices: Vec<TernaryPlanes> = planes
+            .into_iter()
+            .map(|(k, n, words_per_col, scale, plus_off, minus_off, words)| TernaryPlanes {
+                k,
+                n,
+                scale,
+                words_per_col,
+                plus: make_plane(plus_off, words),
+                minus: make_plane(minus_off, words),
+            })
+            .collect();
+
+        let w_head = matrices.pop().expect("n_matrices >= 1 checked above");
+        let mut layers = Vec::with_capacity(m.n_layers);
+        let mut it = matrices.into_iter();
+        for _ in 0..m.n_layers {
+            layers.push(PackedLayer {
+                wq: it.next().expect("record count checked"),
+                wk: it.next().expect("record count checked"),
+                wv: it.next().expect("record count checked"),
+                wx: it.next().expect("record count checked"),
+                w_in: it.next().expect("record count checked"),
+                w_out: it.next().expect("record count checked"),
+            });
+        }
+        Ok(PackedModel { layers, w_head })
+    })()
+    .with_context(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pimllm-tpk-{}-{name}.tpk", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical_and_zero_copy() {
+        let a = Artifacts::synthetic(11).unwrap();
+        let lowered = PackedModel::lower(&a).unwrap();
+        let p = tmp("roundtrip");
+        write_tpk(&p, &lowered, &a.manifest).unwrap();
+        let loaded = load_tpk(&p, &a).unwrap();
+        assert_eq!(loaded.matrices().len(), lowered.matrices().len());
+        for ((ln, lm), (rn, rm)) in lowered.matrices().iter().zip(loaded.matrices().iter()) {
+            assert_eq!(ln, rn);
+            assert_eq!(lm, rm, "'{ln}' planes must round-trip bit-for-bit");
+        }
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if cfg!(target_endian = "little") {
+            assert!(
+                loaded.w_head.is_mapped(),
+                "little-endian 64-bit unix load must be zero-copy"
+            );
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sections_are_aligned_and_header_constants_hold() {
+        let a = Artifacts::synthetic(12).unwrap();
+        let lowered = PackedModel::lower(&a).unwrap();
+        let p = tmp("layout");
+        write_tpk(&p, &lowered, &a.manifest).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], &TPK_MAGIC);
+        let n_matrices = u64::from_le_bytes(bytes[80..88].try_into().unwrap()) as usize;
+        assert_eq!(n_matrices, a.manifest.model.n_layers * 6 + 1);
+        for i in 0..n_matrices {
+            let r = TPK_HEADER_BYTES + i * TPK_RECORD_BYTES;
+            for field in [64, 72] {
+                let off = u64::from_le_bytes(bytes[r + field..r + field + 8].try_into().unwrap());
+                assert_eq!(off % TPK_ALIGN as u64, 0, "record {i} field {field}");
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_model_rejected() {
+        // A .tpk packed from seed 13 must refuse to load against the
+        // seed-14 artifacts: same geometry, different weights/scales.
+        let a = Artifacts::synthetic(13).unwrap();
+        let lowered = PackedModel::lower(&a).unwrap();
+        let p = tmp("wrongmodel");
+        write_tpk(&p, &lowered, &a.manifest).unwrap();
+        let other = Artifacts::synthetic(14).unwrap();
+        let err = load_tpk(&p, &other);
+        assert!(err.is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -25,9 +25,42 @@
 //! correction) replace up to 128 scalar FMAs, and the operands are 16x
 //! smaller than the dense f32 matrix (2 bits/weight vs 32).
 //!
+//! ## The hot-path shape: unrolled tiles, blocked stripes, zero alloc
+//!
+//! * **4-word tiles with independent accumulators.** [`column_dot`]
+//!   walks a column's mask words four at a time into four independent
+//!   i32 accumulators ([`word_dot`] per word), so the popcount chains
+//!   of four 64-row word groups are in flight simultaneously instead
+//!   of serialized through one accumulator — the ILP the superscalar
+//!   core needs to keep its popcount units busy. A scalar remainder
+//!   loop covers `words_per_col % 4`.
+//! * **Cache blocking falls out of the layout.** Planes are
+//!   column-major, so one column's masks are `2 * words_per_col` u64s
+//!   (128 B/plane at d = 512 — two cache lines) and the activation
+//!   planes are `8 * words_per_col` u64s per lane (4 KiB at d = 512):
+//!   the batch kernel's column-outer/lane-inner loop keeps the column's
+//!   masks and every lane's activation planes L1-resident while each
+//!   weight word is loaded exactly once per call. Striped threads each
+//!   own a contiguous column range, i.e. a contiguous, disjoint slab of
+//!   the weight planes and of the accumulator — no sharing, no
+//!   false-sharing traffic.
+//! * **No per-call heap traffic.** Every buffer the kernels need —
+//!   activation bitplanes, quantization scales, the striped accumulator
+//!   — lives in a caller-owned [`PackedScratch`] that grows to the
+//!   high-water mark once and is reused forever after.
+//!   [`bitlinear_packed_into`] (the batch-of-one entry the serving
+//!   steady state hits) performs ZERO heap allocations when warm;
+//!   [`bitlinear_packed_batch_with`] allocates only its `Vec<Vec<f32>>`
+//!   outputs (exactly `1 + B` allocations warm, pinned by the
+//!   counting-allocator tests below). The convenience wrappers
+//!   [`bitlinear_packed`]/[`bitlinear_packed_batch`] build a local
+//!   scratch per call and exist for oracles and tests.
+//!
 //! ## Why the result is bit-for-bit equal to the f32 reference
 //!
-//! All accumulation here is i32 and therefore exact. The dense
+//! All accumulation here is i32 and therefore exact — and i32 addition
+//! is associative and commutative, so the 4-way tile split, the
+//! remainder loop, and column striping cannot change the sum. The dense
 //! reference accumulates the same integer terms in f32 carriers; inside
 //! the exact window (`k * 127 < 2^24`, enforced by
 //! [`super::pack::MAX_EXACT_K`]) every one of its partial sums is an
@@ -35,81 +68,138 @@
 //! its final accumulator equals the exact integer sum — the same
 //! integer this kernel produces. Both kernels then apply the identical
 //! final operation `(sum as f32) * (w_scale / x_scale)` with identical
-//! operands, so the outputs are identical bit patterns. (Integer
-//! addition is order-independent, which is also why column striping and
-//! thread count cannot change a bit.)
+//! operands — [`quantize_into`] computes the scale with the shared
+//! [`act_scale`] and the per-element quantization with the dense
+//! kernel's exact formula — so the outputs are identical bit patterns.
 
 use super::planes::TernaryPlanes;
-use crate::runtime::kernels::{act_quant_int8, column_stripes};
+use crate::runtime::kernels::{act_scale, column_stripes, PAR_MAC_THRESHOLD};
 
-/// One activation vector quantized and sliced into eight 64-lane
-/// bitplanes. Word group `wi` (rows `[wi*64, wi*64+64)`) owns the eight
-/// consecutive words `words[wi*8 .. wi*8+8]`, one per bit of
-/// `u = x_q + 128` — keeping a word group contiguous means the whole
-/// group a column word needs sits in a single cache line.
-struct ActPlanes {
-    /// `words_per_col * 8` words, `[wi * 8 + b]` = plane `b` of group `wi`.
-    words: Vec<u64>,
-    /// The activation quantization scale (127 / absmax).
-    scale: f32,
+/// Reusable scratch for the packed kernels: activation bitplanes,
+/// per-lane quantization scales, and the integer accumulator. Grows to
+/// the largest shape it has seen and never shrinks, so a warmed-up
+/// scratch makes every subsequent kernel call allocation-free (modulo
+/// the batch kernel's output vectors). `PackedBackend` threads one of
+/// these through its whole decode path.
+#[derive(Debug, Default)]
+pub struct PackedScratch {
+    /// Activation bitplanes, `B * words_per_col * 8` words: lane `bi`
+    /// owns `[bi * g, (bi + 1) * g)` with `g = words_per_col * 8`,
+    /// word group `wi` of a lane at `[wi * 8 + b]` = plane `b`.
+    act: Vec<u64>,
+    /// Per-lane activation scales (127 / absmax), `B` entries.
+    scales: Vec<f32>,
+    /// Integer accumulator for the batch kernel, `n * B` entries,
+    /// column-major over lanes: `acc[j * B + bi]` — so a column stripe
+    /// `[j0, j1)` owns the contiguous disjoint slab
+    /// `[j0 * B, j1 * B)`, handed to its thread via `split_at_mut`.
+    acc: Vec<i32>,
 }
 
-/// Quantize with the SHARED [`act_quant_int8`] (identical `x_q` and
-/// `x_scale` to the dense kernel, which is what makes the final rescale
-/// bit-identical), then slice into bitplanes. Padding lanes beyond
-/// `x.len()` stay zero; the weight masks are zero there too, so they
-/// never contribute.
+impl PackedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Grow-only view: `v[..len]`, resizing (one allocation, then never
+/// again for this size) only when the high-water mark rises.
+fn ensure_len<T: Copy + Default>(v: &mut Vec<T>, len: usize) -> &mut [T] {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+    &mut v[..len]
+}
+
+/// Quantize one activation vector directly into eight 64-lane bitplanes
+/// (`words`, length `words_per_col * 8`, zeroed here), returning the
+/// activation scale. Bit-identical to running the shared
+/// `act_quant_int8` and then slicing: the scale comes from the shared
+/// [`act_scale`] and each element applies the dense kernel's exact
+/// `(v * scale).round().clamp(-128.0, 127.0)` before the `u = x_q +
+/// 128` lift — no `x_q` vector is ever materialized. Padding lanes
+/// beyond `x.len()` stay zero; the weight masks are zero there too, so
+/// they never contribute.
 ///
-/// Precondition: finite activations. The `xv as i32` lift saturates
-/// NaN to 0 where the dense kernel would propagate it, so the
-/// bit-for-bit contract requires finite inputs — guaranteed for model
-/// activations because [`super::model::PackedModel::lower`] rejects any
-/// non-finite parameter tensor at load.
-fn quantize_to_planes(x: &[f32], words_per_col: usize) -> ActPlanes {
-    let (x_q, scale) = act_quant_int8(x);
-    let mut words = vec![0u64; words_per_col * 8];
-    for (kk, &xv) in x_q.iter().enumerate() {
-        // x_q is an exact integer in [-128, 127] carried in f32.
-        let u = (xv as i32 + 128) as u64;
+/// Precondition: finite activations. The `as i32` lift saturates NaN
+/// to 0 where the dense kernel would propagate it, so the bit-for-bit
+/// contract requires finite inputs — guaranteed for model activations
+/// because [`super::model::PackedModel::lower`] rejects any non-finite
+/// parameter tensor at load.
+fn quantize_into(x: &[f32], words: &mut [u64]) -> f32 {
+    words.fill(0);
+    let scale = act_scale(x);
+    for (kk, &v) in x.iter().enumerate() {
+        // Exact integer in [-128, 127], computed with the dense
+        // kernel's formula so the rescale operands match bitwise.
+        let q = (v * scale).round().clamp(-128.0, 127.0);
+        let u = (q as i32 + 128) as u64;
         let (wi, lane) = (kk / 64, kk % 64);
         let group = &mut words[wi * 8..wi * 8 + 8];
         for (b, word) in group.iter_mut().enumerate() {
             *word |= ((u >> b) & 1) << lane;
         }
     }
-    ActPlanes { words, scale }
+    scale
+}
+
+/// The masked integer dot of ONE 64-row word group: mask words
+/// `pw`/`mw` against the eight activation planes of the group.
+#[inline(always)]
+fn word_dot(pw: u64, mw: u64, group: &[u64]) -> i32 {
+    if pw == 0 && mw == 0 {
+        return 0; // fully-zero 64-row stretch: nothing to select
+    }
+    let (mut up, mut um) = (0u32, 0u32);
+    for (b, &plane) in group.iter().enumerate() {
+        up += (pw & plane).count_ones() << b;
+        um += (mw & plane).count_ones() << b;
+    }
+    // The planes carry u = x_q + 128: subtract the bias once per
+    // selected lane. (up/um <= 64 * 255 per word group, so nothing
+    // here can overflow.)
+    up as i32 - um as i32 - 128 * (pw.count_ones() as i32 - mw.count_ones() as i32)
 }
 
 /// The masked integer dot product of one column: walks the column's
-/// plus/minus words once, popcounting against the activation planes.
+/// plus/minus words in 4-word tiles with four independent accumulators
+/// (plus a scalar remainder), popcounting against the activation
+/// planes. i32 addition is exact and order-free, so the tiling cannot
+/// change the result.
 #[inline]
 fn column_dot(act: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
-    let mut acc = 0i32;
-    for (wi, (&pw, &mw)) in plus.iter().zip(minus).enumerate() {
-        if pw == 0 && mw == 0 {
-            continue; // fully-zero 64-row stretch: nothing to select
-        }
-        let group = &act[wi * 8..wi * 8 + 8];
-        let (mut up, mut um) = (0u32, 0u32);
-        for (b, &plane) in group.iter().enumerate() {
-            up += (pw & plane).count_ones() << b;
-            um += (mw & plane).count_ones() << b;
-        }
-        // The planes carry u = x_q + 128: subtract the bias once per
-        // selected lane. (up/um <= 64 * 255 per word group, so nothing
-        // here can overflow.)
-        acc += up as i32 - um as i32
-            - 128 * (pw.count_ones() as i32 - mw.count_ones() as i32);
+    let w = plus.len();
+    debug_assert_eq!(minus.len(), w);
+    debug_assert_eq!(act.len(), w * 8);
+    let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+    let mut wi = 0usize;
+    while wi + 4 <= w {
+        a0 += word_dot(plus[wi], minus[wi], &act[wi * 8..wi * 8 + 8]);
+        a1 += word_dot(plus[wi + 1], minus[wi + 1], &act[wi * 8 + 8..wi * 8 + 16]);
+        a2 += word_dot(plus[wi + 2], minus[wi + 2], &act[wi * 8 + 16..wi * 8 + 24]);
+        a3 += word_dot(plus[wi + 3], minus[wi + 3], &act[wi * 8 + 24..wi * 8 + 32]);
+        wi += 4;
     }
-    acc
+    while wi < w {
+        a0 += word_dot(plus[wi], minus[wi], &act[wi * 8..wi * 8 + 8]);
+        wi += 1;
+    }
+    (a0 + a1) + (a2 + a3)
 }
 
-/// Packed W1A8 projection: `x` (len `planes.k`) through the bitplane
-/// matrix, returning bit for bit the same `n`-vector that
-/// [`crate::runtime::kernels::bitlinear`] computes from the dense
+/// Packed W1A8 projection into a caller-provided output slice, with
+/// caller-owned scratch: the ZERO-ALLOCATION entry point (when the
+/// scratch and `out` are warm) that `PackedBackend::decode_step`'s
+/// batch-of-one steady state reaches. Bit for bit the same `n`-vector
+/// that [`crate::runtime::kernels::bitlinear`] computes from the dense
 /// source (enforced by `tests/packed_equivalence.rs`).
-pub fn bitlinear_packed(x: &[f32], planes: &TernaryPlanes) -> Vec<f32> {
-    // Hard assert (not debug_assert): a short `x` would leave its
+pub fn bitlinear_packed_into(
+    x: &[f32],
+    planes: &TernaryPlanes,
+    scratch: &mut PackedScratch,
+    out: &mut [f32],
+) {
+    // Hard asserts (not debug_assert): a short `x` would leave its
     // missing rows' activation planes zero, which the -128 bias
     // correction then mis-reads as x_q = -128 — silent corruption, so
     // make the misuse loud even in release builds.
@@ -118,69 +208,116 @@ pub fn bitlinear_packed(x: &[f32], planes: &TernaryPlanes) -> Vec<f32> {
         planes.k,
         "bitlinear_packed: activation length != matrix rows"
     );
-    let act = quantize_to_planes(x, planes.words_per_col);
-    let rescale = planes.scale / act.scale;
-    (0..planes.n)
-        .map(|j| column_dot(&act.words, planes.plus_col(j), planes.minus_col(j)) as f32 * rescale)
-        .collect()
+    assert_eq!(
+        out.len(),
+        planes.n,
+        "bitlinear_packed: output length != matrix columns"
+    );
+    let g = planes.words_per_col * 8;
+    let act = ensure_len(&mut scratch.act, g);
+    let rescale = planes.scale / quantize_into(x, act);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = column_dot(act, planes.plus_col(j), planes.minus_col(j)) as f32 * rescale;
+    }
 }
 
-/// Batched packed projection: one traversal of the bitplanes per call,
-/// every column's mask words applied to all B activation-plane sets
-/// while they are hot — the packed analogue of
+/// Convenience wrapper over [`bitlinear_packed_into`] with a local
+/// scratch and a fresh output vector — the oracle/test entry point.
+pub fn bitlinear_packed(x: &[f32], planes: &TernaryPlanes) -> Vec<f32> {
+    let mut scratch = PackedScratch::new();
+    let mut out = vec![0.0f32; planes.n];
+    bitlinear_packed_into(x, planes, &mut scratch, &mut out);
+    out
+}
+
+/// Batched packed projection with caller-owned scratch: one traversal
+/// of the bitplanes per call, every column's mask words applied to all
+/// B activation-plane sets while they are hot — the packed analogue of
 /// [`crate::runtime::kernels::bitlinear_batch`], and bit-for-bit equal
 /// to B [`bitlinear_packed`] calls (integer accumulation is exact, so
-/// this is immediate; the tests pin it anyway).
+/// this is immediate; the tests pin it anyway). With warm scratch the
+/// only allocations are the returned output vectors (`1 + B`).
 ///
-/// Above [`crate::runtime::kernels::PAR_MAC_THRESHOLD`] MACs the output
-/// columns are striped across threads via the SAME
-/// [`column_stripes`] partition the dense batch kernel uses — stripes
-/// partition `j` and each column's sum is independent and exact, so
-/// thread count cannot change a bit.
-pub fn bitlinear_packed_batch(xs: &[Vec<f32>], planes: &TernaryPlanes) -> Vec<Vec<f32>> {
+/// Above [`PAR_MAC_THRESHOLD`] MACs the output columns are striped
+/// across scoped threads via the SAME [`column_stripes`] partition the
+/// dense batch kernel uses; each stripe owns a contiguous disjoint slab
+/// of the accumulator (`acc[j * B + bi]` layout), handed out with
+/// `split_at_mut`. Stripes partition `j` and each column's sum is
+/// independent and exact, so thread count cannot change a bit. Below
+/// the threshold the walk is inline and serial — no stripe vector, no
+/// thread machinery, no allocation.
+pub fn bitlinear_packed_batch_with(
+    xs: &[Vec<f32>],
+    planes: &TernaryPlanes,
+    scratch: &mut PackedScratch,
+) -> Vec<Vec<f32>> {
     let b = xs.len();
     if b == 0 {
         return Vec::new();
     }
-    // Hard assert for the same reason as in `bitlinear_packed`.
+    // Hard assert for the same reason as in `bitlinear_packed_into`.
     assert!(
         xs.iter().all(|x| x.len() == planes.k),
         "bitlinear_packed_batch: activation length != matrix rows"
     );
-    let acts: Vec<ActPlanes> = xs
-        .iter()
-        .map(|x| quantize_to_planes(x, planes.words_per_col))
-        .collect();
     let n = planes.n;
-    let stripes = column_stripes(b * planes.k * n, n);
+    let g = planes.words_per_col * 8;
+    let PackedScratch { act, scales, acc } = scratch;
+    let act = ensure_len(act, b * g);
+    let scales = ensure_len(scales, b);
+    for ((bi, x), s) in xs.iter().enumerate().zip(scales.iter_mut()) {
+        *s = quantize_into(x, &mut act[bi * g..(bi + 1) * g]);
+    }
+    let act: &[u64] = act;
+    let acc = ensure_len(acc, n * b);
 
-    let parts = crate::util::par::parallel_map_threads(&stripes, stripes.len(), |&(j0, j1)| {
-        let width = j1 - j0;
-        let mut acc = vec![0i32; b * width];
-        for j in j0..j1 {
+    let macs = b * planes.k * n;
+    if macs < PAR_MAC_THRESHOLD {
+        for (j, chunk) in acc.chunks_exact_mut(b).enumerate() {
             let plus = planes.plus_col(j);
             let minus = planes.minus_col(j);
-            for (bi, act) in acts.iter().enumerate() {
-                acc[bi * width + (j - j0)] = column_dot(&act.words, plus, minus);
+            for (bi, a) in chunk.iter_mut().enumerate() {
+                *a = column_dot(&act[bi * g..(bi + 1) * g], plus, minus);
             }
         }
-        acc
-    });
+    } else {
+        let stripes = column_stripes(macs, n);
+        std::thread::scope(|s| {
+            // column_stripes yields contiguous ascending ranges covering
+            // [0, n), so handing out acc slabs in order tiles it exactly.
+            let mut rest: &mut [i32] = acc;
+            let mut next = 0usize;
+            for &(j0, j1) in &stripes {
+                debug_assert_eq!(j0, next);
+                next = j1;
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((j1 - j0) * b);
+                rest = tail;
+                s.spawn(move || {
+                    for (j, row) in (j0..j1).zip(chunk.chunks_exact_mut(b)) {
+                        let plus = planes.plus_col(j);
+                        let minus = planes.minus_col(j);
+                        for (bi, a) in row.iter_mut().enumerate() {
+                            *a = column_dot(&act[bi * g..(bi + 1) * g], plus, minus);
+                        }
+                    }
+                });
+            }
+            debug_assert_eq!(next, n);
+        });
+    }
 
     let mut out: Vec<Vec<f32>> = Vec::with_capacity(b);
-    for (bi, act) in acts.iter().enumerate() {
-        let rescale = planes.scale / act.scale;
-        let mut o = vec![0.0f32; n];
-        for (stripe, part) in stripes.iter().zip(&parts) {
-            let (j0, j1) = *stripe;
-            let width = j1 - j0;
-            for (oj, &sum) in o[j0..j1].iter_mut().zip(&part[bi * width..(bi + 1) * width]) {
-                *oj = sum as f32 * rescale;
-            }
-        }
-        out.push(o);
+    for (bi, &s) in scales.iter().enumerate() {
+        let rescale = planes.scale / s;
+        out.push((0..n).map(|j| acc[j * b + bi] as f32 * rescale).collect());
     }
     out
+}
+
+/// Convenience wrapper over [`bitlinear_packed_batch_with`] with a
+/// local scratch — the oracle/test entry point.
+pub fn bitlinear_packed_batch(xs: &[Vec<f32>], planes: &TernaryPlanes) -> Vec<Vec<f32>> {
+    bitlinear_packed_batch_with(xs, planes, &mut PackedScratch::new())
 }
 
 #[cfg(test)]
@@ -199,6 +336,9 @@ mod tests {
 
     #[test]
     fn packed_matches_dense_bitwise_across_shapes() {
+        // k values chosen to hit every tile shape of the 4-word unroll:
+        // words_per_col 1..5 plus 9 (two full tiles + remainder 1) and
+        // the exact-tile cases 4 and 8.
         let mut rng = Rng::new(7);
         for (k, n) in [
             (1usize, 1usize),
@@ -207,7 +347,11 @@ mod tests {
             (64, 16),
             (65, 8),
             (130, 31),
-            (256, 64),
+            (192, 11), // words_per_col 3: remainder-only path
+            (256, 64), // words_per_col 4: exactly one tile
+            (320, 5),  // words_per_col 5: one tile + 1 remainder word
+            (512, 24), // words_per_col 8: two full tiles
+            (520, 10), // words_per_col 9: two tiles + remainder
         ] {
             let w = random_ternary(&mut rng, k * n);
             let scale = 0.25 + rng.f64() as f32;
@@ -281,5 +425,84 @@ mod tests {
     fn empty_batch_is_empty() {
         let planes = pack(&[1.0, -1.0], 2, 1, 1.0).unwrap();
         assert!(bitlinear_packed_batch(&[], &planes).is_empty());
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_stays_bitwise_correct() {
+        // One scratch threaded through matrices of different shapes in
+        // both directions (grow then shrink then grow): every call must
+        // still match the dense kernel bitwise — stale words from a
+        // larger predecessor must never leak into a smaller successor.
+        let mut rng = Rng::new(55);
+        let mut scratch = PackedScratch::new();
+        let shapes = [(130usize, 7usize), (40, 12), (520, 3), (64, 9), (5, 2)];
+        for &(k, n) in shapes.iter().chain(shapes.iter().rev()) {
+            let w = random_ternary(&mut rng, k * n);
+            let planes = pack(&w, k, n, 0.91).unwrap();
+            let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let mut out = vec![0.0f32; n];
+            bitlinear_packed_into(&x, &planes, &mut scratch, &mut out);
+            assert_eq!(bitlinear(&x, &w, n, 0.91), out, "{k}x{n} single");
+            let xs: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let batch = bitlinear_packed_batch_with(&xs, &planes, &mut scratch);
+            assert_eq!(bitlinear_batch(&xs, &w, n, 0.91), batch, "{k}x{n} batch");
+        }
+    }
+
+    #[test]
+    fn warm_single_vector_path_is_allocation_free() {
+        // THE zero-alloc invariant of the serving steady state: after
+        // one warm-up call, bitlinear_packed_into must touch the heap
+        // zero times. Counted by the test-only global allocator
+        // (util::testalloc); the counter is thread-local, so parallel
+        // test threads cannot perturb it.
+        let mut rng = Rng::new(77);
+        let (k, n) = (520usize, 33usize); // tiles + remainder, ragged n
+        let w = random_ternary(&mut rng, k * n);
+        let planes = pack(&w, k, n, 0.43).unwrap();
+        let mut scratch = PackedScratch::new();
+        let mut out = vec![0.0f32; n];
+        let warmup: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        bitlinear_packed_into(&warmup, &planes, &mut scratch, &mut out);
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let before = crate::util::testalloc::thread_allocs();
+        for x in &xs {
+            bitlinear_packed_into(x, &planes, &mut scratch, &mut out);
+        }
+        assert_eq!(
+            crate::util::testalloc::thread_allocs() - before,
+            0,
+            "warm bitlinear_packed_into must not allocate"
+        );
+        // And it still computed the right bits while not allocating.
+        assert_eq!(bitlinear(&xs[3], &w, n, 0.43), out);
+    }
+
+    #[test]
+    fn warm_batch_path_allocates_only_its_outputs() {
+        // The unstriped batch kernel's only warm heap traffic is the
+        // returned Vec<Vec<f32>>: one outer Vec + B inner Vecs.
+        let mut rng = Rng::new(78);
+        let (b_n, k, n) = (3usize, 130usize, 17usize);
+        let w = random_ternary(&mut rng, k * n);
+        let planes = pack(&w, k, n, 0.61).unwrap();
+        let mut scratch = PackedScratch::new();
+        let xs: Vec<Vec<f32>> = (0..b_n)
+            .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let _ = bitlinear_packed_batch_with(&xs, &planes, &mut scratch); // warm
+        let before = crate::util::testalloc::thread_allocs();
+        let out = bitlinear_packed_batch_with(&xs, &planes, &mut scratch);
+        let allocs = crate::util::testalloc::thread_allocs() - before;
+        assert_eq!(
+            allocs,
+            1 + b_n as u64,
+            "warm batch kernel must allocate exactly its output vectors"
+        );
+        assert_eq!(bitlinear_batch(&xs, &w, n, 0.61), out);
     }
 }

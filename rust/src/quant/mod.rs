@@ -46,17 +46,27 @@
 //! `tests/packed_equivalence.rs`. Full derivation in
 //! [`kernels`]'s module docs.
 //!
-//! * [`planes`]  — [`TernaryPlanes`] storage format.
+//! * [`planes`]  — [`TernaryPlanes`] storage format (owned or mmap'd
+//!   plane words behind one `&[u64]` view).
 //! * [`pack`]    — dense ↔ packed conversion + round-trip validation.
-//! * [`kernels`] — popcount MVM kernels (single + batched, striped).
+//! * [`kernels`] — popcount MVM kernels (single + batched, striped),
+//!   unrolled 4-word tiles over caller-owned [`PackedScratch`].
 //! * [`model`]   — [`PackedModel`]: whole-artifacts lowering at load.
+//! * [`artifact`]— the versioned `.tpk` on-disk packed format:
+//!   serialize a lowered model once, mmap it back zero-copy at every
+//!   engine start.
 
+pub mod artifact;
 pub mod kernels;
 pub mod model;
 pub mod pack;
 pub mod planes;
 
-pub use kernels::{bitlinear_packed, bitlinear_packed_batch};
+pub use artifact::{load_tpk, write_tpk};
+pub use kernels::{
+    bitlinear_packed, bitlinear_packed_batch, bitlinear_packed_batch_with, bitlinear_packed_into,
+    PackedScratch,
+};
 pub use model::{PackedLayer, PackedModel};
 pub use pack::{pack, pack_verified, unpack};
 pub use planes::TernaryPlanes;

@@ -1,7 +1,7 @@
 //! `pack`/`unpack` between dense row-major f32 ternary matrices and
 //! [`TernaryPlanes`], with round-trip validation.
 
-use super::planes::TernaryPlanes;
+use super::planes::{PlaneWords, TernaryPlanes};
 use crate::util::error::{ensure, Result};
 
 /// Largest contraction dimension for which the dense f32 reference
@@ -61,8 +61,8 @@ pub fn pack(w: &[f32], k: usize, n: usize, scale: f32) -> Result<TernaryPlanes> 
         n,
         scale,
         words_per_col,
-        plus,
-        minus,
+        plus: PlaneWords::Owned(plus),
+        minus: PlaneWords::Owned(minus),
     })
 }
 

@@ -2,8 +2,97 @@
 //! matrix: two u64 bitplanes (plus-mask, minus-mask) in column-major
 //! 64-row words, plus the per-matrix dequantization scale.
 //!
+//! Since the `.tpk` artifact format ([`crate::quant::artifact`]) the
+//! plane words can live either in owned `Vec<u64>`s (built by
+//! [`crate::quant::pack::pack`]) or directly inside a read-only file
+//! mapping ([`PlaneWords::Mapped`]) — zero-copy engine start. Both
+//! back the same `&[u64]` view; every kernel and accessor goes through
+//! [`PlaneWords`]'s `Deref`, so the two backings are interchangeable
+//! and compare equal word-for-word.
+//!
 //! See the module docs of [`crate::quant`] for the layout diagram and
 //! the exactness argument.
+
+use std::sync::Arc;
+
+/// The word storage behind one bitplane: owned heap words, or a window
+/// into a shared read-only file mapping (the `.tpk` zero-copy path).
+pub(crate) enum PlaneWords {
+    /// Heap-allocated words (the `pack` path, and the buffered or
+    /// big-endian artifact-load fallback).
+    Owned(Vec<u64>),
+    /// `words` u64s starting `word_off * 8` bytes into `map`. The
+    /// artifact loader only constructs this when the section offset is
+    /// 64-byte aligned within a page-aligned mapping (so the `u64`
+    /// reads are aligned) and the file is little-endian on a
+    /// little-endian host (so the bytes ARE the in-memory words).
+    Mapped {
+        map: Arc<crate::util::mmap::Mapping>,
+        word_off: usize,
+        words: usize,
+    },
+}
+
+impl std::ops::Deref for PlaneWords {
+    type Target = [u64];
+    #[inline]
+    fn deref(&self) -> &[u64] {
+        match self {
+            PlaneWords::Owned(v) => v,
+            PlaneWords::Mapped {
+                map,
+                word_off,
+                words,
+            } => {
+                // SAFETY: the loader validated `word_off * 8 + words * 8
+                // <= map.len()` and 8-byte alignment of both the mapping
+                // base (page-aligned by mmap) and the byte offset
+                // (64-byte aligned by the format) before constructing
+                // this variant; the map is immutable PROT_READ memory
+                // kept alive by the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(map.as_ptr().add(word_off * 8) as *const u64, *words)
+                }
+            }
+        }
+    }
+}
+
+impl Clone for PlaneWords {
+    fn clone(&self) -> Self {
+        match self {
+            PlaneWords::Owned(v) => PlaneWords::Owned(v.clone()),
+            PlaneWords::Mapped {
+                map,
+                word_off,
+                words,
+            } => PlaneWords::Mapped {
+                map: Arc::clone(map),
+                word_off: *word_off,
+                words: *words,
+            },
+        }
+    }
+}
+
+impl PartialEq for PlaneWords {
+    fn eq(&self, other: &Self) -> bool {
+        // Content equality regardless of backing: a mapped plane equals
+        // the owned plane it was serialized from.
+        self[..] == other[..]
+    }
+}
+
+impl std::fmt::Debug for PlaneWords {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlaneWords::Owned(v) => write!(f, "PlaneWords::Owned({} words)", v.len()),
+            PlaneWords::Mapped { word_off, words, .. } => {
+                write!(f, "PlaneWords::Mapped({words} words @ word {word_off})")
+            }
+        }
+    }
+}
 
 /// One k x n ternary matrix packed into two bitplanes.
 ///
@@ -35,9 +124,9 @@ pub struct TernaryPlanes {
     /// Words per column: `k.div_ceil(64)`.
     pub words_per_col: usize,
     /// +1 mask, `n * words_per_col` words, column-major.
-    pub(crate) plus: Vec<u64>,
+    pub(crate) plus: PlaneWords,
     /// -1 mask, same layout.
-    pub(crate) minus: Vec<u64>,
+    pub(crate) minus: PlaneWords,
 }
 
 impl TernaryPlanes {
@@ -51,6 +140,26 @@ impl TernaryPlanes {
     #[inline]
     pub fn minus_col(&self, j: usize) -> &[u64] {
         &self.minus[j * self.words_per_col..(j + 1) * self.words_per_col]
+    }
+
+    /// All +1 mask words (column-major), whichever backing holds them.
+    #[inline]
+    pub fn plus_words(&self) -> &[u64] {
+        &self.plus
+    }
+
+    /// All -1 mask words (column-major), whichever backing holds them.
+    #[inline]
+    pub fn minus_words(&self) -> &[u64] {
+        &self.minus
+    }
+
+    /// True when the plane words live in a file mapping rather than on
+    /// the heap (the `.tpk` zero-copy path) — observable evidence that
+    /// artifact load did not re-pack or copy.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.plus, PlaneWords::Mapped { .. })
+            && matches!(self.minus, PlaneWords::Mapped { .. })
     }
 
     /// Weight at row `kk`, column `j`, as the ternary f32 it unpacks to.

@@ -24,8 +24,10 @@ use super::artifacts::Artifacts;
 use super::backend::Backend;
 use super::kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 use super::prefixcache::{PrefixCache, PrefixStats};
+use crate::quant::PackedModel;
 use crate::util::error::{Context, Result};
 use std::cell::RefCell;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Which execution backend to load.
@@ -165,6 +167,53 @@ impl Engine {
                 Box::new(super::pjrt::PjrtBackend::new(Arc::clone(&artifacts))?)
             }
         };
+        Self::assemble(artifacts, backend, block_len, capacity_blocks)
+    }
+
+    /// Load the packed backend straight from a `.tpk` artifact
+    /// ([`crate::quant::load_tpk`]): the bitplanes are mmap'd zero-copy
+    /// where the platform allows, so engine start does no per-matrix
+    /// re-packing and N processes opening the same file share one page
+    /// cache copy. `artifacts` still supplies the manifest (validated
+    /// against the artifact header) and the golden transcript.
+    pub fn load_packed_artifact(
+        artifacts: Artifacts,
+        tpk_path: &Path,
+        block_len: usize,
+        capacity_blocks: usize,
+    ) -> Result<Self> {
+        let artifacts = Arc::new(artifacts);
+        let model = Arc::new(crate::quant::load_tpk(tpk_path, &artifacts)?);
+        let backend: Box<dyn Backend> = Box::new(super::packed::PackedBackend::with_model(
+            Arc::clone(&artifacts),
+            model,
+        )?);
+        Self::assemble(artifacts, backend, block_len, capacity_blocks)
+    }
+
+    /// [`Engine::load_packed_artifact`] over the default artifacts
+    /// directory (synthetic fallback) — what `repro serve/validate
+    /// --backend packed --artifact P` map to.
+    pub fn load_default_packed_artifact(
+        tpk_path: &Path,
+        block_len: usize,
+        capacity_blocks: usize,
+    ) -> Result<Self> {
+        Self::load_packed_artifact(
+            default_artifacts(BackendKind::Packed)?,
+            tpk_path,
+            block_len,
+            capacity_blocks,
+        )
+    }
+
+    /// Shared tail of every loader: size the arena and box the parts.
+    fn assemble(
+        artifacts: Arc<Artifacts>,
+        backend: Box<dyn Backend>,
+        block_len: usize,
+        capacity_blocks: usize,
+    ) -> Result<Self> {
         let layout = CacheLayout::with_block_len(&artifacts.manifest.model, block_len);
         let arena = if capacity_blocks == 0 {
             CacheArena::with_sessions(layout, 0)?
@@ -517,17 +566,33 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
 
 /// A host backend boxed as `dyn Backend + Send`, one per worker. Both
 /// host executors are plain data over `Arc<Artifacts>` (the weights are
-/// shared immutably; the packed backend re-packs its bitplanes per
-/// worker at load time), so the compiler derives `Send` structurally.
-/// PJRT keeps device-resident session state and cannot be sharded.
-fn host_backend(artifacts: &Arc<Artifacts>, kind: BackendKind) -> Result<Box<dyn Backend + Send>> {
+/// shared immutably), so the compiler derives `Send` structurally.
+/// When `packed` carries a pre-lowered [`PackedModel`] (loaded once
+/// from a `.tpk` artifact, or lowered once in memory) every worker
+/// shares that one copy — N workers no longer re-pack N times. PJRT
+/// keeps device-resident session state and cannot be sharded.
+fn host_backend(
+    artifacts: &Arc<Artifacts>,
+    kind: BackendKind,
+    packed: Option<&Arc<PackedModel>>,
+) -> Result<Box<dyn Backend + Send>> {
     match kind {
-        BackendKind::Reference => Ok(Box::new(super::reference::ReferenceBackend::new(
-            Arc::clone(artifacts),
-        )?)),
-        BackendKind::Packed => Ok(Box::new(super::packed::PackedBackend::new(Arc::clone(
-            artifacts,
-        ))?)),
+        BackendKind::Reference => {
+            crate::ensure!(
+                packed.is_none(),
+                "a packed model artifact only loads on the packed backend"
+            );
+            Ok(Box::new(super::reference::ReferenceBackend::new(
+                Arc::clone(artifacts),
+            )?))
+        }
+        BackendKind::Packed => Ok(match packed {
+            Some(model) => Box::new(super::packed::PackedBackend::with_model(
+                Arc::clone(artifacts),
+                Arc::clone(model),
+            )?),
+            None => Box::new(super::packed::PackedBackend::new(Arc::clone(artifacts))?),
+        }),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => crate::bail!(
             "sharded serving needs a host backend (reference | packed); the PJRT \
@@ -581,8 +646,59 @@ impl ShardedEngine {
         total_blocks: usize,
         workers: usize,
     ) -> Result<Self> {
-        crate::ensure!(workers >= 1, "sharded engine needs at least one worker");
+        Self::build(Arc::new(artifacts), kind, None, block_len, total_blocks, workers)
+    }
+
+    /// Sharded serving from a `.tpk` packed artifact: the model is
+    /// loaded (mmap'd where possible) ONCE and the single
+    /// [`PackedModel`] is shared by every worker's backend, so startup
+    /// cost is independent of the worker count and no worker re-packs
+    /// anything.
+    pub fn load_packed_artifact(
+        artifacts: Artifacts,
+        tpk_path: &Path,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+    ) -> Result<Self> {
         let artifacts = Arc::new(artifacts);
+        let model = Arc::new(crate::quant::load_tpk(tpk_path, &artifacts)?);
+        Self::build(
+            artifacts,
+            BackendKind::Packed,
+            Some(&model),
+            block_len,
+            total_blocks,
+            workers,
+        )
+    }
+
+    /// [`ShardedEngine::load_packed_artifact`] over the default
+    /// artifacts directory (synthetic fallback).
+    pub fn load_default_packed_artifact(
+        tpk_path: &Path,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        Self::load_packed_artifact(
+            default_artifacts(BackendKind::Packed)?,
+            tpk_path,
+            block_len,
+            total_blocks,
+            workers,
+        )
+    }
+
+    fn build(
+        artifacts: Arc<Artifacts>,
+        kind: BackendKind,
+        packed: Option<&Arc<PackedModel>>,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        crate::ensure!(workers >= 1, "sharded engine needs at least one worker");
         let layout = CacheLayout::with_block_len(&artifacts.manifest.model, block_len);
         let total = if total_blocks == 0 {
             layout.blocks_per_session().max(1) * super::kvcache::DEFAULT_ARENA_SESSIONS
@@ -594,7 +710,7 @@ impl ShardedEngine {
             .map(|arena| {
                 Ok(EngineImpl {
                     artifacts: Arc::clone(&artifacts),
-                    backend: host_backend(&artifacts, kind)?,
+                    backend: host_backend(&artifacts, kind, packed)?,
                     arena: RefCell::new(arena),
                     prefix: RefCell::new(None),
                 })
@@ -1005,6 +1121,60 @@ mod tests {
             e1.decode_step(s1, 42, 0).unwrap(),
             e2.decode_step(s2, 42, 0).unwrap()
         );
+    }
+
+    #[test]
+    fn packed_artifact_engines_match_lowered_engines() {
+        // Engine + ShardedEngine loaded from a .tpk must be bitwise the
+        // engines that lower the packed model in memory (the full
+        // corruption matrix lives in tests/artifact_roundtrip.rs).
+        let dir = std::env::temp_dir().join(format!("pim-llm-engine-tpk-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("engine.tpk");
+        let artifacts = Artifacts::synthetic(1).unwrap();
+        let lowered = crate::quant::PackedModel::lower(&artifacts).unwrap();
+        crate::quant::write_tpk(&path, &lowered, &artifacts.manifest).unwrap();
+
+        let from_tpk =
+            Engine::load_packed_artifact(Artifacts::synthetic(1).unwrap(), &path, 0, 0)
+                .expect("engine from .tpk");
+        let packed =
+            Engine::load_with(Artifacts::synthetic(1).unwrap(), BackendKind::Packed).unwrap();
+        assert_eq!(from_tpk.backend_name(), "packed");
+        let s1 = from_tpk.new_session().unwrap();
+        let s2 = packed.new_session().unwrap();
+        for (pos, tok) in [3i32, 1, 4, 1, 5].into_iter().enumerate() {
+            assert_eq!(
+                from_tpk.decode_step(s1, tok, pos as i32).unwrap(),
+                packed.decode_step(s2, tok, pos as i32).unwrap(),
+                "tpk-loaded engine diverged at pos {pos}"
+            );
+        }
+
+        let se = ShardedEngine::load_packed_artifact(
+            Artifacts::synthetic(1).unwrap(),
+            &path,
+            4,
+            16,
+            2,
+        )
+        .expect("sharded engine from .tpk");
+        // Every shard shares the single loaded model (same allocation).
+        let h = se.new_session_on(1).unwrap();
+        let s3 = packed.new_session().unwrap();
+        assert_eq!(
+            se.decode_step(h, 7, 0).unwrap(),
+            packed.decode_step(s3, 7, 0).unwrap()
+        );
+        // A .tpk cannot sneak onto the reference backend.
+        assert!(host_backend(
+            &Arc::new(Artifacts::synthetic(1).unwrap()),
+            BackendKind::Reference,
+            Some(&Arc::new(lowered)),
+        )
+        .is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
     }
 
     fn sharded(workers: usize) -> ShardedEngine {

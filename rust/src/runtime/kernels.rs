@@ -19,11 +19,21 @@
 //! dims <= 128 here. See ref.py's module docstring for the original
 //! derivation.
 
+/// The activation-quantization scale alone (ref.py::act_quant_int8):
+/// `127 / max(absmax(x), 1e-5)`. Split out of [`act_quant_int8`] so the
+/// packed backend's zero-allocation kernel can quantize straight into
+/// bitplane words — element `v` maps to `(v * scale).round().clamp(
+/// -128.0, 127.0)`, and any caller applying exactly that formula is
+/// bit-identical to [`act_quant_int8`] by construction.
+pub fn act_scale(x: &[f32]) -> f32 {
+    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    127.0 / absmax.max(1e-5)
+}
+
 /// Absmax per-tensor symmetric int8 quantization (ref.py::act_quant_int8):
 /// scale = 127 / max(|x|, eps); x_q = clip(round(x * scale), -128, 127).
 pub fn act_quant_int8(x: &[f32]) -> (Vec<f32>, f32) {
-    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-    let scale = 127.0 / absmax.max(1e-5);
+    let scale = act_scale(x);
     let q = x
         .iter()
         .map(|&v| (v * scale).round().clamp(-128.0, 127.0))

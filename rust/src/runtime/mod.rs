@@ -52,7 +52,8 @@ pub use artifacts::Artifacts;
 pub use backend::Backend;
 pub use decoder::{BatchDecoder, TinyDecoder};
 pub use engine::{
-    shard_for, BackendKind, Engine, EngineImpl, EngineShard, ShardHandle, ShardedEngine,
+    default_artifacts, shard_for, BackendKind, Engine, EngineImpl, EngineShard, ShardHandle,
+    ShardedEngine,
 };
 pub use kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 pub use prefixcache::{PrefixCache, PrefixMatch, PrefixStats};

@@ -5,14 +5,18 @@
 //! Structure: at load, [`crate::quant::PackedModel::lower`] packs all
 //! seven ternary matrix kinds (per layer wq/wk/wv/wx/w_in/w_out, plus
 //! the model-level w_head) into two-u64-bitplane form — once, the way
-//! the paper programs its PIM crossbars once before serving. The decode
-//! step then routes every projection through
-//! [`bitlinear_packed_batch`] while reusing the reference backend's
+//! the paper programs its PIM crossbars once before serving — or, on
+//! the `.tpk` path ([`PackedBackend::with_model`]), adopts planes
+//! already materialized from a packed artifact with no re-pack at all.
+//! The decode step then routes every projection through
+//! [`bitlinear_packed_batch_with`] over the backend's own
+//! [`PackedScratch`] (so the warm steady state does no kernel-side heap
+//! allocation) while reusing the reference backend's
 //! attention/nonlinear path (shared [`super::kernels`], including the
 //! paged-arena attention gather) and its resolved parameter table for
 //! everything that is not a ternary matrix (embedding, norm gammas).
 //! Like the reference backend, a single decode step IS a batch of one
-//! (`bitlinear_packed_batch` at B=1 is bit-for-bit [`bitlinear_packed`],
+//! (the batch kernel at B=1 is bit-for-bit [`bitlinear_packed`],
 //! pinned by the quant kernel tests), so one orchestration serves both
 //! entry points.
 //!
@@ -32,8 +36,11 @@ use super::backend::Backend;
 use super::kernels::{attention, attention_paged, gelu, rms_norm};
 use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use super::reference::ReferenceBackend;
-use crate::quant::{bitlinear_packed, bitlinear_packed_batch, PackedModel};
+use crate::quant::{
+    bitlinear_packed, bitlinear_packed_batch_with, PackedModel, PackedScratch,
+};
 use crate::util::error::{ensure, Context, Result};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// The packed backend: bitplane weights + popcount projection kernels.
@@ -44,22 +51,67 @@ use std::sync::Arc;
 /// live there), so the dense f32 projection tensors stay resident
 /// alongside the bitplanes. Dropping them would need `Artifacts` to
 /// give up per-parameter storage; not worth the churn while the dense
-/// copy also serves the engine's `artifacts` accessor.
+/// copy also serves the engine's `artifacts` accessor. (When the model
+/// comes from a `.tpk` artifact via [`PackedBackend::with_model`], the
+/// bitplanes themselves are usually not even resident — they are
+/// mmap'd pages shared with every other process serving the same file.)
 pub struct PackedBackend {
     /// The reference backend supplies the resolved parameter table
     /// (embedding, gammas) and the non-projection numerics; it holds no
     /// decode state, so reusing it costs a few indices.
     reference: ReferenceBackend,
-    /// Every ternary matrix in packed form, lowered once at load.
-    model: PackedModel,
+    /// Every ternary matrix in packed form — lowered once at load, or
+    /// shared (`Arc`) across every shard of a sharded engine when
+    /// loaded from a `.tpk` artifact.
+    model: Arc<PackedModel>,
+    /// Reusable kernel scratch (activation bitplanes, scales, integer
+    /// accumulator), grown to the model's high-water shape on the first
+    /// step and allocation-free from then on. `RefCell`: `Backend`
+    /// methods take `&self`, and a backend is owned by exactly one
+    /// engine/worker thread (`Send`, not `Sync`), so the borrow is
+    /// never contended.
+    scratch: RefCell<PackedScratch>,
 }
 
 impl PackedBackend {
     pub fn new(artifacts: Arc<Artifacts>) -> Result<Self> {
         let model =
             PackedModel::lower(&artifacts).context("lowering artifacts to bitplanes")?;
+        Self::with_model(artifacts, Arc::new(model))
+    }
+
+    /// Build the backend around an already-materialized packed model —
+    /// the `.tpk` path: the engine (or the sharded engine, ONCE for all
+    /// workers) loads the artifact and every backend shares the same
+    /// `Arc`'d planes, so no per-worker re-pack and no per-worker copy.
+    pub fn with_model(artifacts: Arc<Artifacts>, model: Arc<PackedModel>) -> Result<Self> {
+        let m = &artifacts.manifest.model;
+        ensure!(
+            model.layers.len() == m.n_layers,
+            "packed model has {} layers, manifest {}",
+            model.layers.len(),
+            m.n_layers
+        );
+        ensure!(
+            model.w_head.k == m.d && model.w_head.n == m.vocab,
+            "packed w_head is {}x{}, manifest model wants {}x{}",
+            model.w_head.k,
+            model.w_head.n,
+            m.d,
+            m.vocab
+        );
         let reference = ReferenceBackend::new(artifacts)?;
-        Ok(Self { reference, model })
+        Ok(Self {
+            reference,
+            model,
+            scratch: RefCell::new(PackedScratch::new()),
+        })
+    }
+
+    /// The packed planes this backend executes (shared when loaded from
+    /// a `.tpk`).
+    pub fn model(&self) -> &Arc<PackedModel> {
+        &self.model
     }
 
     /// The pre-paging contiguous decode step over the bitplane kernels,
@@ -170,6 +222,10 @@ impl Backend for PackedBackend {
         let dh = d / h;
         let eps = m.eps as f32;
         let poss = ReferenceBackend::prepare_step(arena, handles, positions, max_ctx)?;
+        // One scratch borrow for the whole step: every projection below
+        // reuses the same activation-plane/accumulator buffers, so the
+        // warm steady state does no kernel-side heap allocation.
+        let scratch = &mut *self.scratch.borrow_mut();
 
         // Embed every session's token (XLA-style clamped gather).
         let embedding = r.data(r.embedding);
@@ -187,9 +243,9 @@ impl Backend for PackedBackend {
                 .iter()
                 .map(|x| rms_norm(x, r.data(lp.ln1_gamma), eps))
                 .collect();
-            let q = bitlinear_packed_batch(&xn, &pl.wq);
-            let k = bitlinear_packed_batch(&xn, &pl.wk);
-            let v = bitlinear_packed_batch(&xn, &pl.wv);
+            let q = bitlinear_packed_batch_with(&xn, &pl.wq, scratch);
+            let k = bitlinear_packed_batch_with(&xn, &pl.wk, scratch);
+            let v = bitlinear_packed_batch_with(&xn, &pl.wv, scratch);
 
             // Scatter each session's new K/V through its block table at
             // its own (ragged) position.
@@ -206,7 +262,7 @@ impl Backend for PackedBackend {
                     Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
                 })
                 .collect::<Result<Vec<_>>>()?;
-            let att = bitlinear_packed_batch(&att, &pl.wx);
+            let att = bitlinear_packed_batch_with(&att, &pl.wx, scratch);
             for (x, a) in xs.iter_mut().zip(&att) {
                 for (xi, ai) in x.iter_mut().zip(a) {
                     *xi += ai;
@@ -218,12 +274,12 @@ impl Backend for PackedBackend {
                 .iter()
                 .map(|x| rms_norm(x, r.data(lp.ln2_gamma), eps))
                 .collect();
-            let ff = bitlinear_packed_batch(&xn, &pl.w_in);
+            let ff = bitlinear_packed_batch_with(&xn, &pl.w_in, scratch);
             let ff: Vec<Vec<f32>> = ff
                 .into_iter()
                 .map(|f| f.into_iter().map(gelu).collect())
                 .collect();
-            let ff = bitlinear_packed_batch(&ff, &pl.w_out);
+            let ff = bitlinear_packed_batch_with(&ff, &pl.w_out, scratch);
             for (x, f) in xs.iter_mut().zip(&ff) {
                 for (xi, fi) in x.iter_mut().zip(f) {
                     *xi += fi;
@@ -235,7 +291,7 @@ impl Backend for PackedBackend {
             .iter()
             .map(|x| rms_norm(x, r.data(r.lnf_gamma), eps))
             .collect();
-        Ok(bitlinear_packed_batch(&xs, &self.model.w_head))
+        Ok(bitlinear_packed_batch_with(&xs, &self.model.w_head, scratch))
     }
 }
 

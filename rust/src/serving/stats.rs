@@ -31,18 +31,30 @@ pub struct LatencyStats {
     pub tokens_per_s: f64,
 }
 
+/// Percentile over a `total_cmp`-sorted sample. NaN entries (a clock
+/// that went backwards, a field a custom front end never filled) sit
+/// grouped at the ends of the total order (-NaN first, +NaN last), so
+/// the percentile is taken over the contiguous run of real numbers
+/// between them — one poisoned response no longer poisons (or panics)
+/// the whole report. All-NaN or empty samples report NaN.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
+    let lo = sorted.iter().position(|v| !v.is_nan());
+    let Some(lo) = lo else {
         return f64::NAN;
-    }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    };
+    let hi = sorted.iter().rposition(|v| !v.is_nan()).expect("lo exists");
+    let finite = &sorted[lo..=hi];
+    let idx = ((p / 100.0) * (finite.len() - 1) as f64).round() as usize;
+    finite[idx.min(finite.len() - 1)]
 }
 
-/// Sorted copy of one latency field across responses.
+/// Sorted copy of one latency field across responses. `f64::total_cmp`
+/// rather than `partial_cmp(..).unwrap()`: a single NaN latency must
+/// not panic the stats pass at the end of an otherwise-successful
+/// serving run.
 fn sorted_field(responses: &[Response], f: impl Fn(&Response) -> f64) -> Vec<f64> {
     let mut v: Vec<f64> = responses.iter().map(f).collect();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     v
 }
 
@@ -213,6 +225,41 @@ mod tests {
         let merged = shard_report(&[a, b]);
         assert!(merged.contains("shard 1: placed 0 | stole 1 | served 2"));
         assert!(merged.ends_with("2 workers | 6 served | 1 stolen"));
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_or_poison_percentiles() {
+        // Regression: sorted_field used partial_cmp(..).unwrap(), so a
+        // single NaN ttft panicked the stats pass after an otherwise
+        // successful run. NaNs must be tolerated and excluded from the
+        // percentile sample.
+        let mut rs: Vec<Response> = (0..9).map(|i| resp(i, (i + 1) as f64)).collect();
+        rs.push(Response {
+            ttft_s: f64::NAN,
+            queue_s: -f64::NAN,
+            ..resp(9, 10.0)
+        });
+        let s = LatencyStats::from_responses(&rs, 1.0);
+        // service_s is NaN-free: percentiles as usual over 1..=10.
+        assert_eq!(s.p50_service_s, 6.0);
+        assert_eq!(s.p99_service_s, 10.0);
+        // ttft (+NaN sorts last) and queue (-NaN sorts first) both
+        // report percentiles over the 9 real samples.
+        assert!(!s.p50_ttft_s.is_nan() && !s.p95_ttft_s.is_nan());
+        assert_eq!(s.p95_ttft_s, 4.5); // max real ttft: 9.0 / 2
+        assert!(!s.p50_queue_s.is_nan() && !s.p95_queue_s.is_nan());
+        assert_eq!(s.p95_queue_s, 2.25); // max real queue: 9.0 / 4
+        // Empty and all-NaN samples degrade to NaN, never panic.
+        let empty = LatencyStats::from_responses(&[], 1.0);
+        assert!(empty.p50_service_s.is_nan());
+        let all_nan = LatencyStats::from_responses(
+            &[Response {
+                service_s: f64::NAN,
+                ..resp(0, 1.0)
+            }],
+            1.0,
+        );
+        assert!(all_nan.p50_service_s.is_nan());
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Read-only memory-mapped files — the zero-copy substrate under the
+//! packed-artifact loader (`crate::quant::artifact`), kept in-crate like
+//! every other substrate (see the dependency-policy note in Cargo.toml).
+//!
+//! Two layers:
+//!
+//! * [`Mapping`] — a whole file mapped `PROT_READ`/`MAP_PRIVATE` through
+//!   a direct `extern "C"` binding to the unix `mmap`/`munmap` pair (no
+//!   libc crate). Only compiled into a working constructor on 64-bit
+//!   unix; elsewhere [`Mapping::of_file`] returns a clear error and the
+//!   callers fall back to buffered reads.
+//! * [`FileBytes`] — the loader-facing entry: "give me this file's
+//!   bytes, mapped if the platform can, read into memory otherwise".
+//!   Consumers that only need `&[u8]` never see the difference; the
+//!   artifact loader additionally asks for the [`Mapping`] so it can
+//!   keep plane sections as pointers into the map (`Arc`-shared, so N
+//!   engines/shards in one process — and N processes via the kernel
+//!   page cache — share one physical copy).
+//!
+//! Safety argument for the `unsafe` here: the region is mapped
+//! `PROT_READ` + `MAP_PRIVATE`, so no one can write through it and
+//! writes elsewhere cannot move it; it stays valid until `munmap`, which
+//! only `Drop` calls; and `Mapping` is therefore `Send + Sync` the same
+//! way `&[u8]` is. A truncation of the underlying file by another
+//! process could SIGBUS any mmap consumer — the standard, documented
+//! mmap caveat; artifacts are immutable build products, and the buffered
+//! fallback exists for anyone who cannot accept it.
+
+use crate::util::error::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use core::ffi::c_void;
+    // POSIX values shared by Linux and the BSD/mac family.
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A whole file mapped read-only. Dereferences to `&[u8]`; unmapped on
+/// drop. Construct through [`Mapping::of_file`] (64-bit unix) or accept
+/// either backing via [`FileBytes::open`].
+pub struct Mapping {
+    ptr: std::ptr::NonNull<u8>,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE — immutable shared
+// bytes, exactly the aliasing contract of &[u8] — and stays valid until
+// Drop unmaps it.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only in its entirety. Errors on open/stat/mmap
+    /// failure, on an empty file (zero-length mmap is EINVAL), and on
+    /// targets without the mmap binding (non-unix or 32-bit pointers).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn of_file(path: &Path) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {} for mmap", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        if len == 0 {
+            bail!("mmap {}: file is empty", path.display());
+        }
+        // SAFETY: fd is a live file descriptor for the duration of the
+        // call; addr = null lets the kernel place the mapping; the
+        // result is checked against MAP_FAILED before use. The fd may
+        // be closed after mmap returns — the mapping persists.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            // MAP_FAILED
+            bail!(
+                "mmap {} ({} bytes): {}",
+                path.display(),
+                len,
+                std::io::Error::last_os_error()
+            );
+        }
+        let ptr = std::ptr::NonNull::new(ptr as *mut u8)
+            .ok_or_else(|| crate::anyhow!("mmap returned null"))?;
+        Ok(Self { ptr, len })
+    }
+
+    /// Stub for targets without the direct binding: always an error, so
+    /// [`FileBytes::open`] falls through to the buffered read.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn of_file(path: &Path) -> Result<Self> {
+        bail!(
+            "mmap unavailable on this target (need 64-bit unix): {}",
+            path.display()
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::ops::Deref for Mapping {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        // SAFETY: ptr/len describe the live PROT_READ mapping.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        // SAFETY: exactly the pointer/length pair mmap returned; after
+        // this the struct is gone, so no dangling access is possible.
+        unsafe {
+            sys::munmap(self.ptr.as_ptr() as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mapping({} bytes)", self.len)
+    }
+}
+
+/// A file's bytes, zero-copy when the platform allows it.
+#[derive(Debug)]
+pub enum FileBytes {
+    /// Mapped pages (64-bit unix): shared, lazily faulted, evictable.
+    Mapped(Arc<Mapping>),
+    /// Buffered fallback: the whole file read into memory.
+    Buffered(Vec<u8>),
+}
+
+impl FileBytes {
+    /// Open `path`, preferring mmap; any mmap failure (platform, empty
+    /// file, exotic filesystem) falls back to an ordinary buffered read,
+    /// so the only hard error is the file being unreadable.
+    pub fn open(path: &Path) -> Result<Self> {
+        if let Ok(m) = Mapping::of_file(path) {
+            return Ok(FileBytes::Mapped(Arc::new(m)));
+        }
+        Ok(FileBytes::Buffered(std::fs::read(path).with_context(
+            || format!("reading {}", path.display()),
+        )?))
+    }
+
+    /// The file contents, whichever backing holds them.
+    pub fn bytes(&self) -> &[u8] {
+        match self {
+            FileBytes::Mapped(m) => m,
+            FileBytes::Buffered(v) => v,
+        }
+    }
+
+    /// The mapping behind the bytes, when zero-copy consumers can use
+    /// it (None for the buffered fallback).
+    pub fn mapping(&self) -> Option<&Arc<Mapping>> {
+        match self {
+            FileBytes::Mapped(m) => Some(m),
+            FileBytes::Buffered(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pimllm-mmap-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn mapped_bytes_match_read_bytes() {
+        let p = tmp("basic");
+        let data: Vec<u8> = (0..4099u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&p, &data).unwrap();
+        let fb = FileBytes::open(&p).unwrap();
+        assert_eq!(fb.bytes(), &data[..]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            let m = fb.mapping().expect("64-bit unix should mmap");
+            assert_eq!(m.len(), data.len());
+            assert!(!m.is_empty());
+            // The Arc'd mapping outlives the FileBytes wrapper.
+            let keep = Arc::clone(m);
+            drop(fb);
+            assert_eq!(&keep[..16], &data[..16]);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        assert!(FileBytes::open(Path::new("/nonexistent/pimllm.tpk")).is_err());
+        assert!(Mapping::of_file(Path::new("/nonexistent/pimllm.tpk")).is_err());
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_buffered() {
+        let p = tmp("empty");
+        std::fs::write(&p, []).unwrap();
+        let fb = FileBytes::open(&p).unwrap();
+        assert!(fb.bytes().is_empty());
+        assert!(fb.mapping().is_none(), "empty files cannot be mapped");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mapping_is_send_and_sync() {
+        fn assert_both<T: Send + Sync>() {}
+        assert_both::<Mapping>();
+        assert_both::<FileBytes>();
+    }
+}

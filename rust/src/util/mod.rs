@@ -13,11 +13,19 @@
 //! * [`cli`]   — tiny flag parser for the `repro` binary and examples.
 //! * [`bench`] — measurement harness used by `rust/benches/*`
 //!   (harness = false): warmup, repeats, mean/stddev, table output.
+//! * [`mmap`]  — read-only memory-mapped files (direct unix binding,
+//!   buffered fallback) for zero-copy `.tpk` packed-artifact loading.
+//! * [`testalloc`] — (tests only) counting global allocator backing the
+//!   zero-allocation assertions in the packed-kernel tests.
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod mmap;
 pub mod par;
 pub mod rng;
 pub mod toml;
+
+#[cfg(test)]
+pub mod testalloc;

@@ -1,0 +1,100 @@
+//! Thread-local heap-allocation counter for zero-allocation assertions.
+//!
+//! Registered as the crate's `#[global_allocator]` **only under
+//! `cfg(test)`** (see lib.rs), so release binaries and benches keep the
+//! stock system allocator. The counter is per-thread: unit tests run on
+//! many threads concurrently, and a process-global counter would make
+//! "this region allocated nothing" impossible to assert. Deallocations
+//! are deliberately not counted — a zero-alloc invariant is about new
+//! heap traffic, and frees of pre-warmed scratch would be a bug anyway.
+//!
+//! Usage in a test:
+//!
+//! ```ignore
+//! let before = thread_allocs();
+//! hot_path(&mut warm_scratch, &mut out);
+//! assert_eq!(thread_allocs() - before, 0);
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations made by the current thread since it started (only
+/// meaningful when [`CountingAlloc`] is the registered global
+/// allocator; otherwise constant 0).
+pub fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// A `GlobalAlloc` that forwards to [`System`] and bumps the calling
+/// thread's allocation counter on every `alloc`/`realloc`.
+pub struct CountingAlloc;
+
+fn bump() {
+    // try_with: during thread-local teardown the allocator can still be
+    // invoked; silently skip counting rather than abort.
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+// SAFETY: pure pass-through to `System`, which upholds the GlobalAlloc
+// contract; the counter side effect touches no allocator state.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sees_allocations_and_is_quiet_without_them() {
+        let base = thread_allocs();
+        let v: Vec<u64> = Vec::with_capacity(64);
+        assert!(thread_allocs() > base, "Vec::with_capacity must count");
+        drop(v);
+        let mut buf = [0u64; 8];
+        let before = thread_allocs();
+        for (i, w) in buf.iter_mut().enumerate() {
+            *w = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        }
+        let checksum: u64 = buf.iter().fold(0, |a, &b| a ^ b);
+        assert_ne!(checksum, 1);
+        assert_eq!(thread_allocs() - before, 0, "stack work must not count");
+    }
+
+    #[test]
+    fn counter_is_thread_local() {
+        let base = thread_allocs();
+        std::thread::spawn(|| {
+            let _v: Vec<u8> = vec![0; 4096];
+        })
+        .join()
+        .unwrap();
+        assert_eq!(
+            thread_allocs(),
+            base,
+            "another thread's allocations must not leak into this counter"
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! `.tpk` packed-artifact round-trip and corruption matrix.
+//!
+//! Contract under test: `write_tpk` -> `load_tpk` is bit-identical for
+//! every matrix of the model, and the loader REJECTS every malformed
+//! file with a `util::error` chain — it must never panic and never read
+//! out of bounds, because a serving process mmaps whatever path it is
+//! handed. Each corruption below patches a single aspect of a valid
+//! file, so every validation rule in the loader is hit by at least one
+//! case that is well-formed in every other respect.
+
+use pim_llm::quant::artifact::{
+    TPK_ALIGN, TPK_HEADER_BYTES, TPK_MAGIC, TPK_RECORD_BYTES,
+};
+use pim_llm::quant::{load_tpk, write_tpk, PackedModel};
+use pim_llm::runtime::{Artifacts, Engine};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pimllm-tpkrt-{}-{name}.tpk", std::process::id()))
+}
+
+/// A valid artifact's bytes + the artifacts it was packed from.
+fn valid_artifact() -> (Vec<u8>, Artifacts) {
+    let artifacts = Artifacts::synthetic(7).unwrap();
+    let lowered = PackedModel::lower(&artifacts).unwrap();
+    let path = tmp("base");
+    write_tpk(&path, &lowered, &artifacts.manifest).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    (bytes, artifacts)
+}
+
+/// Write a patched copy, try to load it, clean up, return the result.
+fn load_patched(
+    name: &str,
+    bytes: &[u8],
+    artifacts: &Artifacts,
+    patch: impl FnOnce(&mut Vec<u8>),
+) -> Result<PackedModel, pim_llm::util::error::Error> {
+    let mut b = bytes.to_vec();
+    patch(&mut b);
+    let path = tmp(name);
+    std::fs::write(&path, &b).unwrap();
+    let r = load_tpk(&path, artifacts);
+    std::fs::remove_file(&path).ok();
+    r
+}
+
+fn put_u64(b: &mut [u8], off: usize, v: u64) {
+    b[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+fn get_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+#[test]
+fn round_trip_is_bit_identical_and_engine_equivalent() {
+    let (bytes, artifacts) = valid_artifact();
+    let path = tmp("ok");
+    std::fs::write(&path, &bytes).unwrap();
+    // Loader accepts the untouched file and every plane round-trips.
+    let lowered = PackedModel::lower(&artifacts).unwrap();
+    let loaded = load_tpk(&path, &artifacts).unwrap();
+    for ((name, lm), (_, rm)) in lowered.matrices().iter().zip(loaded.matrices().iter()) {
+        assert_eq!(lm, rm, "'{name}' must round-trip bit-for-bit");
+    }
+    // And a full engine starts from it (no re-packing path involved).
+    let e = Engine::load_packed_artifact(Artifacts::synthetic(7).unwrap(), &path, 0, 0).unwrap();
+    let s = e.new_session().unwrap();
+    assert_eq!(e.decode_step(s, 1, 0).unwrap().len(), e.vocab());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncations_error_instead_of_panicking_or_reading_oob() {
+    let (bytes, artifacts) = valid_artifact();
+    let n_matrices = get_u64(&bytes, 80) as usize;
+    let records_end = TPK_HEADER_BYTES + n_matrices * TPK_RECORD_BYTES;
+    // Cut points spanning every structural region: empty file, mid
+    // magic, mid header, mid record table, and inside the plane
+    // payload (the final cut removes a whole alignment block, so it
+    // always bites into the last plane section, not just tail padding).
+    let cuts = [
+        0usize,
+        1,
+        TPK_MAGIC.len() - 1,
+        TPK_HEADER_BYTES - 1,
+        TPK_HEADER_BYTES + TPK_RECORD_BYTES - 1,
+        records_end - 1,
+        bytes.len() - TPK_ALIGN,
+    ];
+    for cut in cuts {
+        let r = load_patched(&format!("cut{cut}"), &bytes, &artifacts, |b| {
+            b.truncate(cut);
+        });
+        assert!(r.is_err(), "truncation to {cut} bytes must be rejected");
+    }
+}
+
+#[test]
+fn header_corruptions_are_rejected() {
+    let (bytes, artifacts) = valid_artifact();
+    let cases: Vec<(&str, Box<dyn FnOnce(&mut Vec<u8>)>)> = vec![
+        ("magic", Box::new(|b: &mut Vec<u8>| b[0] ^= 0xFF)),
+        ("version", Box::new(|b: &mut Vec<u8>| {
+            b[8..12].copy_from_slice(&99u32.to_le_bytes());
+        })),
+        ("endian", Box::new(|b: &mut Vec<u8>| b[12] ^= 0xFF)),
+        // Geometry fields (vocab at 16) and eps bits (64) must match
+        // the manifest exactly.
+        ("vocab", Box::new(|b: &mut Vec<u8>| {
+            let v = get_u64(b, 16);
+            put_u64(b, 16, v + 1);
+        })),
+        ("eps", Box::new(|b: &mut Vec<u8>| b[64] ^= 0x01)),
+        ("seed", Box::new(|b: &mut Vec<u8>| {
+            let v = get_u64(b, 72);
+            put_u64(b, 72, v ^ 1);
+        })),
+        ("n_matrices", Box::new(|b: &mut Vec<u8>| {
+            let v = get_u64(b, 80);
+            put_u64(b, 80, v + 1);
+        })),
+        // Absurd matrix count: the record-table size computation must
+        // overflow-check, not allocate or wrap.
+        ("n_matrices_huge", Box::new(|b: &mut Vec<u8>| {
+            put_u64(b, 80, u64::MAX / 2);
+        })),
+    ];
+    for (name, patch) in cases {
+        let r = load_patched(name, &bytes, &artifacts, patch);
+        assert!(r.is_err(), "header corruption '{name}' must be rejected");
+        let msg = format!("{:?}", r.err().unwrap());
+        assert!(!msg.is_empty(), "'{name}' must carry an error chain");
+    }
+}
+
+#[test]
+fn record_corruptions_are_rejected() {
+    let (bytes, artifacts) = valid_artifact();
+    let r0 = TPK_HEADER_BYTES; // first matrix record
+    let cases: Vec<(&str, Box<dyn FnOnce(&mut Vec<u8>)>)> = vec![
+        // Name: wrong identity, and not-UTF-8 bytes.
+        ("name", Box::new(move |b: &mut Vec<u8>| b[r0] = b'z')),
+        ("name_utf8", Box::new(move |b: &mut Vec<u8>| {
+            b[r0] = 0xFF;
+            b[r0 + 1] = 0xFE;
+        })),
+        // Shape fields disagreeing with the manifest / each other.
+        ("k", Box::new(move |b: &mut Vec<u8>| {
+            let v = get_u64(b, r0 + 32);
+            put_u64(b, r0 + 32, v + 1);
+        })),
+        ("n", Box::new(move |b: &mut Vec<u8>| {
+            let v = get_u64(b, r0 + 40);
+            put_u64(b, r0 + 40, v + 1);
+        })),
+        ("words_per_col", Box::new(move |b: &mut Vec<u8>| {
+            let v = get_u64(b, r0 + 48);
+            put_u64(b, r0 + 48, v + 1);
+        })),
+        ("word_count", Box::new(move |b: &mut Vec<u8>| {
+            let v = get_u64(b, r0 + 80);
+            put_u64(b, r0 + 80, v + 1);
+        })),
+        // Scale: NaN bits, and valid-but-different bits.
+        ("scale_nan", Box::new(move |b: &mut Vec<u8>| {
+            b[r0 + 56..r0 + 60].copy_from_slice(&f32::NAN.to_bits().to_le_bytes());
+        })),
+        ("scale_value", Box::new(move |b: &mut Vec<u8>| {
+            b[r0 + 56..r0 + 60].copy_from_slice(&0.123f32.to_bits().to_le_bytes());
+        })),
+        // Section placement: misaligned, inside the record table,
+        // overlapping another section, and past EOF.
+        ("misaligned", Box::new(move |b: &mut Vec<u8>| {
+            let v = get_u64(b, r0 + 64);
+            put_u64(b, r0 + 64, v + 8);
+        })),
+        ("into_records", Box::new(move |b: &mut Vec<u8>| {
+            put_u64(b, r0 + 64, 0);
+        })),
+        ("overlap", Box::new(move |b: &mut Vec<u8>| {
+            let plus = get_u64(b, r0 + 64);
+            put_u64(b, r0 + 72, plus); // minus aliases plus
+        })),
+        ("past_eof", Box::new(move |b: &mut Vec<u8>| {
+            put_u64(b, r0 + 64, (1u64 << 40) & !((TPK_ALIGN as u64) - 1));
+        })),
+        ("offset_overflow", Box::new(move |b: &mut Vec<u8>| {
+            put_u64(b, r0 + 64, u64::MAX - (TPK_ALIGN as u64) + 1);
+        })),
+    ];
+    for (name, patch) in cases {
+        let r = load_patched(name, &bytes, &artifacts, patch);
+        assert!(r.is_err(), "record corruption '{name}' must be rejected");
+    }
+}
+
+#[test]
+fn wrong_model_and_missing_file_are_errors() {
+    let (bytes, _) = valid_artifact();
+    // Same geometry, different seed: weights/scales differ, so the
+    // seed binding must refuse the pairing.
+    let other = Artifacts::synthetic(8).unwrap();
+    let r = load_patched("wrongseed", &bytes, &other, |_| {});
+    assert!(r.is_err(), "a .tpk from another model instance must not load");
+    // A missing path is an error chain, not a panic.
+    let missing = tmp("does-not-exist");
+    assert!(load_tpk(&missing, &other).is_err());
+}

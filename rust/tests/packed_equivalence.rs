@@ -195,6 +195,39 @@ fn batched_serving_is_identical_across_backends() {
 }
 
 #[test]
+fn artifact_loaded_weights_match_reference_exactly() {
+    // The third weight path: reference (dense f32) vs packed lowered in
+    // memory vs packed loaded from a .tpk artifact (mmap'd planes).
+    // All three must generate bit-identically — the artifact round trip
+    // is a representation change squared, never a numerics change.
+    for seed in [3u64, 23] {
+        let artifacts = Artifacts::synthetic(seed).unwrap();
+        let lowered = pim_llm::quant::PackedModel::lower(&artifacts).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "pimllm-equiv-{}-{seed}.tpk",
+            std::process::id()
+        ));
+        pim_llm::quant::write_tpk(&path, &lowered, &artifacts.manifest).unwrap();
+
+        let (reference, packed) = engine_pair(Artifacts::synthetic(seed).unwrap());
+        let from_tpk =
+            Engine::load_packed_artifact(Artifacts::synthetic(seed).unwrap(), &path, 0, 0)
+                .expect("engine from .tpk");
+        std::fs::remove_file(&path).ok(); // mmap survives the unlink on unix
+
+        let mut tr = TinyDecoder::new(&reference).unwrap();
+        tr.generate(&[2, 7, 1], 10).unwrap();
+        let mut tp = TinyDecoder::new(&packed).unwrap();
+        tp.generate(&[2, 7, 1], 10).unwrap();
+        let mut ta = TinyDecoder::new(&from_tpk).unwrap();
+        ta.generate(&[2, 7, 1], 10).unwrap();
+        assert_eq!(tr.tokens, tp.tokens, "seed {seed}: lowered tokens");
+        assert_eq!(tr.tokens, ta.tokens, "seed {seed}: artifact tokens");
+        assert_eq!(tr.last_logits, ta.last_logits, "seed {seed}: artifact logits");
+    }
+}
+
+#[test]
 fn pack_unpack_round_trips_adversarial_shapes() {
     // The quant-level contract, exercised from outside the crate: k not
     // a multiple of 64, n=1, k=1, word-boundary straddles.
