@@ -39,6 +39,7 @@ cargo test -q --offline --test kvcache_properties
 cargo test -q --offline --test prefix_equivalence
 cargo test -q --offline --test shard_determinism
 cargo test -q --offline --test artifact_roundtrip
+cargo test -q --offline --test obs_trace
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -85,14 +86,33 @@ cargo run -q --release --offline --bin repro -- serve --backend packed \
   --policy sharded --workers 4 --requests 12 --prompt-len 4 \
   --new-tokens 12 --max-active 3 --arena-blocks 24
 
+echo "== smoke: observability on the sharded serving path =="
+# Tracing + metrics + per-tick validation end to end on BOTH host
+# backends: the emitted Chrome trace must round-trip through the
+# in-crate JSON parser (`repro trace-check`), which asserts a nonzero
+# event count and per-track monotonic timestamps — the Perfetto-schema
+# contract, enforced in CI on a real serve, not just unit fixtures.
+OBS_TMP="$(mktemp -d)"
+# One EXIT trap covers both temp dirs (a second trap would replace
+# this one, leaking the first directory).
+trap 'rm -rf "$OBS_TMP" "${TPK_TMP:-$OBS_TMP}"' EXIT
+for be in reference packed; do
+  cargo run -q --release --offline --bin repro -- serve --backend "$be" \
+    --policy sharded --workers 4 --requests 12 --prompt-len 4 \
+    --new-tokens 12 --max-active 3 --arena-blocks 24 \
+    --trace "$OBS_TMP/trace_$be.json" --metrics --validate-every 4
+  test -s "$OBS_TMP/trace_$be.json"
+  cargo run -q --release --offline --bin repro -- trace-check \
+    --trace "$OBS_TMP/trace_$be.json"
+done
+
 echo "== smoke: .tpk packed-artifact round trip =="
 # `repro pack` writes the versioned packed artifact; validate must then
 # reproduce the golden generation bit-exactly from the mmap'd planes
 # (no per-matrix re-pack), with the plain packed backend alongside as
 # the reference point; finally sharded serving starts all its workers
 # from the ONE loaded artifact.
-TPK_TMP="$(mktemp -d)"
-trap 'rm -rf "$TPK_TMP"' EXIT
+TPK_TMP="$(mktemp -d)"  # cleaned by the shared EXIT trap above
 cargo run -q --release --offline --bin repro -- pack --out "$TPK_TMP/model.tpk"
 test -s "$TPK_TMP/model.tpk"
 cargo run -q --release --offline --bin repro -- validate --backend packed \

@@ -34,14 +34,22 @@
 //! re-decoded, with bit-identical tokens (asserted below against the
 //! cache-off run).
 //!
+//! Observability: `--trace <path>` records every tick, admission,
+//! preemption, steal, prefix hit and kernel span into per-shard ring
+//! buffers and writes a Chrome trace-event JSON (open it in Perfetto);
+//! `--metrics` prints the counter/gauge/histogram snapshot. Both are
+//! inert — the token assertions below run identically with them on.
+//!
 //! Run: `cargo run --release --example edge_serving -- \
 //!        --requests 32 --prompt-len 8 --new-tokens 16 --batch 8 \
 //!        [--policy continuous --arena-blocks 24] \
-//!        [--prefix-cache] [--backend reference|packed]`
+//!        [--prefix-cache] [--backend reference|packed] \
+//!        [--trace /tmp/edge.json] [--metrics]`
 
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{token_loop, Arch};
 use pim_llm::models;
+use pim_llm::obs::export::write_chrome_trace;
 use pim_llm::runtime::{BackendKind, Engine, ShardedEngine};
 use pim_llm::serving::{
     serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server,
@@ -100,6 +108,11 @@ fn main() -> Result<()> {
         block_len,
         arena_blocks,
     )?;
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let metrics = args.flag("metrics");
+    if trace_path.is_some() || metrics {
+        engine.obs().set_enabled(true);
+    }
     if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
         println!(
             "note: backend {} cannot share arena blocks — prefix cache off",
@@ -152,6 +165,21 @@ fn main() -> Result<()> {
     if let Some(ps) = engine.prefix_stats() {
         println!("  {}", ps.report());
     }
+    if let Some(path) = &trace_path {
+        let tracks = vec![(engine.obs().shard(), engine.obs().trace.drain())];
+        write_chrome_trace(path, &tracks)?;
+        println!(
+            "  trace            : {} events -> {}",
+            tracks[0].1.len(),
+            path.display()
+        );
+    }
+    if metrics {
+        print!("{}", engine.metrics_snapshot().render());
+    }
+    // The comparison runs below are about tokens, not telemetry — stop
+    // recording so their events cannot blur the written trace's story.
+    engine.obs().set_enabled(false);
 
     // All responses complete and deterministic per prompt.
     assert!(responses
@@ -268,6 +296,11 @@ fn sharded_scaling(
 ) -> Result<()> {
     let kind = BackendKind::resolve(args.backend())?;
     let mut engine = ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?;
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let metrics = args.flag("metrics");
+    if trace_path.is_some() || metrics {
+        engine.set_obs_enabled(true);
+    }
     if prefix_cache {
         engine.enable_prefix_cache(prefix_cap);
     }
@@ -304,6 +337,19 @@ fn sharded_scaling(
     }
     if let Some(ps) = engine.prefix_stats() {
         println!("  {}", ps.report());
+    }
+    if let Some(path) = &trace_path {
+        let tracks = engine.drain_traces();
+        let events: usize = tracks.iter().map(|(_, evs)| evs.len()).sum();
+        write_chrome_trace(path, &tracks)?;
+        println!(
+            "  trace            : {events} events across {} tracks -> {}",
+            tracks.len(),
+            path.display()
+        );
+    }
+    if metrics {
+        print!("{}", engine.metrics_snapshot().render());
     }
     engine.debug_validate()?;
 

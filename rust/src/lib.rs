@@ -37,6 +37,10 @@
 //!   round-robin, fixed-wave batched, continuous batching with
 //!   arena-pressure admission and preemption) for the edge-serving
 //!   example.
+//! * [`obs`]        — zero-dependency tracing + metrics: per-shard
+//!   event ring buffers, counters/gauges/histograms, Chrome
+//!   trace-event (Perfetto) and plain-text exporters. Provably inert:
+//!   token streams are byte-identical with tracing on or off.
 //!
 //! Python/JAX/Pallas exists only at build time (`make artifacts`); the
 //! binary is self-contained afterwards.
@@ -48,6 +52,7 @@ pub mod energy;
 pub mod memory;
 pub mod models;
 pub mod nonlinear;
+pub mod obs;
 pub mod pim;
 pub mod quant;
 pub mod runtime;

@@ -15,16 +15,22 @@
 //!   `serve`/`validate --artifact` mmap back with no re-packing.
 //! * `generate`  — latency/energy of a full autoregressive generation on
 //!   the simulated hardware.
+//! * `trace-check` — parse a Chrome trace written by `serve --trace`
+//!   with the in-crate JSON parser and verify its schema (what ci.sh
+//!   runs against every smoke trace).
 
 use pim_llm::analysis::{figures, report};
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, token_loop, Arch};
 use pim_llm::models;
+use pim_llm::obs::export::{check_trace_doc, write_chrome_trace};
 use pim_llm::quant::{write_tpk, PackedModel};
 use pim_llm::runtime::{decoder, default_artifacts, BackendKind, Engine, ShardedEngine};
-use pim_llm::serving::{serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server};
+use pim_llm::serving::{
+    serve_sharded_stats_opts, shard_report, LatencyStats, Policy, Request, Server,
+};
 use pim_llm::util::cli::Args;
-use pim_llm::util::error::{anyhow, Result};
+use pim_llm::util::error::{anyhow, Context, Result};
 use std::time::Instant;
 
 const USAGE: &str = "\
@@ -62,9 +68,21 @@ SUBCOMMANDS
               length (the index caches whole blocks only), so hits
               actually occur)
              [--artifact <file.tpk>] (packed backend only)
+             [--trace <path>] [--metrics] [--validate-every N]
+             (--trace records every scheduler tick, admission,
+              preemption, steal, prefix hit, COW copy, eviction and
+              kernel span into per-shard ring buffers and writes a
+              Chrome trace-event JSON — load it in Perfetto or
+              chrome://tracing, one track per shard worker.
+              --metrics prints the counter/gauge/histogram snapshot,
+              merged across shards in worker-id order. Both are inert:
+              token streams are byte-identical with them on or off.
+              --validate-every N runs the arena's full invariant check
+              every N ticks and fails the serve on the first violation)
   validate   [--backend reference|packed|pjrt] [--artifact <file.tpk>]
   pack       [--out <file.tpk>] (default packed.tpk)
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
+  trace-check --trace <path>   (validate a serve --trace output file)
 
 --backend selects the runtime executor (default: the PIM_LLM_BACKEND
 env var, else the pure-Rust reference executor; `packed` runs the same
@@ -136,6 +154,7 @@ fn main() -> Result<()> {
         Some("validate") => cmd_validate(&args),
         Some("pack") => cmd_pack(&args),
         Some("generate") => cmd_generate(&args, &arch_cfg),
+        Some("trace-check") => cmd_trace_check(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -273,6 +292,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let kind = BackendKind::resolve(args.backend())?;
     let artifact = artifact_path(args, kind)?;
+    // Observability knobs: both are provably inert (byte-identical
+    // token streams with them on or off — the determinism suites pin
+    // it), so flipping them on for a production-shaped run is safe.
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let metrics = args.flag("metrics");
+    let validate_every = args.usize_or("validate-every", 0)?;
+    let obs_on = trace_path.is_some() || metrics;
 
     // Sharded serving partitions ONE arena across worker-owned shards
     // and runs its own multi-threaded front end; everything else drives
@@ -309,9 +335,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine.workers(),
             engine.prefix_enabled()
         );
+        if obs_on {
+            engine.set_obs_enabled(true);
+        }
         let offsets = vec![0.0; reqs.len()];
         let t0 = Instant::now();
-        let (out, shards) = serve_sharded_stats(&mut engine, reqs, &offsets, max_active)?;
+        let (out, shards) =
+            serve_sharded_stats_opts(&mut engine, reqs, &offsets, max_active, validate_every)?;
         let wall = t0.elapsed().as_secs_f64();
         let stats = LatencyStats::from_responses(&out, wall);
         println!(
@@ -328,6 +358,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ps.report(),
                 engine.prefix_entries()
             );
+        }
+        if let Some(path) = &trace_path {
+            let tracks = engine.drain_traces();
+            let events: usize = tracks.iter().map(|(_, evs)| evs.len()).sum();
+            write_chrome_trace(path, &tracks)?;
+            println!(
+                "trace: {events} events across {} tracks -> {} (Perfetto-loadable)",
+                tracks.len(),
+                path.display()
+            );
+        }
+        if metrics {
+            print!("{}", engine.metrics_snapshot().render());
         }
         return Ok(());
     }
@@ -355,8 +398,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         arena.block_len,
         engine.prefix_enabled()
     );
+    if obs_on {
+        engine.obs().set_enabled(true);
+    }
     let t0 = Instant::now();
-    let server = Server::new(&engine, policy);
+    let server = Server::new(&engine, policy).with_validate_every(validate_every);
     let out = server.serve(reqs)?;
     let wall = t0.elapsed().as_secs_f64();
     let stats = LatencyStats::from_responses(&out, wall);
@@ -372,6 +418,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine.prefix_entries()
         );
     }
+    if let Some(path) = &trace_path {
+        let tracks = vec![(engine.obs().shard(), engine.obs().trace.drain())];
+        let events = tracks[0].1.len();
+        write_chrome_trace(path, &tracks)?;
+        println!(
+            "trace: {events} events across 1 track -> {} (Perfetto-loadable)",
+            path.display()
+        );
+    }
+    if metrics {
+        print!("{}", engine.metrics_snapshot().render());
+    }
+    Ok(())
+}
+
+/// `repro trace-check --trace <path>`: parse a `serve --trace` output
+/// with the in-crate JSON parser and verify the trace-event schema
+/// (nonempty, per-track monotonic timestamps) — the CI round trip.
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow!("trace-check needs --trace <path>\n\n{USAGE}"))?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {path}"))?;
+    let doc = pim_llm::util::json::parse(&text)
+        .with_context(|| format!("parsing trace file {path}"))?;
+    let (events, tracks) =
+        check_trace_doc(&doc).with_context(|| format!("validating trace file {path}"))?;
+    println!("trace OK: {events} events, {tracks} tracks, monotonic per track");
     Ok(())
 }
 

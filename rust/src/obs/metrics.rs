@@ -1,0 +1,346 @@
+//! The metrics registry: named monotonic counters, last-value gauges,
+//! and fixed-bucket histograms over relaxed atomics.
+//!
+//! Everything is enum-indexed into flat atomic arrays — no string
+//! hashing, no allocation, no locks on the record path. A snapshot
+//! ([`MetricsRegistry::snapshot`]) copies the atomics into plain
+//! integers; per-shard snapshots merge with [`MetricsSnapshot::absorb`]
+//! in ascending worker-id order (the `PrefixStats::absorb` pattern), so
+//! the merged rendering is byte-diffable run-to-run wherever the
+//! underlying schedule is deterministic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters. `ALL` fixes the registry layout AND the render
+/// order — append new variants at the end to keep snapshots diffable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Serving ticks executed.
+    TicksRun,
+    /// Tokens fed through decode (one per active session per tick).
+    TokensDecoded,
+    /// Request admissions (re-admissions after preemption included).
+    Admitted,
+    /// Requests retired complete.
+    Retired,
+    /// Sessions preempted under arena pressure.
+    Preemptions,
+    /// Requests stolen from a sibling shard's queue.
+    Steals,
+    /// Prefix-cache adoptions (≥1 position skipped).
+    PrefixHits,
+    /// Prefix lookups that adopted nothing.
+    PrefixMisses,
+    /// Copy-on-write block copies (adoption tail copies).
+    CowCopies,
+    /// Prefix index entries evicted under pressure.
+    PrefixEvictions,
+    /// Arena blocks freed by prefix reclaim.
+    BlocksReclaimed,
+    /// `debug_validate` passes run by `--validate-every`.
+    ValidationsRun,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 12] = [
+        Counter::TicksRun,
+        Counter::TokensDecoded,
+        Counter::Admitted,
+        Counter::Retired,
+        Counter::Preemptions,
+        Counter::Steals,
+        Counter::PrefixHits,
+        Counter::PrefixMisses,
+        Counter::CowCopies,
+        Counter::PrefixEvictions,
+        Counter::BlocksReclaimed,
+        Counter::ValidationsRun,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::TicksRun => "ticks_run",
+            Counter::TokensDecoded => "tokens_decoded",
+            Counter::Admitted => "admitted",
+            Counter::Retired => "retired",
+            Counter::Preemptions => "preemptions",
+            Counter::Steals => "steals",
+            Counter::PrefixHits => "prefix_hits",
+            Counter::PrefixMisses => "prefix_misses",
+            Counter::CowCopies => "cow_copies",
+            Counter::PrefixEvictions => "prefix_evictions",
+            Counter::BlocksReclaimed => "blocks_reclaimed",
+            Counter::ValidationsRun => "validations_run",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Last-value gauges, sampled once per tick. Merging sums across
+/// shards (each shard owns a disjoint arena partition and session set,
+/// so sums are the fleet totals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    ArenaBlocksFree,
+    ArenaBlocksUsed,
+    /// Live entries pinned in the prefix index.
+    PrefixEntries,
+    /// Sessions decoding this tick.
+    ActiveSessions,
+    /// Requests waiting in the visible ready queue.
+    QueueDepth,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 5] = [
+        Gauge::ArenaBlocksFree,
+        Gauge::ArenaBlocksUsed,
+        Gauge::PrefixEntries,
+        Gauge::ActiveSessions,
+        Gauge::QueueDepth,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::ArenaBlocksFree => "arena_blocks_free",
+            Gauge::ArenaBlocksUsed => "arena_blocks_used",
+            Gauge::PrefixEntries => "prefix_entries",
+            Gauge::ActiveSessions => "active_sessions",
+            Gauge::QueueDepth => "queue_depth",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Bucket count per histogram: [`HIST_BOUNDS`] upper bounds plus one
+/// overflow slot.
+pub const HIST_SLOTS: usize = 7;
+
+/// Inclusive upper bounds of the first six buckets, per histogram.
+const HIST_BOUNDS: [[u64; HIST_SLOTS - 1]; 2] = [
+    // TickMicros: 10us .. 1s, decades.
+    [10, 100, 1_000, 10_000, 100_000, 1_000_000],
+    // BatchSize: powers of two.
+    [1, 2, 4, 8, 16, 32],
+];
+
+/// Fixed-bucket histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Wall-clock tick duration, microseconds.
+    TickMicros,
+    /// Sessions decoded per tick.
+    BatchSize,
+}
+
+impl Hist {
+    pub const ALL: [Hist; 2] = [Hist::TickMicros, Hist::BatchSize];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::TickMicros => "tick_micros",
+            Hist::BatchSize => "batch_size",
+        }
+    }
+
+    /// The inclusive upper bounds of this histogram's buckets (the
+    /// last slot counts everything above `bounds()[last]`).
+    pub fn bounds(self) -> &'static [u64; HIST_SLOTS - 1] {
+        &HIST_BOUNDS[self as usize]
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// The live registry: one relaxed atomic per counter/gauge/bucket.
+pub struct MetricsRegistry {
+    counters: [AtomicU64; Counter::ALL.len()],
+    gauges: [AtomicU64; Gauge::ALL.len()],
+    hists: [[AtomicU64; HIST_SLOTS]; Hist::ALL.len()],
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        self.counters[c.idx()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set(&self, g: Gauge, v: u64) {
+        self.gauges[g.idx()].store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn observe(&self, h: Hist, v: u64) {
+        let bounds = h.bounds();
+        let slot = bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(HIST_SLOTS - 1);
+        self.hists[h.idx()][slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy every atomic into a plain, mergeable snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: std::array::from_fn(|i| self.counters[i].load(Ordering::Relaxed)),
+            gauges: std::array::from_fn(|i| self.gauges[i].load(Ordering::Relaxed)),
+            hists: std::array::from_fn(|i| {
+                std::array::from_fn(|j| self.hists[i][j].load(Ordering::Relaxed))
+            }),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`MetricsRegistry`]. Plain integers:
+/// mergeable, comparable, renderable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    counters: [u64; Counter::ALL.len()],
+    gauges: [u64; Gauge::ALL.len()],
+    hists: [[u64; HIST_SLOTS]; Hist::ALL.len()],
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.idx()]
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g.idx()]
+    }
+
+    pub fn hist(&self, h: Hist) -> &[u64; HIST_SLOTS] {
+        &self.hists[h.idx()]
+    }
+
+    /// Fold another shard's snapshot into this one (sums everywhere —
+    /// counters and histogram buckets are additive by definition;
+    /// gauges sum because shards partition the arena and the session
+    /// set). Call in ascending worker-id order; addition makes the
+    /// result order-independent, the convention makes it auditable.
+    pub fn absorb(&mut self, other: &MetricsSnapshot) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.gauges.iter_mut().zip(other.gauges.iter()) {
+            *a += b;
+        }
+        for (ha, hb) in self.hists.iter_mut().zip(other.hists.iter()) {
+            for (a, b) in ha.iter_mut().zip(hb.iter()) {
+                *a += b;
+            }
+        }
+    }
+
+    /// Plain-text rendering: one `name value` line per counter and
+    /// gauge, one line per histogram with `≤bound:count` cells. Field
+    /// order is fixed by the enum `ALL` arrays, so two runs of a
+    /// deterministic schedule diff cleanly.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# metrics snapshot\n");
+        for c in Counter::ALL {
+            out.push_str(&format!("counter {} {}\n", c.name(), self.counter(c)));
+        }
+        for g in Gauge::ALL {
+            out.push_str(&format!("gauge {} {}\n", g.name(), self.gauge(g)));
+        }
+        for h in Hist::ALL {
+            out.push_str(&format!("hist {}", h.name()));
+            let counts = self.hist(h);
+            for (i, &bound) in h.bounds().iter().enumerate() {
+                out.push_str(&format!(" le{bound}:{}", counts[i]));
+            }
+            out.push_str(&format!(" inf:{}\n", counts[HIST_SLOTS - 1]));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let m = MetricsRegistry::new();
+        m.add(Counter::TokensDecoded, 5);
+        m.add(Counter::TokensDecoded, 3);
+        m.set(Gauge::QueueDepth, 7);
+        m.set(Gauge::QueueDepth, 2);
+        let s = m.snapshot();
+        assert_eq!(s.counter(Counter::TokensDecoded), 8);
+        assert_eq!(s.gauge(Gauge::QueueDepth), 2);
+        assert_eq!(s.counter(Counter::Admitted), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_by_inclusive_upper_bound() {
+        let m = MetricsRegistry::new();
+        for v in [0, 1, 2, 3, 32, 33, 1_000_000] {
+            m.observe(Hist::BatchSize, v);
+        }
+        let s = m.snapshot();
+        // bounds [1,2,4,8,16,32]: 0,1→le1; 2→le2; 3→le4; 32→le32; 33,1M→inf
+        assert_eq!(s.hist(Hist::BatchSize), &[2, 1, 1, 0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn absorb_sums_everything_and_commutes() {
+        let m1 = MetricsRegistry::new();
+        m1.add(Counter::Admitted, 2);
+        m1.set(Gauge::ArenaBlocksFree, 4);
+        m1.observe(Hist::TickMicros, 50);
+        let m2 = MetricsRegistry::new();
+        m2.add(Counter::Admitted, 3);
+        m2.set(Gauge::ArenaBlocksFree, 6);
+        m2.observe(Hist::TickMicros, 5_000_000);
+
+        let (s1, s2) = (m1.snapshot(), m2.snapshot());
+        let mut ab = s1;
+        ab.absorb(&s2);
+        let mut ba = s2;
+        ba.absorb(&s1);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.counter(Counter::Admitted), 5);
+        assert_eq!(ab.gauge(Gauge::ArenaBlocksFree), 10);
+        assert_eq!(ab.hist(Hist::TickMicros)[1], 1); // 50 ≤ 100
+        assert_eq!(ab.hist(Hist::TickMicros)[HIST_SLOTS - 1], 1); // overflow
+    }
+
+    #[test]
+    fn render_has_one_line_per_metric_in_fixed_order() {
+        let s = MetricsRegistry::new().snapshot();
+        let text = s.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines.len(),
+            1 + Counter::ALL.len() + Gauge::ALL.len() + Hist::ALL.len()
+        );
+        assert_eq!(lines[1], "counter ticks_run 0");
+        assert!(lines.last().unwrap().starts_with("hist batch_size"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Zero-dependency observability: tracing + metrics for the serving
+//! stack, the runtime engine, and the kernel layer.
+//!
+//! The serving loop used to be a black box between request submission
+//! and the final `LatencyStats` line: nothing recorded when a tick
+//! admitted, preempted, stole, hit the prefix cache, or how long each
+//! kernel family ran. This module makes every one of those moments a
+//! fixed-size [`Event`] in a preallocated per-shard ring buffer
+//! ([`TraceSink`]) and a monotonic counter/gauge/histogram in a
+//! [`MetricsRegistry`], with exporters ([`export`]) that turn the ring
+//! into Chrome trace-event JSON (loadable in Perfetto) and the registry
+//! into a plain-text snapshot.
+//!
+//! Design invariants, in priority order:
+//!
+//! 1. **Inert.** Instrumentation NEVER changes a token. Nothing here
+//!    feeds back into scheduling or numerics; the determinism suites
+//!    run the same workload with tracing on and off and require
+//!    byte-identical streams.
+//! 2. **Zero-allocation on the hot path.** [`TraceSink::record`]
+//!    writes into a buffer preallocated at enable time; counters and
+//!    gauges are plain relaxed atomics. The counting-allocator tests
+//!    (see `trace.rs` and `runtime/packed.rs`) pin that a warm
+//!    single-vector packed decode performs zero heap allocations with
+//!    tracing ON. Draining ([`TraceSink::drain`]) allocates, and is
+//!    only ever called outside the serving loop.
+//! 3. **Near-zero cost when off.** Every recording entry point checks
+//!    one relaxed [`AtomicBool`](std::sync::atomic::AtomicBool) first;
+//!    a disabled [`Obs`] does no clock reads, takes no locks, and its
+//!    default ring buffer is not even allocated until first enabled.
+//! 4. **Deterministic reporting.** Per-shard metrics merge in
+//!    ascending worker-id order via [`MetricsSnapshot::absorb`] (the
+//!    `PrefixStats::absorb` pattern), so the merged snapshot — like
+//!    the token streams — is diffable run-to-run.
+//!
+//! One [`Obs`] instance exists per engine/shard (`Engine::obs()`,
+//! `ShardedEngine::obs()`), shared with that shard's backend through
+//! `Backend::install_obs` so kernel spans land in the same ring, in
+//! the same monotonic timeline, as the serving events around them.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Hist, MetricsRegistry, MetricsSnapshot};
+pub use trace::{Event, EventKind, SpanKind, TraceSink, DEFAULT_TRACE_CAPACITY};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Per-shard observability bundle: one trace ring + one metrics
+/// registry behind a single enable gate. Construction is cheap (the
+/// ring allocates lazily on first enable), so every engine owns one
+/// unconditionally and the disabled cost is a relaxed load per call.
+pub struct Obs {
+    shard: usize,
+    enabled: AtomicBool,
+    /// Event ring buffer; drain outside the hot path.
+    pub trace: TraceSink,
+    /// Counters / gauges / fixed-bucket histograms.
+    pub metrics: MetricsRegistry,
+}
+
+impl Obs {
+    /// A disabled bundle for shard `shard` with the default ring
+    /// capacity ([`DEFAULT_TRACE_CAPACITY`] events, allocated lazily).
+    pub fn new(shard: usize) -> Self {
+        Self::with_capacity(shard, DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// A disabled bundle with an explicit ring capacity (events).
+    pub fn with_capacity(shard: usize, capacity: usize) -> Self {
+        Self {
+            shard,
+            enabled: AtomicBool::new(false),
+            trace: TraceSink::with_capacity(capacity),
+            metrics: MetricsRegistry::new(),
+        }
+    }
+
+    /// The worker id whose timeline this bundle records (trace track).
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Flip collection on or off. Enabling allocates the ring buffer
+    /// if this is the first enable; NEVER call on a decode hot path.
+    pub fn set_enabled(&self, on: bool) {
+        if on {
+            self.trace.ensure_allocated();
+        }
+        self.trace.set_enabled(on);
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    /// Whether collection is on (one relaxed load — the gate every
+    /// instrumentation site checks first).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record a scheduling event (and bump its matching counter, so
+    /// call sites stay single-line). `a`/`b` payloads are event
+    /// specific — see [`EventKind`].
+    #[inline]
+    pub fn event(&self, kind: EventKind, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.trace.record(kind, SpanKind::None, a, b);
+        if let Some(c) = kind.counter() {
+            self.metrics.add(c, 1);
+        }
+    }
+
+    /// Open a span of kind `span` (phase or kernel family); `a` is the
+    /// request id for phases, the layer index for kernels.
+    #[inline]
+    pub fn span_begin(&self, span: SpanKind, a: u64) {
+        if self.enabled() {
+            self.trace.record(EventKind::SpanBegin, span, a, 0);
+        }
+    }
+
+    /// Close the innermost open span of kind `span` (same `a` payload
+    /// as the matching [`Obs::span_begin`]).
+    #[inline]
+    pub fn span_end(&self, span: SpanKind, a: u64) {
+        if self.enabled() {
+            self.trace.record(EventKind::SpanEnd, span, a, 0);
+        }
+    }
+
+    /// Add `n` to a monotonic counter.
+    #[inline]
+    pub fn count(&self, c: Counter, n: u64) {
+        if self.enabled() {
+            self.metrics.add(c, n);
+        }
+    }
+
+    /// Set a gauge to its current value.
+    #[inline]
+    pub fn gauge(&self, g: Gauge, v: u64) {
+        if self.enabled() {
+            self.metrics.set(g, v);
+        }
+    }
+
+    /// Record one observation into a fixed-bucket histogram.
+    #[inline]
+    pub fn observe(&self, h: Hist, v: u64) {
+        if self.enabled() {
+            self.metrics.observe(h, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_is_send_and_sync() {
+        fn assert_bounds<T: Send + Sync>() {}
+        assert_bounds::<Obs>();
+    }
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let o = Obs::new(0);
+        o.event(EventKind::Admit, 1, 1);
+        o.span_begin(SpanKind::Decode, 1);
+        o.count(Counter::TokensDecoded, 5);
+        o.gauge(Gauge::QueueDepth, 3);
+        o.observe(Hist::BatchSize, 4);
+        assert!(o.trace.drain().is_empty());
+        assert_eq!(o.trace.dropped(), 0);
+        let s = o.metrics.snapshot();
+        assert_eq!(s.counter(Counter::Admitted), 0);
+        assert_eq!(s.counter(Counter::TokensDecoded), 0);
+        assert_eq!(s.gauge(Gauge::QueueDepth), 0);
+    }
+
+    #[test]
+    fn events_bump_their_matching_counters() {
+        let o = Obs::new(0);
+        o.set_enabled(true);
+        o.event(EventKind::Admit, 7, 1);
+        o.event(EventKind::Preempt, 7, 0);
+        o.event(EventKind::Admit, 7, 0);
+        o.event(EventKind::Retire, 7, 0);
+        o.event(EventKind::PrefixHit, 8, 0);
+        o.event(EventKind::TickStart, 1, 0);
+        let s = o.metrics.snapshot();
+        assert_eq!(s.counter(Counter::Admitted), 2);
+        assert_eq!(s.counter(Counter::Preemptions), 1);
+        assert_eq!(s.counter(Counter::Retired), 1);
+        assert_eq!(s.counter(Counter::PrefixHits), 1);
+        assert_eq!(s.counter(Counter::TicksRun), 1);
+        assert_eq!(o.trace.drain().len(), 6);
+    }
+}

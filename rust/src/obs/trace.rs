@@ -1,0 +1,430 @@
+//! The trace ring buffer: fixed-size [`Event`] records with monotonic
+//! timestamps, preallocated storage, wraparound-overwrite semantics and
+//! a drop counter.
+//!
+//! Sizing: one [`Event`] is 40 bytes; the default ring holds
+//! [`DEFAULT_TRACE_CAPACITY`] = 16384 events (~640 KiB per shard),
+//! allocated lazily on first enable so the thousands of engines built
+//! by the test suites pay nothing. A tiny model records ~30 kernel-span
+//! events per tick plus a handful of scheduling events, so the default
+//! ring covers thousands of ticks between drains; longer runs wrap,
+//! keeping the NEWEST events and counting the overwritten ones in
+//! [`TraceSink::dropped`].
+//!
+//! The record path is allocation-free by construction — one relaxed
+//! atomic load (the enable gate), one monotonic clock read, one
+//! uncontended mutex lock, one slot write — which is what lets the
+//! serving loop and the kernel layer trace the warm single-vector
+//! decode path without breaking its zero-allocation invariant (pinned
+//! by the counting-allocator test below).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity in events (per shard).
+pub const DEFAULT_TRACE_CAPACITY: usize = 16384;
+
+/// What happened. Payload conventions (`Event::a`, `Event::b`):
+///
+/// | kind                  | `a`                      | `b`                    |
+/// |-----------------------|--------------------------|------------------------|
+/// | `TickStart`           | active sessions          | —                      |
+/// | `TickEnd`             | tokens decoded this tick | —                      |
+/// | `Admit`               | request id               | 1 = first admission    |
+/// | `Retire`              | request id               | tokens generated       |
+/// | `Preempt`             | request id               | position reached       |
+/// | `Steal`               | request id               | victim shard           |
+/// | `PrefixHit`           | request id               | positions adopted      |
+/// | `PrefixMiss`          | request id               | —                      |
+/// | `Cow`                 | block copies this tick   | —                      |
+/// | `Eviction`            | prefix entries evicted   | —                      |
+/// | `Reclaim`             | blocks freed             | blocks wanted          |
+/// | `SpanBegin`/`SpanEnd` | see [`SpanKind`]         | —                      |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    TickStart,
+    TickEnd,
+    Admit,
+    Retire,
+    Preempt,
+    Steal,
+    PrefixHit,
+    PrefixMiss,
+    Cow,
+    Eviction,
+    Reclaim,
+    SpanBegin,
+    SpanEnd,
+}
+
+impl EventKind {
+    /// Stable lowercase name (trace export + text rendering).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::TickStart => "tick_start",
+            EventKind::TickEnd => "tick_end",
+            EventKind::Admit => "admit",
+            EventKind::Retire => "retire",
+            EventKind::Preempt => "preempt",
+            EventKind::Steal => "steal",
+            EventKind::PrefixHit => "prefix_hit",
+            EventKind::PrefixMiss => "prefix_miss",
+            EventKind::Cow => "cow",
+            EventKind::Eviction => "eviction",
+            EventKind::Reclaim => "reclaim",
+            EventKind::SpanBegin => "span_begin",
+            EventKind::SpanEnd => "span_end",
+        }
+    }
+
+    /// The counter this event kind bumps on record (see
+    /// [`crate::obs::Obs::event`]), if any.
+    pub fn counter(self) -> Option<super::metrics::Counter> {
+        use super::metrics::Counter;
+        match self {
+            EventKind::TickStart => Some(Counter::TicksRun),
+            EventKind::Admit => Some(Counter::Admitted),
+            EventKind::Retire => Some(Counter::Retired),
+            EventKind::Preempt => Some(Counter::Preemptions),
+            EventKind::Steal => Some(Counter::Steals),
+            EventKind::PrefixHit => Some(Counter::PrefixHits),
+            EventKind::PrefixMiss => Some(Counter::PrefixMisses),
+            // `Cow` carries a per-tick DELTA in `a`, not one-event-per-copy;
+            // the serving tick bumps `Counter::CowCopies` by that delta
+            // itself, so auto-counting here would double-count.
+            _ => None,
+        }
+    }
+}
+
+/// Which span a `SpanBegin`/`SpanEnd` event opens or closes: the two
+/// request phases (`a` = request id) and the seven projection kernel
+/// families + paged attention (`a` = layer index; `Head` uses the layer
+/// count). `None` marks non-span events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    None,
+    /// Request phase: admission until the prompt is fully fed/adopted.
+    Prefill,
+    /// Request phase: first generated token until retirement.
+    Decode,
+    /// Q projection (`wq`).
+    KernelQ,
+    /// K projection (`wk`).
+    KernelK,
+    /// V projection (`wv`).
+    KernelV,
+    /// Attention-output projection (`wx`).
+    KernelO,
+    /// FFN up projection (`w_in`).
+    KernelFf1,
+    /// FFN down projection (`w_out`).
+    KernelFf2,
+    /// LM head (`w_head`).
+    KernelHead,
+    /// Paged attention over the arena block tables.
+    Attention,
+}
+
+impl SpanKind {
+    /// Stable lowercase name (trace export).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::None => "none",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::KernelQ => "wq",
+            SpanKind::KernelK => "wk",
+            SpanKind::KernelV => "wv",
+            SpanKind::KernelO => "wx",
+            SpanKind::KernelFf1 => "w_in",
+            SpanKind::KernelFf2 => "w_out",
+            SpanKind::KernelHead => "w_head",
+            SpanKind::Attention => "attention",
+        }
+    }
+
+    /// Whether this span is a request phase (async-span export) rather
+    /// than a thread-scoped kernel span.
+    pub fn is_phase(self) -> bool {
+        matches!(self, SpanKind::Prefill | SpanKind::Decode)
+    }
+}
+
+/// One fixed-size trace record. 40 bytes, `Copy`, no heap parts — the
+/// ring is a flat `Vec<Event>` and recording is a slot write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Nanoseconds since the sink's epoch (monotonic clock).
+    pub t_ns: u64,
+    pub kind: EventKind,
+    /// Span kind for `SpanBegin`/`SpanEnd`; [`SpanKind::None`] otherwise.
+    pub span: SpanKind,
+    /// Primary payload (see the [`EventKind`] table).
+    pub a: u64,
+    /// Secondary payload.
+    pub b: u64,
+}
+
+/// Preallocated ring storage. `buf` grows by `push` only up to
+/// `capacity` (reserved exactly once, at enable), after which `head`
+/// walks the slots and every overwrite counts one dropped event.
+struct Ring {
+    buf: Vec<Event>,
+    capacity: usize,
+    /// Index of the OLDEST event once the ring has wrapped.
+    head: usize,
+}
+
+impl Ring {
+    fn record(&mut self, ev: Event) -> bool {
+        if self.buf.len() < self.capacity {
+            // Within the reservation made at enable time: no realloc.
+            self.buf.push(ev);
+            false
+        } else if self.capacity > 0 {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            true
+        } else {
+            true
+        }
+    }
+
+    /// Copy out chronologically and reset to empty (capacity kept).
+    fn drain(&mut self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
+}
+
+/// The per-shard trace sink: an enable gate, a monotonic epoch, and a
+/// mutex-guarded [`Ring`]. The mutex makes drain-while-recording from
+/// another thread safe; within a shard the lock is uncontended (one
+/// worker thread records, nobody drains until the run ends).
+pub struct TraceSink {
+    enabled: AtomicBool,
+    epoch: Instant,
+    dropped: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl TraceSink {
+    /// A disabled sink whose ring will hold `capacity` events once
+    /// enabled (storage is reserved on first enable, not here).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(Ring {
+                buf: Vec::new(),
+                capacity,
+                head: 0,
+            }),
+        }
+    }
+
+    /// Reserve the ring storage up front (idempotent; called by
+    /// [`TraceSink::set_enabled`] via `Obs::set_enabled`) so the first
+    /// recorded event never allocates.
+    pub fn ensure_allocated(&self) {
+        let mut ring = self.ring.lock().unwrap();
+        let want = ring.capacity;
+        if ring.buf.capacity() < want {
+            ring.buf.reserve_exact(want - ring.buf.len());
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        if on {
+            self.ensure_allocated();
+        }
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().capacity
+    }
+
+    /// Events overwritten (ring full) or rejected (capacity 0) so far.
+    /// Cumulative — drains do not reset it.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. Allocation-free: gate load, clock read, slot
+    /// write under an uncontended lock. No-op while disabled.
+    #[inline]
+    pub fn record(&self, kind: EventKind, span: SpanKind, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let t_ns = self.epoch.elapsed().as_nanos() as u64;
+        let overwrote = self
+            .ring
+            .lock()
+            .unwrap()
+            .record(Event { t_ns, kind, span, a, b });
+        if overwrote {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Take every buffered event in chronological order, leaving the
+    /// ring empty. Allocates — call outside the serving loop.
+    pub fn drain(&self) -> Vec<Event> {
+        self.ring.lock().unwrap().drain()
+    }
+
+    /// Buffered events right now (for tests / status lines).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testalloc::thread_allocs;
+
+    fn sink(cap: usize) -> TraceSink {
+        let s = TraceSink::with_capacity(cap);
+        s.set_enabled(true);
+        s
+    }
+
+    #[test]
+    fn records_in_order_with_monotonic_timestamps() {
+        let s = sink(64);
+        for i in 0..10 {
+            s.record(EventKind::Admit, SpanKind::None, i, 0);
+        }
+        let evs = s.drain();
+        assert_eq!(evs.len(), 10);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.a, i as u64);
+        }
+        assert!(evs.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert_eq!(s.dropped(), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_and_counts_drops() {
+        let s = sink(8);
+        for i in 0..20u64 {
+            s.record(EventKind::TickStart, SpanKind::None, i, 0);
+        }
+        assert_eq!(s.dropped(), 12);
+        let evs = s.drain();
+        assert_eq!(evs.len(), 8);
+        let got: Vec<u64> = evs.iter().map(|e| e.a).collect();
+        assert_eq!(got, (12..20).collect::<Vec<u64>>());
+        // Drained: a fresh burst fills the same storage again.
+        s.record(EventKind::TickEnd, SpanKind::None, 99, 0);
+        assert_eq!(s.drain().len(), 1);
+        assert_eq!(s.dropped(), 12);
+    }
+
+    #[test]
+    fn zero_capacity_drops_everything() {
+        let s = sink(0);
+        s.record(EventKind::Admit, SpanKind::None, 1, 0);
+        s.record(EventKind::Retire, SpanKind::None, 1, 0);
+        assert!(s.drain().is_empty());
+        assert_eq!(s.dropped(), 2);
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let s = TraceSink::with_capacity(16);
+        s.record(EventKind::Admit, SpanKind::None, 1, 0);
+        assert!(s.drain().is_empty());
+        assert_eq!(s.dropped(), 0);
+    }
+
+    /// The tentpole's zero-allocation pin: recording into an ENABLED,
+    /// preallocated sink does not touch the heap. Together with the
+    /// warm-path kernel tests (quant::kernels) and the end-to-end
+    /// parity test in runtime::packed, this proves tracing keeps warm
+    /// single-vector decode allocation-free.
+    #[test]
+    fn record_path_is_allocation_free_with_tracing_on() {
+        let s = sink(256);
+        // Warm: first record exercises any lazy paths.
+        s.record(EventKind::TickStart, SpanKind::None, 0, 0);
+        let before = thread_allocs();
+        for i in 0..200u64 {
+            s.record(EventKind::SpanBegin, SpanKind::KernelQ, i, 0);
+            s.record(EventKind::SpanEnd, SpanKind::KernelQ, i, 0);
+        }
+        assert_eq!(
+            thread_allocs() - before,
+            0,
+            "TraceSink::record allocated on the hot path"
+        );
+        // Wraparound overwrites must be allocation-free too (256-slot
+        // ring, 401 records so far: already wrapped above or wraps now).
+        let before = thread_allocs();
+        for i in 0..300u64 {
+            s.record(EventKind::TickStart, SpanKind::None, i, 0);
+        }
+        assert_eq!(thread_allocs() - before, 0);
+    }
+
+    /// Warm packed single-vector decode kernel + tracing ON: the
+    /// counting allocator sees zero allocations across the combined
+    /// span-record + popcount-MVM sequence — the exact instrumentation
+    /// shape the packed backend's decode loop uses.
+    #[test]
+    fn warm_packed_kernel_with_spans_is_allocation_free() {
+        use crate::quant::{bitlinear_packed_into, pack, PackedScratch};
+        use crate::util::rng::Rng;
+
+        let (k, n) = (64usize, 16usize);
+        let mut rng = Rng::new(0xb0b);
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| ((rng.next_u64() % 3) as f32) - 1.0)
+            .collect();
+        let planes = pack(&w, k, n, 1.0).unwrap();
+        let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let mut scratch = PackedScratch::new();
+        let mut y = vec![0.0f32; n];
+        let s = sink(1024);
+
+        // Warm both the scratch quantization buffers and the sink.
+        s.record(EventKind::TickStart, SpanKind::None, 0, 0);
+        bitlinear_packed_into(&x, &planes, &mut scratch, &mut y);
+
+        let before = thread_allocs();
+        for layer in 0..8u64 {
+            s.record(EventKind::SpanBegin, SpanKind::KernelQ, layer, 0);
+            bitlinear_packed_into(&x, &planes, &mut scratch, &mut y);
+            s.record(EventKind::SpanEnd, SpanKind::KernelQ, layer, 0);
+        }
+        assert_eq!(
+            thread_allocs() - before,
+            0,
+            "warm packed kernel + tracing ON allocated"
+        );
+        assert!(s.len() > 0);
+    }
+}

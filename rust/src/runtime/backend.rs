@@ -38,6 +38,7 @@
 
 use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use crate::util::error::{ensure, Result};
+use std::sync::Arc;
 
 /// One execution engine for the decode step.
 pub trait Backend {
@@ -46,6 +47,16 @@ pub trait Backend {
 
     /// Platform string (mirrors PJRT's platform_name, e.g. "cpu").
     fn platform(&self) -> String;
+
+    /// Hand the backend its engine's observability bundle so kernel
+    /// spans (the seven projection families + attention) land in the
+    /// same per-shard trace ring as the serving events around them.
+    /// Called once at engine assembly, never on a decode path. Default
+    /// no-op: backends without kernel instrumentation (PJRT executes
+    /// one fused program) simply stay silent.
+    fn install_obs(&self, obs: Arc<crate::obs::Obs>) {
+        let _ = obs;
+    }
 
     /// Open a fresh decode session (zeroed cache state, no blocks held
     /// yet). Backends with private per-session state (PJRT's device

@@ -24,6 +24,7 @@ use super::artifacts::Artifacts;
 use super::backend::Backend;
 use super::kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 use super::prefixcache::{PrefixCache, PrefixStats};
+use crate::obs::{Counter, EventKind, MetricsSnapshot, Obs};
 use crate::quant::PackedModel;
 use crate::util::error::{Context, Result};
 use std::cell::RefCell;
@@ -119,6 +120,12 @@ pub struct EngineImpl<B: ?Sized + Backend = dyn Backend> {
     /// Copy-on-write prefix index over the arena, off until
     /// [`Engine::enable_prefix_cache`] (the `--prefix-cache` knob).
     prefix: RefCell<Option<PrefixCache>>,
+    /// Observability bundle (trace ring + metrics), shared with the
+    /// backend so kernel spans land in the same per-shard timeline.
+    /// Disabled by default — [`crate::obs::Obs::set_enabled`] is the
+    /// `--trace` / `--metrics` switch. `Arc`: the backend and any
+    /// exporter hold it alongside the engine.
+    obs: Arc<Obs>,
 }
 
 /// The classic single-threaded engine facade (any backend).
@@ -220,11 +227,14 @@ impl Engine {
         } else {
             CacheArena::new(layout, capacity_blocks)?
         };
+        let obs = Arc::new(Obs::new(0));
+        backend.install_obs(Arc::clone(&obs));
         Ok(Self {
             artifacts,
             backend,
             arena: RefCell::new(arena),
             prefix: RefCell::new(None),
+            obs,
         })
     }
 
@@ -523,7 +533,19 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
         let Some(pc) = prefix.as_mut() else {
             return Ok(0);
         };
-        pc.reclaim(&mut self.arena.borrow_mut(), want_free)
+        let evicted_before = pc.stats.evictions;
+        let freed = pc.reclaim(&mut self.arena.borrow_mut(), want_free)?;
+        if self.obs.enabled() {
+            let evicted = (pc.stats.evictions - evicted_before) as u64;
+            if evicted > 0 {
+                self.obs.event(EventKind::Eviction, evicted, 0);
+                self.obs.count(Counter::PrefixEvictions, evicted);
+            }
+            self.obs
+                .event(EventKind::Reclaim, freed as u64, want_free as u64);
+            self.obs.count(Counter::BlocksReclaimed, freed as u64);
+        }
+        Ok(freed)
     }
 
     /// Effectiveness counters of the prefix cache (None when disabled).
@@ -559,6 +581,28 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
     /// Short backend identifier: "reference", "packed" or "pjrt".
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    // ---- observability ---------------------------------------------
+
+    /// This engine's observability bundle (trace ring + metrics). The
+    /// same instance is installed in the backend at assembly, so kernel
+    /// spans share the serving events' timeline. Disabled by default;
+    /// flip with [`Obs::set_enabled`] outside any decode loop.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
+    }
+
+    /// Point-in-time copy of this engine's metrics registry.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.obs.metrics.snapshot()
+    }
+
+    /// Lifetime copy-on-write block copies in this engine's arena
+    /// (adoption tail copies plus decode-time shared-block writes) —
+    /// the serving tick reads per-tick deltas off this monotonic count.
+    pub fn cow_copies(&self) -> u64 {
+        self.arena.borrow().cow_copies()
     }
 }
 
@@ -707,12 +751,18 @@ impl ShardedEngine {
         };
         let shards = CacheArena::split(layout, total, workers)?
             .into_iter()
-            .map(|arena| {
+            .enumerate()
+            .map(|(w, arena)| {
+                let backend = host_backend(&artifacts, kind, packed)?;
+                // One bundle per shard: worker id names the trace track.
+                let obs = Arc::new(Obs::new(w));
+                backend.install_obs(Arc::clone(&obs));
                 Ok(EngineImpl {
                     artifacts: Arc::clone(&artifacts),
-                    backend: host_backend(&artifacts, kind, packed)?,
+                    backend,
                     arena: RefCell::new(arena),
                     prefix: RefCell::new(None),
+                    obs,
                 })
             })
             .collect::<Result<Vec<EngineShard>>>()?;
@@ -842,6 +892,43 @@ impl ShardedEngine {
 
     pub fn platform(&self) -> String {
         self.shards[0].platform()
+    }
+
+    // ---- observability ---------------------------------------------
+
+    /// Every shard's observability bundle, in ascending worker-id
+    /// order — one trace track per worker.
+    pub fn obs(&self) -> Vec<Arc<Obs>> {
+        self.shards.iter().map(|s| Arc::clone(s.obs())).collect()
+    }
+
+    /// Flip collection on every shard (outside the serving loop only:
+    /// the first enable allocates each shard's trace ring).
+    pub fn set_obs_enabled(&self, on: bool) {
+        for s in &self.shards {
+            s.obs().set_enabled(on);
+        }
+    }
+
+    /// Metrics merged across shards in ascending worker-id order (the
+    /// [`PrefixStats::absorb`] pattern): counters and histogram buckets
+    /// sum, gauges sum because shards partition the arena and sessions.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let mut merged = self.shards[0].metrics_snapshot();
+        for s in &self.shards[1..] {
+            merged.absorb(&s.metrics_snapshot());
+        }
+        merged
+    }
+
+    /// Drain every shard's trace ring, chronological within each shard,
+    /// tagged with the worker id in ascending order — the shape
+    /// [`crate::obs::export::chrome_trace`] takes as tracks.
+    pub fn drain_traces(&self) -> Vec<(usize, Vec<crate::obs::Event>)> {
+        self.shards
+            .iter()
+            .map(|s| (s.obs().shard(), s.obs().trace.drain()))
+            .collect()
     }
 }
 

@@ -173,6 +173,10 @@ pub struct CacheArena {
     slots: Vec<Slot>,
     /// Indices of dead slots available for reuse.
     free_slots: Vec<u32>,
+    /// Lifetime count of copy-on-write block copies ([`Self::cow_block`]
+    /// returning true) — the observability layer reads per-tick deltas
+    /// off this to attribute COW traffic without hooking the write path.
+    cow_copies: u64,
 }
 
 impl CacheArena {
@@ -194,6 +198,7 @@ impl CacheArena {
             layout,
             slots: Vec::new(),
             free_slots: Vec::new(),
+            cow_copies: 0,
         })
     }
 
@@ -236,6 +241,11 @@ impl CacheArena {
 
     pub fn layout(&self) -> &CacheLayout {
         &self.layout
+    }
+
+    /// Lifetime copy-on-write block copies (monotonic; never reset).
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
     }
 
     pub fn status(&self) -> ArenaStatus {
@@ -474,6 +484,7 @@ impl CacheArena {
         }
         self.slots[h.index as usize].table[block_idx] = fresh;
         self.release_ref(old);
+        self.cow_copies += 1;
         Ok(true)
     }
 

@@ -36,6 +36,7 @@ use super::backend::Backend;
 use super::kernels::{attention, attention_paged, gelu, rms_norm};
 use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use super::reference::ReferenceBackend;
+use crate::obs::{Obs, SpanKind};
 use crate::quant::{
     bitlinear_packed, bitlinear_packed_batch_with, PackedModel, PackedScratch,
 };
@@ -181,6 +182,12 @@ impl Backend for PackedBackend {
         "cpu".to_string()
     }
 
+    /// Kernel spans live on the embedded reference backend's obs slot —
+    /// one shared bundle per engine, whichever backend records.
+    fn install_obs(&self, obs: Arc<Obs>) {
+        *self.reference.obs.borrow_mut() = obs;
+    }
+
     fn decode_step(
         &self,
         arena: &mut CacheArena,
@@ -224,8 +231,12 @@ impl Backend for PackedBackend {
         let poss = ReferenceBackend::prepare_step(arena, handles, positions, max_ctx)?;
         // One scratch borrow for the whole step: every projection below
         // reuses the same activation-plane/accumulator buffers, so the
-        // warm steady state does no kernel-side heap allocation.
+        // warm steady state does no kernel-side heap allocation. The
+        // obs borrow likewise lives for the step; span records stay
+        // allocation-free with tracing on (pinned by the test below).
         let scratch = &mut *self.scratch.borrow_mut();
+        let obs_guard = self.reference.obs.borrow();
+        let obs: &Obs = &obs_guard;
 
         // Embed every session's token (XLA-style clamped gather).
         let embedding = r.data(r.embedding);
@@ -243,9 +254,16 @@ impl Backend for PackedBackend {
                 .iter()
                 .map(|x| rms_norm(x, r.data(lp.ln1_gamma), eps))
                 .collect();
+            let lid = layer as u64;
+            obs.span_begin(SpanKind::KernelQ, lid);
             let q = bitlinear_packed_batch_with(&xn, &pl.wq, scratch);
+            obs.span_end(SpanKind::KernelQ, lid);
+            obs.span_begin(SpanKind::KernelK, lid);
             let k = bitlinear_packed_batch_with(&xn, &pl.wk, scratch);
+            obs.span_end(SpanKind::KernelK, lid);
+            obs.span_begin(SpanKind::KernelV, lid);
             let v = bitlinear_packed_batch_with(&xn, &pl.wv, scratch);
+            obs.span_end(SpanKind::KernelV, lid);
 
             // Scatter each session's new K/V through its block table at
             // its own (ragged) position.
@@ -255,6 +273,7 @@ impl Backend for PackedBackend {
 
             // Attention reads per-session KV state, not weights — there
             // is nothing to amortize, so it runs per session.
+            obs.span_begin(SpanKind::Attention, lid);
             let att = q
                 .iter()
                 .zip(handles.iter().zip(&poss))
@@ -262,7 +281,10 @@ impl Backend for PackedBackend {
                     Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
                 })
                 .collect::<Result<Vec<_>>>()?;
+            obs.span_end(SpanKind::Attention, lid);
+            obs.span_begin(SpanKind::KernelO, lid);
             let att = bitlinear_packed_batch_with(&att, &pl.wx, scratch);
+            obs.span_end(SpanKind::KernelO, lid);
             for (x, a) in xs.iter_mut().zip(&att) {
                 for (xi, ai) in x.iter_mut().zip(a) {
                     *xi += ai;
@@ -274,12 +296,16 @@ impl Backend for PackedBackend {
                 .iter()
                 .map(|x| rms_norm(x, r.data(lp.ln2_gamma), eps))
                 .collect();
+            obs.span_begin(SpanKind::KernelFf1, lid);
             let ff = bitlinear_packed_batch_with(&xn, &pl.w_in, scratch);
+            obs.span_end(SpanKind::KernelFf1, lid);
             let ff: Vec<Vec<f32>> = ff
                 .into_iter()
                 .map(|f| f.into_iter().map(gelu).collect())
                 .collect();
+            obs.span_begin(SpanKind::KernelFf2, lid);
             let ff = bitlinear_packed_batch_with(&ff, &pl.w_out, scratch);
+            obs.span_end(SpanKind::KernelFf2, lid);
             for (x, f) in xs.iter_mut().zip(&ff) {
                 for (xi, fi) in x.iter_mut().zip(f) {
                     *xi += fi;
@@ -291,7 +317,11 @@ impl Backend for PackedBackend {
             .iter()
             .map(|x| rms_norm(x, r.data(r.lnf_gamma), eps))
             .collect();
-        Ok(bitlinear_packed_batch_with(&xs, &self.model.w_head, scratch))
+        let hid = r.layers.len() as u64;
+        obs.span_begin(SpanKind::KernelHead, hid);
+        let logits = bitlinear_packed_batch_with(&xs, &self.model.w_head, scratch);
+        obs.span_end(SpanKind::KernelHead, hid);
+        Ok(logits)
     }
 }
 
@@ -400,5 +430,69 @@ mod tests {
         // worker thread; that requires the struct to stay `Send`.
         fn assert_send<T: Send>() {}
         assert_send::<PackedBackend>();
+    }
+
+    #[test]
+    fn warm_decode_with_tracing_on_adds_zero_allocations() {
+        // The tentpole's inertness pin at the decode level: a warm
+        // single-vector packed decode step allocates exactly as much
+        // with tracing ON as with tracing OFF (its unavoidable output
+        // vectors — logits, embeddings, per-layer activations — and
+        // nothing from the instrumentation). The span-record path
+        // itself writes into a ring preallocated at enable time.
+        fn warm_step_allocs(trace: bool) -> u64 {
+            let a = Arc::new(Artifacts::synthetic(13).unwrap());
+            let p = PackedBackend::new(a).unwrap();
+            if trace {
+                let obs = Arc::new(Obs::new(0));
+                obs.set_enabled(true);
+                p.install_obs(Arc::clone(&obs));
+                assert!(p.reference.obs.borrow().enabled());
+            }
+            let mut arena = CacheArena::with_sessions(
+                CacheLayout::from_model(&p.reference.artifacts.manifest.model),
+                8,
+            )
+            .unwrap();
+            let s = p.new_session(&mut arena).unwrap();
+            // Warm: scratch growth, block claims, ring warm-up.
+            p.decode_step(&mut arena, s, 5, 0).unwrap();
+            p.decode_step(&mut arena, s, 7, 1).unwrap();
+            let before = crate::util::testalloc::thread_allocs();
+            p.decode_step(&mut arena, s, 3, 2).unwrap();
+            crate::util::testalloc::thread_allocs() - before
+        }
+        let off = warm_step_allocs(false);
+        let on = warm_step_allocs(true);
+        assert_eq!(
+            on, off,
+            "tracing ON changed warm decode allocation count ({on} vs {off})"
+        );
+    }
+
+    #[test]
+    fn tracing_on_does_not_change_logits() {
+        // Inertness at the numerics level, backend-local: same session
+        // history with tracing on vs off produces byte-identical logits
+        // and records kernel spans for every layer family.
+        let a = Arc::new(Artifacts::synthetic(13).unwrap());
+        let p1 = PackedBackend::new(Arc::clone(&a)).unwrap();
+        let p2 = PackedBackend::new(a).unwrap();
+        let obs = Arc::new(Obs::new(0));
+        obs.set_enabled(true);
+        p2.install_obs(Arc::clone(&obs));
+        let mut a1 = arena_for(&p1);
+        let mut a2 = arena_for(&p2);
+        let s1 = p1.new_session(&mut a1).unwrap();
+        let s2 = p2.new_session(&mut a2).unwrap();
+        for (pos, tok) in [4i32, 9, 2].into_iter().enumerate() {
+            let o1 = p1.decode_step(&mut a1, s1, tok, pos as i32).unwrap();
+            let o2 = p2.decode_step(&mut a2, s2, tok, pos as i32).unwrap();
+            assert_eq!(o1, o2, "pos {pos}");
+        }
+        let events = obs.trace.drain();
+        // 3 steps x n_layers x (7 kernels + attention) x 2 + head pair.
+        let n_layers = p2.reference.layers.len();
+        assert_eq!(events.len(), 3 * (n_layers * 7 * 2 + 2));
     }
 }

@@ -54,7 +54,10 @@ impl PrefixStats {
     /// Fold another counter set into this one — how the sharded engine
     /// merges its per-shard indices into one report. Each shard owns a
     /// private index (blocks never cross shards, so neither do pins or
-    /// hits); the fleet-wide picture is the plain sum.
+    /// hits); the fleet-wide picture is the plain sum. This is the
+    /// pattern [`crate::obs::MetricsSnapshot::absorb`] generalizes to
+    /// the full metrics registry: sum everything, merge in ascending
+    /// worker-id order so the report is byte-diffable run-to-run.
     pub fn absorb(&mut self, other: PrefixStats) {
         self.hits += other.hits;
         self.misses += other.misses;

@@ -36,7 +36,9 @@ use super::artifacts::Artifacts;
 use super::backend::Backend;
 use super::kernels::{attention, attention_paged, bitlinear, bitlinear_batch, gelu, rms_norm};
 use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
+use crate::obs::{Obs, SpanKind};
 use crate::util::error::{anyhow, ensure, Context, Result};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Resolved parameter indices (into `manifest.params`) of one layer.
@@ -69,6 +71,13 @@ pub struct ReferenceBackend {
     pub(crate) lnf_gamma: usize,
     pub(crate) w_head: usize,
     pub(crate) w_head_scale: usize,
+    /// The owning engine's observability bundle (kernel spans land in
+    /// the same per-shard trace ring as the serving events). Installed
+    /// once via [`Backend::install_obs`]; starts as a disabled
+    /// placeholder so every record call is a relaxed load until the
+    /// engine turns tracing on. `RefCell` because installation happens
+    /// through `&self` at assembly time — never on a decode path.
+    pub(crate) obs: RefCell<Arc<Obs>>,
 }
 
 impl ReferenceBackend {
@@ -123,6 +132,7 @@ impl ReferenceBackend {
             lnf_gamma,
             w_head,
             w_head_scale,
+            obs: RefCell::new(Arc::new(Obs::new(0))),
         })
     }
 
@@ -239,6 +249,10 @@ impl Backend for ReferenceBackend {
         "cpu".to_string()
     }
 
+    fn install_obs(&self, obs: Arc<Obs>) {
+        *self.obs.borrow_mut() = obs;
+    }
+
     /// A single step is a batch of one: `bitlinear_batch` at B=1 is
     /// bit-for-bit `bitlinear` (pinned by the kernel tests), so the one
     /// batched orchestration below serves both entry points.
@@ -286,6 +300,11 @@ impl Backend for ReferenceBackend {
         let dh = d / h;
         let eps = m.eps as f32;
         let poss = Self::prepare_step(arena, handles, positions, max_ctx)?;
+        // One borrow for the whole step (install only happens at
+        // assembly); span records are relaxed-load no-ops while
+        // tracing is off and allocation-free while it is on.
+        let obs_guard = self.obs.borrow();
+        let obs: &Obs = &obs_guard;
 
         // Embed every session's token (XLA-style clamped gather).
         let embedding = self.data(self.embedding);
@@ -303,9 +322,16 @@ impl Backend for ReferenceBackend {
                 .iter()
                 .map(|x| rms_norm(x, self.data(lp.ln1_gamma), eps))
                 .collect();
+            let lid = layer as u64;
+            obs.span_begin(SpanKind::KernelQ, lid);
             let q = bitlinear_batch(&xn, self.data(lp.wq), d, self.scalar(lp.wq_scale));
+            obs.span_end(SpanKind::KernelQ, lid);
+            obs.span_begin(SpanKind::KernelK, lid);
             let k = bitlinear_batch(&xn, self.data(lp.wk), d, self.scalar(lp.wk_scale));
+            obs.span_end(SpanKind::KernelK, lid);
+            obs.span_begin(SpanKind::KernelV, lid);
             let v = bitlinear_batch(&xn, self.data(lp.wv), d, self.scalar(lp.wv_scale));
+            obs.span_end(SpanKind::KernelV, lid);
 
             // Scatter each session's new K/V through its block table at
             // its own (ragged) position.
@@ -316,6 +342,7 @@ impl Backend for ReferenceBackend {
             // Attention reads per-session KV state, not weights — there
             // is nothing to amortize, so it runs per session, gathering
             // through the block table.
+            obs.span_begin(SpanKind::Attention, lid);
             let att = q
                 .iter()
                 .zip(handles.iter().zip(&poss))
@@ -323,7 +350,10 @@ impl Backend for ReferenceBackend {
                     Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
                 })
                 .collect::<Result<Vec<_>>>()?;
+            obs.span_end(SpanKind::Attention, lid);
+            obs.span_begin(SpanKind::KernelO, lid);
             let att = bitlinear_batch(&att, self.data(lp.wx), d, self.scalar(lp.wx_scale));
+            obs.span_end(SpanKind::KernelO, lid);
             for (x, a) in xs.iter_mut().zip(&att) {
                 for (xi, ai) in x.iter_mut().zip(a) {
                     *xi += ai;
@@ -335,12 +365,16 @@ impl Backend for ReferenceBackend {
                 .iter()
                 .map(|x| rms_norm(x, self.data(lp.ln2_gamma), eps))
                 .collect();
+            obs.span_begin(SpanKind::KernelFf1, lid);
             let ff = bitlinear_batch(&xn, self.data(lp.w_in), m.d_ff, self.scalar(lp.w_in_scale));
+            obs.span_end(SpanKind::KernelFf1, lid);
             let ff: Vec<Vec<f32>> = ff
                 .into_iter()
                 .map(|f| f.into_iter().map(gelu).collect())
                 .collect();
+            obs.span_begin(SpanKind::KernelFf2, lid);
             let ff = bitlinear_batch(&ff, self.data(lp.w_out), d, self.scalar(lp.w_out_scale));
+            obs.span_end(SpanKind::KernelFf2, lid);
             for (x, f) in xs.iter_mut().zip(&ff) {
                 for (xi, fi) in x.iter_mut().zip(f) {
                     *xi += fi;
@@ -352,12 +386,16 @@ impl Backend for ReferenceBackend {
             .iter()
             .map(|x| rms_norm(x, self.data(self.lnf_gamma), eps))
             .collect();
-        Ok(bitlinear_batch(
+        let hid = self.layers.len() as u64;
+        obs.span_begin(SpanKind::KernelHead, hid);
+        let logits = bitlinear_batch(
             &xs,
             self.data(self.w_head),
             m.vocab,
             self.scalar(self.w_head_scale),
-        ))
+        );
+        obs.span_end(SpanKind::KernelHead, hid);
+        Ok(logits)
     }
 }
 

@@ -65,10 +65,12 @@ pub mod stats;
 
 pub use stats::{shard_report, LatencyStats, ShardStats};
 
+use crate::obs::{Counter, EventKind, Gauge, Hist, SpanKind};
 use crate::runtime::decoder::greedy_argmax;
 use crate::runtime::engine::{shard_for, EngineImpl, EngineShard, ShardedEngine};
 use crate::runtime::{Backend, CacheHandle, Engine};
-use crate::util::error::{ensure, Result};
+use crate::util::error::{ensure, Context, Result};
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -276,6 +278,10 @@ struct Active {
     /// Whether this session's prompt blocks have been recorded in the
     /// prefix index (once, at prefill completion).
     indexed: bool,
+    /// Whether prefill has completed for THIS admission — which request
+    /// lifetime span (prefill or decode) is currently open in the trace.
+    /// Purely observational; never consulted by scheduling.
+    prefill_done: bool,
 }
 
 impl Active {
@@ -353,11 +359,34 @@ impl Active {
 pub struct Server<'e, B: ?Sized + Backend = dyn Backend> {
     engine: &'e EngineImpl<B>,
     policy: Policy,
+    /// Run the arena's full invariant check every N ticks (0 = never) —
+    /// the `--validate-every` debug knob. A failure aborts the serve
+    /// with a structured error naming the tick.
+    validate_every: usize,
+    /// Scheduler ticks executed by this server (drives validate_every).
+    ticks: Cell<u64>,
+    /// Arena copy-on-write count at the last tick — the baseline the
+    /// tick subtracts to attribute per-tick COW deltas to the trace.
+    last_cow: Cell<u64>,
 }
 
 impl<'e, B: ?Sized + Backend> Server<'e, B> {
     pub fn new(engine: &'e EngineImpl<B>, policy: Policy) -> Self {
-        Self { engine, policy }
+        Self {
+            engine,
+            policy,
+            validate_every: 0,
+            ticks: Cell::new(0),
+            last_cow: Cell::new(engine.cow_copies()),
+        }
+    }
+
+    /// Run [`EngineImpl::debug_validate`] every `n` ticks (0 disables,
+    /// the default). Failures surface as structured errors naming the
+    /// failing tick, instead of silent corruption compounding.
+    pub fn with_validate_every(mut self, n: usize) -> Self {
+        self.validate_every = n;
+        self
     }
 
     /// Serve a batch of requests (all arriving at once) to completion,
@@ -487,6 +516,9 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
                 continue;
             }
 
+            self.engine
+                .obs()
+                .gauge(Gauge::QueueDepth, ready.len() as u64);
             self.relieve_pressure(&mut ready, active)?;
             self.tick(active, done)?;
         }
@@ -637,8 +669,30 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
                     return Err(e);
                 }
             }
-            if p.first_admitted.is_none() {
+            let first_admission = p.first_admitted.is_none();
+            if first_admission {
                 p.first_admitted = Some(Instant::now());
+            }
+            let prefill_done = cached_now >= p.req.prompt.len();
+            let obs = self.engine.obs();
+            if obs.enabled() {
+                let rid = p.req.id;
+                obs.event(EventKind::Admit, rid, u64::from(first_admission));
+                if self.engine.prefix_enabled() {
+                    if cached_now > 0 {
+                        obs.event(EventKind::PrefixHit, rid, cached_now as u64);
+                    } else {
+                        obs.event(EventKind::PrefixMiss, rid, 0);
+                    }
+                }
+                // The request-lifetime spans: prefill opens at every
+                // (re-)admission; a fully adopted prompt skips straight
+                // to decode.
+                obs.span_begin(SpanKind::Prefill, rid);
+                if prefill_done {
+                    obs.span_end(SpanKind::Prefill, rid);
+                    obs.span_begin(SpanKind::Decode, rid);
+                }
             }
             active.push(Active {
                 handle,
@@ -653,6 +707,7 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
                 evictions: p.evictions,
                 cached: p.cached + cached_now,
                 indexed: false,
+                prefill_done,
                 req: p.req,
             });
             *next_seq += 1;
@@ -718,6 +773,18 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             // pins), so no still-referenced block can reach the
             // free list here.
             self.engine.free_session(a.handle)?;
+            let obs = self.engine.obs();
+            if obs.enabled() {
+                obs.event(EventKind::Preempt, a.req.id, a.pos as u64);
+                // Close whichever lifetime span this admission had
+                // open; re-admission reopens prefill from scratch.
+                let span = if a.prefill_done {
+                    SpanKind::Decode
+                } else {
+                    SpanKind::Prefill
+                };
+                obs.span_end(span, a.req.id);
+            }
             ready.push_front(a.into_pending());
             preempted += 1;
         }
@@ -730,6 +797,28 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
     /// out (completion order), freeing their blocks for the next
     /// admission round.
     fn tick(&self, active: &mut Vec<Active>, done: &mut Vec<Response>) -> Result<()> {
+        let obs = self.engine.obs();
+        let batch = active.len();
+        obs.event(EventKind::TickStart, batch as u64, 0);
+        // Clock reads only with tracing on — a disabled Obs keeps the
+        // tick at exactly one relaxed load per instrumentation site.
+        let t_start = if obs.enabled() {
+            Some(Instant::now())
+        } else {
+            None
+        };
+        self.ticks.set(self.ticks.get() + 1);
+        if self.validate_every > 0 && self.ticks.get() % self.validate_every as u64 == 0 {
+            let n = self.ticks.get();
+            let shard = self.engine.obs().shard();
+            self.engine.debug_validate().with_context(|| {
+                format!(
+                    "--validate-every: arena invariant check failed at shard {shard} \
+                     tick {n}"
+                )
+            })?;
+            obs.count(Counter::ValidationsRun, 1);
+        }
         match self.policy {
             Policy::Batched { .. } | Policy::Continuous { .. } | Policy::Sharded { .. } => {
                 let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
@@ -747,6 +836,17 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
                     let logits = self.engine.decode_step(a.handle, t, a.pos)?;
                     a.absorb(t, logits);
                 }
+            }
+        }
+
+        // Every active session fed exactly one token this tick, and the
+        // prefill -> decode transition is observable right after.
+        obs.count(Counter::TokensDecoded, batch as u64);
+        for a in active.iter_mut() {
+            if !a.prefill_done && a.fed >= a.req.prompt.len() {
+                a.prefill_done = true;
+                obs.span_end(SpanKind::Prefill, a.req.id);
+                obs.span_begin(SpanKind::Decode, a.req.id);
             }
         }
 
@@ -770,10 +870,38 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             if active[i].done() {
                 let a = active.swap_remove(i);
                 self.engine.free_session(a.handle)?;
+                if obs.enabled() {
+                    obs.event(EventKind::Retire, a.req.id, a.tokens.len() as u64);
+                    obs.span_end(SpanKind::Decode, a.req.id);
+                }
                 done.push(a.finish());
             } else {
                 i += 1;
             }
+        }
+
+        if obs.enabled() {
+            let st = self.engine.arena_status();
+            obs.gauge(Gauge::ArenaBlocksFree, st.free_blocks as u64);
+            obs.gauge(Gauge::ArenaBlocksUsed, st.used_blocks as u64);
+            obs.gauge(Gauge::ActiveSessions, active.len() as u64);
+            obs.gauge(Gauge::PrefixEntries, self.engine.prefix_entries() as u64);
+            obs.observe(Hist::BatchSize, batch as u64);
+            // Copy-on-write copies since the last tick (adoption tail
+            // copies in admit plus decode-time shared-block writes):
+            // the arena counts them where they happen, the tick
+            // attributes the delta to its timeline.
+            let cow = self.engine.cow_copies();
+            let delta = cow - self.last_cow.get();
+            self.last_cow.set(cow);
+            if delta > 0 {
+                obs.event(EventKind::Cow, delta, 0);
+                obs.count(Counter::CowCopies, delta);
+            }
+            if let Some(t) = t_start {
+                obs.observe(Hist::TickMicros, t.elapsed().as_micros() as u64);
+            }
+            obs.event(EventKind::TickEnd, batch as u64, 0);
         }
         Ok(())
     }
@@ -1002,9 +1130,11 @@ fn shard_worker(
     shared: &ShardQueues,
     t0: Instant,
     max_active: usize,
+    validate_every: usize,
 ) -> Result<(Vec<Response>, ShardStats)> {
     let workers = shared.queues.len();
-    let server = Server::new(shard, Policy::Continuous { max_active });
+    let server = Server::new(shard, Policy::Continuous { max_active })
+        .with_validate_every(validate_every);
     let mut ready: VecDeque<Pending> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
     let mut done: Vec<Response> = Vec::new();
@@ -1029,6 +1159,7 @@ fn shard_worker(
                 for victim in (1..workers).map(|d| (w + d) % workers) {
                     if let Some((req, off)) = shared.pop_visible(victim, now_s) {
                         stats.stolen += 1;
+                        shard.obs().event(EventKind::Steal, req.id, victim as u64);
                         ready.push_back(Pending::new(req, t0 + Duration::from_secs_f64(off)));
                         break;
                     }
@@ -1074,6 +1205,7 @@ fn shard_worker(
             }
 
             stats.peak_active = stats.peak_active.max(active.len());
+            shard.obs().gauge(Gauge::QueueDepth, ready.len() as u64);
             stats.evictions += server.relieve_pressure(&mut ready, &mut active)?;
             server.tick(&mut active, &mut done)?;
         }
@@ -1129,6 +1261,20 @@ pub fn serve_sharded_stats(
     offsets: &[f64],
     max_active: usize,
 ) -> Result<(Vec<Response>, Vec<ShardStats>)> {
+    serve_sharded_stats_opts(engine, requests, offsets, max_active, 0)
+}
+
+/// [`serve_sharded_stats`] with the debug knobs: `validate_every > 0`
+/// runs every shard's full arena invariant check every N of its own
+/// ticks (the `--validate-every` CLI flag), failing the serve with a
+/// structured error naming the shard and tick.
+pub fn serve_sharded_stats_opts(
+    engine: &mut ShardedEngine,
+    requests: Vec<Request>,
+    offsets: &[f64],
+    max_active: usize,
+    validate_every: usize,
+) -> Result<(Vec<Response>, Vec<ShardStats>)> {
     validate_arrivals(&requests, offsets)?;
     ensure!(max_active >= 1, "sharded serving needs max_active >= 1");
     let workers = engine.workers();
@@ -1152,7 +1298,9 @@ pub fn serve_sharded_stats(
             .iter_mut()
             .enumerate()
             .map(|(w, shard)| {
-                scope.spawn(move || shard_worker(&*shard, w, shared, t0, max_active))
+                scope.spawn(move || {
+                    shard_worker(&*shard, w, shared, t0, max_active, validate_every)
+                })
             })
             .collect();
         handles

@@ -151,9 +151,14 @@ impl ShardStats {
 
 /// Multi-line report over a whole worker set, one shard per line plus a
 /// steal/served totals line — `repro serve --policy sharded` prints
-/// this under the latency summary.
+/// this under the latency summary. Shards are always emitted in
+/// ascending worker-id order, whatever order the caller collected them
+/// in — the report is a determinism surface (CI diffs it run-to-run),
+/// so line order must not depend on thread join order.
 pub fn shard_report(stats: &[ShardStats]) -> String {
-    let mut lines: Vec<String> = stats.iter().map(ShardStats::report).collect();
+    let mut ordered: Vec<&ShardStats> = stats.iter().collect();
+    ordered.sort_by_key(|s| s.shard);
+    let mut lines: Vec<String> = ordered.into_iter().map(ShardStats::report).collect();
     let stolen: usize = stats.iter().map(|s| s.stolen).sum();
     let served: usize = stats.iter().map(|s| s.served).sum();
     lines.push(format!(
@@ -225,6 +230,47 @@ mod tests {
         let merged = shard_report(&[a, b]);
         assert!(merged.contains("shard 1: placed 0 | stole 1 | served 2"));
         assert!(merged.ends_with("2 workers | 6 served | 1 stolen"));
+    }
+
+    #[test]
+    fn shard_report_orders_by_worker_id_regardless_of_input_order() {
+        // Threaded collectors can hand the stats over in join order;
+        // the report must come out in ascending worker-id order anyway.
+        let shards: Vec<ShardStats> = [3usize, 0, 2, 1]
+            .into_iter()
+            .map(|w| ShardStats {
+                served: w + 1,
+                ..ShardStats::new(w)
+            })
+            .collect();
+        let merged = shard_report(&shards);
+        let lines: Vec<&str> = merged.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for (i, line) in lines[..4].iter().enumerate() {
+            assert!(
+                line.starts_with(&format!("shard {i}:")),
+                "line {i} out of order: {line}"
+            );
+        }
+        assert!(lines[4].starts_with("4 workers | 10 served"));
+    }
+
+    #[test]
+    fn report_includes_zero_valued_counters() {
+        // The summary line is grepped by CI and diffed across runs: the
+        // eviction / cached-token fields must appear even when zero, not
+        // vanish and shift the line's shape.
+        let rs = vec![Response {
+            evictions: 0,
+            cached_tokens: 0,
+            ..resp(1, 1.0) // id 1: resp() gives nonzero cached otherwise
+        }];
+        let s = LatencyStats::from_responses(&rs, 1.0);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.cached_tokens, 0);
+        let line = s.report();
+        assert!(line.contains("0 preemptions"), "{line}");
+        assert!(line.contains("0 prefix-cached tokens"), "{line}");
     }
 
     #[test]

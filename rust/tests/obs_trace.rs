@@ -1,0 +1,207 @@
+//! Integration suite for the observability layer: ring-buffer
+//! wraparound and drop accounting, concurrent drain-while-recording,
+//! the disabled-is-inert guarantee, and the full serve → drain →
+//! Chrome-trace JSON → in-crate parser → Perfetto-schema checker
+//! round trip on both the single-engine and sharded serving paths.
+//! (The zero-allocation guarantees live in unit tests in `src/` —
+//! the counting allocator is only registered under `cfg(test)` of the
+//! library crate, so integration tests cannot observe it.)
+
+use std::sync::Arc;
+use std::thread;
+
+use pim_llm::obs::export::{check_trace_doc, chrome_trace};
+use pim_llm::obs::{Counter, Event, EventKind, SpanKind, TraceSink};
+use pim_llm::runtime::{Artifacts, BackendKind, Engine, ShardedEngine};
+use pim_llm::serving::{serve_sharded_stats_opts, Policy, Request, Server};
+use pim_llm::util::json;
+
+const SEED: u64 = 0x0B5;
+
+fn requests(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|id| Request {
+            id,
+            prompt: (0..(id % 4) as i32 + 1).map(|i| (id as i32 * 7 + i) % 60 + 1).collect(),
+            n_new: (id % 3) as usize + 2,
+        })
+        .collect()
+}
+
+#[test]
+fn wraparound_keeps_newest_events_and_counts_every_drop() {
+    let sink = TraceSink::with_capacity(16);
+    sink.set_enabled(true);
+    for i in 0..50u64 {
+        sink.record(EventKind::Admit, SpanKind::None, i, 0);
+    }
+    assert_eq!(sink.len(), 16);
+    assert_eq!(sink.dropped(), 34);
+    let events = sink.drain();
+    assert_eq!(events.len(), 16);
+    // Chronological drain: exactly the newest 16, oldest-first, with
+    // non-decreasing timestamps.
+    for (j, ev) in events.iter().enumerate() {
+        assert_eq!(ev.a, 34 + j as u64, "slot {j} holds the wrong event");
+    }
+    for w in events.windows(2) {
+        assert!(w[0].t_ns <= w[1].t_ns, "timestamps went backwards");
+    }
+    // The drop counter is cumulative: a fresh burst after the drain
+    // keeps counting from 34, not from zero.
+    for i in 0..20u64 {
+        sink.record(EventKind::Admit, SpanKind::None, 100 + i, 0);
+    }
+    assert_eq!(sink.dropped(), 38);
+    assert_eq!(sink.drain().len(), 16);
+}
+
+#[test]
+fn drain_while_recording_from_another_thread_accounts_for_every_event() {
+    const TOTAL: u64 = 10_000;
+    let sink = Arc::new(TraceSink::with_capacity(256));
+    sink.set_enabled(true);
+    let recorder = {
+        let sink = Arc::clone(&sink);
+        thread::spawn(move || {
+            for i in 0..TOTAL {
+                sink.record(EventKind::TickStart, SpanKind::None, i, 0);
+            }
+        })
+    };
+    let mut drained: Vec<Event> = Vec::new();
+    for _ in 0..64 {
+        drained.extend(sink.drain());
+        thread::yield_now();
+    }
+    recorder.join().unwrap();
+    drained.extend(sink.drain());
+    // Exactly-once: every recorded event either reached a drain or was
+    // counted as dropped by an overwrite — no loss, no duplication.
+    assert_eq!(drained.len() as u64 + sink.dropped(), TOTAL);
+    // Concatenated drains replay record order: payloads strictly
+    // increase (gaps are the dropped events) and time never reverses.
+    for w in drained.windows(2) {
+        assert!(w[0].a < w[1].a, "drain order broke record order");
+        assert!(w[0].t_ns <= w[1].t_ns, "timestamps went backwards");
+    }
+}
+
+#[test]
+fn disabled_sink_and_disabled_serve_emit_zero_events() {
+    // A never-enabled sink records nothing and counts nothing dropped.
+    let sink = TraceSink::with_capacity(64);
+    for i in 0..100u64 {
+        sink.record(EventKind::Retire, SpanKind::None, i, 0);
+    }
+    assert!(sink.drain().is_empty());
+    assert_eq!(sink.dropped(), 0);
+
+    // End to end: serving with observability left at its default (off)
+    // leaves both the ring and every metric untouched.
+    let engine = Engine::load(Artifacts::synthetic(SEED).unwrap()).unwrap();
+    let out = Server::new(&engine, Policy::Continuous { max_active: 3 })
+        .serve(requests(8))
+        .unwrap();
+    assert_eq!(out.len(), 8);
+    assert!(engine.obs().trace.drain().is_empty());
+    assert_eq!(engine.obs().trace.dropped(), 0);
+    let snap = engine.metrics_snapshot();
+    assert_eq!(snap.counter(Counter::TicksRun), 0);
+    assert_eq!(snap.counter(Counter::TokensDecoded), 0);
+    assert_eq!(snap.counter(Counter::Admitted), 0);
+}
+
+#[test]
+fn single_engine_trace_round_trips_through_the_perfetto_checker() {
+    let engine = Engine::load(Artifacts::synthetic(SEED).unwrap()).unwrap();
+    engine.obs().set_enabled(true);
+    let out = Server::new(&engine, Policy::Continuous { max_active: 3 })
+        .serve(requests(8))
+        .unwrap();
+    assert_eq!(out.len(), 8);
+    let events = engine.obs().trace.drain();
+    assert!(!events.is_empty(), "traced serve produced no events");
+    // Ticks, admissions, and retirements must all appear in the ring.
+    for kind in [EventKind::TickStart, EventKind::TickEnd, EventKind::Admit, EventKind::Retire] {
+        assert!(
+            events.iter().any(|e| e.kind == kind),
+            "no {kind:?} event in trace"
+        );
+    }
+    // Request phases land as span begin/end pairs.
+    assert!(events
+        .iter()
+        .any(|e| e.kind == EventKind::SpanBegin && e.span == SpanKind::Decode));
+    let tracks = vec![(engine.obs().shard(), events)];
+    let text = chrome_trace(&tracks).to_string();
+    let doc = json::parse(&text).expect("exported trace must parse with util::json");
+    let (n_events, n_tracks) = check_trace_doc(&doc).expect("Perfetto schema check");
+    assert!(n_events > 0);
+    assert_eq!(n_tracks, 1);
+    // Metrics agree with the served workload.
+    let snap = engine.metrics_snapshot();
+    assert!(snap.counter(Counter::TicksRun) > 0);
+    assert!(snap.counter(Counter::TokensDecoded) > 0);
+    assert_eq!(snap.counter(Counter::Admitted), 8);
+    assert_eq!(snap.counter(Counter::Retired), 8);
+}
+
+#[test]
+fn sharded_drain_produces_one_monotonic_track_per_worker() {
+    let n = 12u64;
+    let mut engine = ShardedEngine::load(
+        Artifacts::synthetic(SEED).unwrap(),
+        BackendKind::Reference,
+        4,
+        64,
+        4,
+    )
+    .unwrap();
+    engine.set_obs_enabled(true);
+    let offsets = vec![0.0; n as usize];
+    let (out, stats) =
+        serve_sharded_stats_opts(&mut engine, requests(n), &offsets, 2, 3).unwrap();
+    assert_eq!(out.len(), n as usize);
+    let tracks = engine.drain_traces();
+    assert_eq!(tracks.len(), 4, "one track per shard worker");
+    // Tracks come back in ascending worker-id order, matching the
+    // deterministic metrics merge.
+    for (i, (shard, _)) in tracks.iter().enumerate() {
+        assert_eq!(*shard, i);
+    }
+    let total: usize = tracks.iter().map(|(_, evs)| evs.len()).sum();
+    assert!(total > 0, "sharded serve recorded no events");
+    let text = chrome_trace(&tracks).to_string();
+    let doc = json::parse(&text).unwrap();
+    let (n_events, n_tracks) = check_trace_doc(&doc).unwrap();
+    assert!(n_events > 0);
+    assert_eq!(n_tracks, 4);
+    // --validate-every ran on every shard that ticked at least 3 times;
+    // the merged snapshot must have seen at least one validation pass.
+    let snap = engine.metrics_snapshot();
+    assert!(snap.counter(Counter::ValidationsRun) > 0);
+    assert_eq!(
+        snap.counter(Counter::Retired),
+        stats.iter().map(|s| s.served).sum::<usize>() as u64
+    );
+}
+
+#[test]
+fn validate_every_tick_passes_on_a_healthy_arena() {
+    let engine = Engine::load(Artifacts::synthetic(SEED).unwrap()).unwrap();
+    engine.obs().set_enabled(true);
+    let out = Server::new(&engine, Policy::Continuous { max_active: 2 })
+        .with_validate_every(1)
+        .serve(requests(6))
+        .unwrap();
+    assert_eq!(out.len(), 6);
+    let snap = engine.metrics_snapshot();
+    let ticks = snap.counter(Counter::TicksRun);
+    assert!(ticks > 0);
+    assert_eq!(
+        snap.counter(Counter::ValidationsRun),
+        ticks,
+        "--validate-every 1 must validate on every tick"
+    );
+}

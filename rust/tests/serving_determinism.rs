@@ -249,6 +249,57 @@ fn prefix_cache_under_preemption_byte_identical_across_runs() {
 }
 
 #[test]
+fn tracing_on_produces_byte_identical_tokens() {
+    // The observability layer's core contract: instrumentation is
+    // inert. The same engine + policy with tracing and metrics ON must
+    // produce the same responses IN THE SAME ORDER as with it off —
+    // and must actually have recorded something.
+    for policy in [Policy::Batched { batch: 3 }, Policy::Continuous { max_active: 3 }] {
+        let run = |traced: bool| {
+            let engine = Engine::load(Artifacts::synthetic(SEED).unwrap()).unwrap();
+            if traced {
+                engine.obs().set_enabled(true);
+            }
+            let out = pim_llm::serving::Server::new(&engine, policy)
+                .serve(mixed_requests())
+                .unwrap();
+            let events = engine.obs().trace.drain();
+            (token_streams(&out), events.len())
+        };
+        let (off, none) = run(false);
+        let (on, some) = run(true);
+        assert_eq!(off, on, "{policy:?}: tracing changed a token");
+        assert_eq!(none, 0, "{policy:?}: disabled obs recorded events");
+        assert!(some > 0, "{policy:?}: enabled obs recorded nothing");
+    }
+}
+
+#[test]
+fn tracing_on_under_preemption_and_prefix_cache_is_inert() {
+    // Tight arena + prefix cache + continuous scheduling is the
+    // busiest instrumentation path (preempt events, span rewinds, COW
+    // deltas, reclaim/eviction events) — and the most dangerous place
+    // for an observer effect. Token streams must not move.
+    let run = |traced: bool| {
+        let engine = prefix_engine(12).unwrap();
+        if traced {
+            engine.obs().set_enabled(true);
+        }
+        let out = pim_llm::serving::Server::new(&engine, Policy::Continuous { max_active: 8 })
+            .serve(prefix_heavy_requests())
+            .unwrap();
+        engine.debug_validate().unwrap();
+        let mut streams = token_streams(&out);
+        streams.sort_by_key(|(id, _)| *id);
+        (streams, engine.obs().trace.drain().len())
+    };
+    let (off, _) = run(false);
+    let (on, events) = run(true);
+    assert_eq!(off, on, "tracing changed a token under preemption");
+    assert!(events > 0);
+}
+
+#[test]
 fn degenerate_requests_complete_with_correct_shapes() {
     let out = serve_threaded_with(
         || Engine::load(Artifacts::synthetic(SEED)?),

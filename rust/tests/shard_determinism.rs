@@ -217,6 +217,51 @@ fn tight_arena_preemption_byte_identical() {
     }
 }
 
+#[test]
+fn tracing_on_is_byte_inert_across_worker_counts() {
+    // The observability contract on the sharded path: per-shard trace
+    // rings and metrics registries must not move a single token, at any
+    // worker count, even under tight-arena preemption churn — and every
+    // enabled run must actually record events on at least one shard.
+    let oracle = golden(mixed_requests());
+    for workers in [1usize, 2, 4] {
+        let n = mixed_requests().len();
+        let mut engine = ShardedEngine::load(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            6 * workers,
+            workers,
+        )
+        .unwrap();
+        engine.set_obs_enabled(true);
+        let offsets = vec![0.0; n];
+        let (out, stats) = pim_llm::serving::serve_sharded_stats_opts(
+            &mut engine,
+            mixed_requests(),
+            &offsets,
+            4,
+            2,
+        )
+        .unwrap();
+        assert_eq!(stats.iter().map(|s| s.served).sum::<usize>(), n);
+        engine.debug_validate().unwrap();
+        assert_eq!(
+            oracle,
+            token_streams(&out),
+            "{workers} workers: tracing changed a token"
+        );
+        let total: usize = engine.drain_traces().iter().map(|(_, e)| e.len()).sum();
+        assert!(total > 0, "{workers} workers: no events recorded");
+        let snap = engine.metrics_snapshot();
+        assert_eq!(
+            snap.counter(pim_llm::obs::Counter::Retired),
+            n as u64,
+            "{workers} workers: retire accounting diverged"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------
 // Property test: shard arenas under random churn with steals.
 // ---------------------------------------------------------------------
