@@ -40,6 +40,7 @@ cargo test -q --offline --test prefix_equivalence
 cargo test -q --offline --test shard_determinism
 cargo test -q --offline --test artifact_roundtrip
 cargo test -q --offline --test obs_trace
+cargo test -q --offline --test kvq_equivalence
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -85,6 +86,22 @@ cargo run -q --release --offline --bin repro -- serve --backend reference \
 cargo run -q --release --offline --bin repro -- serve --backend packed \
   --policy sharded --workers 4 --requests 12 --prompt-len 4 \
   --new-tokens 12 --max-active 3 --arena-blocks 24
+
+echo "== smoke: int8 KV arena at serving scale =="
+# --kv-quant int8 on BOTH host backends, with the SAME tight block
+# counts as the f32 smokes above (identical paging pressure at ~3.7x
+# fewer bytes): continuous batching with the prefix cache (shared
+# blocks + partial-tail adoption + preemption over quantized rows),
+# and sharded x4 over one partitioned int8 arena.
+for be in reference packed; do
+  cargo run -q --release --offline --bin repro -- serve --backend "$be" \
+    --kv-quant int8 --policy continuous --prefix-cache --requests 10 \
+    --prompt-len 12 --new-tokens 8 --max-active 8 --arena-blocks 10 \
+    --block-len 4
+  cargo run -q --release --offline --bin repro -- serve --backend "$be" \
+    --kv-quant int8 --policy sharded --workers 4 --requests 12 \
+    --prompt-len 4 --new-tokens 12 --max-active 3 --arena-blocks 24
+done
 
 echo "== smoke: observability on the sharded serving path =="
 # Tracing + metrics + per-tick validation end to end on BOTH host

@@ -40,9 +40,18 @@
 //! `--metrics` prints the counter/gauge/histogram snapshot. Both are
 //! inert — the token assertions below run identically with them on.
 //!
+//! KV quantization: `--kv-quant int8` stores cached K/V as group-scaled
+//! int8 (~4x the resident sessions per arena byte; host backends only).
+//! int8 tokens are deterministic and scheduler-independent, but lossy
+//! against f32, and prefix adoption of a PARTIAL block inherits the
+//! donor's coarser scale — so the bitwise token assertions below only
+//! run where bitwise equality is guaranteed. The example always ends
+//! with an f32-vs-int8 comparison at EQUAL arena bytes showing the
+//! resident-session / preemption trade.
+//!
 //! Run: `cargo run --release --example edge_serving -- \
 //!        --requests 32 --prompt-len 8 --new-tokens 16 --batch 8 \
-//!        [--policy continuous --arena-blocks 24] \
+//!        [--policy continuous --arena-blocks 24] [--kv-quant int8] \
 //!        [--prefix-cache] [--backend reference|packed] \
 //!        [--trace /tmp/edge.json] [--metrics]`
 
@@ -50,7 +59,7 @@ use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{token_loop, Arch};
 use pim_llm::models;
 use pim_llm::obs::export::write_chrome_trace;
-use pim_llm::runtime::{BackendKind, Engine, ShardedEngine};
+use pim_llm::runtime::{ArenaLayout, BackendKind, CacheLayout, Engine, ShardedEngine};
 use pim_llm::serving::{
     serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server,
 };
@@ -74,6 +83,7 @@ fn main() -> Result<()> {
     let policy = Policy::from_flags(args.get("policy"), batch, max_active, workers)?;
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
     let block_len = args.usize_or("block-len", 0)?;
+    let kv_quant = ArenaLayout::from_name(&args.str_or("kv-quant", "f32"))?;
     let prefix_cache = args.flag("prefix-cache");
     let prefix_cap = args.usize_or("prefix-cap", 0)?;
 
@@ -93,6 +103,7 @@ fn main() -> Result<()> {
             new_tokens,
             arena_blocks,
             block_len,
+            kv_quant,
             prefix_cache,
             prefix_cap,
         );
@@ -103,10 +114,11 @@ fn main() -> Result<()> {
     // selects the bitplane popcount executor — identical tokens, less
     // weight traffic).
     // ----------------------------------------------------------------
-    let engine = Engine::load_default_with_arena(
+    let engine = Engine::load_default_with_arena_mode(
         BackendKind::resolve(args.backend())?,
         block_len,
         arena_blocks,
+        kv_quant,
     )?;
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
     let metrics = args.flag("metrics");
@@ -122,13 +134,15 @@ fn main() -> Result<()> {
     let arena = engine.arena_status();
     println!(
         "engine up: backend={} platform={} tiny-1bit d={} ({} layers), policy={policy:?}, \
-         KV arena {} blocks x {} positions, prefix cache {}",
+         KV arena {} blocks x {} positions ({} bytes, kv={}), prefix cache {}",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.n_layers,
         arena.total_blocks,
         arena.block_len,
+        arena.total_bytes,
+        engine.arena_mode().name(),
         if engine.prefix_enabled() { "on" } else { "off" }
     );
 
@@ -186,23 +200,33 @@ fn main() -> Result<()> {
         .iter()
         .all(|r| r.tokens.len() == prompt_len + new_tokens));
 
-    // The prefix cache is a pure scheduling/storage optimization: the
-    // tokens must be identical to a cache-off run of the same workload.
+    // The prefix cache is a pure scheduling/storage optimization in f32:
+    // the tokens must be identical to a cache-off run of the same
+    // workload. In int8 a partial-block adoption keeps the donor's
+    // coarser group scale, so the guarantee weakens to bounded — the
+    // bitwise check only runs on the bit-exact layout.
     if engine.prefix_enabled() {
-        let off = Engine::load_default_with_arena(
-            BackendKind::resolve(args.backend())?,
-            block_len,
-            arena_blocks,
-        )?;
-        let cold = Server::new(&off, policy).serve(requests.clone())?;
-        for r in &responses {
-            let c = cold.iter().find(|c| c.id == r.id).expect("same ids");
-            assert_eq!(r.tokens, c.tokens, "prefix cache must not change tokens");
+        if kv_quant == ArenaLayout::F32 {
+            let off = Engine::load_default_with_arena(
+                BackendKind::resolve(args.backend())?,
+                block_len,
+                arena_blocks,
+            )?;
+            let cold = Server::new(&off, policy).serve(requests.clone())?;
+            for r in &responses {
+                let c = cold.iter().find(|c| c.id == r.id).expect("same ids");
+                assert_eq!(r.tokens, c.tokens, "prefix cache must not change tokens");
+            }
         }
         println!(
-            "  prefix cache saved {} of {} prompt tokens (identical tokens verified)",
+            "  prefix cache saved {} of {} prompt tokens{}",
             stats.cached_tokens,
-            n_requests * prompt_len
+            n_requests * prompt_len,
+            if kv_quant == ArenaLayout::F32 {
+                " (identical tokens verified)"
+            } else {
+                " (int8: partial-tail adoptions are bounded, not bitwise)"
+            }
         );
     }
 
@@ -222,16 +246,56 @@ fn main() -> Result<()> {
     };
     if let Some((base_policy, base_label, label)) = baseline {
         let t0 = Instant::now();
-        let base = Server::new(&engine, base_policy).serve(requests)?;
+        let base = Server::new(&engine, base_policy).serve(requests.clone())?;
         let base_wall = t0.elapsed().as_secs_f64();
-        for r in &responses {
-            let s = base.iter().find(|s| s.id == r.id).expect("same ids");
-            assert_eq!(r.tokens, s.tokens, "schedulers must agree token-for-token");
+        // Scheduler choice never changes tokens — except that with the
+        // prefix cache on in int8 mode, WHICH donor block a request
+        // adopts (and so which coarser scale a partial tail inherits)
+        // can differ between schedules; skip the bitwise check there.
+        if kv_quant == ArenaLayout::F32 || !engine.prefix_enabled() {
+            for r in &responses {
+                let s = base.iter().find(|s| s.id == r.id).expect("same ids");
+                assert_eq!(r.tokens, s.tokens, "schedulers must agree token-for-token");
+            }
         }
         println!(
             "\n{base_label} baseline: {base_wall:.2}s — {label} speedup {:.2}x \
              (identical tokens)",
             base_wall / wall.max(f64::MIN_POSITIVE)
+        );
+    }
+
+    // ----------------------------------------------------------------
+    // The int8 KV arena trade, at EQUAL arena bytes: size an f32 arena
+    // to roughly half the workload's worst-case block demand (so
+    // continuous batching has to preempt), give an int8 arena the SAME
+    // byte budget, and serve the identical stream through both.
+    // ----------------------------------------------------------------
+    println!("\n== --kv-quant int8 at equal arena bytes ==");
+    let kind = BackendKind::resolve(args.backend())?;
+    let geometry =
+        CacheLayout::with_block_len(&engine.artifacts.manifest.model, engine.block_len());
+    let worst_blocks = geometry.blocks_for_positions(prompt_len + new_tokens);
+    let budget = (worst_blocks * max_active.max(2) / 2).max(worst_blocks)
+        * geometry.block_bytes(ArenaLayout::F32);
+    for mode in [ArenaLayout::F32, ArenaLayout::KvInt8] {
+        let blocks = geometry.blocks_for_bytes(budget, mode);
+        let e = Engine::load_default_with_arena_mode(kind, engine.block_len(), blocks, mode)?;
+        let t0 = Instant::now();
+        let out = Server::new(&e, Policy::Continuous { max_active: n_requests.max(1) })
+            .serve(requests.clone())?;
+        let wall = t0.elapsed().as_secs_f64();
+        let s = LatencyStats::from_responses(&out, wall);
+        assert!(out.iter().all(|r| r.tokens.len() == prompt_len + new_tokens));
+        println!(
+            "  kv={:4} {:4} blocks = {:8} bytes | {:2} resident sessions | \
+             {:8.1} tok/s | {:3} preemptions",
+            mode.name(),
+            blocks,
+            e.arena_status().total_bytes,
+            blocks / worst_blocks.max(1),
+            s.tokens_per_s,
+            s.evictions,
         );
     }
 
@@ -291,11 +355,13 @@ fn sharded_scaling(
     new_tokens: usize,
     arena_blocks: usize,
     block_len: usize,
+    kv_quant: ArenaLayout,
     prefix_cache: bool,
     prefix_cap: usize,
 ) -> Result<()> {
     let kind = BackendKind::resolve(args.backend())?;
-    let mut engine = ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?;
+    let mut engine =
+        ShardedEngine::load_default_mode(kind, block_len, arena_blocks, workers, kv_quant)?;
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
     let metrics = args.flag("metrics");
     if trace_path.is_some() || metrics {
@@ -307,13 +373,15 @@ fn sharded_scaling(
     let arena = engine.arena_status();
     println!(
         "engine up: backend={} platform={}, sharded x{} workers ({} lanes each), \
-         KV arena {} blocks x {} positions total, prefix cache {}",
+         KV arena {} blocks x {} positions total ({} bytes, kv={}), prefix cache {}",
         engine.backend_name(),
         engine.platform(),
         engine.workers(),
         max_active,
         arena.total_blocks,
         arena.block_len,
+        arena.total_bytes,
+        engine.arena_mode().name(),
         if engine.prefix_enabled() { "on" } else { "off" }
     );
     let requests = workload(engine.vocab(), n_requests, prompt_len, new_tokens);
@@ -355,16 +423,21 @@ fn sharded_scaling(
 
     // 1-worker oracle at the SAME total capacity and per-worker lanes.
     let total = arena.total_blocks;
-    let mut one = ShardedEngine::load_default(kind, block_len, total, 1)?;
+    let mut one = ShardedEngine::load_default_mode(kind, block_len, total, 1, kv_quant)?;
     if prefix_cache {
         one.enable_prefix_cache(prefix_cap);
     }
     let t0 = Instant::now();
     let (base, _) = serve_sharded_stats(&mut one, requests, &offsets, max_active)?;
     let base_wall = t0.elapsed().as_secs_f64();
-    for r in &out {
-        let b = base.iter().find(|b| b.id == r.id).expect("same ids");
-        assert_eq!(r.tokens, b.tokens, "worker count must not change tokens");
+    // Worker count never changes tokens — except that with the prefix
+    // cache on in int8 mode, per-shard indices can hand different
+    // partial-tail scales to the same request; skip bitwise there.
+    if kv_quant == ArenaLayout::F32 || !prefix_cache {
+        for r in &out {
+            let b = base.iter().find(|b| b.id == r.id).expect("same ids");
+            assert_eq!(r.tokens, b.tokens, "worker count must not change tokens");
+        }
     }
     println!(
         "\n1-worker oracle: {base_wall:.2}s — {workers}-worker speedup {:.2}x \

@@ -1,0 +1,223 @@
+//! Bench for the int8 KV arena (`--kv-quant int8`): f32 vs int8 at
+//! EQUAL ARENA BYTES, on the staggered, generation-heavy continuous
+//! stream the serving story turns on.
+//!
+//! The claim being measured: an f32 block costs
+//! `2 * block_floats * 4` bytes, an int8 block
+//! `2 * (block_floats + groups * 4)` — ~3.9x denser at d_head 64 and
+//! ~3.7x at this bench's shapes — so the SAME byte budget holds ~4x the
+//! resident sessions. Under a capacity-constrained arena that is the
+//! whole game for continuous batching: fewer preemptions, more lanes
+//! actually occupied per weight traversal, more tokens/s from the same
+//! memory. The decode itself pays a small dequant cost per attention
+//! gather (int8 rows, i32 accumulation), so at a ROOMY arena int8 is
+//! expected to be slightly slower — the bench reports both regimes.
+//!
+//! Outputs per (model, layout): sessions the arena can hold resident
+//! (worst-case blocks per request), tokens/s, p95 service latency, and
+//! preemptions. Headline: int8 resident sessions / f32 resident
+//! sessions at equal bytes (target >= 3x), and the tokens/s ratio on
+//! the pressured arena.
+//!
+//! Emits `BENCH_kvq.json` at the repo root.
+//!
+//! Run: `cargo bench --bench runtime_kvq`
+
+use pim_llm::runtime::artifacts::ModelInfo;
+use pim_llm::runtime::{ArenaLayout, Artifacts, BackendKind, CacheLayout, Engine};
+use pim_llm::serving::{LatencyStats, Policy, Request, Server};
+use pim_llm::util::bench::{black_box, Bench};
+use pim_llm::util::error::Result;
+use std::time::Instant;
+
+const LANES: usize = 8;
+const N_REQUESTS: usize = 16;
+const BLOCK_LEN: usize = 4;
+
+/// Mixed-length, generation-heavy request stream (same shape as
+/// `runtime_continuous`, so the two benches read side by side).
+fn requests(vocab: usize) -> Vec<Request> {
+    (0..N_REQUESTS as u64)
+        .map(|id| {
+            let i = id as usize;
+            Request {
+                id,
+                prompt: (0..1 + i % 4)
+                    .map(|j| ((i * 31 + j * 7) % (vocab - 1) + 1) as i32)
+                    .collect(),
+                n_new: if i % 2 == 0 { 4 } else { 14 + (i % 4) * 2 },
+            }
+        })
+        .collect()
+}
+
+struct Point {
+    layout: &'static str,
+    arena_blocks: usize,
+    arena_bytes: usize,
+    resident_sessions: usize,
+    tokens_per_s: f64,
+    p95_service_s: f64,
+    evictions: usize,
+}
+
+fn serve_once(engine: &Engine, reqs: &[Request], offs: &[f64]) -> Result<(f64, f64, usize)> {
+    let t0 = Instant::now();
+    let out = Server::new(engine, Policy::Continuous { max_active: LANES })
+        .serve_arrivals(reqs.to_vec(), offs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &out {
+        assert!(!r.tokens.is_empty(), "request {} produced no tokens", r.id);
+    }
+    let stats = LatencyStats::from_responses(&out, wall);
+    Ok((stats.tokens_per_s, stats.p95_service_s, stats.evictions))
+}
+
+/// Bench one model at one byte budget under both layouts.
+fn bench_model(bench: &mut Bench, label: &str, artifacts: &Artifacts) -> Result<Vec<Point>> {
+    let reqs = requests(artifacts.manifest.model.vocab);
+    let total_tokens: usize = reqs.iter().map(|r| r.prompt.len() + r.n_new).sum();
+    let geometry = CacheLayout::with_block_len(&artifacts.manifest.model, BLOCK_LEN);
+    let worst_blocks_each = reqs
+        .iter()
+        .map(|r| (r.prompt.len() + r.n_new).div_ceil(BLOCK_LEN))
+        .max()
+        .unwrap();
+    // Byte budget: the f32 arena gets about a third of the stream's
+    // worst-case reservation demand (the pressured regime of
+    // `runtime_continuous`); the int8 arena gets the SAME bytes.
+    let budget = (worst_blocks_each * LANES / 3) * geometry.block_bytes(ArenaLayout::F32);
+    println!(
+        "  {label}: {} requests, {total_tokens} tokens, byte budget {budget} \
+         (worst case {worst_blocks_each} blocks/request, {LANES} lanes)",
+        reqs.len(),
+    );
+
+    // Stagger calibration on a roomy engine, shared by both layouts so
+    // the arrival shape is identical.
+    let roomy = Engine::load_with_arena(
+        artifacts.clone(),
+        BackendKind::Reference,
+        BLOCK_LEN,
+        worst_blocks_each * LANES,
+    )?;
+    let t0 = Instant::now();
+    Server::new(&roomy, Policy::Fifo).serve(vec![reqs[0].clone()])?;
+    let per_token =
+        t0.elapsed().as_secs_f64() / (reqs[0].prompt.len() + reqs[0].n_new) as f64;
+    let offs: Vec<f64> = (0..reqs.len()).map(|i| i as f64 * per_token * 2.0).collect();
+    drop(roomy);
+
+    let mut points = Vec::new();
+    for mode in [ArenaLayout::F32, ArenaLayout::KvInt8] {
+        let blocks = geometry.blocks_for_bytes(budget, mode);
+        let engine = Engine::load_with_arena_mode(
+            artifacts.clone(),
+            BackendKind::Reference,
+            BLOCK_LEN,
+            blocks,
+            mode,
+        )?;
+        let st = engine.arena_status();
+        let resident = blocks / worst_blocks_each;
+        let (_, p95, evict) = serve_once(&engine, &reqs, &offs)?;
+        let m = bench.run(&format!("{label}/kv_{}", mode.name()), || {
+            black_box(serve_once(&engine, &reqs, &offs).unwrap())
+        });
+        let tps = total_tokens as f64 / m.mean_s;
+        println!(
+            "  {label}: kv={:4} arena {blocks:3} blocks = {} bytes | {resident} resident \
+             sessions | {tps:9.1} tok/s | p95 {p95:7.3}s | {evict} preemptions",
+            mode.name(),
+            st.total_bytes,
+        );
+        points.push(Point {
+            layout: mode.name(),
+            arena_blocks: blocks,
+            arena_bytes: st.total_bytes,
+            resident_sessions: resident,
+            tokens_per_s: tps,
+            p95_service_s: p95,
+            evictions: evict,
+        });
+    }
+    Ok(points)
+}
+
+fn json_points(points: &[Point]) -> String {
+    points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"layout\": \"{}\", \"arena_blocks\": {}, \"arena_bytes\": {}, \
+                 \"resident_sessions\": {}, \"tokens_per_s\": {:.1}, \
+                 \"p95_service_s\": {:.4}, \"evictions\": {}}}",
+                p.layout,
+                p.arena_blocks,
+                p.arena_bytes,
+                p.resident_sessions,
+                p.tokens_per_s,
+                p.p95_service_s,
+                p.evictions
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n")
+}
+
+fn main() -> Result<()> {
+    let mut bench = Bench::quick();
+
+    println!("== tiny model (d=32, overhead-dominated) ==");
+    let tiny = Artifacts::synthetic(0)?;
+    let tiny_points = bench_model(&mut bench, "tiny", &tiny)?;
+
+    println!("\n== sized model (d=512, weights >> L2: the weight-traversal regime) ==");
+    let sized = Artifacts::synthetic_with(
+        0,
+        ModelInfo {
+            vocab: 512,
+            d: 512,
+            h: 8,
+            d_ff: 2048,
+            n_layers: 2,
+            max_ctx: 32,
+            eps: 1e-5,
+        },
+    )?;
+    let sized_points = bench_model(&mut bench, "sized", &sized)?;
+
+    let find = |pts: &[Point], l: &str| pts.iter().find(|p| p.layout == l).unwrap();
+    let (f, q) = (find(&sized_points, "f32"), find(&sized_points, "int8"));
+    let density = q.resident_sessions as f64 / (f.resident_sessions as f64).max(1.0);
+    println!(
+        "\nint8 KV arena at equal bytes, sized model: {density:.2}x resident sessions \
+         ({} vs {}), {:.2}x tokens/s, preemptions {} vs {} (target >= 3x sessions)",
+        q.resident_sessions,
+        f.resident_sessions,
+        q.tokens_per_s / f.tokens_per_s.max(f64::MIN_POSITIVE),
+        q.evictions,
+        f.evictions,
+    );
+    assert!(
+        q.resident_sessions >= 3 * f.resident_sessions.max(1),
+        "int8 must fit >= 3x the sessions at equal bytes \
+         ({} vs {})",
+        q.resident_sessions,
+        f.resident_sessions
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"runtime_kvq\",\n  \"block_len\": {BLOCK_LEN},\n  \
+         \"lanes\": {LANES},\n  \"requests\": {N_REQUESTS},\n  \
+         \"sessions_ratio_sized\": {density:.3},\n  \"tiny\": [\n{}\n  ],\n  \
+         \"sized\": [\n{}\n  ]\n}}\n",
+        json_points(&tiny_points),
+        json_points(&sized_points)
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kvq.json");
+    std::fs::write(path, &json)
+        .map_err(|e| pim_llm::anyhow!("writing {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -23,9 +23,11 @@ use pim_llm::analysis::{figures, report};
 use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{self, token_loop, Arch};
 use pim_llm::models;
-use pim_llm::obs::export::{check_trace_doc, write_chrome_trace};
+use pim_llm::obs::export::{check_trace_doc, write_chrome_trace_tagged};
 use pim_llm::quant::{write_tpk, PackedModel};
-use pim_llm::runtime::{decoder, default_artifacts, BackendKind, Engine, ShardedEngine};
+use pim_llm::runtime::{
+    decoder, default_artifacts, ArenaLayout, BackendKind, Engine, ShardedEngine,
+};
 use pim_llm::serving::{
     serve_sharded_stats_opts, shard_report, LatencyStats, Policy, Request, Server,
 };
@@ -43,7 +45,7 @@ SUBCOMMANDS
   sweep      --figure <fig1b|fig4|fig5|fig6|fig7|fig8|table3|all>
   serve      --requests N --prompt-len P --new-tokens T [--batch B | --max-active A]
              [--policy fifo|rr|batched|continuous|sharded] [--workers W]
-             [--arena-blocks K] [--block-len L]
+             [--arena-blocks K] [--block-len L] [--kv-quant f32|int8]
              [--prefix-cache] [--prefix-cap E]
              [--backend reference|packed|pjrt]
              (--policy continuous admits/retires sessions every tick
@@ -58,6 +60,12 @@ SUBCOMMANDS
               selects batched, else round-robin. --arena-blocks /
               --block-len size the KV arena (total across shards);
               0 = defaults.
+              --kv-quant int8 stores cached K/V as group-scaled int8
+              (one f32 scale per block/layer/head row group) — ~4x the
+              resident sessions per arena byte; attention gathers the
+              int8 rows and accumulates in i32, dequantizing at the
+              softmax boundary. Host backends only; f32 (the default)
+              stays the bit-exact oracle.
               --prefix-cache shares identical prompt prefixes across
               requests via copy-on-write cache blocks — matched prefill
               positions are skipped with bit-identical outputs;
@@ -258,6 +266,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // KV-cache arena geometry (0 = defaults); small --arena-blocks is
     // how to see the continuous policy's preemption path live.
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
+    // Arena storage layout: f32 (exact, the default) or group-scaled
+    // int8 (~4x resident sessions per arena byte, host backends only).
+    let kv_quant = ArenaLayout::from_name(&args.str_or("kv-quant", "f32"))?;
     let prefix_cache = args.flag("prefix-cache");
     let prefix_cap = args.usize_or("prefix-cap", 0)?;
     // Without an explicit --block-len, --prefix-cache sizes blocks to
@@ -309,13 +320,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } = policy
     {
         let mut engine = match &artifact {
-            Some(p) => ShardedEngine::load_default_packed_artifact(
+            Some(p) => ShardedEngine::load_default_packed_artifact_mode(
                 p,
                 block_len,
                 arena_blocks,
                 workers,
+                kv_quant,
             )?,
-            None => ShardedEngine::load_default(kind, block_len, arena_blocks, workers)?,
+            None => ShardedEngine::load_default_mode(
+                kind,
+                block_len,
+                arena_blocks,
+                workers,
+                kv_quant,
+            )?,
         };
         if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
             println!(
@@ -327,11 +345,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let arena = engine.arena_status();
         println!(
             "engine: backend={} platform={} model=tiny-1bit policy={policy:?} \
-             arena={} blocks x {} positions across {} shards prefix_cache={}",
+             arena={} blocks x {} positions ({} bytes, kv={}) across {} shards \
+             prefix_cache={}",
             engine.backend_name(),
             engine.platform(),
             arena.total_blocks,
             arena.block_len,
+            arena.total_bytes,
+            engine.arena_mode().name(),
             engine.workers(),
             engine.prefix_enabled()
         );
@@ -362,7 +383,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(path) = &trace_path {
             let tracks = engine.drain_traces();
             let events: usize = tracks.iter().map(|(_, evs)| evs.len()).sum();
-            write_chrome_trace(path, &tracks)?;
+            write_chrome_trace_tagged(path, &tracks, Some(engine.arena_mode().name()))?;
             println!(
                 "trace: {events} events across {} tracks -> {} (Perfetto-loadable)",
                 tracks.len(),
@@ -376,8 +397,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let engine = match &artifact {
-        Some(p) => Engine::load_default_packed_artifact(p, block_len, arena_blocks)?,
-        None => Engine::load_default_with_arena(kind, block_len, arena_blocks)?,
+        Some(p) => {
+            Engine::load_default_packed_artifact_mode(p, block_len, arena_blocks, kv_quant)?
+        }
+        None => Engine::load_default_with_arena_mode(kind, block_len, arena_blocks, kv_quant)?,
     };
     if prefix_cache && !engine.enable_prefix_cache(prefix_cap) {
         println!(
@@ -389,13 +412,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let arena = engine.arena_status();
     println!(
         "engine: backend={} platform={} model=tiny-1bit (d={}, {} layers) policy={policy:?} \
-         arena={} blocks x {} positions prefix_cache={}",
+         arena={} blocks x {} positions ({} bytes, kv={}) prefix_cache={}",
         engine.backend_name(),
         engine.platform(),
         engine.artifacts.manifest.model.d,
         engine.artifacts.manifest.model.n_layers,
         arena.total_blocks,
         arena.block_len,
+        arena.total_bytes,
+        engine.arena_mode().name(),
         engine.prefix_enabled()
     );
     if obs_on {
@@ -421,7 +446,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = &trace_path {
         let tracks = vec![(engine.obs().shard(), engine.obs().trace.drain())];
         let events = tracks[0].1.len();
-        write_chrome_trace(path, &tracks)?;
+        write_chrome_trace_tagged(path, &tracks, Some(engine.arena_mode().name()))?;
         println!(
             "trace: {events} events across 1 track -> {} (Perfetto-loadable)",
             path.display()

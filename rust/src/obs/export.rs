@@ -107,7 +107,28 @@ fn trace_event(tid: usize, ev: &Event) -> Json {
 /// `tracks` pairs each worker id with its chronological events. A
 /// `thread_name` metadata record labels each track in Perfetto.
 pub fn chrome_trace(tracks: &[(usize, Vec<Event>)]) -> Json {
+    chrome_trace_tagged(tracks, None)
+}
+
+/// [`chrome_trace`] with the serving run's arena layout recorded as a
+/// process-scoped metadata record (`process_labels`), so traces from
+/// f32 and int8 arenas are distinguishable side by side in Perfetto.
+/// Metadata records (`ph: "M"`) carry no timeline position, so taggers
+/// never perturb event counts or per-track monotonicity checks.
+pub fn chrome_trace_tagged(tracks: &[(usize, Vec<Event>)], arena_layout: Option<&str>) -> Json {
     let mut events = Vec::new();
+    if let Some(layout) = arena_layout {
+        events.push(obj(vec![
+            ("name", s("process_labels")),
+            ("ph", s("M")),
+            ("pid", n(0)),
+            ("tid", n(0)),
+            (
+                "args",
+                obj(vec![("labels", s(&format!("kv_arena={layout}")))]),
+            ),
+        ]));
+    }
     for &(tid, ref evs) in tracks {
         events.push(obj(vec![
             ("name", s("thread_name")),
@@ -131,7 +152,16 @@ pub fn chrome_trace(tracks: &[(usize, Vec<Event>)]) -> Json {
 
 /// Serialize [`chrome_trace`] to `path`.
 pub fn write_chrome_trace(path: &Path, tracks: &[(usize, Vec<Event>)]) -> Result<()> {
-    std::fs::write(path, chrome_trace(tracks).to_string())
+    write_chrome_trace_tagged(path, tracks, None)
+}
+
+/// Serialize [`chrome_trace_tagged`] to `path`.
+pub fn write_chrome_trace_tagged(
+    path: &Path,
+    tracks: &[(usize, Vec<Event>)],
+    arena_layout: Option<&str>,
+) -> Result<()> {
+    std::fs::write(path, chrome_trace_tagged(tracks, arena_layout).to_string())
         .with_context(|| format!("writing trace to {}", path.display()))
 }
 
@@ -217,6 +247,24 @@ mod tests {
             .map(|e| e.get("ph").unwrap().as_str().unwrap())
             .collect();
         assert!(phs.contains(&"b") && phs.contains(&"e"));
+    }
+
+    #[test]
+    fn layout_tag_is_metadata_only_and_survives_the_round_trip() {
+        let doc = chrome_trace_tagged(&demo_tracks(), Some("int8"));
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        // The tag never changes the counted-event or track totals.
+        assert_eq!(check_trace_doc(&parsed).unwrap(), (12, 1));
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let label = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "process_labels")
+            .expect("tagged trace carries a process_labels record");
+        assert_eq!(label.get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(
+            label.get("args").unwrap().get("labels").unwrap().as_str().unwrap(),
+            "kv_arena=int8"
+        );
     }
 
     #[test]

@@ -39,10 +39,14 @@ pub enum Counter {
     BlocksReclaimed,
     /// `debug_validate` passes run by `--validate-every`.
     ValidationsRun,
+    /// int8 KV blocks walked (dequantized at the group-scale boundary)
+    /// by the q8 attention gather — the traffic the quantized arena
+    /// trades the f32 gather for.
+    KvDequantBlocks,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 12] = [
+    pub const ALL: [Counter; 13] = [
         Counter::TicksRun,
         Counter::TokensDecoded,
         Counter::Admitted,
@@ -55,6 +59,7 @@ impl Counter {
         Counter::PrefixEvictions,
         Counter::BlocksReclaimed,
         Counter::ValidationsRun,
+        Counter::KvDequantBlocks,
     ];
 
     pub fn name(self) -> &'static str {
@@ -71,6 +76,7 @@ impl Counter {
             Counter::PrefixEvictions => "prefix_evictions",
             Counter::BlocksReclaimed => "blocks_reclaimed",
             Counter::ValidationsRun => "validations_run",
+            Counter::KvDequantBlocks => "kv_dequant_blocks",
         }
     }
 
@@ -92,15 +98,20 @@ pub enum Gauge {
     ActiveSessions,
     /// Requests waiting in the visible ready queue.
     QueueDepth,
+    /// Bytes backing referenced arena blocks (layout-aware: block
+    /// counts are incomparable between the f32 and int8 arenas, bytes
+    /// are the common denominator).
+    ArenaBytesUsed,
 }
 
 impl Gauge {
-    pub const ALL: [Gauge; 5] = [
+    pub const ALL: [Gauge; 6] = [
         Gauge::ArenaBlocksFree,
         Gauge::ArenaBlocksUsed,
         Gauge::PrefixEntries,
         Gauge::ActiveSessions,
         Gauge::QueueDepth,
+        Gauge::ArenaBytesUsed,
     ];
 
     pub fn name(self) -> &'static str {
@@ -110,6 +121,7 @@ impl Gauge {
             Gauge::PrefixEntries => "prefix_entries",
             Gauge::ActiveSessions => "active_sessions",
             Gauge::QueueDepth => "queue_depth",
+            Gauge::ArenaBytesUsed => "arena_bytes_used",
         }
     }
 

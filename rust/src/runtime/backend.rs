@@ -100,6 +100,17 @@ pub trait Backend {
         true
     }
 
+    /// Whether this backend's attention path can read an int8-layout
+    /// arena ([`crate::runtime::kvcache::ArenaLayout::KvInt8`]) through
+    /// [`crate::runtime::kernels::attention_paged_q8`]. The host
+    /// backends dispatch on the arena layout per step, so they support
+    /// it; backends with private contiguous f32 caches (PJRT's device
+    /// buffers) override this to `false` and engine assembly rejects
+    /// the combination up front instead of mis-decoding.
+    fn supports_kv_int8(&self) -> bool {
+        true
+    }
+
     /// Whether decoding the session at position `pos` would claim a
     /// cache block it does not yet hold — the serving layer's arena
     /// pressure signal. Backends whose caches are not arena blocks

@@ -22,7 +22,7 @@
 
 use super::artifacts::Artifacts;
 use super::backend::Backend;
-use super::kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
+use super::kvcache::{ArenaLayout, ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 use super::prefixcache::{PrefixCache, PrefixStats};
 use crate::obs::{Counter, EventKind, MetricsSnapshot, Obs};
 use crate::quant::PackedModel;
@@ -161,6 +161,19 @@ impl Engine {
         block_len: usize,
         capacity_blocks: usize,
     ) -> Result<Self> {
+        Self::load_with_arena_mode(artifacts, kind, block_len, capacity_blocks, ArenaLayout::F32)
+    }
+
+    /// [`Engine::load_with_arena`] with an explicit arena storage layout
+    /// ([`ArenaLayout::KvInt8`] stores K/V as group-scaled int8, ~4x the
+    /// resident sessions per arena byte) — what `--kv-quant` maps to.
+    pub fn load_with_arena_mode(
+        artifacts: Artifacts,
+        kind: BackendKind,
+        block_len: usize,
+        capacity_blocks: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
         let artifacts = Arc::new(artifacts);
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Reference => Box::new(
@@ -174,7 +187,7 @@ impl Engine {
                 Box::new(super::pjrt::PjrtBackend::new(Arc::clone(&artifacts))?)
             }
         };
-        Self::assemble(artifacts, backend, block_len, capacity_blocks)
+        Self::assemble(artifacts, backend, block_len, capacity_blocks, mode)
     }
 
     /// Load the packed backend straight from a `.tpk` artifact
@@ -189,13 +202,30 @@ impl Engine {
         block_len: usize,
         capacity_blocks: usize,
     ) -> Result<Self> {
+        Self::load_packed_artifact_mode(
+            artifacts,
+            tpk_path,
+            block_len,
+            capacity_blocks,
+            ArenaLayout::F32,
+        )
+    }
+
+    /// [`Engine::load_packed_artifact`] with an explicit arena layout.
+    pub fn load_packed_artifact_mode(
+        artifacts: Artifacts,
+        tpk_path: &Path,
+        block_len: usize,
+        capacity_blocks: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
         let artifacts = Arc::new(artifacts);
         let model = Arc::new(crate::quant::load_tpk(tpk_path, &artifacts)?);
         let backend: Box<dyn Backend> = Box::new(super::packed::PackedBackend::with_model(
             Arc::clone(&artifacts),
             model,
         )?);
-        Self::assemble(artifacts, backend, block_len, capacity_blocks)
+        Self::assemble(artifacts, backend, block_len, capacity_blocks, mode)
     }
 
     /// [`Engine::load_packed_artifact`] over the default artifacts
@@ -206,26 +236,53 @@ impl Engine {
         block_len: usize,
         capacity_blocks: usize,
     ) -> Result<Self> {
-        Self::load_packed_artifact(
+        Self::load_default_packed_artifact_mode(
+            tpk_path,
+            block_len,
+            capacity_blocks,
+            ArenaLayout::F32,
+        )
+    }
+
+    /// [`Engine::load_default_packed_artifact`] with an explicit arena
+    /// layout.
+    pub fn load_default_packed_artifact_mode(
+        tpk_path: &Path,
+        block_len: usize,
+        capacity_blocks: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
+        Self::load_packed_artifact_mode(
             default_artifacts(BackendKind::Packed)?,
             tpk_path,
             block_len,
             capacity_blocks,
+            mode,
         )
     }
 
     /// Shared tail of every loader: size the arena and box the parts.
+    /// Rejects an int8 arena on backends whose attention path cannot
+    /// read it ([`Backend::supports_kv_int8`]) — a load-time error beats
+    /// a silent mis-decode.
     fn assemble(
         artifacts: Arc<Artifacts>,
         backend: Box<dyn Backend>,
         block_len: usize,
         capacity_blocks: usize,
+        mode: ArenaLayout,
     ) -> Result<Self> {
+        crate::ensure!(
+            mode == ArenaLayout::F32 || backend.supports_kv_int8(),
+            "backend '{}' cannot read an int8 KV arena (--kv-quant int8 needs a \
+             host backend)",
+            backend.name()
+        );
         let layout = CacheLayout::with_block_len(&artifacts.manifest.model, block_len);
         let arena = if capacity_blocks == 0 {
-            CacheArena::with_sessions(layout, 0)?
+            CacheArena::with_sessions_mode(layout, 0, mode)?
         } else {
-            CacheArena::new(layout, capacity_blocks)?
+            CacheArena::new_with_mode(layout, capacity_blocks, mode)?
         };
         let obs = Arc::new(Obs::new(0));
         backend.install_obs(Arc::clone(&obs));
@@ -252,6 +309,22 @@ impl Engine {
         capacity_blocks: usize,
     ) -> Result<Self> {
         Self::load_with_arena(default_artifacts(kind)?, kind, block_len, capacity_blocks)
+    }
+
+    /// [`Engine::load_default_with_arena`] with an explicit arena layout.
+    pub fn load_default_with_arena_mode(
+        kind: BackendKind,
+        block_len: usize,
+        capacity_blocks: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
+        Self::load_with_arena_mode(
+            default_artifacts(kind)?,
+            kind,
+            block_len,
+            capacity_blocks,
+            mode,
+        )
     }
 
     /// Load from the default `artifacts/` directory; if no AOT artifacts
@@ -384,6 +457,11 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
     /// Cache positions per arena block.
     pub fn block_len(&self) -> usize {
         self.arena.borrow().layout().block_len
+    }
+
+    /// The arena's storage layout (f32 or group-scaled int8).
+    pub fn arena_mode(&self) -> ArenaLayout {
+        self.arena.borrow().mode()
     }
 
     /// Run the arena's full invariant check (refcount accounting, free
@@ -690,7 +768,20 @@ impl ShardedEngine {
         total_blocks: usize,
         workers: usize,
     ) -> Result<Self> {
-        Self::build(Arc::new(artifacts), kind, None, block_len, total_blocks, workers)
+        Self::load_mode(artifacts, kind, block_len, total_blocks, workers, ArenaLayout::F32)
+    }
+
+    /// [`ShardedEngine::load`] with an explicit arena storage layout —
+    /// every shard's partition shares the one layout.
+    pub fn load_mode(
+        artifacts: Artifacts,
+        kind: BackendKind,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
+        Self::build(Arc::new(artifacts), kind, None, block_len, total_blocks, workers, mode)
     }
 
     /// Sharded serving from a `.tpk` packed artifact: the model is
@@ -705,6 +796,26 @@ impl ShardedEngine {
         total_blocks: usize,
         workers: usize,
     ) -> Result<Self> {
+        Self::load_packed_artifact_mode(
+            artifacts,
+            tpk_path,
+            block_len,
+            total_blocks,
+            workers,
+            ArenaLayout::F32,
+        )
+    }
+
+    /// [`ShardedEngine::load_packed_artifact`] with an explicit arena
+    /// layout.
+    pub fn load_packed_artifact_mode(
+        artifacts: Artifacts,
+        tpk_path: &Path,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
         let artifacts = Arc::new(artifacts);
         let model = Arc::new(crate::quant::load_tpk(tpk_path, &artifacts)?);
         Self::build(
@@ -714,6 +825,7 @@ impl ShardedEngine {
             block_len,
             total_blocks,
             workers,
+            mode,
         )
     }
 
@@ -725,15 +837,35 @@ impl ShardedEngine {
         total_blocks: usize,
         workers: usize,
     ) -> Result<Self> {
-        Self::load_packed_artifact(
+        Self::load_default_packed_artifact_mode(
+            tpk_path,
+            block_len,
+            total_blocks,
+            workers,
+            ArenaLayout::F32,
+        )
+    }
+
+    /// [`ShardedEngine::load_default_packed_artifact`] with an explicit
+    /// arena layout.
+    pub fn load_default_packed_artifact_mode(
+        tpk_path: &Path,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
+        Self::load_packed_artifact_mode(
             default_artifacts(BackendKind::Packed)?,
             tpk_path,
             block_len,
             total_blocks,
             workers,
+            mode,
         )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build(
         artifacts: Arc<Artifacts>,
         kind: BackendKind,
@@ -741,6 +873,7 @@ impl ShardedEngine {
         block_len: usize,
         total_blocks: usize,
         workers: usize,
+        mode: ArenaLayout,
     ) -> Result<Self> {
         crate::ensure!(workers >= 1, "sharded engine needs at least one worker");
         let layout = CacheLayout::with_block_len(&artifacts.manifest.model, block_len);
@@ -749,11 +882,16 @@ impl ShardedEngine {
         } else {
             total_blocks
         };
-        let shards = CacheArena::split(layout, total, workers)?
+        let shards = CacheArena::split_mode(layout, total, workers, mode)?
             .into_iter()
             .enumerate()
             .map(|(w, arena)| {
                 let backend = host_backend(&artifacts, kind, packed)?;
+                crate::ensure!(
+                    mode == ArenaLayout::F32 || backend.supports_kv_int8(),
+                    "backend '{}' cannot read an int8 KV arena",
+                    backend.name()
+                );
                 // One bundle per shard: worker id names the trace track.
                 let obs = Arc::new(Obs::new(w));
                 backend.install_obs(Arc::clone(&obs));
@@ -779,6 +917,24 @@ impl ShardedEngine {
         workers: usize,
     ) -> Result<Self> {
         Self::load(default_artifacts(kind)?, kind, block_len, total_blocks, workers)
+    }
+
+    /// [`ShardedEngine::load_default`] with an explicit arena layout.
+    pub fn load_default_mode(
+        kind: BackendKind,
+        block_len: usize,
+        total_blocks: usize,
+        workers: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
+        Self::load_mode(
+            default_artifacts(kind)?,
+            kind,
+            block_len,
+            total_blocks,
+            workers,
+            mode,
+        )
     }
 
     pub fn workers(&self) -> usize {
@@ -850,8 +1006,9 @@ impl ShardedEngine {
         self.shards.iter().map(|s| s.prefix_entries()).sum()
     }
 
-    /// Arena occupancy merged across shards (block counts summed; the
-    /// block length is uniform by construction).
+    /// Arena occupancy merged across shards (block counts and byte
+    /// totals summed; the block length and per-block byte cost are
+    /// uniform by construction, so they carry over from shard 0).
     pub fn arena_status(&self) -> ArenaStatus {
         let mut merged = self.shards[0].arena_status();
         for s in &self.shards[1..] {
@@ -861,6 +1018,8 @@ impl ShardedEngine {
             merged.used_blocks += st.used_blocks;
             merged.live_sessions += st.live_sessions;
             merged.pinned_blocks += st.pinned_blocks;
+            merged.total_bytes += st.total_bytes;
+            merged.used_bytes += st.used_bytes;
         }
         merged
     }
@@ -876,6 +1035,11 @@ impl ShardedEngine {
 
     pub fn block_len(&self) -> usize {
         self.shards[0].block_len()
+    }
+
+    /// The arena storage layout (uniform across shards).
+    pub fn arena_mode(&self) -> ArenaLayout {
+        self.shards[0].arena_mode()
     }
 
     pub fn vocab(&self) -> usize {
@@ -1298,6 +1462,52 @@ mod tests {
             0
         )
         .is_err());
+    }
+
+    #[test]
+    fn int8_engines_decode_and_report_byte_accounting() {
+        let e = Engine::load_with_arena_mode(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            8,
+            ArenaLayout::KvInt8,
+        )
+        .unwrap();
+        assert_eq!(e.arena_mode(), ArenaLayout::KvInt8);
+        let st = e.arena_status();
+        assert_eq!(st.total_blocks, 8);
+        assert_eq!(st.total_bytes, 8 * st.block_bytes);
+        assert_eq!(st.used_bytes, 0);
+        // An int8 block costs roughly a quarter of the f32 block.
+        let f32e = Engine::load_with_arena(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            8,
+        )
+        .unwrap();
+        assert_eq!(f32e.arena_mode(), ArenaLayout::F32);
+        assert!(st.block_bytes * 3 < f32e.arena_status().block_bytes);
+        // Decode runs and produces finite logits; bytes track blocks.
+        let s = e.new_session().unwrap();
+        let logits = e.decode_step(s, 1, 0).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(e.arena_status().used_bytes, st.block_bytes);
+        e.free_session(s).unwrap();
+        e.debug_validate().unwrap();
+        // Sharded facade: split keeps the layout, bytes merge by sum.
+        let se = ShardedEngine::load_mode(
+            Artifacts::synthetic(1).unwrap(),
+            BackendKind::Reference,
+            4,
+            16,
+            2,
+            ArenaLayout::KvInt8,
+        )
+        .unwrap();
+        assert_eq!(se.arena_mode(), ArenaLayout::KvInt8);
+        assert_eq!(se.arena_status().total_bytes, 16 * st.block_bytes);
     }
 
     #[test]

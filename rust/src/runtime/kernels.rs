@@ -305,6 +305,99 @@ pub fn attention_paged(
     out
 }
 
+/// Multi-head attention over an int8-layout paged arena
+/// ([`crate::runtime::kvcache::ArenaLayout::KvInt8`]): the decode-side
+/// kernel of the quantized KV cache. Instead of gathering f32 rows, it
+/// walks the int8 code blocks IN PLACE
+/// ([`crate::runtime::kvcache::PagedKv::for_each_block_q8`]) and
+/// accumulates both W8A8 matmuls in i32 against the int8-quantized
+/// query / probability vectors, dequantizing per (block, layer, head)
+/// row-group only at the softmax boundary and at the PV epilogue — so
+/// the memory-bound gather moves one byte per cached element instead of
+/// four, and no f32 copy of the window is ever materialized.
+///
+/// Numerics vs the f32 oracle ([`attention_paged`]): the query and
+/// probability vectors quantize under the identical `act_scale` rule,
+/// and the K/V codes were stored under the same rule per row-group — so
+/// when the window spans ONE block whose group absmax equals the
+/// window absmax and every stored value already sits on the int8 grid,
+/// the score and output arithmetic is the same integer sequence and the
+/// result is bit-for-bit equal. Otherwise divergence is bounded by the
+/// K/V quantization step (at most ~1.5 steps per element after a
+/// requantize-on-grow), which `tests/kvq_equivalence.rs` pins.
+///
+/// i32 accumulator safety: QK^T is bounded by `dh * 127^2` and each
+/// per-block PV partial by `block_len * 127^2` — both far inside i32
+/// for every shape this runtime sees.
+pub fn attention_paged_q8(
+    q: &[f32],
+    kv: &crate::runtime::kvcache::PagedKv<'_>,
+    layer: usize,
+    pos: usize,
+) -> Vec<f32> {
+    let (h, dh) = (kv.heads(), kv.head_dim());
+    let valid = pos + 1; // causal: slots [0, pos]
+    let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; h * dh];
+    let mut q_q = vec![0i32; dh];
+    let mut p_q = vec![0i32; valid];
+    let mut scores = vec![0.0f32; valid];
+    let mut acc = vec![0i32; dh];
+    for head in 0..h {
+        let q_head = &q[head * dh..(head + 1) * dh];
+        let q_s = act_scale(q_head);
+        for (qq, &x) in q_q.iter_mut().zip(q_head) {
+            *qq = (x * q_s).round().clamp(-128.0, 127.0) as i32;
+        }
+
+        // Score = q . K^T in i32, dequantized per block row-group.
+        let mut t = 0usize;
+        kv.for_each_block_q8(layer, head, valid, |k8, _v8, k_amax, _v_amax, rows| {
+            let k_s = 127.0 / k_amax.max(1e-5);
+            let inv_scale = 1.0 / (q_s * k_s);
+            for r in 0..rows {
+                let row = &k8[r * dh..(r + 1) * dh];
+                let mut a = 0i32;
+                for (&qq, &kk) in q_q.iter().zip(row) {
+                    a += qq * i32::from(kk);
+                }
+                scores[t] = a as f32 * inv_scale * inv_sqrt_dh;
+                t += 1;
+            }
+        });
+        softmax(&mut scores);
+
+        // Out = probs . V, probs int8-quantized under the shared rule,
+        // accumulated in i32 per block and dequantized per row-group.
+        let p_s = act_scale(&scores);
+        for (pq, &p) in p_q.iter_mut().zip(scores.iter()) {
+            *pq = (p * p_s).round().clamp(-128.0, 127.0) as i32;
+        }
+        let o = &mut out[head * dh..(head + 1) * dh];
+        let mut t = 0usize;
+        kv.for_each_block_q8(layer, head, valid, |_k8, v8, _k_amax, v_amax, rows| {
+            let v_s = 127.0 / v_amax.max(1e-5);
+            let inv_scale = 1.0 / (p_s * v_s);
+            acc.fill(0);
+            for r in 0..rows {
+                let pv = p_q[t];
+                t += 1;
+                if pv == 0 {
+                    continue;
+                }
+                let row = &v8[r * dh..(r + 1) * dh];
+                for (aj, &vj) in acc.iter_mut().zip(row) {
+                    *aj += pv * i32::from(vj);
+                }
+            }
+            for (oj, &aj) in o.iter_mut().zip(acc.iter()) {
+                *oj += aj as f32 * inv_scale;
+            }
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,6 +521,92 @@ mod tests {
                 let contiguous = attention(&q, &kc, &vc, layer, pos, h, max_ctx, dh);
                 let paged = attention_paged(&q, &arena.view(s).unwrap(), layer, pos);
                 assert_eq!(contiguous, paged, "layer {layer} pos {pos}");
+            }
+        }
+    }
+
+    fn tiny_model(max_ctx: usize) -> crate::runtime::artifacts::ModelInfo {
+        crate::runtime::artifacts::ModelInfo {
+            vocab: 8,
+            d: 8,
+            h: 2,
+            d_ff: 8,
+            n_layers: 2,
+            max_ctx,
+            eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn q8_attention_is_exact_on_grid_aligned_single_block_windows() {
+        // K/V values in {-1, 0, 1} quantize losslessly (group absmax 1,
+        // scale 127) and — inside one block, where the f32 oracle's
+        // whole-window scale equals the group scale — the q8 kernel runs
+        // the identical integer sequence, so outputs match bit for bit.
+        use crate::runtime::kvcache::{ArenaLayout, CacheArena, CacheLayout};
+        let m = tiny_model(8);
+        let (h, dh) = (m.h, m.d / m.h);
+        let layout = CacheLayout::with_block_len(&m, 8); // one block covers all
+        let mut fa = CacheArena::new_with_mode(layout.clone(), 4, ArenaLayout::F32).unwrap();
+        let mut qa = CacheArena::new_with_mode(layout, 4, ArenaLayout::KvInt8).unwrap();
+        let fs = fa.alloc_session().unwrap();
+        let qs = qa.alloc_session().unwrap();
+        let mut rng = crate::util::rng::Rng::new(21);
+        for pos in 0..8usize {
+            fa.ensure_capacity(fs, pos).unwrap();
+            qa.ensure_capacity(qs, pos).unwrap();
+            for layer in 0..m.n_layers {
+                let k_row: Vec<f32> =
+                    (0..h * dh).map(|_| rng.range(0, 2) as f32 - 1.0).collect();
+                let v_row: Vec<f32> =
+                    (0..h * dh).map(|_| rng.range(0, 2) as f32 - 1.0).collect();
+                fa.write_kv(fs, layer, pos, &k_row, &v_row).unwrap();
+                qa.write_kv(qs, layer, pos, &k_row, &v_row).unwrap();
+            }
+            let q: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+            for layer in 0..m.n_layers {
+                let oracle = attention_paged(&q, &fa.view(fs).unwrap(), layer, pos);
+                let q8 = attention_paged_q8(&q, &qa.view(qs).unwrap(), layer, pos);
+                assert_eq!(oracle, q8, "layer {layer} pos {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_attention_tracks_the_f32_oracle_within_quantization_error() {
+        // Random normal K/V across an awkward block length (windows
+        // straddle blocks, group scales grow as rows arrive): the q8
+        // output must stay within a small absolute band of the f32
+        // paged oracle on the same written rows.
+        use crate::runtime::kvcache::{ArenaLayout, CacheArena, CacheLayout};
+        let m = tiny_model(11);
+        let (h, dh) = (m.h, m.d / m.h);
+        let layout = CacheLayout::with_block_len(&m, 3);
+        let mut fa = CacheArena::new_with_mode(layout.clone(), 16, ArenaLayout::F32).unwrap();
+        let mut qa = CacheArena::new_with_mode(layout, 16, ArenaLayout::KvInt8).unwrap();
+        let fs = fa.alloc_session().unwrap();
+        let qs = qa.alloc_session().unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        for pos in 0..m.max_ctx {
+            fa.ensure_capacity(fs, pos).unwrap();
+            qa.ensure_capacity(qs, pos).unwrap();
+            for layer in 0..m.n_layers {
+                let k_row: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+                let v_row: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+                fa.write_kv(fs, layer, pos, &k_row, &v_row).unwrap();
+                qa.write_kv(qs, layer, pos, &k_row, &v_row).unwrap();
+            }
+            let q: Vec<f32> = (0..h * dh).map(|_| rng.normal() as f32).collect();
+            for layer in 0..m.n_layers {
+                let oracle = attention_paged(&q, &fa.view(fs).unwrap(), layer, pos);
+                let q8 = attention_paged_q8(&q, &qa.view(qs).unwrap(), layer, pos);
+                for (a, b) in oracle.iter().zip(&q8) {
+                    assert!(
+                        (a - b).abs() < 0.05,
+                        "layer {layer} pos {pos}: {a} vs {b}"
+                    );
+                    assert!(b.is_finite());
+                }
             }
         }
     }

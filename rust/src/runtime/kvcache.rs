@@ -50,6 +50,48 @@
 
 use crate::util::error::{anyhow, ensure, Result};
 
+/// Storage precision of the arena's K/V pools.
+///
+/// * [`ArenaLayout::F32`] — the original layout, one f32 per element.
+///   Bit-exact: every equivalence suite holds it to the contiguous
+///   oracle, and it stays the default everywhere.
+/// * [`ArenaLayout::KvInt8`] — W8 KV storage: each (block, layer, head)
+///   row-group holds `block_len * d_head` int8 codes plus ONE f32
+///   absmax per pool (K and V separately), quantized with the same
+///   symmetric absmax rule as the activation path
+///   (`kernels::act_scale` / `act_quant_int8`). ~4x more cached
+///   positions per arena byte; attention over it runs through
+///   [`crate::runtime::kernels::attention_paged_q8`], which accumulates
+///   QK^T and PV in i32 and dequantizes only at the softmax boundary.
+///   Divergence from the f32 oracle is bounded by the quantization step
+///   (exact when the stored values already sit on the int8 grid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArenaLayout {
+    F32,
+    KvInt8,
+}
+
+impl ArenaLayout {
+    /// CLI / report name of the layout.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArenaLayout::F32 => "f32",
+            ArenaLayout::KvInt8 => "int8",
+        }
+    }
+
+    /// Parse a `--kv-quant` flag value.
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(ArenaLayout::F32),
+            "int8" => Ok(ArenaLayout::KvInt8),
+            other => Err(anyhow!(
+                "unknown KV quantization '{other}' (expected 'f32' or 'int8')"
+            )),
+        }
+    }
+}
+
 /// Default number of positions per cache block (vLLM-style granularity;
 /// clamped to `max_ctx` for tiny models).
 pub const DEFAULT_BLOCK_LEN: usize = 16;
@@ -95,6 +137,28 @@ impl CacheLayout {
     /// Floats per block in EACH of the K and V pools.
     pub fn block_floats(&self) -> usize {
         self.block_len * self.n_layers * self.h * self.dh
+    }
+
+    /// Scale row-groups per block — one per (layer, head) pair, in each
+    /// of the K and V pools (int8 layout only).
+    pub fn block_groups(&self) -> usize {
+        self.n_layers * self.h
+    }
+
+    /// Bytes one block occupies across BOTH pools in the given layout,
+    /// including the int8 layout's per-group f32 scale metadata — the
+    /// denominator for equal-bytes arena sizing across layouts.
+    pub fn block_bytes(&self, mode: ArenaLayout) -> usize {
+        match mode {
+            ArenaLayout::F32 => 2 * self.block_floats() * 4,
+            ArenaLayout::KvInt8 => 2 * (self.block_floats() + self.block_groups() * 4),
+        }
+    }
+
+    /// Blocks a byte budget buys in the given layout (floor; >= 1 only
+    /// if the budget covers a block).
+    pub fn blocks_for_bytes(&self, bytes: usize, mode: ArenaLayout) -> usize {
+        bytes / self.block_bytes(mode)
     }
 
     /// Blocks needed to back `n` positions (0 positions -> 0 blocks).
@@ -151,6 +215,14 @@ pub struct ArenaStatus {
     /// Blocks currently pinned by the prefix index (each counted once,
     /// however many pins it holds).
     pub pinned_blocks: usize,
+    /// Bytes of one block in the active layout (K + V pools plus any
+    /// scale metadata) — block counts are incomparable across layouts,
+    /// bytes are the common denominator.
+    pub block_bytes: usize,
+    /// Total arena storage bytes (`total_blocks * block_bytes`).
+    pub total_bytes: usize,
+    /// Bytes backing referenced blocks (`used_blocks * block_bytes`).
+    pub used_bytes: usize,
 }
 
 /// The shared block-paged KV-cache pool. K and V live in two flat f32
@@ -159,8 +231,22 @@ pub struct ArenaStatus {
 /// sequence, which keeps serving runs reproducible).
 pub struct CacheArena {
     layout: CacheLayout,
+    /// Storage precision of the pools below (fixed at construction).
+    mode: ArenaLayout,
+    capacity_blocks: usize,
+    /// f32-layout pools (empty in int8 mode).
     k: Vec<f32>,
     v: Vec<f32>,
+    /// int8-layout pools (empty in f32 mode): `capacity * block_floats`
+    /// codes each, plus one f32 absmax per (block, layer, head)
+    /// row-group per pool. The scale of a group is derived from its
+    /// absmax exactly like the activation path
+    /// (`127.0 / absmax.max(1e-5)`), so K/V rows quantize under the
+    /// same rule as every int8 activation in the decode step.
+    k8: Vec<i8>,
+    v8: Vec<i8>,
+    k_amax: Vec<f32>,
+    v_amax: Vec<f32>,
     /// Free block ids, popped from the back.
     free: Vec<u32>,
     /// Per-block reference count: table occurrences across live slots
@@ -180,22 +266,43 @@ pub struct CacheArena {
 }
 
 impl CacheArena {
-    /// Arena with an explicit block capacity (`>= 1`).
+    /// Arena with an explicit block capacity (`>= 1`) in the default
+    /// (f32, bit-exact) layout.
     pub fn new(layout: CacheLayout, capacity_blocks: usize) -> Result<Self> {
+        Self::new_with_mode(layout, capacity_blocks, ArenaLayout::F32)
+    }
+
+    /// Arena with an explicit block capacity and storage layout.
+    pub fn new_with_mode(
+        layout: CacheLayout,
+        capacity_blocks: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
         ensure!(capacity_blocks >= 1, "arena needs at least one block");
         ensure!(
             layout.block_floats() > 0,
             "degenerate cache layout {layout:?}"
         );
         let bf = layout.block_floats();
+        let bg = layout.block_groups();
+        let (fpool, qpool, spool) = match mode {
+            ArenaLayout::F32 => (capacity_blocks * bf, 0, 0),
+            ArenaLayout::KvInt8 => (0, capacity_blocks * bf, capacity_blocks * bg),
+        };
         Ok(Self {
-            k: vec![0.0; capacity_blocks * bf],
-            v: vec![0.0; capacity_blocks * bf],
+            k: vec![0.0; fpool],
+            v: vec![0.0; fpool],
+            k8: vec![0; qpool],
+            v8: vec![0; qpool],
+            k_amax: vec![0.0; spool],
+            v_amax: vec![0.0; spool],
             // Reversed so blocks are first handed out in 0, 1, 2... order.
             free: (0..capacity_blocks as u32).rev().collect(),
             refs: vec![0; capacity_blocks],
             pins: vec![0; capacity_blocks],
             layout,
+            mode,
+            capacity_blocks,
             slots: Vec::new(),
             free_slots: Vec::new(),
             cow_copies: 0,
@@ -205,13 +312,22 @@ impl CacheArena {
     /// Arena sized for `sessions` worst-case (full-context) sessions
     /// (`0` selects [`DEFAULT_ARENA_SESSIONS`]).
     pub fn with_sessions(layout: CacheLayout, sessions: usize) -> Result<Self> {
+        Self::with_sessions_mode(layout, sessions, ArenaLayout::F32)
+    }
+
+    /// [`Self::with_sessions`] with an explicit storage layout.
+    pub fn with_sessions_mode(
+        layout: CacheLayout,
+        sessions: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
         let sessions = if sessions == 0 {
             DEFAULT_ARENA_SESSIONS
         } else {
             sessions
         };
         let blocks = layout.blocks_per_session().max(1) * sessions;
-        Self::new(layout, blocks)
+        Self::new_with_mode(layout, blocks, mode)
     }
 
     /// Partition `total_blocks` of capacity into `shards` independent
@@ -227,6 +343,17 @@ impl CacheArena {
     /// same partition. Per-shard accounting is checked by calling
     /// [`CacheArena::debug_validate`] on each returned arena.
     pub fn split(layout: CacheLayout, total_blocks: usize, shards: usize) -> Result<Vec<Self>> {
+        Self::split_mode(layout, total_blocks, shards, ArenaLayout::F32)
+    }
+
+    /// [`Self::split`] with an explicit storage layout — every shard
+    /// inherits the same mode (a fleet never mixes precisions).
+    pub fn split_mode(
+        layout: CacheLayout,
+        total_blocks: usize,
+        shards: usize,
+        mode: ArenaLayout,
+    ) -> Result<Vec<Self>> {
         ensure!(shards >= 1, "need at least one shard");
         ensure!(
             total_blocks >= shards,
@@ -235,12 +362,17 @@ impl CacheArena {
         let base = total_blocks / shards;
         let rem = total_blocks % shards;
         (0..shards)
-            .map(|i| Self::new(layout.clone(), base + usize::from(i < rem)))
+            .map(|i| Self::new_with_mode(layout.clone(), base + usize::from(i < rem), mode))
             .collect()
     }
 
     pub fn layout(&self) -> &CacheLayout {
         &self.layout
+    }
+
+    /// Storage precision of this arena's pools.
+    pub fn mode(&self) -> ArenaLayout {
+        self.mode
     }
 
     /// Lifetime copy-on-write block copies (monotonic; never reset).
@@ -249,13 +381,19 @@ impl CacheArena {
     }
 
     pub fn status(&self) -> ArenaStatus {
+        let total = self.capacity_blocks;
+        let used = total - self.free.len();
+        let bb = self.layout.block_bytes(self.mode);
         ArenaStatus {
-            total_blocks: self.k.len() / self.layout.block_floats(),
+            total_blocks: total,
             free_blocks: self.free.len(),
-            used_blocks: self.k.len() / self.layout.block_floats() - self.free.len(),
+            used_blocks: used,
             block_len: self.layout.block_len,
             live_sessions: self.slots.iter().filter(|s| s.live).count(),
             pinned_blocks: self.pins.iter().filter(|&&p| p > 0).count(),
+            block_bytes: bb,
+            total_bytes: total * bb,
+            used_bytes: used * bb,
         }
     }
 
@@ -353,8 +491,20 @@ impl CacheArena {
         let b = self.free.pop()?;
         let bf = self.layout.block_floats();
         let base = b as usize * bf;
-        self.k[base..base + bf].fill(0.0);
-        self.v[base..base + bf].fill(0.0);
+        match self.mode {
+            ArenaLayout::F32 => {
+                self.k[base..base + bf].fill(0.0);
+                self.v[base..base + bf].fill(0.0);
+            }
+            ArenaLayout::KvInt8 => {
+                self.k8[base..base + bf].fill(0);
+                self.v8[base..base + bf].fill(0);
+                let bg = self.layout.block_groups();
+                let gbase = b as usize * bg;
+                self.k_amax[gbase..gbase + bg].fill(0.0);
+                self.v_amax[gbase..gbase + bg].fill(0.0);
+            }
+        }
         debug_assert_eq!(self.refs[b as usize], 0);
         self.refs[b as usize] = 1;
         Some(b)
@@ -476,11 +626,29 @@ impl CacheArena {
         };
         let bf = l.block_floats();
         let (ob, nb) = (old as usize * bf, fresh as usize * bf);
-        for lh in 0..l.n_layers * l.h {
+        for lh in 0..l.block_groups() {
             let off = lh * l.block_len * l.dh;
             let n = keep_rows * l.dh;
-            self.k.copy_within(ob + off..ob + off + n, nb + off);
-            self.v.copy_within(ob + off..ob + off + n, nb + off);
+            match self.mode {
+                ArenaLayout::F32 => {
+                    self.k.copy_within(ob + off..ob + off + n, nb + off);
+                    self.v.copy_within(ob + off..ob + off + n, nb + off);
+                }
+                // int8: copy the codes AND the group scales verbatim, so
+                // the adopter dequantizes the kept rows to exactly the
+                // donor's values (the zeroed tail dequantizes to 0 under
+                // any scale).
+                ArenaLayout::KvInt8 => {
+                    self.k8.copy_within(ob + off..ob + off + n, nb + off);
+                    self.v8.copy_within(ob + off..ob + off + n, nb + off);
+                }
+            }
+        }
+        if self.mode == ArenaLayout::KvInt8 {
+            let bg = l.block_groups();
+            let (og, ng) = (old as usize * bg, fresh as usize * bg);
+            self.k_amax.copy_within(og..og + bg, ng);
+            self.v_amax.copy_within(og..og + bg, ng);
         }
         self.slots[h.index as usize].table[block_idx] = fresh;
         self.release_ref(old);
@@ -590,8 +758,31 @@ impl CacheArena {
         let bf = l.block_floats();
         for head in 0..l.h {
             let dst = block as usize * bf + ((layer * l.h + head) * l.block_len + pib) * l.dh;
-            self.k[dst..dst + l.dh].copy_from_slice(&k_row[head * l.dh..(head + 1) * l.dh]);
-            self.v[dst..dst + l.dh].copy_from_slice(&v_row[head * l.dh..(head + 1) * l.dh]);
+            let ks = &k_row[head * l.dh..(head + 1) * l.dh];
+            let vs = &v_row[head * l.dh..(head + 1) * l.dh];
+            match self.mode {
+                ArenaLayout::F32 => {
+                    self.k[dst..dst + l.dh].copy_from_slice(ks);
+                    self.v[dst..dst + l.dh].copy_from_slice(vs);
+                }
+                ArenaLayout::KvInt8 => {
+                    let g = block as usize * l.block_groups() + layer * l.h + head;
+                    let gbase = block as usize * bf + (layer * l.h + head) * l.block_len * l.dh;
+                    let rows = l.block_len * l.dh;
+                    quantize_row_into_group(
+                        ks,
+                        &mut self.k8[gbase..gbase + rows],
+                        &mut self.k_amax[g],
+                        pib * l.dh,
+                    );
+                    quantize_row_into_group(
+                        vs,
+                        &mut self.v8[gbase..gbase + rows],
+                        &mut self.v_amax[g],
+                        pib * l.dh,
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -602,6 +793,11 @@ impl CacheArena {
         Ok(PagedKv {
             k: &self.k,
             v: &self.v,
+            k8: &self.k8,
+            v8: &self.v8,
+            k_amax: &self.k_amax,
+            v_amax: &self.v_amax,
+            mode: self.mode,
             table: &slot.table,
             layout: &self.layout,
         })
@@ -625,10 +821,30 @@ impl CacheArena {
                 for head in 0..l.h {
                     let src = block as usize * bf + ((layer * l.h + head) * l.block_len) * l.dh;
                     let dst = ((layer * l.h + head) * l.max_ctx + pos0) * l.dh;
-                    kc[dst..dst + rows * l.dh]
-                        .copy_from_slice(&self.k[src..src + rows * l.dh]);
-                    vc[dst..dst + rows * l.dh]
-                        .copy_from_slice(&self.v[src..src + rows * l.dh]);
+                    match self.mode {
+                        ArenaLayout::F32 => {
+                            kc[dst..dst + rows * l.dh]
+                                .copy_from_slice(&self.k[src..src + rows * l.dh]);
+                            vc[dst..dst + rows * l.dh]
+                                .copy_from_slice(&self.v[src..src + rows * l.dh]);
+                        }
+                        // int8: dequantize through the group scale — the
+                        // contiguous reconstruction is the cache "as the
+                        // attention kernel sees it".
+                        ArenaLayout::KvInt8 => {
+                            let g = block as usize * l.block_groups() + layer * l.h + head;
+                            dequant_into(
+                                &self.k8[src..src + rows * l.dh],
+                                self.k_amax[g],
+                                &mut kc[dst..dst + rows * l.dh],
+                            );
+                            dequant_into(
+                                &self.v8[src..src + rows * l.dh],
+                                self.v_amax[g],
+                                &mut vc[dst..dst + rows * l.dh],
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -642,7 +858,7 @@ impl CacheArena {
     /// once, referenced blocks are never in the free list, dead slots
     /// hold nothing, and every table entry is a valid block id.
     pub fn debug_validate(&self) -> Result<()> {
-        let total = self.k.len() / self.layout.block_floats();
+        let total = self.capacity_blocks;
         let mut in_free = vec![0u32; total];
         for &b in &self.free {
             ensure!((b as usize) < total, "free list holds bogus block {b}");
@@ -675,12 +891,56 @@ impl CacheArena {
     }
 }
 
+/// Scale of a K/V row-group with the given absmax — the same symmetric
+/// absmax rule the activation path uses (`kernels::act_scale`).
+#[inline]
+fn group_scale(amax: f32) -> f32 {
+    127.0 / amax.max(1e-5)
+}
+
+/// Quantize one `dh`-float row into its (block, layer, head) group at
+/// code offset `at`. If the row's absmax exceeds the group's, the codes
+/// already stored are requantized under the grown scale first
+/// (`q' = round(q * s_new / s_old)`) so the whole group keeps ONE
+/// scale; the rescale costs at most ~1.5 quantization steps of the new
+/// (coarser) grid per element, on top of the step the original
+/// quantization already paid.
+fn quantize_row_into_group(row: &[f32], codes: &mut [i8], amax: &mut f32, at: usize) {
+    let row_amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if row_amax > *amax {
+        let ratio = amax.max(1e-5) / row_amax.max(1e-5);
+        for c in codes.iter_mut() {
+            *c = (f32::from(*c) * ratio).round().clamp(-128.0, 127.0) as i8;
+        }
+        *amax = row_amax;
+    }
+    let s = group_scale(*amax);
+    for (dst, &x) in codes[at..at + row.len()].iter_mut().zip(row) {
+        *dst = (x * s).round().clamp(-128.0, 127.0) as i8;
+    }
+}
+
+/// Dequantize a run of group codes through the group's absmax.
+fn dequant_into(codes: &[i8], amax: f32, out: &mut [f32]) {
+    let inv = 1.0 / group_scale(amax);
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = f32::from(c) * inv;
+    }
+}
+
 /// Borrowed paged view of one session's K/V state: the block table plus
 /// the shared pools. [`crate::runtime::kernels::attention_paged`] reads
-/// through this.
+/// through this in the f32 layout;
+/// [`crate::runtime::kernels::attention_paged_q8`] walks the int8
+/// blocks in place via [`PagedKv::for_each_block_q8`].
 pub struct PagedKv<'a> {
     k: &'a [f32],
     v: &'a [f32],
+    k8: &'a [i8],
+    v8: &'a [i8],
+    k_amax: &'a [f32],
+    v_amax: &'a [f32],
+    mode: ArenaLayout,
     table: &'a [u32],
     layout: &'a CacheLayout,
 }
@@ -692,6 +952,59 @@ impl PagedKv<'_> {
 
     pub fn head_dim(&self) -> usize {
         self.layout.dh
+    }
+
+    /// Storage precision of the pools behind this view — the attention
+    /// dispatch point in both host backends branches on this.
+    pub fn mode(&self) -> ArenaLayout {
+        self.mode
+    }
+
+    /// Positions-per-block granularity of the backing arena.
+    pub fn block_len(&self) -> usize {
+        self.layout.block_len
+    }
+
+    /// Visit the int8 codes of one `(layer, head)` pair block by block,
+    /// in position order, WITHOUT copying: the callback receives the
+    /// K and V code rows of each block (`rows * d_head` codes, `rows <=
+    /// block_len`) plus the block's K and V group absmax. This is the
+    /// zero-copy gather of the q8 attention path — the kernel
+    /// accumulates straight out of the pool and dequantizes per group.
+    /// Panics (like [`Self::gather_head`]) if the table backs fewer
+    /// than `valid` positions.
+    pub fn for_each_block_q8(
+        &self,
+        layer: usize,
+        head: usize,
+        valid: usize,
+        mut f: impl FnMut(&[i8], &[i8], f32, f32, usize),
+    ) {
+        debug_assert_eq!(self.mode, ArenaLayout::KvInt8);
+        let l = self.layout;
+        let bf = l.block_floats();
+        let bg = l.block_groups();
+        let mut row = 0usize;
+        for &block in self.table {
+            if row >= valid {
+                break;
+            }
+            let rows = (valid - row).min(l.block_len);
+            let base = block as usize * bf + ((layer * l.h + head) * l.block_len) * l.dh;
+            let g = block as usize * bg + layer * l.h + head;
+            f(
+                &self.k8[base..base + rows * l.dh],
+                &self.v8[base..base + rows * l.dh],
+                self.k_amax[g],
+                self.v_amax[g],
+                rows,
+            );
+            row += rows;
+        }
+        assert_eq!(
+            row, valid,
+            "paged q8 gather: table backs {row} of {valid} positions"
+        );
     }
 
     /// Gather the first `valid` positions of one `(layer, head)` pair
@@ -713,6 +1026,7 @@ impl PagedKv<'_> {
         out_k.clear();
         out_v.clear();
         let bf = l.block_floats();
+        let bg = l.block_groups();
         let mut row = 0usize;
         for &block in self.table {
             if row >= valid {
@@ -720,8 +1034,30 @@ impl PagedKv<'_> {
             }
             let rows = (valid - row).min(l.block_len);
             let base = block as usize * bf + ((layer * l.h + head) * l.block_len) * l.dh;
-            out_k.extend_from_slice(&self.k[base..base + rows * l.dh]);
-            out_v.extend_from_slice(&self.v[base..base + rows * l.dh]);
+            match self.mode {
+                ArenaLayout::F32 => {
+                    out_k.extend_from_slice(&self.k[base..base + rows * l.dh]);
+                    out_v.extend_from_slice(&self.v[base..base + rows * l.dh]);
+                }
+                // int8: dequantize through the group scales — callers of
+                // the f32 gather see the cache as the q8 kernel values it.
+                ArenaLayout::KvInt8 => {
+                    let g = block as usize * bg + layer * l.h + head;
+                    let n = rows * l.dh;
+                    out_k.resize(row * l.dh + n, 0.0);
+                    out_v.resize(row * l.dh + n, 0.0);
+                    dequant_into(
+                        &self.k8[base..base + n],
+                        self.k_amax[g],
+                        &mut out_k[row * l.dh..],
+                    );
+                    dequant_into(
+                        &self.v8[base..base + n],
+                        self.v_amax[g],
+                        &mut out_v[row * l.dh..],
+                    );
+                }
+            }
             row += rows;
         }
         // A short gather means a caller skipped ensure_capacity — that
@@ -798,7 +1134,9 @@ mod tests {
         let view = a.view(h).unwrap();
         let (mut gk, mut gv) = (Vec::new(), Vec::new());
         view.gather_head(1, 1, 7, &mut gk, &mut gv);
-        let expect: Vec<f32> = (0..7).flat_map(|p| [(p * 10 + 2) as f32, (p * 10 + 3) as f32]).collect();
+        let expect: Vec<f32> = (0..7)
+            .flat_map(|p| [(p * 10 + 2) as f32, (p * 10 + 3) as f32])
+            .collect();
         assert_eq!(gk, expect);
         assert_eq!(gv, expect.iter().map(|x| -x).collect::<Vec<_>>());
         // Layer 0 was never written: all zero.
@@ -1097,6 +1435,200 @@ mod tests {
         // A shard is Send by construction (plain Vec storage).
         fn assert_send<T: Send>() {}
         assert_send::<CacheArena>();
+    }
+
+    #[test]
+    fn layout_names_round_trip_and_bytes_account_for_scales() {
+        assert_eq!(ArenaLayout::from_name("f32").unwrap(), ArenaLayout::F32);
+        assert_eq!(ArenaLayout::from_name("int8").unwrap(), ArenaLayout::KvInt8);
+        assert!(ArenaLayout::from_name("fp16").is_err());
+        assert_eq!(ArenaLayout::F32.name(), "f32");
+        assert_eq!(ArenaLayout::KvInt8.name(), "int8");
+        let l = layout(4);
+        // f32: 2 pools of block_floats f32s. int8: 2 pools of
+        // block_floats codes + one f32 absmax per (layer, head) group.
+        assert_eq!(l.block_floats(), 64);
+        assert_eq!(l.block_bytes(ArenaLayout::F32), 2 * 64 * 4);
+        assert_eq!(l.block_bytes(ArenaLayout::KvInt8), 2 * (64 + 4 * 4));
+        // ~4x density: equal bytes buy ~3.5-4x the int8 blocks.
+        let budget = 10 * l.block_bytes(ArenaLayout::F32);
+        assert_eq!(l.blocks_for_bytes(budget, ArenaLayout::F32), 10);
+        assert!(l.blocks_for_bytes(budget, ArenaLayout::KvInt8) >= 3 * 10);
+        // Status reports the same accounting in bytes.
+        let a = CacheArena::new_with_mode(l.clone(), 6, ArenaLayout::KvInt8).unwrap();
+        let st = a.status();
+        assert_eq!(st.block_bytes, l.block_bytes(ArenaLayout::KvInt8));
+        assert_eq!(st.total_bytes, 6 * st.block_bytes);
+        assert_eq!(st.used_bytes, 0);
+        assert_eq!(a.mode(), ArenaLayout::KvInt8);
+    }
+
+    #[test]
+    fn int8_round_trip_error_is_bounded_by_the_quantization_step() {
+        let mut a = CacheArena::new_with_mode(layout(4), 6, ArenaLayout::KvInt8).unwrap();
+        let h = a.alloc_session().unwrap();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut written: Vec<(usize, usize, Vec<f32>, Vec<f32>)> = Vec::new();
+        for pos in 0..7usize {
+            a.ensure_capacity(h, pos).unwrap();
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                a.write_kv(h, layer, pos, &k, &v).unwrap();
+                written.push((layer, pos, k, v));
+            }
+        }
+        let (kc, vc) = a.gather_contiguous(h).unwrap();
+        let l = a.layout().clone();
+        // Group absmax <= the largest |value| seen; a requantize-on-grow
+        // costs at most ~1.5 steps of the final grid, so 2 steps of the
+        // global absmax bounds every element comfortably.
+        let gmax = written
+            .iter()
+            .flat_map(|(_, _, k, v)| k.iter().chain(v))
+            .fold(0.0f32, |m, &x| m.max(x.abs()));
+        let step = gmax / 127.0;
+        for (layer, pos, k, v) in &written {
+            for head in 0..l.h {
+                let at = ((layer * l.h + head) * l.max_ctx + pos) * l.dh;
+                for i in 0..l.dh {
+                    let (wk, wv) = (k[head * l.dh + i], v[head * l.dh + i]);
+                    assert!(
+                        (kc[at + i] - wk).abs() <= 2.0 * step,
+                        "K layer {layer} pos {pos}: {} vs {wk}",
+                        kc[at + i]
+                    );
+                    assert!(
+                        (vc[at + i] - wv).abs() <= 2.0 * step,
+                        "V layer {layer} pos {pos}: {} vs {wv}",
+                        vc[at + i]
+                    );
+                }
+            }
+        }
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn int8_requantize_on_grow_keeps_earlier_rows_consistent() {
+        // A small row then a 100x larger one in the same group: the
+        // group's single scale must grow, and the EARLIER row must still
+        // dequantize near its written value on the coarser grid.
+        let mut a = CacheArena::new_with_mode(layout(4), 2, ArenaLayout::KvInt8).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        a.ensure_capacity(h, 1).unwrap();
+        a.write_kv(h, 0, 0, &[0.5, -0.5, 0.25, 0.5], &[0.5; 4]).unwrap();
+        a.write_kv(h, 0, 1, &[50.0, -50.0, 25.0, 50.0], &[50.0; 4]).unwrap();
+        let (kc, _) = a.gather_contiguous(h).unwrap();
+        let l = a.layout().clone();
+        let step = 50.0 / 127.0; // the grown grid
+        // Row 0 (head 0): within 1.5 steps of the written values.
+        let at0 = 0; // layer 0, head 0, pos 0
+        for (i, want) in [0.5f32, -0.5].iter().enumerate() {
+            assert!(
+                (kc[at0 + i] - want).abs() <= 1.5 * step,
+                "requantized row drifted: {} vs {want}",
+                kc[at0 + i]
+            );
+        }
+        // Row 1 is freshly quantized on the new grid: within 0.5 step.
+        let at1 = l.dh; // pos 1 of the same (layer 0, head 0)
+        assert!((kc[at1] - 50.0).abs() <= 0.5 * step);
+        assert!((kc[at1 + 1] + 50.0).abs() <= 0.5 * step);
+    }
+
+    #[test]
+    fn int8_grid_aligned_values_round_trip_exactly() {
+        // Values already on the int8 grid of their group absmax (here
+        // {-1, 0, 1} with absmax 1) dequantize bit-exactly: q = +/-127
+        // codes, and 127 * (1 / (127/1)) == 1.0 in f32.
+        let mut a = CacheArena::new_with_mode(layout(4), 2, ArenaLayout::KvInt8).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        let k = [1.0f32, -1.0, 0.0, 1.0];
+        let v = [-1.0f32, 0.0, 1.0, -1.0];
+        a.write_kv(h, 0, 0, &k, &v).unwrap();
+        let (kc, vc) = a.gather_contiguous(h).unwrap();
+        let l = a.layout().clone();
+        for head in 0..l.h {
+            let at = (head * l.max_ctx) * l.dh; // layer 0, pos 0
+            assert_eq!(&kc[at..at + l.dh], &k[head * l.dh..(head + 1) * l.dh]);
+            assert_eq!(&vc[at..at + l.dh], &v[head * l.dh..(head + 1) * l.dh]);
+        }
+    }
+
+    #[test]
+    fn int8_cow_preserves_dequantized_values_and_scales() {
+        let mut a = CacheArena::new_with_mode(layout(4), 4, ArenaLayout::KvInt8).unwrap();
+        let donor = a.alloc_session().unwrap();
+        let mut rng = crate::util::rng::Rng::new(9);
+        for pos in 0..4usize {
+            a.ensure_capacity(donor, pos).unwrap();
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+                a.write_kv(donor, layer, pos, &k, &v).unwrap();
+            }
+        }
+        let chain = a.session_table(donor).unwrap();
+        let s = a.alloc_session().unwrap();
+        a.share_blocks(s, &chain).unwrap();
+        assert!(a.cow_block(s, 0, 2).unwrap());
+        // Codes AND group scales were copied: the kept rows dequantize
+        // to exactly the donor's values; the tail reads zero.
+        let (dk, dv) = a.gather_contiguous(donor).unwrap();
+        let (sk, sv) = a.gather_contiguous(s).unwrap();
+        let l = a.layout().clone();
+        for layer in 0..l.n_layers {
+            for head in 0..l.h {
+                for pos in 0..4usize {
+                    let at = ((layer * l.h + head) * l.max_ctx + pos) * l.dh;
+                    if pos < 2 {
+                        assert_eq!(sk[at..at + l.dh], dk[at..at + l.dh]);
+                        assert_eq!(sv[at..at + l.dh], dv[at..at + l.dh]);
+                    } else {
+                        assert!(sk[at..at + l.dh].iter().all(|&x| x == 0.0));
+                        assert!(sv[at..at + l.dh].iter().all(|&x| x == 0.0));
+                    }
+                }
+            }
+        }
+        // The adopter's first write after the COW must not perturb the
+        // donor (fresh group, donor's scale evolves independently).
+        a.write_kv(s, 0, 2, &[99.0; 4], &[99.0; 4]).unwrap();
+        assert_eq!(a.gather_contiguous(donor).unwrap(), (dk, dv));
+        a.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn int8_blocks_and_scales_are_zeroed_on_reuse() {
+        let mut a = CacheArena::new_with_mode(layout(4), 1, ArenaLayout::KvInt8).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        a.write_kv(h, 0, 0, &[7.0; 4], &[9.0; 4]).unwrap();
+        a.free_session(h).unwrap();
+        let h = a.alloc_session().unwrap();
+        a.ensure_capacity(h, 0).unwrap();
+        let (k, v) = a.gather_contiguous(h).unwrap();
+        assert!(k.iter().all(|&x| x == 0.0) && v.iter().all(|&x| x == 0.0));
+        // A fresh small-magnitude write quantizes on ITS OWN absmax —
+        // stale scale metadata from the previous tenant would wreck it.
+        a.write_kv(h, 0, 0, &[0.01, -0.01, 0.0, 0.01], &[0.01; 4]).unwrap();
+        let (k, _) = a.gather_contiguous(h).unwrap();
+        assert!((k[0] - 0.01).abs() < 0.001, "stale group scale: {}", k[0]);
+    }
+
+    #[test]
+    fn split_mode_propagates_the_layout_to_every_shard() {
+        let shards = CacheArena::split_mode(layout(4), 8, 2, ArenaLayout::KvInt8).unwrap();
+        assert_eq!(shards.len(), 2);
+        for s in &shards {
+            assert_eq!(s.mode(), ArenaLayout::KvInt8);
+            let st = s.status();
+            assert_eq!(st.block_bytes, s.layout().block_bytes(ArenaLayout::KvInt8));
+            assert_eq!(st.total_bytes, st.total_blocks * st.block_bytes);
+        }
     }
 
     #[test]

@@ -55,5 +55,5 @@ pub use engine::{
     default_artifacts, shard_for, BackendKind, Engine, EngineImpl, EngineShard, ShardHandle,
     ShardedEngine,
 };
-pub use kvcache::{ArenaStatus, CacheArena, CacheHandle, CacheLayout};
+pub use kvcache::{ArenaLayout, ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 pub use prefixcache::{PrefixCache, PrefixMatch, PrefixStats};

@@ -33,7 +33,7 @@
 
 use super::artifacts::Artifacts;
 use super::backend::Backend;
-use super::kernels::{attention, attention_paged, gelu, rms_norm};
+use super::kernels::{attention, gelu, rms_norm};
 use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
 use super::reference::ReferenceBackend;
 use crate::obs::{Obs, SpanKind};
@@ -278,7 +278,13 @@ impl Backend for PackedBackend {
                 .iter()
                 .zip(handles.iter().zip(&poss))
                 .map(|(q_i, (&hd, &pos))| {
-                    Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
+                    Ok(ReferenceBackend::attention_dispatch(
+                        q_i,
+                        &arena.view(hd)?,
+                        layer,
+                        pos,
+                        obs,
+                    ))
                 })
                 .collect::<Result<Vec<_>>>()?;
             obs.span_end(SpanKind::Attention, lid);

@@ -203,6 +203,13 @@ impl Backend for PjrtBackend {
         false
     }
 
+    fn supports_kv_int8(&self) -> bool {
+        // The AOT-lowered HLO attends over contiguous f32 device caches;
+        // it has no int8 gather/dequant path, so engine assembly must
+        // refuse an int8-layout arena rather than mis-decode.
+        false
+    }
+
     fn session_needs_block(
         &self,
         arena: &CacheArena,

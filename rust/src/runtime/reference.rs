@@ -34,9 +34,11 @@
 
 use super::artifacts::Artifacts;
 use super::backend::Backend;
-use super::kernels::{attention, attention_paged, bitlinear, bitlinear_batch, gelu, rms_norm};
-use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
-use crate::obs::{Obs, SpanKind};
+use super::kernels::{
+    attention, attention_paged, attention_paged_q8, bitlinear, bitlinear_batch, gelu, rms_norm,
+};
+use super::kvcache::{ensure_distinct, ArenaLayout, CacheArena, CacheHandle, PagedKv};
+use crate::obs::{Counter, Obs, SpanKind};
 use crate::util::error::{anyhow, ensure, Context, Result};
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -177,6 +179,31 @@ impl ReferenceBackend {
             arena.ensure_capacity(h, pos)?;
         }
         Ok(poss)
+    }
+
+    /// Attention over one session's paged view, dispatched on the
+    /// arena's storage layout — shared by both host backends so the
+    /// layout decision lives in exactly one place. The f32 branch is
+    /// the unchanged bit-exact gather; the int8 branch runs the
+    /// i32-accumulating kernel and bumps the dequantized-blocks counter
+    /// (one per block the window touched — a relaxed atomic add, so the
+    /// f32 hot path and the packed backend's zero-allocation guarantee
+    /// are untouched).
+    pub(crate) fn attention_dispatch(
+        q: &[f32],
+        view: &PagedKv<'_>,
+        layer: usize,
+        pos: usize,
+        obs: &Obs,
+    ) -> Vec<f32> {
+        match view.mode() {
+            ArenaLayout::F32 => attention_paged(q, view, layer, pos),
+            ArenaLayout::KvInt8 => {
+                let blocks = (pos + 1).div_ceil(view.block_len()) as u64;
+                obs.count(Counter::KvDequantBlocks, blocks);
+                attention_paged_q8(q, view, layer, pos)
+            }
+        }
     }
 
     /// The pre-paging contiguous decode step, kept verbatim as the
@@ -347,7 +374,7 @@ impl Backend for ReferenceBackend {
                 .iter()
                 .zip(handles.iter().zip(&poss))
                 .map(|(q_i, (&hd, &pos))| {
-                    Ok(attention_paged(q_i, &arena.view(hd)?, layer, pos))
+                    Ok(Self::attention_dispatch(q_i, &arena.view(hd)?, layer, pos, obs))
                 })
                 .collect::<Result<Vec<_>>>()?;
             obs.span_end(SpanKind::Attention, lid);

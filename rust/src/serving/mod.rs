@@ -884,6 +884,7 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             let st = self.engine.arena_status();
             obs.gauge(Gauge::ArenaBlocksFree, st.free_blocks as u64);
             obs.gauge(Gauge::ArenaBlocksUsed, st.used_blocks as u64);
+            obs.gauge(Gauge::ArenaBytesUsed, st.used_bytes as u64);
             obs.gauge(Gauge::ActiveSessions, active.len() as u64);
             obs.gauge(Gauge::PrefixEntries, self.engine.prefix_entries() as u64);
             obs.observe(Hist::BatchSize, batch as u64);

@@ -12,8 +12,14 @@
 //! reproducible.
 
 use pim_llm::runtime::artifacts::ModelInfo;
-use pim_llm::runtime::{CacheArena, CacheHandle, CacheLayout};
+use pim_llm::runtime::{ArenaLayout, CacheArena, CacheHandle, CacheLayout};
 use pim_llm::util::rng::Rng;
+
+/// Both storage layouts: the refcount/free-list machinery is
+/// layout-blind, so every structural property must hold identically
+/// over the int8 pools (which add per-group scale metadata to the
+/// blocks being claimed, shared, COW'd, and recycled).
+const MODES: [ArenaLayout; 2] = [ArenaLayout::F32, ArenaLayout::KvInt8];
 
 fn model(max_ctx: usize) -> ModelInfo {
     ModelInfo {
@@ -29,13 +35,16 @@ fn model(max_ctx: usize) -> ModelInfo {
 
 #[test]
 fn random_churn_never_leaks_or_double_frees() {
-    for seed in [1u64, 2, 3, 4, 5] {
+    for (mode, seed) in MODES
+        .into_iter()
+        .flat_map(|m| [1u64, 2, 3, 4, 5].map(|s| (m, s)))
+    {
         let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_97F4_A7C1));
         let max_ctx = rng.range(8, 40);
         let block_len = rng.range(1, 9);
         let capacity = rng.range(4, 24);
         let layout = CacheLayout::with_block_len(&model(max_ctx), block_len);
-        let mut arena = CacheArena::new(layout.clone(), capacity).unwrap();
+        let mut arena = CacheArena::new_with_mode(layout.clone(), capacity, mode).unwrap();
         let total = arena.status().total_blocks;
         assert_eq!(total, capacity);
 
@@ -151,13 +160,16 @@ fn refcounted_share_cow_pin_churn_never_leaks_or_double_frees() {
     // block) shares exist; after EVERY op the arena must validate
     // (refcount == table occurrences + pins, free exactly at zero) and
     // the free count must match the mirror's conservation equation.
-    for seed in [11u64, 12, 13, 14, 15] {
+    for (mode, seed) in MODES
+        .into_iter()
+        .flat_map(|m| [11u64, 12, 13, 14, 15].map(|s| (m, s)))
+    {
         let mut rng = Rng::new(seed.wrapping_mul(0xB5E5_5E5B_0F0F_F0F0));
         let max_ctx = rng.range(12, 40);
         let block_len = rng.range(1, 6);
         let capacity = rng.range(6, 24);
         let layout = CacheLayout::with_block_len(&model(max_ctx), block_len);
-        let mut arena = CacheArena::new(layout.clone(), capacity).unwrap();
+        let mut arena = CacheArena::new_with_mode(layout.clone(), capacity, mode).unwrap();
         let total = arena.status().total_blocks;
 
         let mut live: Vec<CacheHandle> = Vec::new();
@@ -410,6 +422,85 @@ fn exhaustion_is_an_error_not_a_corruption() {
     arena.ensure_capacity(a, 5).unwrap();
     assert_eq!(arena.session_blocks(a).unwrap(), 3);
     arena.debug_validate().unwrap();
+}
+
+#[test]
+fn cow_kept_rows_read_back_identically_in_both_layouts() {
+    // Randomized COW byte preservation: whatever rows the adopter keeps
+    // must read back EXACTLY as the donor's — in int8 that means the
+    // copy carried the group scales along with the codes (copying codes
+    // under a fresh scale would silently rescale the kept rows) — and
+    // the tail of the copied block must read as zero. Everything
+    // outside the copied block stays shared and therefore identical.
+    for (mode, seed) in MODES
+        .into_iter()
+        .flat_map(|m| [21u64, 22, 23].map(|s| (m, s)))
+    {
+        let mut rng = Rng::new(seed.wrapping_mul(0xC01D_C0FF_EE15_F00D));
+        let max_ctx = rng.range(12, 24);
+        let block_len = rng.range(2, 6);
+        let layout = CacheLayout::with_block_len(&model(max_ctx), block_len);
+        let mut arena = CacheArena::new_with_mode(layout.clone(), 24, mode).unwrap();
+        let donor = arena.alloc_session().unwrap();
+        let filled = rng.range(layout.block_len + 1, max_ctx - 1);
+        for pos in 0..filled {
+            arena.ensure_capacity(donor, pos).unwrap();
+            for layer in 0..layout.n_layers {
+                let k: Vec<f32> =
+                    (0..layout.h * layout.dh).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> =
+                    (0..layout.h * layout.dh).map(|_| rng.normal() as f32).collect();
+                arena.write_kv(donor, layer, pos, &k, &v).unwrap();
+            }
+        }
+        let (dk, dv) = arena.gather_contiguous(donor).unwrap();
+        let chain = arena.session_table(donor).unwrap();
+        let s = arena.alloc_session().unwrap();
+        arena.share_blocks(s, &chain).unwrap();
+        let cow_at = rng.range(0, chain.len() - 1);
+        let keep = rng.range(0, layout.block_len);
+        assert!(
+            arena.cow_block(s, cow_at, keep).unwrap(),
+            "seed {seed} {mode:?}: shared block must actually copy"
+        );
+        let (sk, sv) = arena.gather_contiguous(s).unwrap();
+        let copy_lo = cow_at * layout.block_len;
+        let copy_hi = ((cow_at + 1) * layout.block_len).min(layout.max_ctx);
+        for layer in 0..layout.n_layers {
+            for head in 0..layout.h {
+                for pos in 0..layout.max_ctx {
+                    let at = ((layer * layout.h + head) * layout.max_ctx + pos) * layout.dh;
+                    let zero_tail = pos >= copy_lo + keep && pos < copy_hi;
+                    for j in 0..layout.dh {
+                        let (wk, wv) = if zero_tail {
+                            (0.0, 0.0)
+                        } else {
+                            (dk[at + j], dv[at + j])
+                        };
+                        assert_eq!(
+                            sk[at + j], wk,
+                            "seed {seed} {mode:?} K layer {layer} head {head} pos {pos} \
+                             (cow block {cow_at}, keep {keep})"
+                        );
+                        assert_eq!(
+                            sv[at + j], wv,
+                            "seed {seed} {mode:?} V layer {layer} head {head} pos {pos} \
+                             (cow block {cow_at}, keep {keep})"
+                        );
+                    }
+                }
+            }
+        }
+        // And the donor read back unchanged — the COW never writes into
+        // shared storage.
+        assert_eq!(arena.gather_contiguous(donor).unwrap(), (dk, dv), "seed {seed} {mode:?}");
+        arena.debug_validate().unwrap();
+        let total = arena.status().total_blocks;
+        arena.free_session(s).unwrap();
+        arena.free_session(donor).unwrap();
+        assert_eq!(arena.status().free_blocks, total, "seed {seed} {mode:?}: leak");
+        arena.debug_validate().unwrap();
+    }
 }
 
 #[test]

@@ -1,0 +1,306 @@
+//! Differential harness for the int8 KV arena (`--kv-quant int8`):
+//! the lossy layout must TRACK the f32 oracle within quantization
+//! error, and everything that should stay exact must stay exact:
+//!
+//! * Reference and packed backends read the same int8 blocks through
+//!   the same `attention_paged_q8` kernel, so their logits are
+//!   BIT-FOR-BIT identical in int8 mode — quantization is lossy
+//!   against f32, never nondeterministic.
+//! * Re-prefilling the same tokens reproduces the same codes and group
+//!   scales (requantize-on-grow is a function of the row sequence), so
+//!   evict -> re-admit cycles and scheduler choice cannot change
+//!   outputs.
+//! * Prefix adoption of FULL blocks shares the donor's codes + scales
+//!   verbatim, and a full block's scale is determined by its own rows —
+//!   bitwise equal to cold int8 prefill. Partial-tail COW inherits the
+//!   donor's (possibly coarser) group scale, so it only tracks cold
+//!   prefill within quantization error — asserted as such.
+//!
+//! Tolerances: the kernel-level bound (`kernels::tests`) shows the q8
+//! attention output within ~2 quantization steps of the W8A8 oracle
+//! (empirically ~0.7% of the value scale). RMSNorm between layers keeps
+//! relative error roughly flat, so end-to-end logits stay within a few
+//! percent of the f32 path; 0.35 of the per-step max-|logit| is a wide
+//! margin for that drift while still failing hard on real defects
+//! (stale group scales, swapped heads, mis-indexed blocks all produce
+//! O(100%) divergence).
+
+use pim_llm::runtime::artifacts::ModelInfo;
+use pim_llm::runtime::{ArenaLayout, Artifacts, BackendKind, Engine};
+use pim_llm::serving::{Policy, Request, Server};
+use pim_llm::util::rng::Rng;
+
+const HOST_BACKENDS: [BackendKind; 2] = [BackendKind::Reference, BackendKind::Packed];
+
+/// Small-but-varied random model shapes (block boundaries land
+/// mid-head, like the paged/prefix equivalence suites).
+fn random_model(rng: &mut Rng) -> ModelInfo {
+    let h = [1usize, 2, 4][rng.range(0, 2)];
+    ModelInfo {
+        vocab: rng.range(8, 60),
+        d: h * [3usize, 5, 8][rng.range(0, 2)],
+        h,
+        d_ff: rng.range(9, 40),
+        n_layers: rng.range(1, 2),
+        max_ctx: rng.range(12, 24),
+        eps: 1e-5,
+    }
+}
+
+/// Teacher-forced run: decode `tokens` through a fresh session and
+/// return the per-step logits plus the final gathered caches.
+fn forced_run(engine: &Engine, tokens: &[i32]) -> (Vec<Vec<f32>>, (Vec<f32>, Vec<f32>)) {
+    let s = engine.new_session().unwrap();
+    let logits: Vec<Vec<f32>> = tokens
+        .iter()
+        .enumerate()
+        .map(|(pos, &t)| engine.decode_step(s, t, pos as i32).unwrap())
+        .collect();
+    let caches = engine.gather_session(s).unwrap();
+    engine.free_session(s).unwrap();
+    (logits, caches)
+}
+
+/// Every element finite and within `rel * max|want|` of the oracle.
+fn assert_tracks(got: &[f32], want: &[f32], rel: f32, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    let scale = want.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-3);
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(g.is_finite(), "{label}: non-finite logit at {i}");
+        assert!(
+            (g - w).abs() <= rel * scale,
+            "{label}: |{g} - {w}| > {rel} * {scale} at {i}"
+        );
+    }
+}
+
+#[test]
+fn int8_decode_tracks_the_f32_oracle_and_is_bitwise_across_backends() {
+    // Random models x block lens: teacher-force one token stream
+    // through an f32 engine and int8 engines on both host backends.
+    // int8 vs f32 is bounded-divergence; int8 vs int8 across backends
+    // is assert_eq — the projections are bit-identical (PR 2) and both
+    // read the arena through the same q8 kernel.
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9D2C_5681).wrapping_add(23));
+        let model = random_model(&mut rng);
+        let tokens: Vec<i32> = (0..model.max_ctx - 1)
+            .map(|_| rng.range(0, model.vocab - 1) as i32)
+            .collect();
+        for block_len in [1usize, 3, 0] {
+            let artifacts = || Artifacts::synthetic_with(seed, model.clone()).unwrap();
+            let oracle =
+                Engine::load_with_arena(artifacts(), BackendKind::Reference, block_len, 64)
+                    .unwrap();
+            let (want, _) = forced_run(&oracle, &tokens);
+
+            let mut per_backend: Vec<(Vec<Vec<f32>>, (Vec<f32>, Vec<f32>))> = Vec::new();
+            for kind in HOST_BACKENDS {
+                let q8 = Engine::load_with_arena_mode(
+                    artifacts(),
+                    kind,
+                    block_len,
+                    64,
+                    ArenaLayout::KvInt8,
+                )
+                .unwrap();
+                assert_eq!(q8.arena_mode(), ArenaLayout::KvInt8);
+                let (got, caches) = forced_run(&q8, &tokens);
+                for (pos, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_tracks(
+                        g,
+                        w,
+                        0.35,
+                        &format!("seed {seed} {kind:?} bl {block_len} pos {pos}"),
+                    );
+                }
+                q8.debug_validate().unwrap();
+                per_backend.push((got, caches));
+            }
+            let (ref_logits, ref_caches) = &per_backend[0];
+            let (pk_logits, pk_caches) = &per_backend[1];
+            assert_eq!(
+                ref_logits, pk_logits,
+                "seed {seed} bl {block_len}: int8 logits must be bitwise \
+                 identical across host backends"
+            );
+            assert_eq!(
+                ref_caches, pk_caches,
+                "seed {seed} bl {block_len}: int8 gathered caches must be \
+                 bitwise identical across host backends"
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_reprefill_is_bitwise_reproducible() {
+    // Quantization state is a pure function of the row sequence: a
+    // second session fed the same tokens (after the first is evicted,
+    // so it even reuses the same physical blocks) reproduces logits
+    // and gathered caches exactly. This is what makes continuous
+    // batching's preempt -> re-prefill cycle safe in int8 mode.
+    for kind in HOST_BACKENDS {
+        let engine = Engine::load_with_arena_mode(
+            Artifacts::synthetic(0xEB8).unwrap(),
+            kind,
+            4,
+            8,
+            ArenaLayout::KvInt8,
+        )
+        .unwrap();
+        let tokens: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let (a_logits, a_caches) = forced_run(&engine, &tokens);
+        let (b_logits, b_caches) = forced_run(&engine, &tokens);
+        assert_eq!(a_logits, b_logits, "{kind:?}: re-prefill logits");
+        assert_eq!(a_caches, b_caches, "{kind:?}: re-prefill caches");
+        engine.debug_validate().unwrap();
+    }
+}
+
+#[test]
+fn int8_full_block_adoption_is_bitwise_and_partial_tail_is_bounded() {
+    for kind in HOST_BACKENDS {
+        let artifacts = || Artifacts::synthetic(0x8BAD).unwrap();
+        let warm =
+            Engine::load_with_arena_mode(artifacts(), kind, 4, 32, ArenaLayout::KvInt8)
+                .unwrap();
+        assert!(warm.enable_prefix_cache(0));
+        let cold =
+            Engine::load_with_arena_mode(artifacts(), kind, 4, 32, ArenaLayout::KvInt8)
+                .unwrap();
+
+        // Donor: 12 tokens = 3 full blocks indexed.
+        let donor: Vec<i32> = vec![5, 1, 8, 2, 9, 9, 4, 7, 3, 6, 1, 2];
+        let ds = warm.new_session().unwrap();
+        for (pos, &t) in donor.iter().enumerate() {
+            warm.decode_step(ds, t, pos as i32).unwrap();
+        }
+        warm.prefix_insert(ds, &donor).unwrap();
+        let donor_caches = warm.gather_session(ds).unwrap();
+
+        // Full-block adoption (9 usable -> 8 = 2 whole blocks, shared
+        // read-only): a full block's group scales are fixed by its own
+        // rows, which cold prefill writes identically — bitwise equal.
+        let prompt = donor[..9].to_vec();
+        let (want_logits, want_caches) = forced_run(&cold, &prompt);
+        let s = warm.new_session().unwrap();
+        let skipped = warm.prefix_adopt(s, &prompt).unwrap();
+        assert_eq!(skipped, 8, "{kind:?}: expected 2 full shared blocks");
+        for (pos, &t) in prompt.iter().enumerate().skip(skipped) {
+            assert_eq!(
+                warm.decode_step(s, t, pos as i32).unwrap(),
+                want_logits[pos],
+                "{kind:?}: full-block adoption must be bitwise cold at {pos}"
+            );
+        }
+        assert_eq!(warm.gather_session(s).unwrap(), want_caches, "{kind:?}");
+        warm.free_session(s).unwrap();
+
+        // Partial-tail adoption (11 -> 10 = 2 blocks + 2 COW rows): the
+        // copied tail keeps the donor's group scale, whose absmax may
+        // reflect rows beyond the kept ones — a COARSER grid than cold
+        // prefill of just those rows would use. So: bounded, not
+        // bitwise, and the donor must stay untouched.
+        let prompt = donor[..11].to_vec();
+        let (want_logits, want_caches) = forced_run(&cold, &prompt);
+        let s = warm.new_session().unwrap();
+        let skipped = warm.prefix_adopt(s, &prompt).unwrap();
+        assert_eq!(skipped, 10, "{kind:?}: 2 full blocks + 2 tail rows");
+        for (pos, &t) in prompt.iter().enumerate().skip(skipped) {
+            let got = warm.decode_step(s, t, pos as i32).unwrap();
+            assert_tracks(&got, &want_logits[pos], 0.35, &format!("{kind:?} pos {pos}"));
+        }
+        let (gk, gv) = warm.gather_session(s).unwrap();
+        assert_tracks(&gk, &want_caches.0, 0.35, &format!("{kind:?} tail K"));
+        assert_tracks(&gv, &want_caches.1, 0.35, &format!("{kind:?} tail V"));
+        assert_eq!(
+            warm.gather_session(ds).unwrap(),
+            donor_caches,
+            "{kind:?}: adopter COW must not disturb the donor"
+        );
+        warm.free_session(s).unwrap();
+        warm.free_session(ds).unwrap();
+        warm.debug_validate().unwrap();
+    }
+}
+
+#[test]
+fn int8_serving_is_scheduler_independent_and_survives_tight_arenas() {
+    // With the prefix cache off, a session's int8 state depends only on
+    // its own (token, position) sequence — blocks are zeroed on claim
+    // and re-prefill is bitwise — so FIFO, batched, and continuous
+    // scheduling must all emit identical tokens, even when a tight
+    // arena forces continuous batching to preempt and re-prefill.
+    let mut rng = Rng::new(0x8EED);
+    let requests: Vec<Request> = (0..8u64)
+        .map(|id| {
+            let prompt: Vec<i32> = (0..rng.range(3, 8)).map(|_| rng.range(1, 60) as i32).collect();
+            Request { id, prompt, n_new: rng.range(2, 5) }
+        })
+        .collect();
+    for kind in HOST_BACKENDS {
+        let engine_with = |capacity_blocks: usize| {
+            Engine::load_with_arena_mode(
+                Artifacts::synthetic(0x8EED).unwrap(),
+                kind,
+                3,
+                capacity_blocks,
+                ArenaLayout::KvInt8,
+            )
+            .unwrap()
+        };
+        let roomy = engine_with(64);
+        let baseline = Server::new(&roomy, Policy::Fifo).serve(requests.clone()).unwrap();
+        for (policy, capacity) in [
+            (Policy::Batched { batch: 4 }, 64usize),
+            (Policy::Continuous { max_active: 4 }, 64),
+            // Tight: ~2 worst-case sessions of blocks for 4 active.
+            (Policy::Continuous { max_active: 4 }, 12),
+        ] {
+            let e = engine_with(capacity);
+            let out = Server::new(&e, policy).serve(requests.clone()).unwrap();
+            for b in &baseline {
+                let r = out.iter().find(|r| r.id == b.id).unwrap();
+                assert_eq!(
+                    b.tokens, r.tokens,
+                    "{kind:?} {policy:?} cap {capacity} request {}",
+                    b.id
+                );
+            }
+            e.debug_validate().unwrap();
+            let st = e.arena_status();
+            assert_eq!(st.used_bytes, st.used_blocks * st.block_bytes);
+        }
+
+        // Prefix cache ON still serves correctly (tokens may differ
+        // from cache-off where partial-tail COW coarsens a grid, so
+        // assert the cache WORKS, not bitwise equality): shared system
+        // prompts must hit, and two identical cached runs must agree
+        // with each other.
+        let system: Vec<i32> = (0..7).map(|_| rng.range(1, 60) as i32).collect();
+        let shared: Vec<Request> = (0..6u64)
+            .map(|id| {
+                let mut prompt = system.clone();
+                prompt.push(id as i32 + 1);
+                Request { id, prompt, n_new: 3 }
+            })
+            .collect();
+        let cached_run = || {
+            let e = engine_with(64);
+            assert!(e.enable_prefix_cache(0));
+            let out = Server::new(&e, Policy::Continuous { max_active: 3 })
+                .serve(shared.clone())
+                .unwrap();
+            let stats = e.prefix_stats().unwrap();
+            assert!(stats.saved_tokens > 0, "{kind:?}: shared prefixes must hit");
+            e.debug_validate().unwrap();
+            out
+        };
+        let (a, b) = (cached_run(), cached_run());
+        for ra in &a {
+            let rb = b.iter().find(|r| r.id == ra.id).unwrap();
+            assert_eq!(ra.tokens, rb.tokens, "{kind:?}: cached serving must be deterministic");
+        }
+    }
+}
