@@ -41,6 +41,8 @@ cargo test -q --offline --test shard_determinism
 cargo test -q --offline --test artifact_roundtrip
 cargo test -q --offline --test obs_trace
 cargo test -q --offline --test kvq_equivalence
+cargo test -q --offline --test chunked_prefill
+cargo test -q --offline --test spec_equivalence
 
 echo "== smoke: runtime backend selection =="
 # Exercise the --backend flag end to end (synthetic-model fallback, no
@@ -103,6 +105,30 @@ for be in reference packed; do
     --prompt-len 4 --new-tokens 12 --max-active 3 --arena-blocks 24
 done
 
+echo "== smoke: prefill/decode lanes (chunked prefill + speculative decoding) =="
+# The lane scheduler end to end on BOTH host backends: chunked prefill
+# with a self-model draft on a deliberately tight continuous arena
+# (preemption + rejected-draft rollback both fire), and chunked + tiny
+# draft across the sharded x4 partitioned arena. Output equality with
+# the classic scheduler is pinned by tests/spec_equivalence.rs; this
+# exercises the CLI wiring and the pressured paths at serving scale.
+for be in reference packed; do
+  cargo run -q --release --offline --bin repro -- serve --backend "$be" \
+    --policy continuous --requests 6 --prompt-len 8 --new-tokens 12 \
+    --max-active 6 --arena-blocks 12 --block-len 4 \
+    --prefill-chunk 3 --spec-draft self --spec-k 3
+  cargo run -q --release --offline --bin repro -- serve --backend "$be" \
+    --policy sharded --workers 4 --requests 12 --prompt-len 8 \
+    --new-tokens 12 --max-active 3 --arena-blocks 32 --block-len 4 \
+    --prefill-chunk 4 --spec-draft tiny --spec-k 4
+done
+# A flag typo must fail loudly (satellite: the CLI stops eating typos).
+if cargo run -q --release --offline --bin repro -- serve \
+  --prefil-chunk 8 --requests 2 2>/dev/null; then
+  echo "ERROR: misspelled --prefil-chunk should have been rejected"
+  exit 1
+fi
+
 echo "== smoke: observability on the sharded serving path =="
 # Tracing + metrics + per-tick validation end to end on BOTH host
 # backends: the emitted Chrome trace must round-trip through the
@@ -150,7 +176,7 @@ echo "== bench + example targets compile (offline) =="
 cargo build --benches --offline
 cargo build --examples --offline
 
-echo "== bench manifests: every advertised BENCH_*.json is checked in =="
+echo "== bench manifests: every advertised BENCH_*.json is checked in and parses =="
 # A bench that claims to emit a trajectory file at the repo root must
 # have that file committed (provisional first points included), so the
 # README's bench map never dangles.
@@ -160,5 +186,9 @@ for f in $(grep -ho 'BENCH_[A-Za-z0-9_]*\.json' rust/benches/*.rs | sort -u); do
     exit 1
   fi
 done
+# Existence is not enough: each artifact must parse with the in-crate
+# JSON parser and carry its bench's required keys, so an interrupted
+# bench run can't leave a truncated file that CI waves through.
+cargo run -q --release --offline --bin repro -- bench-check --dir .
 
 echo "ci.sh: all green"

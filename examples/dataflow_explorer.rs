@@ -18,6 +18,7 @@ use std::collections::BTreeMap;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    args.expect_known(&["model", "context", "rows", "cols"])?;
     let model = models::by_name(&args.str_or("model", "OPT-6.7B"))
         .ok_or_else(|| anyhow!("unknown model"))?;
     let l = args.usize_or("context", 1024)?;

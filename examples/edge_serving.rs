@@ -59,17 +59,43 @@ use pim_llm::config::ArchConfig;
 use pim_llm::coordinator::{token_loop, Arch};
 use pim_llm::models;
 use pim_llm::obs::export::write_chrome_trace;
-use pim_llm::runtime::{ArenaLayout, BackendKind, CacheLayout, Engine, ShardedEngine};
+use pim_llm::runtime::{
+    ArenaLayout, Artifacts, BackendKind, CacheLayout, DraftSpec, Engine, ShardedEngine, SpecPlan,
+    DEFAULT_SPEC_K,
+};
 use pim_llm::serving::{
-    serve_sharded_stats, shard_report, LatencyStats, Policy, Request, Server,
+    serve_sharded_stats, serve_sharded_stats_lanes, shard_report, LatencyStats, Policy, Request,
+    Server,
 };
 use pim_llm::util::cli::Args;
 use pim_llm::util::error::Result;
 use pim_llm::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    args.expect_known(&[
+        "requests",
+        "prompt-len",
+        "new-tokens",
+        "max-active",
+        "batch",
+        "workers",
+        "policy",
+        "arena-blocks",
+        "block-len",
+        "kv-quant",
+        "prefix-cache",
+        "prefix-cap",
+        "backend",
+        "trace",
+        "metrics",
+        "prefill-chunk",
+        "spec-draft",
+        "spec-k",
+    ])?;
     let n_requests = args.usize_or("requests", 32)?;
     let prompt_len = args.usize_or("prompt-len", 8)?;
     let new_tokens = args.usize_or("new-tokens", 16)?;
@@ -84,8 +110,14 @@ fn main() -> Result<()> {
     let arena_blocks = args.usize_or("arena-blocks", 0)?;
     let block_len = args.usize_or("block-len", 0)?;
     let kv_quant = ArenaLayout::from_name(&args.str_or("kv-quant", "f32"))?;
-    let prefix_cache = args.flag("prefix-cache");
+    let prefix_cache = args.flag("prefix-cache")?;
     let prefix_cap = args.usize_or("prefix-cap", 0)?;
+    // Lane-scheduler pass-through: chunked prefill + speculative
+    // decoding, both scheduling-only (token assertions below hold with
+    // them on).
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    let spec_draft = DraftSpec::from_flag(&args.str_or("spec-draft", "off"))?;
+    let spec_k = args.usize_or("spec-k", DEFAULT_SPEC_K)?;
 
     // The sharded policy partitions ONE arena across worker threads and
     // has its own 1-vs-N scaling demonstration.
@@ -106,6 +138,9 @@ fn main() -> Result<()> {
             kv_quant,
             prefix_cache,
             prefix_cap,
+            prefill_chunk,
+            spec_draft,
+            spec_k,
         );
     }
 
@@ -121,7 +156,7 @@ fn main() -> Result<()> {
         kv_quant,
     )?;
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
-    let metrics = args.flag("metrics");
+    let metrics = args.flag("metrics")?;
     if trace_path.is_some() || metrics {
         engine.obs().set_enabled(true);
     }
@@ -148,8 +183,12 @@ fn main() -> Result<()> {
 
     let requests = workload(engine.vocab(), n_requests, prompt_len, new_tokens);
 
+    let plan = spec_plan(spec_draft, spec_k, engine.artifacts(), &requests, block_len, kv_quant)?;
     let t0 = Instant::now();
-    let server = Server::new(&engine, policy);
+    let mut server = Server::new(&engine, policy).with_prefill_chunk(prefill_chunk);
+    if let Some(p) = &plan {
+        server = server.with_spec(p)?;
+    }
     let responses = server.serve(requests.clone())?;
     let wall = t0.elapsed().as_secs_f64();
     let stats = LatencyStats::from_responses(&responses, wall);
@@ -321,6 +360,37 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// Speculative-decoding plan for the chosen `--spec-draft`: self/tiny
+/// wrap the target's own bundle; oracle records a non-speculative
+/// reference run of the same workload first (same kv layout and block
+/// geometry — int8 numerics follow both).
+fn spec_plan(
+    draft: DraftSpec,
+    k: usize,
+    bundle: &Arc<Artifacts>,
+    requests: &[Request],
+    block_len: usize,
+    kv_quant: ArenaLayout,
+) -> Result<Option<SpecPlan>> {
+    Ok(match draft {
+        DraftSpec::Off => None,
+        DraftSpec::SelfModel => Some(SpecPlan::self_draft(bundle, k)?),
+        DraftSpec::Tiny => Some(SpecPlan::tiny_draft(bundle, k)?),
+        DraftSpec::Oracle => {
+            let oracle = Engine::load_default_with_arena_mode(
+                BackendKind::Reference,
+                block_len,
+                0,
+                kv_quant,
+            )?;
+            let recorded = Server::new(&oracle, Policy::Fifo).serve(requests.to_vec())?;
+            let book: HashMap<u64, Vec<i32>> =
+                recorded.into_iter().map(|r| (r.id, r.tokens)).collect();
+            Some(SpecPlan::oracle(book, k)?)
+        }
+    })
+}
+
 /// One shared system prompt over the first half of every request's
 /// tokens (the prefix cache's target shape), per-request tail after.
 fn workload(vocab: usize, n_requests: usize, prompt_len: usize, new_tokens: usize) -> Vec<Request> {
@@ -358,12 +428,15 @@ fn sharded_scaling(
     kv_quant: ArenaLayout,
     prefix_cache: bool,
     prefix_cap: usize,
+    prefill_chunk: usize,
+    spec_draft: DraftSpec,
+    spec_k: usize,
 ) -> Result<()> {
     let kind = BackendKind::resolve(args.backend())?;
     let mut engine =
         ShardedEngine::load_default_mode(kind, block_len, arena_blocks, workers, kv_quant)?;
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
-    let metrics = args.flag("metrics");
+    let metrics = args.flag("metrics")?;
     if trace_path.is_some() || metrics {
         engine.set_obs_enabled(true);
     }
@@ -386,9 +459,25 @@ fn sharded_scaling(
     );
     let requests = workload(engine.vocab(), n_requests, prompt_len, new_tokens);
     let offsets = vec![0.0; requests.len()];
+    let plan = spec_plan(
+        spec_draft,
+        spec_k,
+        engine.shard(0).artifacts(),
+        &requests,
+        block_len,
+        kv_quant,
+    )?;
 
     let t0 = Instant::now();
-    let (out, shards) = serve_sharded_stats(&mut engine, requests.clone(), &offsets, max_active)?;
+    let (out, shards) = serve_sharded_stats_lanes(
+        &mut engine,
+        requests.clone(),
+        &offsets,
+        max_active,
+        0,
+        prefill_chunk,
+        plan.as_ref(),
+    )?;
     let wall = t0.elapsed().as_secs_f64();
     let stats = LatencyStats::from_responses(&out, wall);
     println!(

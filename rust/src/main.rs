@@ -26,13 +26,16 @@ use pim_llm::models;
 use pim_llm::obs::export::{check_trace_doc, write_chrome_trace_tagged};
 use pim_llm::quant::{write_tpk, PackedModel};
 use pim_llm::runtime::{
-    decoder, default_artifacts, ArenaLayout, BackendKind, Engine, ShardedEngine,
+    decoder, default_artifacts, ArenaLayout, Artifacts, BackendKind, DraftSpec, Engine,
+    ShardedEngine, SpecPlan, DEFAULT_SPEC_K,
 };
 use pim_llm::serving::{
-    serve_sharded_stats_opts, shard_report, LatencyStats, Policy, Request, Server,
+    serve_sharded_stats_lanes, shard_report, LaneStats, LatencyStats, Policy, Request, Server,
 };
 use pim_llm::util::cli::Args;
-use pim_llm::util::error::{anyhow, Context, Result};
+use pim_llm::util::error::{anyhow, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 const USAGE: &str = "\
@@ -75,6 +78,20 @@ SUBCOMMANDS
               --block-len the block length defaults to that prefix
               length (the index caches whole blocks only), so hits
               actually occur)
+             [--prefill-chunk C] [--spec-draft off|self|tiny|oracle] [--spec-k K]
+             (--prefill-chunk C > 0 runs the two-lane scheduler: each
+              still-prefilling session ingests up to C prompt positions
+              per tick through one span traversal, so long prompts stop
+              serializing everyone else's time-to-first-token.
+              --spec-draft turns on greedy-exact speculative decoding:
+              a draft proposes up to --spec-k tokens per tick and the
+              target verifies the whole span in one traversal — output
+              is byte-identical by construction. Drafts: `self` (the
+              target model itself, the always-accept sanity draft),
+              `tiny` (a sized-down synthetic sibling), `oracle` (replay
+              a recorded non-speculative run of the same workload — the
+              100%-acceptance throughput bound). Both knobs compose with
+              every policy, backend, --kv-quant and --prefix-cache)
              [--artifact <file.tpk>] (packed backend only)
              [--trace <path>] [--metrics] [--validate-every N]
              (--trace records every scheduler tick, admission,
@@ -91,6 +108,9 @@ SUBCOMMANDS
   pack       [--out <file.tpk>] (default packed.tpk)
   generate   --model <name> --prompt-len P --new-tokens T --arch <...>
   trace-check --trace <path>   (validate a serve --trace output file)
+  bench-check [--dir <path>]   (parse every checked-in BENCH_*.json with
+              the in-crate JSON parser and verify each bench's required
+              keys — what ci.sh runs instead of an existence grep)
 
 --backend selects the runtime executor (default: the PIM_LLM_BACKEND
 env var, else the pure-Rust reference executor; `packed` runs the same
@@ -163,6 +183,7 @@ fn main() -> Result<()> {
         Some("pack") => cmd_pack(&args),
         Some("generate") => cmd_generate(&args, &arch_cfg),
         Some("trace-check") => cmd_trace_check(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -171,6 +192,7 @@ fn main() -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
+    args.expect_known(&["config", "model", "context", "arch"])?;
     let m = lookup_model(&args.str_or("model", "OPT-6.7B"))?;
     let context = args.usize_or("context", 128)?;
     let arch = parse_arch(&args.str_or("arch", "pim-llm"))?;
@@ -209,6 +231,7 @@ fn cmd_simulate(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
+    args.expect_known(&["config", "figure"])?;
     let figure = args.str_or("figure", "all");
     let want = |f: &str| figure == "all" || figure == f;
     let mut matched = false;
@@ -253,6 +276,29 @@ fn cmd_sweep(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "config",
+        "requests",
+        "prompt-len",
+        "new-tokens",
+        "max-active",
+        "batch",
+        "workers",
+        "policy",
+        "arena-blocks",
+        "block-len",
+        "kv-quant",
+        "prefix-cache",
+        "prefix-cap",
+        "backend",
+        "artifact",
+        "trace",
+        "metrics",
+        "validate-every",
+        "prefill-chunk",
+        "spec-draft",
+        "spec-k",
+    ])?;
     let requests = args.usize_or("requests", 16)?;
     let prompt_len = args.usize_or("prompt-len", 8)?;
     let new_tokens = args.usize_or("new-tokens", 16)?;
@@ -269,7 +315,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Arena storage layout: f32 (exact, the default) or group-scaled
     // int8 (~4x resident sessions per arena byte, host backends only).
     let kv_quant = ArenaLayout::from_name(&args.str_or("kv-quant", "f32"))?;
-    let prefix_cache = args.flag("prefix-cache");
+    let prefix_cache = args.flag("prefix-cache")?;
     let prefix_cap = args.usize_or("prefix-cap", 0)?;
     // Without an explicit --block-len, --prefix-cache sizes blocks to
     // the workload's shared system prefix (the first half of each
@@ -307,9 +353,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // token streams with them on or off — the determinism suites pin
     // it), so flipping them on for a production-shaped run is safe.
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
-    let metrics = args.flag("metrics");
+    let metrics = args.flag("metrics")?;
     let validate_every = args.usize_or("validate-every", 0)?;
     let obs_on = trace_path.is_some() || metrics;
+    // Lane-scheduler knobs: --prefill-chunk 0 (off) keeps the classic
+    // single-position tick, --spec-draft off keeps plain decoding.
+    let prefill_chunk = args.usize_or("prefill-chunk", 0)?;
+    let spec_draft = DraftSpec::from_flag(&args.str_or("spec-draft", "off"))?;
+    let spec_k = args.usize_or("spec-k", DEFAULT_SPEC_K)?;
 
     // Sharded serving partitions ONE arena across worker-owned shards
     // and runs its own multi-threaded front end; everything else drives
@@ -359,10 +410,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if obs_on {
             engine.set_obs_enabled(true);
         }
+        let plan = build_spec_plan(
+            spec_draft,
+            spec_k,
+            engine.shard(0).artifacts(),
+            &reqs,
+            block_len,
+            kv_quant,
+        )?;
         let offsets = vec![0.0; reqs.len()];
         let t0 = Instant::now();
-        let (out, shards) =
-            serve_sharded_stats_opts(&mut engine, reqs, &offsets, max_active, validate_every)?;
+        let (out, shards) = serve_sharded_stats_lanes(
+            &mut engine,
+            reqs,
+            &offsets,
+            max_active,
+            validate_every,
+            prefill_chunk,
+            plan.as_ref(),
+        )?;
         let wall = t0.elapsed().as_secs_f64();
         let stats = LatencyStats::from_responses(&out, wall);
         println!(
@@ -370,6 +436,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.n, stats.total_tokens, wall, stats.mean_service_s
         );
         println!("  {}", stats.report());
+        if (prefill_chunk > 0 || plan.is_some()) && obs_on {
+            let lanes = engine.obs().iter().map(|o| LaneStats::from_obs(o)).fold(
+                LaneStats::default(),
+                |a, b| LaneStats {
+                    prefill_tokens: a.prefill_tokens + b.prefill_tokens,
+                    decode_tokens: a.decode_tokens + b.decode_tokens,
+                    proposed: a.proposed + b.proposed,
+                    accepted: a.accepted + b.accepted,
+                },
+            );
+            println!("  {}", lanes.report());
+        }
         for line in shard_report(&shards).lines() {
             println!("  {line}");
         }
@@ -426,8 +504,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if obs_on {
         engine.obs().set_enabled(true);
     }
+    let plan = build_spec_plan(
+        spec_draft,
+        spec_k,
+        engine.artifacts(),
+        &reqs,
+        block_len,
+        kv_quant,
+    )?;
     let t0 = Instant::now();
-    let server = Server::new(&engine, policy).with_validate_every(validate_every);
+    let mut server = Server::new(&engine, policy)
+        .with_validate_every(validate_every)
+        .with_prefill_chunk(prefill_chunk);
+    if let Some(p) = &plan {
+        server = server.with_spec(p)?;
+    }
     let out = server.serve(reqs)?;
     let wall = t0.elapsed().as_secs_f64();
     let stats = LatencyStats::from_responses(&out, wall);
@@ -436,6 +527,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.n, stats.total_tokens, wall, stats.mean_service_s
     );
     println!("  {}", stats.report());
+    if (prefill_chunk > 0 || plan.is_some()) && obs_on {
+        println!("  {}", LaneStats::from_obs(engine.obs()).report());
+    }
     if let Some(ps) = engine.prefix_stats() {
         println!(
             "  {} | {} entries live",
@@ -458,10 +552,141 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the speculative-decoding plan for `serve`. Self/tiny drafts
+/// wrap the target's own artifact bundle; the oracle records a
+/// non-speculative reference run of the same workload first — the
+/// honest 100%-acceptance harness, and the throughput bound the lanes
+/// bench reports against. Tokens are policy- and backend-independent,
+/// but NOT kv-layout independent (int8 is lossy, and its group scaling
+/// follows the block geometry), so the recording run pins the same
+/// `--kv-quant` and `--block-len` the serving engine uses.
+fn build_spec_plan(
+    draft: DraftSpec,
+    k: usize,
+    bundle: &Arc<Artifacts>,
+    reqs: &[Request],
+    block_len: usize,
+    kv_quant: ArenaLayout,
+) -> Result<Option<SpecPlan>> {
+    Ok(match draft {
+        DraftSpec::Off => None,
+        DraftSpec::SelfModel => Some(SpecPlan::self_draft(bundle, k)?),
+        DraftSpec::Tiny => Some(SpecPlan::tiny_draft(bundle, k)?),
+        DraftSpec::Oracle => {
+            let oracle = Engine::load_default_with_arena_mode(
+                BackendKind::Reference,
+                block_len,
+                0,
+                kv_quant,
+            )?;
+            let recorded = Server::new(&oracle, Policy::Fifo).serve(reqs.to_vec())?;
+            let book: HashMap<u64, Vec<i32>> =
+                recorded.into_iter().map(|r| (r.id, r.tokens)).collect();
+            Some(SpecPlan::oracle(book, k)?)
+        }
+    })
+}
+
+/// `repro bench-check [--dir <path>]`: parse every checked-in
+/// `BENCH_*.json` with the in-crate JSON parser and verify each
+/// bench's required keys — so CI fails a bench artifact an interrupted
+/// run left empty or truncated, instead of only checking that the file
+/// exists.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    args.expect_known(&["config", "dir"])?;
+    let dir = std::path::PathBuf::from(
+        args.str_or("dir", concat!(env!("CARGO_MANIFEST_DIR"), "/..")),
+    );
+    let specs: &[(&str, &str, &[&str])] = &[
+        (
+            "BENCH_obs.json",
+            "runtime_obs",
+            &[
+                "backend",
+                "block_len",
+                "arena_blocks",
+                "requests",
+                "target_overhead_pct",
+                "worst_overhead_pct",
+                "points",
+            ],
+        ),
+        (
+            "BENCH_kvq.json",
+            "runtime_kvq",
+            &[
+                "block_len",
+                "lanes",
+                "requests",
+                "sessions_ratio_sized",
+                "tiny",
+                "sized",
+            ],
+        ),
+        (
+            "BENCH_sharded.json",
+            "runtime_sharded",
+            &[
+                "block_len",
+                "total_blocks",
+                "lanes_per_worker",
+                "requests",
+                "cores",
+                "speedup_4w_over_1w_sized",
+                "tiny",
+                "sized",
+            ],
+        ),
+        ("BENCH_artifacts.json", "runtime_artifacts", &["models"]),
+        (
+            "BENCH_lanes.json",
+            "runtime_lanes",
+            &[
+                "block_len",
+                "arena_blocks",
+                "max_active",
+                "requests",
+                "prefill_chunk",
+                "spec_k",
+                "mixed",
+                "decode",
+            ],
+        ),
+    ];
+    for (file, bench, keys) in specs {
+        let path = dir.join(file);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading bench artifact {}", path.display()))?;
+        let doc = pim_llm::util::json::parse(&text)
+            .with_context(|| format!("parsing bench artifact {}", path.display()))?;
+        (|| -> Result<()> {
+            let name = doc.get("bench")?.as_str()?;
+            ensure!(name == *bench, "field 'bench' is '{name}', expected '{bench}'");
+            for key in *keys {
+                doc.get(key)?;
+            }
+            Ok(())
+        })()
+        .with_context(|| format!("bench artifact {}", path.display()))?;
+        let provisional = doc
+            .opt("provisional")
+            .map(|b| b.as_bool())
+            .transpose()?
+            .unwrap_or(false);
+        println!(
+            "  {file} OK ({bench}{})",
+            if provisional { ", provisional" } else { "" }
+        );
+    }
+    println!("bench-check OK: {} artifacts validated", specs.len());
+    Ok(())
+}
+
 /// `repro trace-check --trace <path>`: parse a `serve --trace` output
 /// with the in-crate JSON parser and verify the trace-event schema
 /// (nonempty, per-track monotonic timestamps) — the CI round trip.
 fn cmd_trace_check(args: &Args) -> Result<()> {
+    args.expect_known(&["config", "trace"])?;
     let path = args
         .get("trace")
         .ok_or_else(|| anyhow!("trace-check needs --trace <path>\n\n{USAGE}"))?;
@@ -476,6 +701,7 @@ fn cmd_trace_check(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
+    args.expect_known(&["config", "backend", "artifact"])?;
     let kind = BackendKind::resolve(args.backend())?;
     let engine = match artifact_path(args, kind)? {
         Some(p) => Engine::load_default_packed_artifact(&p, 0, 0)?,
@@ -495,6 +721,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
 }
 
 fn cmd_pack(args: &Args) -> Result<()> {
+    args.expect_known(&["config", "out"])?;
     let out = std::path::PathBuf::from(args.str_or("out", "packed.tpk"));
     let artifacts = default_artifacts(BackendKind::Packed)?;
     let t0 = Instant::now();
@@ -526,6 +753,7 @@ fn cmd_pack(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args, arch_cfg: &ArchConfig) -> Result<()> {
+    args.expect_known(&["config", "model", "prompt-len", "new-tokens", "arch"])?;
     let m = lookup_model(&args.str_or("model", "OPT-6.7B"))?;
     let prompt_len = args.usize_or("prompt-len", 32)?;
     let new_tokens = args.usize_or("new-tokens", 96)?;

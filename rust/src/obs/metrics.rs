@@ -43,10 +43,20 @@ pub enum Counter {
     /// by the q8 attention gather — the traffic the quantized arena
     /// trades the f32 gather for.
     KvDequantBlocks,
+    /// Prompt positions fed by the prefill lane (chunked prefill).
+    LanePrefillTokens,
+    /// Generated tokens absorbed by the decode lane.
+    LaneDecodeTokens,
+    /// Draft tokens proposed for speculative verification (the free
+    /// bonus token of each span is not counted on either side).
+    SpecProposed,
+    /// Draft proposals the target's own argmax confirmed — acceptance
+    /// rate is `spec_accepted / spec_proposed`.
+    SpecAccepted,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 13] = [
+    pub const ALL: [Counter; 17] = [
         Counter::TicksRun,
         Counter::TokensDecoded,
         Counter::Admitted,
@@ -60,6 +70,10 @@ impl Counter {
         Counter::BlocksReclaimed,
         Counter::ValidationsRun,
         Counter::KvDequantBlocks,
+        Counter::LanePrefillTokens,
+        Counter::LaneDecodeTokens,
+        Counter::SpecProposed,
+        Counter::SpecAccepted,
     ];
 
     pub fn name(self) -> &'static str {
@@ -77,6 +91,10 @@ impl Counter {
             Counter::BlocksReclaimed => "blocks_reclaimed",
             Counter::ValidationsRun => "validations_run",
             Counter::KvDequantBlocks => "kv_dequant_blocks",
+            Counter::LanePrefillTokens => "lane_prefill_tokens",
+            Counter::LaneDecodeTokens => "lane_decode_tokens",
+            Counter::SpecProposed => "spec_proposed",
+            Counter::SpecAccepted => "spec_accepted",
         }
     }
 

@@ -127,6 +127,9 @@ pub enum SpanKind {
     KernelHead,
     /// Paged attention over the arena block tables.
     Attention,
+    /// Speculative k-token verify traversal (`a` = request id): one
+    /// target span checking a draft's proposals.
+    SpecVerify,
 }
 
 impl SpanKind {
@@ -144,6 +147,7 @@ impl SpanKind {
             SpanKind::KernelFf2 => "w_out",
             SpanKind::KernelHead => "w_head",
             SpanKind::Attention => "attention",
+            SpanKind::SpecVerify => "spec_verify",
         }
     }
 

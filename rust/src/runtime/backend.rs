@@ -170,4 +170,35 @@ pub trait Backend {
             .map(|(&h, (&t, &p))| self.decode_step(arena, h, t, p))
             .collect()
     }
+
+    /// Feed `tokens` into ONE session at consecutive positions
+    /// `start_pos..start_pos + tokens.len()`, returning the logits
+    /// after every fed position — the k-token verify traversal of
+    /// greedy-exact speculative decoding and the chunked-prefill span.
+    ///
+    /// Contract: the result MUST be exactly (bit-for-bit) what
+    /// `tokens.len()` sequential [`Backend::decode_step`] calls would
+    /// produce. The default simply loops `decode_step`, which is
+    /// correct on every backend. The host backends override it to
+    /// traverse each weight matrix ONCE for the whole span (position
+    /// `p + 1`'s layer-`l` input depends only on its own layer-`l-1`
+    /// output, and its attention reads K/V rows `0..=p + 1`, which the
+    /// per-layer scatter has already written — the same dataflow
+    /// argument batched decode rests on); they fall back to this
+    /// sequential loop on the int8 arena layout, where writing a row
+    /// can rescale earlier rows of its quantization group in place and
+    /// break the sequential bit-equivalence.
+    fn decode_span(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        tokens: &[i32],
+        start_pos: i32,
+    ) -> Result<Vec<Vec<f32>>> {
+        tokens
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| self.decode_step(arena, handle, t, start_pos + i as i32))
+            .collect()
+    }
 }

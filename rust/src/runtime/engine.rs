@@ -174,7 +174,42 @@ impl Engine {
         capacity_blocks: usize,
         mode: ArenaLayout,
     ) -> Result<Self> {
-        let artifacts = Arc::new(artifacts);
+        Self::load_shared_with_arena_mode(
+            Arc::new(artifacts),
+            kind,
+            block_len,
+            capacity_blocks,
+            mode,
+        )
+    }
+
+    /// Assemble an engine over an ALREADY-`Arc`'d artifact bundle — no
+    /// weight copy. This is how speculative decoding stands a draft
+    /// engine beside its target: the same `Arc` for a self-draft, a
+    /// sibling bundle for a sized-down one.
+    pub fn load_shared_with_arena(
+        artifacts: Arc<Artifacts>,
+        kind: BackendKind,
+        block_len: usize,
+        capacity_blocks: usize,
+    ) -> Result<Self> {
+        Self::load_shared_with_arena_mode(
+            artifacts,
+            kind,
+            block_len,
+            capacity_blocks,
+            ArenaLayout::F32,
+        )
+    }
+
+    /// [`Engine::load_shared_with_arena`] with an explicit arena layout.
+    pub fn load_shared_with_arena_mode(
+        artifacts: Arc<Artifacts>,
+        kind: BackendKind,
+        block_len: usize,
+        capacity_blocks: usize,
+        mode: ArenaLayout,
+    ) -> Result<Self> {
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Reference => Box::new(
                 super::reference::ReferenceBackend::new(Arc::clone(&artifacts))?,
@@ -422,6 +457,33 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
             .decode_batch(&mut self.arena.borrow_mut(), handles, tokens, positions)
     }
 
+    /// Feed `tokens` into ONE session at consecutive positions
+    /// `start_pos..start_pos + tokens.len()`, returning the logits after
+    /// every fed position. Guaranteed bit-identical to the equivalent
+    /// sequential [`Engine::decode_step`] loop — on the host backends
+    /// over an f32 arena each weight matrix is traversed once per call
+    /// instead of once per position, which is what chunked prefill and
+    /// the speculative k-token verify amortize.
+    pub fn decode_span(
+        &self,
+        handle: CacheHandle,
+        tokens: &[i32],
+        start_pos: i32,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.backend
+            .decode_span(&mut self.arena.borrow_mut(), handle, tokens, start_pos)
+    }
+
+    /// Roll a session's cache back to `keep_positions` fed positions,
+    /// releasing whole trailing blocks through the arena block table —
+    /// how speculative decoding drops the cache rows claimed for
+    /// rejected draft tokens. Only meaningful on backends whose session
+    /// state IS the arena (the host backends); see
+    /// `CacheArena::truncate_session` for the row-level safety argument.
+    pub fn truncate_session(&self, handle: CacheHandle, keep_positions: usize) -> Result<()> {
+        self.arena.borrow_mut().truncate_session(handle, keep_positions)
+    }
+
     /// Current arena occupancy (total/free/used blocks), the signal the
     /// continuous-batching scheduler admits and preempts on.
     pub fn arena_status(&self) -> ArenaStatus {
@@ -652,6 +714,13 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
         self.artifacts.manifest.model.max_ctx
     }
 
+    /// The loaded artifact bundle (manifest + weights) — what a
+    /// speculative-decoding setup clones to run the SAME model as its
+    /// own draft, and reads shapes from to size a smaller one.
+    pub fn artifacts(&self) -> &Arc<Artifacts> {
+        &self.artifacts
+    }
+
     pub fn platform(&self) -> String {
         self.backend.platform()
     }
@@ -659,6 +728,16 @@ impl<B: ?Sized + Backend> EngineImpl<B> {
     /// Short backend identifier: "reference", "packed" or "pjrt".
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Whether the backend's session state lives in the arena's block
+    /// tables (the host backends) rather than in private buffers (PJRT's
+    /// contiguous device caches). The precondition for everything that
+    /// manipulates a session through its table — prefix-block adoption,
+    /// span capacity capping, and the speculative-verify rollback
+    /// ([`Engine::truncate_session`]).
+    pub fn arena_backed(&self) -> bool {
+        self.backend.supports_prefix_sharing()
     }
 
     // ---- observability ---------------------------------------------

@@ -475,6 +475,34 @@ impl CacheArena {
         Ok(())
     }
 
+    /// Truncate a session's block table to what `keep_positions` fed
+    /// positions need, releasing every trailing block reference — the
+    /// rollback primitive speculative decoding uses to drop the cache
+    /// blocks claimed for rejected draft tokens. Only whole trailing
+    /// blocks are released; rows past `keep_positions` inside the kept
+    /// boundary block stay in storage, which is safe on the f32 layout
+    /// because attention at position `p` reads rows `0..=p` only and a
+    /// later feed at those positions overwrites the full row before it
+    /// is ever read. (The int8 layout has no such guarantee — writing a
+    /// row can rescale earlier codes in its group in place — so the
+    /// speculative verify path never writes rejected rows there in the
+    /// first place.) A shared trailing block merely loses this
+    /// session's reference; `keep_positions` covering the whole table
+    /// is a no-op.
+    pub fn truncate_session(&mut self, h: CacheHandle, keep_positions: usize) -> Result<()> {
+        self.slot(h)?; // validate first so the table is untouched on error
+        let keep_blocks = self.layout.blocks_for_positions(keep_positions);
+        let s = &mut self.slots[h.index as usize];
+        if keep_blocks >= s.table.len() {
+            return Ok(());
+        }
+        let trailing = s.table.split_off(keep_blocks);
+        for b in trailing {
+            self.release_ref(b);
+        }
+        Ok(())
+    }
+
     /// Drop one reference to `b`, returning it to the free list at zero.
     fn release_ref(&mut self, b: u32) {
         debug_assert!(self.refs[b as usize] > 0, "releasing unowned block {b}");
@@ -1644,5 +1672,76 @@ mod tests {
         assert!(a.ensure_capacity(h, 10).is_err());
         assert!(a.write_kv(h, 2, 0, &[0.0; 4], &[0.0; 4]).is_err());
         assert!(a.write_kv(h, 0, 0, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn truncate_session_releases_trailing_blocks_and_keeps_prefix_rows() {
+        // 9 positions over block_len 4 = 3 blocks; roll back to 5 = 2
+        // blocks: the trailing block returns to the free list, the kept
+        // rows read back bitwise, and a subsequent regrow works.
+        let mut a = CacheArena::new(layout(4), 6).unwrap();
+        let h = a.alloc_session().unwrap();
+        for pos in 0..9usize {
+            a.ensure_capacity(h, pos).unwrap();
+            let k: Vec<f32> = (0..4).map(|i| (pos * 10 + i) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            a.write_kv(h, 0, pos, &k, &v).unwrap();
+        }
+        assert_eq!(a.session_blocks(h).unwrap(), 3);
+        let free_before = a.status().free_blocks;
+        a.truncate_session(h, 5).unwrap();
+        assert_eq!(a.session_blocks(h).unwrap(), 2);
+        assert_eq!(a.status().free_blocks, free_before + 1);
+        a.debug_validate().unwrap();
+        // Rows 0..5 are untouched by the rollback.
+        let view = a.view(h).unwrap();
+        let (mut gk, mut gv) = (Vec::new(), Vec::new());
+        view.gather_head(0, 0, 5, &mut gk, &mut gv);
+        let expect: Vec<f32> = (0..5)
+            .flat_map(|p| [(p * 10) as f32, (p * 10 + 1) as f32])
+            .collect();
+        assert_eq!(gk, expect);
+        // Regrow over the rolled-back positions: ensure + write works
+        // and the rewritten rows win over any stale storage.
+        for pos in 5..7usize {
+            a.ensure_capacity(h, pos).unwrap();
+            a.write_kv(h, 0, pos, &[1.0; 4], &[2.0; 4]).unwrap();
+        }
+        assert_eq!(a.session_blocks(h).unwrap(), 2);
+        a.debug_validate().unwrap();
+        // Truncating to at or beyond the held table is a no-op; a dead
+        // handle errors.
+        a.truncate_session(h, 9).unwrap();
+        assert_eq!(a.session_blocks(h).unwrap(), 2);
+        a.free_session(h).unwrap();
+        assert!(a.truncate_session(h, 0).is_err());
+    }
+
+    #[test]
+    fn truncate_session_on_shared_blocks_drops_only_this_reference() {
+        // Donor shares its 2-block chain with an adopter; truncating the
+        // adopter to 0 positions must release the adopter's references
+        // without freeing the donor's blocks.
+        let mut a = CacheArena::new(layout(4), 4).unwrap();
+        let donor = a.alloc_session().unwrap();
+        for pos in 0..8usize {
+            a.ensure_capacity(donor, pos).unwrap();
+            a.write_kv(donor, 0, pos, &[3.0; 4], &[4.0; 4]).unwrap();
+        }
+        let chain = a.session_table(donor).unwrap();
+        let adopter = a.alloc_session().unwrap();
+        a.share_blocks(adopter, &chain).unwrap();
+        for &b in &chain {
+            assert_eq!(a.block_refs(b), 2);
+        }
+        a.truncate_session(adopter, 0).unwrap();
+        assert_eq!(a.session_blocks(adopter).unwrap(), 0);
+        for &b in &chain {
+            assert_eq!(a.block_refs(b), 1, "donor must keep block {b}");
+        }
+        a.debug_validate().unwrap();
+        // The donor's rows are untouched.
+        let (k, _) = a.gather_contiguous(donor).unwrap();
+        assert!(k.iter().take(8).any(|&x| x != 0.0));
     }
 }

@@ -35,6 +35,9 @@
 //!   deterministic request→shard placement ([`engine::shard_for`]).
 //! * [`decoder`]   — greedy generation loops (single-session
 //!   `TinyDecoder`, batched `BatchDecoder`) + golden validation.
+//! * [`spec`]      — greedy-exact speculative decoding: draft sources
+//!   (`self` / `tiny` / `oracle`) proposing k-token spans the target
+//!   verifies in one traversal, byte-identical output by construction.
 
 pub mod artifacts;
 pub mod backend;
@@ -47,6 +50,7 @@ pub mod packed;
 pub mod pjrt;
 pub mod prefixcache;
 pub mod reference;
+pub mod spec;
 
 pub use artifacts::Artifacts;
 pub use backend::Backend;
@@ -57,3 +61,4 @@ pub use engine::{
 };
 pub use kvcache::{ArenaLayout, ArenaStatus, CacheArena, CacheHandle, CacheLayout};
 pub use prefixcache::{PrefixCache, PrefixMatch, PrefixStats};
+pub use spec::{DraftSource, DraftSpec, SpecPlan, SpecState, DEFAULT_SPEC_K};

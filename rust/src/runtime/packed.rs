@@ -34,7 +34,7 @@
 use super::artifacts::Artifacts;
 use super::backend::Backend;
 use super::kernels::{attention, gelu, rms_norm};
-use super::kvcache::{ensure_distinct, CacheArena, CacheHandle};
+use super::kvcache::{ensure_distinct, ArenaLayout, CacheArena, CacheHandle};
 use super::reference::ReferenceBackend;
 use crate::obs::{Obs, SpanKind};
 use crate::quant::{
@@ -223,6 +223,50 @@ impl Backend for PackedBackend {
             return Ok(Vec::new());
         }
         ensure_distinct(handles)?;
+        self.step_many(arena, handles, tokens, positions)
+    }
+
+    /// One-session consecutive-position span through the same
+    /// one-traversal-per-bitplane orchestration as
+    /// [`Backend::decode_batch`]; same soundness argument and same f32
+    /// gate as the reference backend's span (see
+    /// `ReferenceBackend::decode_span`) — on the int8 layout a row write
+    /// requantizes earlier rows of its group in place, so the span falls
+    /// back to the sequential default there.
+    fn decode_span(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        tokens: &[i32],
+        start_pos: i32,
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        if arena.mode() != ArenaLayout::F32 {
+            return tokens
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| self.decode_step(arena, handle, t, start_pos + i as i32))
+                .collect();
+        }
+        let handles = vec![handle; tokens.len()];
+        let positions: Vec<i32> = (0..tokens.len() as i32).map(|i| start_pos + i).collect();
+        self.step_many(arena, &handles, tokens, &positions)
+    }
+}
+
+impl PackedBackend {
+    /// The shared batched orchestration behind [`Backend::decode_batch`]
+    /// and [`Backend::decode_span`]; callers have validated arity — and
+    /// distinctness where it matters (span entries alias one handle).
+    fn step_many(
+        &self,
+        arena: &mut CacheArena,
+        handles: &[CacheHandle],
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
         let r = &self.reference;
         let m = r.artifacts.manifest.model.clone();
         let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);

@@ -322,6 +322,59 @@ impl Backend for ReferenceBackend {
             return Ok(Vec::new());
         }
         ensure_distinct(handles)?;
+        self.step_many(arena, handles, tokens, positions)
+    }
+
+    /// Feed `tokens` into ONE session at consecutive positions through
+    /// the SAME one-traversal-per-weight orchestration as
+    /// [`Backend::decode_batch`] — sound because position `p + 1`'s
+    /// layer input depends only on its own previous-layer output, and
+    /// its attention reads K/V rows `0..=p + 1`, all of which the
+    /// per-layer scatter has already written by the time the per-lane
+    /// attention pass runs. Gated to the f32 arena layout: on int8,
+    /// writing a row requantizes EARLIER rows of its quantization group
+    /// in place, so within one call a later span entry could rewrite
+    /// codes an earlier entry's attention has yet to read — there the
+    /// span falls back to the sequential default, which is always
+    /// bit-exact.
+    fn decode_span(
+        &self,
+        arena: &mut CacheArena,
+        handle: CacheHandle,
+        tokens: &[i32],
+        start_pos: i32,
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        if arena.mode() != ArenaLayout::F32 {
+            return tokens
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| self.decode_step(arena, handle, t, start_pos + i as i32))
+                .collect();
+        }
+        let handles = vec![handle; tokens.len()];
+        let positions: Vec<i32> = (0..tokens.len() as i32).map(|i| start_pos + i).collect();
+        self.step_many(arena, &handles, tokens, &positions)
+    }
+}
+
+impl ReferenceBackend {
+    /// The shared batched orchestration behind [`Backend::decode_batch`]
+    /// (B distinct sessions, ragged positions) and
+    /// [`Backend::decode_span`] (one session, consecutive positions):
+    /// every weight matrix is traversed ONCE per call. Callers have
+    /// already validated arity — and distinctness where it matters; span
+    /// entries deliberately alias one handle, which is exactly why the
+    /// check lives in the callers rather than here.
+    fn step_many(
+        &self,
+        arena: &mut CacheArena,
+        handles: &[CacheHandle],
+        tokens: &[i32],
+        positions: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
         let m = self.artifacts.manifest.model.clone();
         let (d, h, max_ctx) = (m.d, m.h, m.max_ctx);
         let dh = d / h;

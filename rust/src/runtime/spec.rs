@@ -1,0 +1,402 @@
+//! Greedy-exact speculative decoding: a cheap DRAFT proposes the next
+//! few tokens, the target backend verifies them all in ONE
+//! [`super::Backend::decode_span`] traversal, and only proposals that
+//! match the target's own greedy argmax are kept — so the served token
+//! stream is byte-identical to non-speculative decoding *by
+//! construction*, at any acceptance rate.
+//!
+//! Protocol, for a session with `L` committed tokens and `last_logits`
+//! from position `L - 1`:
+//!
+//! 1. `f0 = greedy_argmax(last_logits)` — exactly the token the
+//!    non-speculative path would feed next, correct with no draft help.
+//! 2. The draft proposes `d_1..d_n` by feeding `f0, d_1, …` into its own
+//!    session (`n <= k - 1`).
+//! 3. The target feeds the whole span `[f0, d_1..d_n]` at positions
+//!    `L..L + n`, yielding logits `O_0..O_n` — one weight traversal for
+//!    up to `k` tokens instead of `k` traversals.
+//! 4. Accept the longest prefix with `d_i == greedy_argmax(O_{i-1})`;
+//!    absorb `f0, d_1..d_m` with their logits (`m + 1` tokens this
+//!    tick, `O_m` becoming the next tick's `last_logits`).
+//! 5. Roll back: cache rows were written for every span position, so on
+//!    a rejection the target's block table is truncated to `L + m + 1`
+//!    positions ([`super::kvcache::CacheArena::truncate_session`]); the
+//!    draft is truncated to the same committed length. On the int8
+//!    arena layout — where truncation cannot recover requantized rows —
+//!    the serving layer verifies sequentially instead and never feeds
+//!    an unverified token, so no target rollback is ever needed there.
+//!
+//! Every accepted token equals what non-speculative greedy decoding
+//! would have produced at that position, and the logits carried forward
+//! are the span logits — bitwise those of the sequential steps
+//! ([`super::Backend::decode_span`]'s contract). A wrong draft can only
+//! cost speed, never change output; `tests/spec_equivalence.rs` pins
+//! spec-on == spec-off bytewise across backends, policies and drafts.
+//!
+//! Three draft sources, picked by `--spec-draft`:
+//!
+//! * `self` — the target's own artifact bundle (`Arc`-shared, no weight
+//!   copy). 100% acceptance by construction but a full-cost draft; the
+//!   verify-path demonstrator.
+//! * `tiny` — a sized-down synthetic sibling (same vocab and context
+//!   window, fraction of the width/depth). The realistic cost
+//!   asymmetry; acceptance depends on how well it tracks the target.
+//! * `oracle` — replays pre-recorded non-speculative streams keyed by
+//!   request id: near-zero draft cost at 100% acceptance, the honest
+//!   upper-bound harness for the speculative throughput benches (the
+//!   bench records a spec-off run first).
+
+use super::artifacts::{Artifacts, ModelInfo};
+use super::decoder::greedy_argmax;
+use super::engine::{BackendKind, Engine};
+use super::kvcache::{CacheHandle, CacheLayout};
+use crate::util::error::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Proposals per verify when `--spec-draft` is given without `--spec-k`.
+pub const DEFAULT_SPEC_K: usize = 4;
+
+/// The `--spec-draft` flag, parsed. `Off` keeps serving exactly on the
+/// non-speculative path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftSpec {
+    Off,
+    SelfModel,
+    Tiny,
+    Oracle,
+}
+
+impl DraftSpec {
+    /// Parse `--spec-draft` (absent/empty/"off" disables).
+    pub fn from_flag(s: &str) -> Result<Self> {
+        match s {
+            "" | "off" => Ok(DraftSpec::Off),
+            "self" => Ok(DraftSpec::SelfModel),
+            "tiny" => Ok(DraftSpec::Tiny),
+            "oracle" => Ok(DraftSpec::Oracle),
+            other => bail!("unknown --spec-draft '{other}' (off | self | tiny | oracle)"),
+        }
+    }
+}
+
+/// Where draft proposals come from. `Send + Sync`: the sharded front
+/// end hands one plan to every worker thread, and each builds its own
+/// private [`SpecState`] from it.
+#[derive(Clone)]
+pub enum DraftSource {
+    /// Run this artifact bundle as a draft engine (self or tiny).
+    Model(Arc<Artifacts>),
+    /// Replay recorded greedy streams: request id -> the full token
+    /// sequence (prompt + generated) of a non-speculative run.
+    Oracle(Arc<HashMap<u64, Vec<i32>>>),
+}
+
+/// A speculative-decoding setup: the draft source plus the span width.
+/// Cheap to clone (everything behind `Arc`); thread-safe by structure.
+#[derive(Clone)]
+pub struct SpecPlan {
+    /// Max tokens fed per verify span: 1 bonus token + up to `k - 1`
+    /// draft proposals.
+    pub k: usize,
+    pub source: DraftSource,
+}
+
+impl SpecPlan {
+    fn with_k(k: usize, source: DraftSource) -> Result<Self> {
+        ensure!(k >= 1, "--spec-k must be >= 1 (got {k})");
+        Ok(Self { k, source })
+    }
+
+    /// Draft with the target's own bundle: every proposal matches, the
+    /// draft costs as much as the target. Demonstrates the verify path.
+    pub fn self_draft(target: &Arc<Artifacts>, k: usize) -> Result<Self> {
+        Self::with_k(k, DraftSource::Model(Arc::clone(target)))
+    }
+
+    /// Draft with a sized-down synthetic sibling of `target`: same
+    /// vocab and context window (proposals must be valid target tokens
+    /// at valid positions), roughly quarter width and half depth — the
+    /// cost asymmetry a real speculative deployment relies on.
+    pub fn tiny_draft(target: &Arc<Artifacts>, k: usize) -> Result<Self> {
+        let m = &target.manifest.model;
+        let h = m.h.max(1);
+        // Quarter the width, rounded up to a multiple of the head count
+        // (and at least one lane per head).
+        let d = m.d.div_ceil(4).div_ceil(h) * h;
+        let tiny = ModelInfo {
+            vocab: m.vocab,
+            d,
+            h,
+            d_ff: 2 * d,
+            n_layers: m.n_layers.div_ceil(2),
+            max_ctx: m.max_ctx,
+            eps: m.eps,
+        };
+        let bundle = Artifacts::synthetic_with(0x0D12AF7, tiny)
+            .context("building the tiny draft bundle")?;
+        Self::with_k(k, DraftSource::Model(Arc::new(bundle)))
+    }
+
+    /// Draft by replaying recorded streams (request id -> full token
+    /// sequence from a non-speculative run of the same requests):
+    /// near-zero cost, 100% acceptance on a faithful recording — and a
+    /// stale or wrong recording only lowers acceptance, never output
+    /// fidelity, because every proposal is still verified.
+    pub fn oracle(book: HashMap<u64, Vec<i32>>, k: usize) -> Result<Self> {
+        Self::with_k(k, DraftSource::Oracle(Arc::new(book)))
+    }
+}
+
+/// One serving loop's live speculative state: the draft driver plus a
+/// per-session map. NOT `Send` (a model draft owns an [`Engine`]);
+/// every server or sharded worker builds its own from the shared plan.
+pub struct SpecState {
+    k: usize,
+    driver: Driver,
+}
+
+enum Driver {
+    Model(DraftEngine),
+    Oracle(Arc<HashMap<u64, Vec<i32>>>),
+}
+
+/// A draft model mirrored beside the target: one reference-backend f32
+/// engine plus one draft session per live target session.
+struct DraftEngine {
+    engine: Engine,
+    /// Target session seq -> draft session. `fed` counts committed +
+    /// proposed tokens fed into the draft; after a rejection the
+    /// session is truncated back to the committed length.
+    sessions: HashMap<u64, DraftSession>,
+}
+
+#[derive(Clone, Copy)]
+struct DraftSession {
+    handle: CacheHandle,
+    fed: usize,
+}
+
+impl SpecState {
+    /// Build from a plan. `lanes` bounds concurrent target sessions
+    /// (the scheduler's `max_active`): a model draft sizes its private
+    /// f32 arena to hold that many full-context draft sessions, so the
+    /// draft can never hit block pressure of its own.
+    pub fn build(plan: &SpecPlan, lanes: usize) -> Result<Self> {
+        let driver = match &plan.source {
+            DraftSource::Oracle(book) => Driver::Oracle(Arc::clone(book)),
+            DraftSource::Model(bundle) => {
+                let m = &bundle.manifest.model;
+                let per_session =
+                    CacheLayout::with_block_len(m, 0).blocks_for_positions(m.max_ctx);
+                let blocks = per_session * (lanes.max(1) + 1);
+                let engine = Engine::load_shared_with_arena(
+                    Arc::clone(bundle),
+                    BackendKind::Reference,
+                    0,
+                    blocks,
+                )
+                .context("building the speculative draft engine")?;
+                Driver::Model(DraftEngine {
+                    engine,
+                    sessions: HashMap::new(),
+                })
+            }
+        };
+        Ok(Self { k: plan.k, driver })
+    }
+
+    /// Max tokens per verify span (bonus token included).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Propose up to `n` tokens continuing `tokens + [f0]` for the
+    /// session `seq` serving request `id`. May return fewer (draft
+    /// context exhausted, oracle stream ended) — the verify span just
+    /// shrinks. Proposals are suggestions only; the caller verifies
+    /// every one against the target's own argmax.
+    pub fn propose(
+        &mut self,
+        seq: u64,
+        id: u64,
+        tokens: &[i32],
+        f0: i32,
+        n: usize,
+    ) -> Result<Vec<i32>> {
+        match &mut self.driver {
+            Driver::Oracle(book) => {
+                let start = tokens.len() + 1; // skip the recorded f0 slot
+                Ok(book
+                    .get(&id)
+                    .map(|stream| {
+                        let end = stream.len().min(start + n);
+                        stream.get(start..end).unwrap_or(&[]).to_vec()
+                    })
+                    .unwrap_or_default())
+            }
+            Driver::Model(draft) => draft.propose(seq, tokens, f0, n),
+        }
+    }
+
+    /// The target committed `keep` tokens: roll the draft session back
+    /// to them, dropping any rejected proposals it had fed.
+    pub fn commit(&mut self, seq: u64, keep: usize) -> Result<()> {
+        if let Driver::Model(draft) = &mut self.driver {
+            if let Some(s) = draft.sessions.get_mut(&seq) {
+                if keep < s.fed {
+                    draft.engine.truncate_session(s.handle, keep)?;
+                    s.fed = keep;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop EVERY draft session — a reused server starts its next serve
+    /// run with fresh session seq numbers, which must not alias stale
+    /// draft state from the previous run.
+    pub fn reset(&mut self) {
+        if let Driver::Model(draft) = &mut self.driver {
+            for (_, s) in draft.sessions.drain() {
+                let _ = draft.engine.free_session(s.handle);
+            }
+        }
+    }
+
+    /// The target session retired or was preempted: drop its draft
+    /// state. A preempted request re-prefills from nothing, and its
+    /// next speculative tick rebuilds the draft by catch-up feeding.
+    pub fn forget(&mut self, seq: u64) {
+        if let Driver::Model(draft) = &mut self.driver {
+            if let Some(s) = draft.sessions.remove(&seq) {
+                let _ = draft.engine.free_session(s.handle);
+            }
+        }
+    }
+}
+
+impl DraftEngine {
+    fn propose(&mut self, seq: u64, tokens: &[i32], f0: i32, n: usize) -> Result<Vec<i32>> {
+        let (handle, mut fed) = match self.sessions.get(&seq) {
+            Some(s) => (s.handle, s.fed),
+            None => (self.engine.new_session()?, 0),
+        };
+        // Catch up on committed tokens the draft has not seen — the
+        // whole gap in one span (a fresh or just-preempted session
+        // re-prefills here).
+        if fed < tokens.len() {
+            self.engine
+                .decode_span(handle, &tokens[fed..], fed as i32)
+                .context("draft catch-up")?;
+            fed = tokens.len();
+        }
+        let max_ctx = self.engine.max_ctx();
+        let mut out = Vec::with_capacity(n);
+        let mut t = f0;
+        for _ in 0..n {
+            if fed >= max_ctx {
+                break; // draft window exhausted; shorter span, still exact
+            }
+            let logits = self.engine.decode_step(handle, t, fed as i32)?;
+            fed += 1;
+            t = greedy_argmax(&logits);
+            out.push(t);
+        }
+        self.sessions.insert(seq, DraftSession { handle, fed });
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle() -> Arc<Artifacts> {
+        Arc::new(Artifacts::synthetic(5).unwrap())
+    }
+
+    #[test]
+    fn draft_spec_parses_every_kind_and_rejects_typos() {
+        assert_eq!(DraftSpec::from_flag("").unwrap(), DraftSpec::Off);
+        assert_eq!(DraftSpec::from_flag("off").unwrap(), DraftSpec::Off);
+        assert_eq!(DraftSpec::from_flag("self").unwrap(), DraftSpec::SelfModel);
+        assert_eq!(DraftSpec::from_flag("tiny").unwrap(), DraftSpec::Tiny);
+        assert_eq!(DraftSpec::from_flag("oracle").unwrap(), DraftSpec::Oracle);
+        let err = DraftSpec::from_flag("tinny").unwrap_err().to_string();
+        assert!(err.contains("tinny"), "names the bad value: {err}");
+        assert!(err.contains("oracle"), "lists the valid ones: {err}");
+    }
+
+    #[test]
+    fn spec_k_zero_is_rejected() {
+        let err = SpecPlan::self_draft(&bundle(), 0).unwrap_err().to_string();
+        assert!(err.contains("--spec-k"), "{err}");
+    }
+
+    #[test]
+    fn tiny_draft_keeps_vocab_and_context_and_shrinks_width() {
+        let target = bundle();
+        let plan = SpecPlan::tiny_draft(&target, 4).unwrap();
+        let DraftSource::Model(draft) = &plan.source else {
+            panic!("tiny draft must carry a model bundle");
+        };
+        let (t, d) = (&target.manifest.model, &draft.manifest.model);
+        assert_eq!(d.vocab, t.vocab);
+        assert_eq!(d.max_ctx, t.max_ctx);
+        assert!(d.d < t.d, "narrower: {} < {}", d.d, t.d);
+        assert!(d.n_layers <= t.n_layers);
+        assert_eq!(d.d % d.h, 0);
+    }
+
+    #[test]
+    fn oracle_proposes_the_recorded_continuation_and_nothing_past_it() {
+        let mut book = HashMap::new();
+        book.insert(7u64, vec![10, 11, 12, 13, 14]);
+        let plan = SpecPlan::oracle(book, 4).unwrap();
+        let mut st = SpecState::build(&plan, 2).unwrap();
+        // 2 committed tokens: slot 2 is f0's, proposals start at slot 3.
+        assert_eq!(st.propose(0, 7, &[10, 11], 12, 3).unwrap(), vec![13, 14]);
+        // Unknown request: no proposals, the span degrades to 1 token.
+        assert!(st.propose(0, 8, &[10, 11], 12, 3).unwrap().is_empty());
+        // End of stream: nothing left to propose.
+        assert!(st.propose(0, 7, &[10, 11, 12, 13], 14, 3).unwrap().is_empty());
+        // Oracle commit/forget are stateless no-ops.
+        st.commit(0, 1).unwrap();
+        st.forget(0);
+    }
+
+    #[test]
+    fn self_draft_proposes_the_greedy_continuation_and_rolls_back() {
+        let a = bundle();
+        let plan = SpecPlan::self_draft(&a, 4).unwrap();
+        let mut st = SpecState::build(&plan, 2).unwrap();
+        let props = st.propose(0, 99, &[], 7, 3).unwrap();
+        assert_eq!(props.len(), 3);
+
+        // Oracle check: the same greedy chain on an independent engine.
+        let e =
+            Engine::load_shared_with_arena(Arc::clone(&a), BackendKind::Reference, 0, 0)
+                .unwrap();
+        let h = e.new_session().unwrap();
+        let mut t = 7;
+        let mut expect = Vec::new();
+        for pos in 0..3 {
+            let l = e.decode_step(h, t, pos).unwrap();
+            t = greedy_argmax(&l);
+            expect.push(t);
+        }
+        assert_eq!(props, expect);
+
+        // Reject everything past the first committed token, then
+        // repropose: the truncated draft must regrow the same chain.
+        st.commit(0, 1).unwrap();
+        let again = st.propose(0, 99, &[7], expect[0], 2).unwrap();
+        assert_eq!(again, expect[1..3].to_vec());
+
+        // Forget frees the draft session; a later propose starts clean.
+        st.forget(0);
+        let fresh = st.propose(0, 99, &[7], expect[0], 2).unwrap();
+        assert_eq!(fresh, expect[1..3].to_vec());
+    }
+}

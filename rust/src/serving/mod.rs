@@ -42,6 +42,20 @@
 //! decodes — `tests/shard_determinism.rs` pins byte-identical responses
 //! across `workers ∈ {1, 2, 4, 8}`.
 //!
+//! Lane scheduling: [`Server::with_prefill_chunk`] splits the tick into
+//! a PREFILL lane (each still-ingesting session advances up to `chunk`
+//! prompt positions through one `decode_span` traversal, so long
+//! prompts stop serializing everyone else's time-to-first-token) and a
+//! DECODE lane (sessions generating at tick start advance one token
+//! each). [`Server::with_spec`] upgrades the decode lane to greedy-exact
+//! speculative decoding ([`crate::runtime::spec`]): a draft proposes up
+//! to `k - 1` tokens, the target verifies the whole span in ONE
+//! traversal, and rejected positions are rolled back through the arena
+//! block tables. Both are scheduling-only: a session's fed sequence
+//! never changes, so served tokens are byte-identical to the classic
+//! single-position tick (`tests/chunked_prefill.rs`,
+//! `tests/spec_equivalence.rs`).
+//!
 //! Prefix sharing: with the engine's copy-on-write prefix cache enabled
 //! ([`crate::runtime::Engine::enable_prefix_cache`], the
 //! `--prefix-cache` knob), admission consults the token-keyed index
@@ -63,14 +77,15 @@
 
 pub mod stats;
 
-pub use stats::{shard_report, LatencyStats, ShardStats};
+pub use stats::{shard_report, LaneStats, LatencyStats, ShardStats};
 
 use crate::obs::{Counter, EventKind, Gauge, Hist, SpanKind};
 use crate::runtime::decoder::greedy_argmax;
 use crate::runtime::engine::{shard_for, EngineImpl, EngineShard, ShardedEngine};
-use crate::runtime::{Backend, CacheHandle, Engine};
+use crate::runtime::spec::{SpecPlan, SpecState};
+use crate::runtime::{ArenaLayout, Backend, CacheHandle, Engine};
 use crate::util::error::{ensure, Context, Result};
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -368,6 +383,16 @@ pub struct Server<'e, B: ?Sized + Backend = dyn Backend> {
     /// Arena copy-on-write count at the last tick — the baseline the
     /// tick subtracts to attribute per-tick COW deltas to the trace.
     last_cow: Cell<u64>,
+    /// Prefill-lane chunk: max prompt positions a prefilling session
+    /// advances per tick. `0` keeps the classic one-position path;
+    /// `>= 1` routes the tick through the two-lane scheduler (chunk 1
+    /// feeds the same spans one position at a time — the boundary the
+    /// chunked-prefill differential tests pin).
+    prefill_chunk: usize,
+    /// Greedy-exact speculative decoding state (`None` = off). Behind a
+    /// `RefCell` because the tick advances draft sessions through
+    /// `&self`, exactly like the tick counters above.
+    spec: Option<RefCell<SpecState>>,
 }
 
 impl<'e, B: ?Sized + Backend> Server<'e, B> {
@@ -378,6 +403,8 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             validate_every: 0,
             ticks: Cell::new(0),
             last_cow: Cell::new(engine.cow_copies()),
+            prefill_chunk: 0,
+            spec: None,
         }
     }
 
@@ -387,6 +414,29 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
     pub fn with_validate_every(mut self, n: usize) -> Self {
         self.validate_every = n;
         self
+    }
+
+    /// Cap prompt positions per prefilling session per tick (the
+    /// `--prefill-chunk` knob; 0 = classic single-position prefill).
+    /// Scheduling only: every session still feeds its own tokens at its
+    /// own positions, so served tokens are bitwise those of the
+    /// unchunked path (`tests/chunked_prefill.rs`) — chunking changes
+    /// WHEN prompt positions are fed, never WHAT any session decodes.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// Enable greedy-exact speculative decoding from a shared plan (the
+    /// `--spec-draft`/`--spec-k` knobs): builds this server's private
+    /// draft state — a model draft gets its own f32 reference engine
+    /// sized to the policy's lane cap. Output bytes are unchanged by
+    /// construction; see [`crate::runtime::spec`].
+    pub fn with_spec(mut self, plan: &SpecPlan) -> Result<Self> {
+        let state = SpecState::build(plan, self.policy.max_active())
+            .context("enabling speculative decoding")?;
+        self.spec = Some(RefCell::new(state));
+        Ok(self)
     }
 
     /// Serve a batch of requests (all arriving at once) to completion,
@@ -413,6 +463,11 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
              drive it through serving::serve_sharded, not a single-engine Server"
         );
         validate_arrivals(&requests, offsets)?;
+        // A reused server restarts session seq numbering — stale draft
+        // sessions from an earlier run must not alias the new ones.
+        if let Some(spec) = &self.spec {
+            spec.borrow_mut().reset();
+        }
         let mut future: VecDeque<(Request, f64)> = {
             let mut v: Vec<(Request, f64)> =
                 requests.into_iter().zip(offsets.iter().copied()).collect();
@@ -427,6 +482,9 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
         // whatever was still active so the engine stays usable.
         for a in active.drain(..) {
             let _ = self.engine.free_session(a.handle);
+            if let Some(spec) = &self.spec {
+                spec.borrow_mut().forget(a.seq);
+            }
         }
         result.map(|()| done)
     }
@@ -773,6 +831,11 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             // pins), so no still-referenced block can reach the
             // free list here.
             self.engine.free_session(a.handle)?;
+            // The draft mirror dies with its target; re-admission
+            // rebuilds it by catch-up feeding the re-prefilled tokens.
+            if let Some(spec) = &self.spec {
+                spec.borrow_mut().forget(a.seq);
+            }
             let obs = self.engine.obs();
             if obs.enabled() {
                 obs.event(EventKind::Preempt, a.req.id, a.pos as u64);
@@ -819,29 +882,37 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             })?;
             obs.count(Counter::ValidationsRun, 1);
         }
-        match self.policy {
-            Policy::Batched { .. } | Policy::Continuous { .. } | Policy::Sharded { .. } => {
-                let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
-                let positions: Vec<i32> = active.iter().map(|a| a.pos).collect();
-                let handles: Vec<CacheHandle> =
-                    active.iter().map(|a| a.handle).collect();
-                let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
-                for ((a, logits), &t) in active.iter_mut().zip(outs).zip(&tokens) {
-                    a.absorb(t, logits);
+        let fed = if self.prefill_chunk == 0 && self.spec.is_none() {
+            // Classic single-position tick, byte-for-byte the pre-lane
+            // scheduler: every active session advances exactly one token.
+            match self.policy {
+                Policy::Batched { .. } | Policy::Continuous { .. } | Policy::Sharded { .. } => {
+                    let tokens: Vec<i32> = active.iter().map(Active::next_token).collect();
+                    let positions: Vec<i32> = active.iter().map(|a| a.pos).collect();
+                    let handles: Vec<CacheHandle> =
+                        active.iter().map(|a| a.handle).collect();
+                    let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
+                    for ((a, logits), &t) in active.iter_mut().zip(outs).zip(&tokens) {
+                        a.absorb(t, logits);
+                    }
+                }
+                Policy::Fifo | Policy::RoundRobin { .. } => {
+                    for a in active.iter_mut() {
+                        let t = a.next_token();
+                        let logits = self.engine.decode_step(a.handle, t, a.pos)?;
+                        a.absorb(t, logits);
+                    }
                 }
             }
-            Policy::Fifo | Policy::RoundRobin { .. } => {
-                for a in active.iter_mut() {
-                    let t = a.next_token();
-                    let logits = self.engine.decode_step(a.handle, t, a.pos)?;
-                    a.absorb(t, logits);
-                }
-            }
-        }
+            batch as u64
+        } else {
+            self.tick_lanes(active)?
+        };
 
-        // Every active session fed exactly one token this tick, and the
-        // prefill -> decode transition is observable right after.
-        obs.count(Counter::TokensDecoded, batch as u64);
+        // Every active session fed at least one token this tick (the
+        // lane scheduler may feed several), and the prefill -> decode
+        // transition is observable right after.
+        obs.count(Counter::TokensDecoded, fed);
         for a in active.iter_mut() {
             if !a.prefill_done && a.fed >= a.req.prompt.len() {
                 a.prefill_done = true;
@@ -870,6 +941,9 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             if active[i].done() {
                 let a = active.swap_remove(i);
                 self.engine.free_session(a.handle)?;
+                if let Some(spec) = &self.spec {
+                    spec.borrow_mut().forget(a.seq);
+                }
                 if obs.enabled() {
                     obs.event(EventKind::Retire, a.req.id, a.tokens.len() as u64);
                     obs.span_end(SpanKind::Decode, a.req.id);
@@ -905,6 +979,228 @@ impl<'e, B: ?Sized + Backend> Server<'e, B> {
             obs.event(EventKind::TickEnd, batch as u64, 0);
         }
         Ok(())
+    }
+
+    /// The two-lane tick: prompt ingestion and token generation are
+    /// scheduled separately, with per-lane token accounting
+    /// ([`Counter::LanePrefillTokens`] / [`Counter::LaneDecodeTokens`]).
+    ///
+    /// * PREFILL lane — every session still ingesting its prompt
+    ///   advances up to `prefill_chunk` positions through ONE
+    ///   `decode_span` traversal, so a long prompt reaches its first
+    ///   token in `len / chunk` ticks instead of `len` without adding
+    ///   per-tick weight traversals for everyone else.
+    /// * DECODE lane — every session generating at tick start advances
+    ///   one token (or up to `k` with speculative decoding on). A
+    ///   session that finishes its prefill above starts generating next
+    ///   tick, exactly like the classic single-position path.
+    ///
+    /// Lane membership and block reservations are fixed at tick start:
+    /// `relieve_pressure` guaranteed one free block per session whose
+    /// next position is unbacked, and every span here is capped so its
+    /// EXTRA positions never eat a block reserved for another session's
+    /// guaranteed advance — the floor of one position per session is
+    /// precisely the classic tick's claim. Scheduling only, so served
+    /// tokens are bitwise the classic path's (`tests/chunked_prefill.rs`,
+    /// `tests/spec_equivalence.rs`).
+    fn tick_lanes(&self, active: &mut Vec<Active>) -> Result<u64> {
+        let obs = self.engine.obs();
+        let reserving = self.policy.reserves_worst_case() || !self.engine.arena_backed();
+        let needs: Vec<bool> = if reserving {
+            vec![false; active.len()]
+        } else {
+            active
+                .iter()
+                .map(|a| self.needs_block(a))
+                .collect::<Result<_>>()?
+        };
+        let mut reserved: usize = needs.iter().filter(|&&n| n).count();
+        let in_prefill: Vec<bool> = active
+            .iter()
+            .map(|a| a.fed < a.req.prompt.len())
+            .collect();
+        // One spare block held back per capped span: claiming a span
+        // position inside a shared (prefix-adopted) boundary block
+        // copy-on-writes it, costing a block the table-growth count
+        // below does not see.
+        let cow_spare = usize::from(self.engine.prefix_enabled());
+        let mut fed = 0u64;
+
+        // ---- prefill lane -------------------------------------------
+        let chunk = self.prefill_chunk.max(1);
+        for i in 0..active.len() {
+            if !in_prefill[i] {
+                continue;
+            }
+            reserved -= usize::from(needs[i]);
+            let a = &mut active[i];
+            let want = chunk.min(a.req.prompt.len() - a.fed);
+            let span = if reserving {
+                want
+            } else {
+                self.cap_span(a, want, reserved + cow_spare)?
+            };
+            let toks = a.req.prompt[a.fed..a.fed + span].to_vec();
+            let outs = self.engine.decode_span(a.handle, &toks, a.pos)?;
+            for (&t, logits) in toks.iter().zip(outs) {
+                a.absorb(t, logits);
+            }
+            obs.count(Counter::LanePrefillTokens, span as u64);
+            fed += span as u64;
+        }
+
+        // ---- decode lane --------------------------------------------
+        if let Some(spec) = &self.spec {
+            let mut spec = spec.borrow_mut();
+            for i in 0..active.len() {
+                if in_prefill[i] {
+                    continue;
+                }
+                reserved -= usize::from(needs[i]);
+                fed += self.spec_step(
+                    &mut active[i],
+                    &mut spec,
+                    reserving,
+                    reserved + cow_spare,
+                )?;
+            }
+        } else {
+            let lane: Vec<usize> = (0..active.len()).filter(|&i| !in_prefill[i]).collect();
+            match self.policy {
+                Policy::Batched { .. } | Policy::Continuous { .. } | Policy::Sharded { .. } => {
+                    if !lane.is_empty() {
+                        let tokens: Vec<i32> =
+                            lane.iter().map(|&i| active[i].next_token()).collect();
+                        let positions: Vec<i32> = lane.iter().map(|&i| active[i].pos).collect();
+                        let handles: Vec<CacheHandle> =
+                            lane.iter().map(|&i| active[i].handle).collect();
+                        let outs = self.engine.decode_batch(&handles, &tokens, &positions)?;
+                        for ((&i, logits), &t) in lane.iter().zip(outs).zip(&tokens) {
+                            active[i].absorb(t, logits);
+                        }
+                    }
+                }
+                Policy::Fifo | Policy::RoundRobin { .. } => {
+                    for &i in &lane {
+                        let a = &mut active[i];
+                        let t = a.next_token();
+                        let logits = self.engine.decode_step(a.handle, t, a.pos)?;
+                        a.absorb(t, logits);
+                    }
+                }
+            }
+            obs.count(Counter::LaneDecodeTokens, lane.len() as u64);
+            fed += lane.len() as u64;
+        }
+        Ok(fed)
+    }
+
+    /// Longest span length `1..=want` whose cache-block growth fits the
+    /// CURRENT free list while leaving `hold_back` blocks untouched
+    /// (other sessions' reserved advances plus the copy-on-write
+    /// spare). Floor 1: a single position is exactly the claim
+    /// `relieve_pressure` guaranteed this session.
+    fn cap_span(&self, a: &Active, want: usize, hold_back: usize) -> Result<usize> {
+        if want <= 1 {
+            return Ok(want.max(1));
+        }
+        let held = self.engine.session_blocks(a.handle)?;
+        let budget = self
+            .engine
+            .arena_status()
+            .free_blocks
+            .saturating_sub(hold_back);
+        let mut n = want;
+        while n > 1 {
+            let needed = self
+                .engine
+                .blocks_for_positions(a.fed + n)
+                .saturating_sub(held);
+            if needed <= budget {
+                break;
+            }
+            n -= 1;
+        }
+        Ok(n)
+    }
+
+    /// One speculative advance for a generating session: draft proposes,
+    /// the target verifies the whole span, matching proposals are
+    /// absorbed and rejected cache rows are rolled back. Returns tokens
+    /// fed (`1..=k`); output bytes equal the non-speculative path by
+    /// construction — `f0` IS the classic next token, and proposal
+    /// `d_i` is only kept when it equals the target's own argmax of the
+    /// span logits, which `decode_span` guarantees bitwise-equal to the
+    /// sequential logits.
+    fn spec_step(
+        &self,
+        a: &mut Active,
+        spec: &mut SpecState,
+        reserving: bool,
+        hold_back: usize,
+    ) -> Result<u64> {
+        let obs = self.engine.obs();
+        let want = a.req.total_tokens() - a.fed;
+        let mut k = spec.k().min(want);
+        if !reserving {
+            k = self.cap_span(a, k, hold_back)?;
+        }
+        let f0 = greedy_argmax(&a.last_logits);
+        let proposals = if k > 1 {
+            spec.propose(a.seq, a.req.id, &a.tokens, f0, k - 1)?
+        } else {
+            Vec::new()
+        };
+        obs.count(Counter::SpecProposed, proposals.len() as u64);
+        let mut span = Vec::with_capacity(1 + proposals.len());
+        span.push(f0);
+        span.extend_from_slice(&proposals);
+
+        let accepted = if span.len() > 1
+            && self.engine.arena_mode() == ArenaLayout::F32
+            && self.engine.arena_backed()
+        {
+            // Batched verify: ONE weight traversal for the whole span,
+            // then roll the rejected tail's cache rows back through the
+            // block table. F32-arena-only — int8 writes requantize
+            // earlier group rows in place, which truncation cannot
+            // recover.
+            obs.span_begin(SpanKind::SpecVerify, a.req.id);
+            let outs = self.engine.decode_span(a.handle, &span, a.pos)?;
+            obs.span_end(SpanKind::SpecVerify, a.req.id);
+            let mut m = 0;
+            while m + 1 < span.len() && span[m + 1] == greedy_argmax(&outs[m]) {
+                m += 1;
+            }
+            for (&t, logits) in span.iter().take(m + 1).zip(outs) {
+                a.absorb(t, logits);
+            }
+            if m + 1 < span.len() {
+                self.engine.truncate_session(a.handle, a.fed)?;
+            }
+            m + 1
+        } else {
+            // Sequential verify-then-commit (int8 arenas, private-cache
+            // backends): feed a token only after the previous logits
+            // confirmed it, so nothing unverified ever lands in the
+            // cache and there is nothing to roll back.
+            let mut n = 0;
+            loop {
+                let t = span[n];
+                let logits = self.engine.decode_step(a.handle, t, a.pos)?;
+                let more = n + 1 < span.len() && span[n + 1] == greedy_argmax(&logits);
+                a.absorb(t, logits);
+                n += 1;
+                if !more {
+                    break;
+                }
+            }
+            n
+        };
+        obs.count(Counter::SpecAccepted, (accepted - 1) as u64);
+        obs.count(Counter::LaneDecodeTokens, accepted as u64);
+        spec.commit(a.seq, a.tokens.len())?;
+        Ok(accepted as u64)
     }
 }
 
@@ -1132,10 +1428,19 @@ fn shard_worker(
     t0: Instant,
     max_active: usize,
     validate_every: usize,
+    prefill_chunk: usize,
+    spec: Option<&SpecPlan>,
 ) -> Result<(Vec<Response>, ShardStats)> {
     let workers = shared.queues.len();
-    let server = Server::new(shard, Policy::Continuous { max_active })
-        .with_validate_every(validate_every);
+    let mut server = Server::new(shard, Policy::Continuous { max_active })
+        .with_validate_every(validate_every)
+        .with_prefill_chunk(prefill_chunk);
+    if let Some(plan) = spec {
+        // Each worker builds its own draft state (a draft session
+        // mirrors a target session, and targets live per shard).
+        server = server.with_spec(plan)?;
+    }
+    let server = server;
     let mut ready: VecDeque<Pending> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
     let mut done: Vec<Response> = Vec::new();
@@ -1276,6 +1581,23 @@ pub fn serve_sharded_stats_opts(
     max_active: usize,
     validate_every: usize,
 ) -> Result<(Vec<Response>, Vec<ShardStats>)> {
+    serve_sharded_stats_lanes(engine, requests, offsets, max_active, validate_every, 0, None)
+}
+
+/// [`serve_sharded_stats_opts`] with the lane-scheduler knobs:
+/// `prefill_chunk > 0` ingests prompts through the chunked prefill lane
+/// and `spec` turns on speculative decoding (every worker builds its
+/// own draft state over the shared plan). Both are scheduling-only —
+/// responses stay byte-identical to the classic sharded run.
+pub fn serve_sharded_stats_lanes(
+    engine: &mut ShardedEngine,
+    requests: Vec<Request>,
+    offsets: &[f64],
+    max_active: usize,
+    validate_every: usize,
+    prefill_chunk: usize,
+    spec: Option<&SpecPlan>,
+) -> Result<(Vec<Response>, Vec<ShardStats>)> {
     validate_arrivals(&requests, offsets)?;
     ensure!(max_active >= 1, "sharded serving needs max_active >= 1");
     let workers = engine.workers();
@@ -1300,7 +1622,16 @@ pub fn serve_sharded_stats_opts(
             .enumerate()
             .map(|(w, shard)| {
                 scope.spawn(move || {
-                    shard_worker(&*shard, w, shared, t0, max_active, validate_every)
+                    shard_worker(
+                        &*shard,
+                        w,
+                        shared,
+                        t0,
+                        max_active,
+                        validate_every,
+                        prefill_chunk,
+                        spec,
+                    )
                 })
             })
             .collect();
@@ -1465,6 +1796,124 @@ mod tests {
         for f in &fifo {
             let c = out.iter().find(|c| c.id == f.id).unwrap();
             assert_eq!(f.tokens, c.tokens, "request {}", f.id);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_classic_outputs() {
+        // Chunk sizes spanning "one position per tick" (classic
+        // pacing), "mid prompt", and "whole prompt in one tick" —
+        // scheduling only, so tokens must be bitwise the unchunked
+        // run's under both lane-capable policy families.
+        let e = engine();
+        let requests: Vec<Request> = (0..4u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..9).map(|p| ((id + p) % 6) as i32 + 1).collect(),
+                n_new: 5,
+            })
+            .collect();
+        let classic = Server::new(&e, Policy::Continuous { max_active: 4 })
+            .serve(requests.clone())
+            .unwrap();
+        for chunk in [1usize, 3, 64] {
+            for policy in [
+                Policy::Continuous { max_active: 4 },
+                Policy::Batched { batch: 4 },
+            ] {
+                let out = Server::new(&e, policy)
+                    .with_prefill_chunk(chunk)
+                    .serve(requests.clone())
+                    .unwrap();
+                for c in &classic {
+                    let r = out.iter().find(|r| r.id == c.id).unwrap();
+                    assert_eq!(
+                        c.tokens, r.tokens,
+                        "request {} chunk {chunk} under {policy:?}",
+                        c.id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_decoding_matches_classic_bitwise() {
+        // Every draft source — perfect (self), heuristic (tiny), and
+        // replayed (oracle) — must leave served tokens byte-identical:
+        // the verify step only keeps proposals the target itself argmaxes.
+        use std::collections::HashMap;
+        let e = engine();
+        let requests: Vec<Request> = (0..4u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id % 7) as i32 + 1, 2, 3],
+                n_new: 7,
+            })
+            .collect();
+        let classic = Server::new(&e, Policy::Continuous { max_active: 4 })
+            .serve(requests.clone())
+            .unwrap();
+        let book: HashMap<u64, Vec<i32>> =
+            classic.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        let plans = [
+            SpecPlan::self_draft(e.artifacts(), 3).unwrap(),
+            SpecPlan::tiny_draft(e.artifacts(), 4).unwrap(),
+            SpecPlan::oracle(book, 4).unwrap(),
+        ];
+        for plan in &plans {
+            let out = Server::new(&e, Policy::Continuous { max_active: 4 })
+                .with_spec(plan)
+                .unwrap()
+                .serve(requests.clone())
+                .unwrap();
+            for c in &classic {
+                let r = out.iter().find(|r| r.id == c.id).unwrap();
+                assert_eq!(c.tokens, r.tokens, "request {}", c.id);
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_under_pressure_preempt_and_still_match() {
+        // Chunked prefill + speculative decode against the same tight
+        // arena as the preemption test above: spans must be capped so
+        // one session's EXTRA positions never eat another session's
+        // reserved block, and a preemption's rollback + draft forget
+        // must leave tokens untouched.
+        let requests: Vec<Request> = (0..6u64)
+            .map(|id| Request {
+                id,
+                prompt: vec![(id % 5) as i32 + 1, 7, 2, 4],
+                n_new: 8,
+            })
+            .collect();
+        let fifo = Server::new(&engine(), Policy::Fifo)
+            .serve(requests.clone())
+            .unwrap();
+        let tight = Engine::load_with_arena(
+            Artifacts::synthetic(SEED).unwrap(),
+            BackendKind::Reference,
+            4,
+            10,
+        )
+        .unwrap();
+        let plan = SpecPlan::self_draft(tight.artifacts(), 3).unwrap();
+        let out = Server::new(&tight, Policy::Continuous { max_active: 6 })
+            .with_prefill_chunk(3)
+            .with_spec(&plan)
+            .unwrap()
+            .serve(requests)
+            .unwrap();
+        assert!(
+            out.iter().map(|r| r.evictions).sum::<u32>() > 0,
+            "10 blocks cannot hold 6 x 3-block sessions without preemption"
+        );
+        let st = tight.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks);
+        for f in &fifo {
+            let r = out.iter().find(|r| r.id == f.id).unwrap();
+            assert_eq!(f.tokens, r.tokens, "request {}", f.id);
         }
     }
 

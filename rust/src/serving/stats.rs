@@ -3,6 +3,7 @@
 //! numbers `repro serve` and the edge-serving example report.
 
 use super::Response;
+use crate::obs::{Counter, Obs};
 
 /// Summary statistics of a serving run.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,6 +105,63 @@ impl LatencyStats {
             self.p95_queue_s,
             self.evictions,
             self.cached_tokens
+        )
+    }
+}
+
+/// Lane-scheduler + speculative-decoding counters for one serving run,
+/// read from the engine's [`Obs`] metrics registry. Counters only
+/// record while observability is enabled (`Obs::set_enabled`), so a
+/// run without `--trace`-style instrumentation reports zeros. `repro
+/// serve` prints this under the latency summary whenever chunked
+/// prefill or speculative decoding is on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LaneStats {
+    /// Prompt positions ingested through the chunked prefill lane.
+    pub prefill_tokens: u64,
+    /// Tokens committed by the decode lane (speculative or classic).
+    pub decode_tokens: u64,
+    /// Draft proposals fed into verify spans. The bonus token `f0` is
+    /// counted on neither side of the acceptance ratio — it is correct
+    /// without any draft help.
+    pub proposed: u64,
+    /// Draft proposals the target's own argmax confirmed.
+    pub accepted: u64,
+}
+
+impl LaneStats {
+    /// Read the current lane counters from one observability bundle.
+    pub fn from_obs(obs: &Obs) -> Self {
+        Self {
+            prefill_tokens: obs.metrics.counter(Counter::LanePrefillTokens),
+            decode_tokens: obs.metrics.counter(Counter::LaneDecodeTokens),
+            proposed: obs.metrics.counter(Counter::SpecProposed),
+            accepted: obs.metrics.counter(Counter::SpecAccepted),
+        }
+    }
+
+    /// Fraction of draft proposals accepted, in `[0, 1]`. Zero
+    /// proposals reports 0.0, never NaN (the summary line is diffed by
+    /// CI, so its shape must not depend on whether a draft ran).
+    pub fn acceptance(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// One-line summary, e.g.
+    /// `lanes: 96 prefill + 80 decode tokens | spec: 45/60 proposals accepted (75.0%)`.
+    pub fn report(&self) -> String {
+        format!(
+            "lanes: {} prefill + {} decode tokens | spec: {}/{} proposals \
+             accepted ({:.1}%)",
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.accepted,
+            self.proposed,
+            100.0 * self.acceptance()
         )
     }
 }
@@ -306,6 +364,40 @@ mod tests {
             1.0,
         );
         assert!(all_nan.p50_service_s.is_nan());
+    }
+
+    #[test]
+    fn lane_stats_read_counters_and_report_without_nan() {
+        let obs = Obs::new(0);
+        // Disabled: counts are dropped, stats stay zero, report stays
+        // well-formed (0.0%, not NaN).
+        obs.count(Counter::SpecProposed, 5);
+        let off = LaneStats::from_obs(&obs);
+        assert_eq!(off, LaneStats::default());
+        assert_eq!(off.acceptance(), 0.0);
+        assert!(off.report().contains("(0.0%)"), "{}", off.report());
+        // Enabled: the four lane counters flow through.
+        obs.set_enabled(true);
+        obs.count(Counter::LanePrefillTokens, 96);
+        obs.count(Counter::LaneDecodeTokens, 80);
+        obs.count(Counter::SpecProposed, 60);
+        obs.count(Counter::SpecAccepted, 45);
+        let on = LaneStats::from_obs(&obs);
+        assert_eq!(
+            on,
+            LaneStats {
+                prefill_tokens: 96,
+                decode_tokens: 80,
+                proposed: 60,
+                accepted: 45,
+            }
+        );
+        assert!((on.acceptance() - 0.75).abs() < 1e-12);
+        assert_eq!(
+            on.report(),
+            "lanes: 96 prefill + 80 decode tokens | spec: 45/60 proposals \
+             accepted (75.0%)"
+        );
     }
 
     #[test]

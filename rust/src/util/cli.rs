@@ -73,8 +73,41 @@ impl Args {
         }
     }
 
-    pub fn flag(&self, key: &str) -> bool {
-        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    /// Boolean flag: absent is `false`, bare `--key` is `true`, and an
+    /// explicit value must be a recognized spelling. Anything else —
+    /// `--verbose on`, `--verbose ture` — is an error, not a silent
+    /// `false`: the caller typed SOMETHING and the run must not quietly
+    /// proceed as if they hadn't.
+    pub fn flag(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!(
+                "--{key} expects a boolean (true/1/yes or false/0/no), got '{v}'"
+            ),
+        }
+    }
+
+    /// Reject any flag not in `known` (deliberately NOT paths or
+    /// subcommands — those are positional). Every `repro` subcommand
+    /// and example calls this after parsing so a typo like
+    /// `--prefil-chunk 8` fails loudly with the valid list instead of
+    /// silently running with the default.
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} (valid flags: {})",
+                    known
+                        .iter()
+                        .map(|k| format!("--{k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        Ok(())
     }
 
     /// The `--backend` runtime-executor selector shared by `repro
@@ -100,7 +133,7 @@ mod tests {
         assert_eq!(a.subcommand.as_deref(), Some("simulate"));
         assert_eq!(a.get("model"), Some("OPT-6.7B"));
         assert_eq!(a.usize_or("context", 0).unwrap(), 128);
-        assert!(a.flag("verbose"));
+        assert!(a.flag("verbose").unwrap());
     }
 
     #[test]
@@ -122,7 +155,45 @@ mod tests {
         let a = parse("simulate");
         assert_eq!(a.usize_or("context", 128).unwrap(), 128);
         assert_eq!(a.str_or("model", "OPT-6.7B"), "OPT-6.7B");
-        assert!(!a.flag("verbose"));
+        assert!(!a.flag("verbose").unwrap());
+    }
+
+    #[test]
+    fn boolean_flags_accept_both_spellings_and_reject_garbage() {
+        for (input, want) in [
+            ("x --verbose", true),
+            ("x --verbose true", true),
+            ("x --verbose=1", true),
+            ("x --verbose yes", true),
+            ("x --verbose false", false),
+            ("x --verbose=0", false),
+            ("x --verbose no", false),
+            ("x", false),
+        ] {
+            assert_eq!(parse(input).flag("verbose").unwrap(), want, "{input}");
+        }
+        // Regression: `--verbose on` used to parse as a silent `false`.
+        let err = parse("x --verbose on").flag("verbose").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--verbose"), "{msg}");
+        assert!(msg.contains("expects a boolean"), "{msg}");
+        assert!(msg.contains("'on'"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_the_valid_list() {
+        let a = parse("serve --requests 4 --prefil-chunk 8");
+        let err = a
+            .expect_known(&["requests", "prefill-chunk", "backend"])
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --prefil-chunk"), "{msg}");
+        assert!(msg.contains("--prefill-chunk"), "{msg}");
+        assert!(msg.contains("--backend"), "{msg}");
+        // The full known set passes, including flags not supplied.
+        parse("serve --requests 4")
+            .expect_known(&["requests", "prefill-chunk", "backend"])
+            .unwrap();
     }
 
     #[test]

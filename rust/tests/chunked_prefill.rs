@@ -1,0 +1,163 @@
+//! Differential harness for the chunked-prefill lane: ingesting a
+//! prompt `chunk` positions per scheduler tick is scheduling only, so
+//! served tokens must be BIT-FOR-BIT the unchunked run's on both host
+//! backends — across chunk sizes that pin every boundary (one position,
+//! spans straddling a cache-block boundary, the whole prompt in one
+//! tick, chunk larger than the prompt), composed with copy-on-write
+//! prefix adoption, and under arena pressure where chunked sessions are
+//! preempted and re-prefilled.
+//!
+//! Why exactness holds: a session's fed sequence is a pure function of
+//! its own request (prompt tokens in order, then its own greedy
+//! continuations), and `decode_span` is pinned bit-for-bit against the
+//! sequential `decode_step` loop — the chunk size changes only WHEN
+//! positions are fed relative to other sessions, never WHAT any session
+//! feeds. Preemption re-prefills deterministically, so even eviction
+//! timing differences cannot leak into tokens.
+
+use pim_llm::runtime::{Artifacts, BackendKind, Engine};
+use pim_llm::serving::{Policy, Request, Response, Server};
+
+const SEED: u64 = 23;
+const HOST_BACKENDS: [BackendKind; 2] = [BackendKind::Reference, BackendKind::Packed];
+
+/// Deterministic per-request prompts (id-dependent, so sessions are
+/// distinguishable) of one shared length.
+fn requests(n: u64, prompt_len: usize, n_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|i| ((id as usize * 13 + i * 7) % 29 + 1) as i32)
+                .collect(),
+            n_new,
+        })
+        .collect()
+}
+
+/// Same workload shape as `repro serve --prefix-cache`: a common system
+/// prefix over the first half of every prompt, per-request tail after.
+fn shared_prefix_requests(n: u64, prompt_len: usize, n_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|i| {
+                    if i < prompt_len / 2 {
+                        ((i * 7) % 29 + 1) as i32
+                    } else {
+                        ((id as usize * 13 + i * 7) % 29 + 1) as i32
+                    }
+                })
+                .collect(),
+            n_new,
+        })
+        .collect()
+}
+
+fn assert_tokens_match(base: &[Response], out: &[Response], label: &str) {
+    assert_eq!(base.len(), out.len(), "{label}: response count");
+    for b in base {
+        let r = out
+            .iter()
+            .find(|r| r.id == b.id)
+            .unwrap_or_else(|| panic!("{label}: request {} missing", b.id));
+        assert_eq!(b.tokens, r.tokens, "{label}: request {}", b.id);
+    }
+}
+
+#[test]
+fn every_chunk_size_matches_unchunked_on_both_backends() {
+    for kind in HOST_BACKENDS {
+        let engine =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+        let reqs = requests(4, 10, 6);
+        let base = Server::new(&engine, Policy::Continuous { max_active: 4 })
+            .serve(reqs.clone())
+            .unwrap();
+        // 1 = classic pacing through the lane path; 3 and 5 straddle the
+        // 4-position block boundary mid-span; 10 = the whole prompt in
+        // one tick; 64 = chunk far larger than the prompt (clamped).
+        for chunk in [1usize, 3, 5, 10, 64] {
+            for policy in [
+                Policy::Continuous { max_active: 4 },
+                Policy::Batched { batch: 4 },
+                Policy::Fifo,
+            ] {
+                let out = Server::new(&engine, policy)
+                    .with_prefill_chunk(chunk)
+                    .serve(reqs.clone())
+                    .unwrap();
+                assert_tokens_match(
+                    &base,
+                    &out,
+                    &format!("{kind:?} chunk {chunk} {policy:?}"),
+                );
+            }
+        }
+        let st = engine.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}: leaked blocks");
+    }
+}
+
+#[test]
+fn chunked_prefill_composes_with_prefix_adoption() {
+    for kind in HOST_BACKENDS {
+        let reqs = shared_prefix_requests(5, 12, 5);
+        let cold =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+        // max_active 2 staggers admission: the first wave's completed
+        // prefills are indexed before the later requests are admitted,
+        // so those requests actually adopt the shared prefix (an
+        // admit-everyone-at-once schedule would find an empty index).
+        let base = Server::new(&cold, Policy::Continuous { max_active: 2 })
+            .serve(reqs.clone())
+            .unwrap();
+        // Fresh cached engine per chunk size so every run sees the same
+        // empty index; chunks straddle both the adopted-prefix boundary
+        // (6 positions = 1.5 blocks) and the block boundary.
+        for chunk in [1usize, 3, 8, 12] {
+            let warm =
+                Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+            assert!(warm.enable_prefix_cache(0));
+            let out = Server::new(&warm, Policy::Continuous { max_active: 2 })
+                .with_prefill_chunk(chunk)
+                .serve(reqs.clone())
+                .unwrap();
+            assert_tokens_match(&base, &out, &format!("{kind:?} cached chunk {chunk}"));
+            let cached: usize = out.iter().map(|r| r.cached_tokens).sum();
+            assert!(
+                cached > 0,
+                "{kind:?} chunk {chunk}: the shared prefix never hit the cache"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_survives_preemption_re_prefill() {
+    for kind in HOST_BACKENDS {
+        let roomy =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+        let reqs = requests(6, 8, 8);
+        let base = Server::new(&roomy, Policy::Fifo).serve(reqs.clone()).unwrap();
+        // 6 requests x 16 positions = 4 blocks each against 12 blocks:
+        // continuous batching must preempt, and the re-prefill re-ingests
+        // the prompt through the SAME chunked lane.
+        for chunk in [1usize, 3, 8] {
+            let tight =
+                Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 12).unwrap();
+            let out = Server::new(&tight, Policy::Continuous { max_active: 6 })
+                .with_prefill_chunk(chunk)
+                .serve(reqs.clone())
+                .unwrap();
+            assert!(
+                out.iter().map(|r| r.evictions).sum::<u32>() > 0,
+                "{kind:?} chunk {chunk}: 12 blocks cannot hold 6 x 4-block sessions"
+            );
+            assert_tokens_match(&base, &out, &format!("{kind:?} tight chunk {chunk}"));
+            let st = tight.arena_status();
+            assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}: leaked blocks");
+        }
+    }
+}

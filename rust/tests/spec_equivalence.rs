@@ -1,0 +1,212 @@
+//! The speculative-decoding pin: greedy-exact drafting is a THROUGHPUT
+//! knob, never an accuracy knob. Every combination of draft source
+//! (self / tiny synthetic / oracle replay), span width `k`, host
+//! backend, scheduling policy, worker count, chunked prefill, prefix
+//! cache, preemption pressure and KV quantization must serve tokens
+//! BIT-FOR-BIT identical to the spec-off run.
+//!
+//! Why exactness holds: the target verifies every drafted position with
+//! its own logits before the position can influence output — the first
+//! unverified token is exactly `greedy_argmax` of the last VERIFIED
+//! logits (the classic next token), accepted positions extend the
+//! greedy chain by construction, and rejected draft KV rows are rolled
+//! back through the arena block table (`truncate_session`) before any
+//! later read. On int8 arenas the engine never writes unverified rows
+//! at all (sequential verify-then-commit), so lossy requantization sees
+//! the same write sequence either way.
+
+use pim_llm::runtime::{
+    ArenaLayout, Artifacts, BackendKind, Engine, ShardedEngine, SpecPlan,
+};
+use pim_llm::serving::{serve_sharded_stats_lanes, Policy, Request, Response, Server};
+use std::collections::HashMap;
+
+const SEED: u64 = 29;
+const HOST_BACKENDS: [BackendKind; 2] = [BackendKind::Reference, BackendKind::Packed];
+
+fn requests(n: u64, prompt_len: usize, n_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|i| ((id as usize * 11 + i * 5) % 31 + 1) as i32)
+                .collect(),
+            n_new,
+        })
+        .collect()
+}
+
+fn shared_prefix_requests(n: u64, prompt_len: usize, n_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|i| {
+                    if i < prompt_len / 2 {
+                        ((i * 5) % 31 + 1) as i32
+                    } else {
+                        ((id as usize * 11 + i * 5) % 31 + 1) as i32
+                    }
+                })
+                .collect(),
+            n_new,
+        })
+        .collect()
+}
+
+fn assert_tokens_match(base: &[Response], out: &[Response], label: &str) {
+    assert_eq!(base.len(), out.len(), "{label}: response count");
+    for b in base {
+        let r = out
+            .iter()
+            .find(|r| r.id == b.id)
+            .unwrap_or_else(|| panic!("{label}: request {} missing", b.id));
+        assert_eq!(b.tokens, r.tokens, "{label}: request {}", b.id);
+    }
+}
+
+/// Oracle replay book from a spec-off run: request id -> the exact
+/// token stream it will produce. MUST come from the same arena layout
+/// and block length as the serving engine (int8 is lossy and group
+/// scaling follows block geometry), which every caller here guarantees
+/// by recording from the comparison baseline itself.
+fn book_of(base: &[Response]) -> HashMap<u64, Vec<i32>> {
+    base.iter().map(|r| (r.id, r.tokens.clone())).collect()
+}
+
+#[test]
+fn every_draft_and_span_width_matches_spec_off() {
+    for kind in HOST_BACKENDS {
+        let engine =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+        let reqs = requests(4, 6, 8);
+        let base = Server::new(&engine, Policy::Continuous { max_active: 4 })
+            .serve(reqs.clone())
+            .unwrap();
+        for k in [1usize, 3, 4] {
+            let plans = [
+                ("self", SpecPlan::self_draft(engine.artifacts(), k).unwrap()),
+                ("tiny", SpecPlan::tiny_draft(engine.artifacts(), k).unwrap()),
+                ("oracle", SpecPlan::oracle(book_of(&base), k).unwrap()),
+            ];
+            for (name, plan) in &plans {
+                for policy in [
+                    Policy::Continuous { max_active: 4 },
+                    Policy::Batched { batch: 4 },
+                    Policy::Fifo,
+                ] {
+                    let out = Server::new(&engine, policy)
+                        .with_spec(plan)
+                        .unwrap()
+                        .serve(reqs.clone())
+                        .unwrap();
+                    assert_tokens_match(
+                        &base,
+                        &out,
+                        &format!("{kind:?} {name} k={k} {policy:?}"),
+                    );
+                }
+            }
+        }
+        let st = engine.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}: leaked blocks");
+    }
+}
+
+#[test]
+fn spec_with_chunked_prefill_survives_preemption_and_prefix_cache() {
+    for kind in HOST_BACKENDS {
+        let reqs = shared_prefix_requests(6, 8, 8);
+        let roomy =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+        let base = Server::new(&roomy, Policy::Fifo).serve(reqs.clone()).unwrap();
+        // 10 blocks against 6 x 4-block sessions: preemption is forced,
+        // and rejected-draft rollback runs concurrently with eviction
+        // and copy-on-write prefix adoption.
+        let tight =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 10).unwrap();
+        assert!(tight.enable_prefix_cache(0));
+        let plan = SpecPlan::self_draft(tight.artifacts(), 3).unwrap();
+        let out = Server::new(&tight, Policy::Continuous { max_active: 6 })
+            .with_prefill_chunk(2)
+            .with_spec(&plan)
+            .unwrap()
+            .serve(reqs.clone())
+            .unwrap();
+        assert!(
+            out.iter().map(|r| r.evictions).sum::<u32>() > 0,
+            "{kind:?}: 10 blocks cannot hold 6 x 4-block sessions"
+        );
+        assert_tokens_match(&base, &out, &format!("{kind:?} tight chunk+spec"));
+        let st = tight.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}: leaked blocks");
+    }
+}
+
+#[test]
+fn sharded_workers_with_lanes_match_the_classic_single_engine() {
+    for kind in HOST_BACKENDS {
+        let single =
+            Engine::load_with_arena(Artifacts::synthetic(SEED).unwrap(), kind, 4, 0).unwrap();
+        let reqs = requests(8, 6, 6);
+        let base = Server::new(&single, Policy::Fifo).serve(reqs.clone()).unwrap();
+        let offsets = vec![0.0; reqs.len()];
+        for workers in [1usize, 4] {
+            let mut engine = ShardedEngine::load(
+                Artifacts::synthetic(SEED).unwrap(),
+                kind,
+                4,
+                24 * workers,
+                workers,
+            )
+            .unwrap();
+            let plan = SpecPlan::self_draft(engine.shard(0).artifacts(), 3).unwrap();
+            let (out, _stats) = serve_sharded_stats_lanes(
+                &mut engine,
+                reqs.clone(),
+                &offsets,
+                4,
+                0,
+                2,
+                Some(&plan),
+            )
+            .unwrap();
+            assert_tokens_match(&base, &out, &format!("{kind:?} {workers}w lanes"));
+        }
+    }
+}
+
+#[test]
+fn int8_arena_uses_sequential_verify_and_stays_exact() {
+    for kind in HOST_BACKENDS {
+        // The baseline must be the INT8 run, not f32: quantized KV is
+        // lossy, so spec-on int8 must reproduce spec-off INT8 bitwise
+        // (the sequential verify-then-commit path never writes an
+        // unverified row, so the requantization sequence is identical).
+        let engine = Engine::load_with_arena_mode(
+            Artifacts::synthetic(SEED).unwrap(),
+            kind,
+            4,
+            0,
+            ArenaLayout::KvInt8,
+        )
+        .unwrap();
+        let reqs = requests(4, 6, 8);
+        let base = Server::new(&engine, Policy::Continuous { max_active: 4 })
+            .serve(reqs.clone())
+            .unwrap();
+        for plan in [
+            SpecPlan::self_draft(engine.artifacts(), 4).unwrap(),
+            SpecPlan::oracle(book_of(&base), 4).unwrap(),
+        ] {
+            let out = Server::new(&engine, Policy::Continuous { max_active: 4 })
+                .with_spec(&plan)
+                .unwrap()
+                .serve(reqs.clone())
+                .unwrap();
+            assert_tokens_match(&base, &out, &format!("{kind:?} int8 spec"));
+        }
+        let st = engine.arena_status();
+        assert_eq!(st.free_blocks, st.total_blocks, "{kind:?}: leaked blocks");
+    }
+}
